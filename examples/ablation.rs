@@ -1,0 +1,29 @@
+//! Figure 3/6 ablation walkthrough: pure Grassmannian tracking, +PA, +RS and
+//! full SubTrack++ (plus GaLore for reference) on one model, reporting loss
+//! and wall-time.
+//!
+//!     cargo run --release --example ablation
+
+use subtrack::experiments::pretrain::{run_method, SweepOpts};
+
+fn main() -> anyhow::Result<()> {
+    let mut opts = SweepOpts::new("tiny", 150);
+    opts.batch_size = 8;
+    opts.lr = 2e-3;
+    let variants = [
+        ("subtrack-pure", "Grassmannian tracking only"),
+        ("subtrack-pa", "+ projection-aware optimizer"),
+        ("subtrack-rs", "+ recovery scaling"),
+        ("subtrack++", "full SubTrack++"),
+        ("galore", "GaLore reference"),
+    ];
+    println!("{:<16} {:<32} {:>10} {:>10}", "variant", "description", "loss", "time (s)");
+    for (method, desc) in variants {
+        let r = run_method(&opts, method);
+        println!(
+            "{:<16} {:<32} {:>10.4} {:>10.1}",
+            method, desc, r.final_eval_loss, r.wall_time_secs
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,32 @@
+//! Fine-tuning walkthrough (Tables 4–5 workflow): pre-train a tiny backbone,
+//! then fine-tune it on the synthetic GLUE battery with three optimizers and
+//! print the accuracy grid.
+//!
+//!     cargo run --release --example finetune
+
+use subtrack::data::tasks::TaskKind;
+use subtrack::experiments::finetune::{accuracy_grid, finetune, pretrain_backbone, FinetuneOpts};
+use subtrack::model::ModelConfig;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = ModelConfig::preset("tiny");
+    println!("pre-training backbone ({} params) ...", cfg.param_count());
+    let backbone = pretrain_backbone(&cfg, 60, 42);
+
+    let methods = ["full-rank", "galore", "subtrack++"];
+    let tasks = TaskKind::glue();
+    let opts = FinetuneOpts { steps: 100, ..FinetuneOpts::default() };
+
+    let mut results = Vec::new();
+    for method in methods {
+        for (name, kind) in &tasks {
+            print!("fine-tuning {method} on {name} ... ");
+            let res = finetune(&backbone, name, *kind, method, &opts);
+            println!("acc {:.1}%", 100.0 * res.val_accuracy);
+            results.push(res);
+        }
+    }
+    let task_names: Vec<&str> = tasks.iter().map(|(n, _)| *n).collect();
+    println!("\n{}", accuracy_grid(&results, &task_names, &methods));
+    Ok(())
+}

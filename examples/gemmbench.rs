@@ -1,0 +1,22 @@
+//! Raw GEMM throughput probe (see EXPERIMENTS.md §Perf).
+use subtrack::tensor::{gemm, Matrix};
+use subtrack::util::rng::Rng;
+fn main() {
+    let mut rng = Rng::new(1);
+    for n in [128usize, 256, 512] {
+        let a = Matrix::randn(n, n, 1.0, &mut rng);
+        let b = Matrix::randn(n, n, 1.0, &mut rng);
+        let t0 = std::time::Instant::now();
+        let mut reps = 0;
+        while t0.elapsed().as_secs_f64() < 1.0 { std::hint::black_box(gemm::matmul(&a, &b)); reps += 1; }
+        let secs = t0.elapsed().as_secs_f64() / reps as f64;
+        let gf = 2.0 * (n as f64).powi(3) / secs / 1e9;
+        println!("matmul {n}: {:.1} ms, {gf:.2} GFLOPS", secs*1e3);
+        let t0 = std::time::Instant::now();
+        let mut reps = 0;
+        while t0.elapsed().as_secs_f64() < 1.0 { std::hint::black_box(gemm::matmul_nt(&a, &b)); reps += 1; }
+        let secs = t0.elapsed().as_secs_f64() / reps as f64;
+        let gf = 2.0 * (n as f64).powi(3) / secs / 1e9;
+        println!("matmul_nt {n}: {:.1} ms, {gf:.2} GFLOPS", secs*1e3);
+    }
+}

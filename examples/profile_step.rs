@@ -1,0 +1,25 @@
+//! Per-stage timing of one native train step (L3 profiling harness).
+use subtrack::model::{Llama, ModelConfig, Batch};
+use subtrack::util::rng::Rng;
+use std::time::Instant;
+fn main() {
+    let preset = std::env::args().nth(1).unwrap_or("small".into());
+    let cfg = ModelConfig::preset(&preset);
+    let model = Llama::new(cfg.clone(), 1);
+    let mut rng = Rng::new(2);
+    let (b, t) = (8, cfg.seq_len);
+    let inputs: Vec<u32> = (0..b*t).map(|_| rng.below(cfg.vocab) as u32).collect();
+    let targets: Vec<u32> = (0..b*t).map(|_| rng.below(cfg.vocab) as u32).collect();
+    let batch = Batch { inputs: inputs.clone(), targets, b, t };
+    // forward only
+    let t0 = Instant::now();
+    let n = 5;
+    for _ in 0..n { std::hint::black_box(model.forward_hidden(&inputs, b, t)); }
+    println!("forward_hidden: {:.1} ms", t0.elapsed().as_secs_f64()/n as f64*1e3);
+    let t0 = Instant::now();
+    for _ in 0..n { std::hint::black_box(model.loss(&batch)); }
+    println!("loss (fwd+head+CE): {:.1} ms", t0.elapsed().as_secs_f64()/n as f64*1e3);
+    let t0 = Instant::now();
+    for _ in 0..n { std::hint::black_box(model.loss_and_grad(&batch)); }
+    println!("loss_and_grad: {:.1} ms", t0.elapsed().as_secs_f64()/n as f64*1e3);
+}

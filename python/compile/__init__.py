@@ -1,0 +1,3 @@
+"""Build-time Python package: Layer-2 JAX model + Layer-1 Pallas kernels and
+the AOT lowering driver. Never imported at runtime — the Rust binary consumes
+only the HLO text artifacts this package emits (``make artifacts``)."""

@@ -1,0 +1,133 @@
+"""AOT lowering driver: JAX (Layer 2 + Layer 1) → HLO **text** artifacts for
+the Rust (Layer 3) runtime.
+
+Interchange is HLO text, NOT serialized HloModuleProto: jax ≥ 0.5 emits
+protos with 64-bit instruction ids which the `xla` crate's xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md and DESIGN.md §AOT).
+
+Artifacts written (defaults; see --help):
+  train_step_<preset>_b<B>_t<T>.hlo.txt     model fwd+bwd → (loss, grads…)
+  subtrack_adam_<m>x<n>_r<r>.hlo.txt        every-step optimizer math
+  subtrack_update_<m>x<n>_r<r>.hlo.txt      every-k subspace update
+  manifest.json                             shapes + provenance
+
+Run once via `make artifacts`; Python never runs at training time.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from compile import model as model_lib  # noqa: E402
+from compile import optim as optim_lib  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_train_step(preset: str, batch: int, out_dir: str) -> dict:
+    cfg = model_lib.PRESETS[preset]
+    t = cfg["seq_len"]
+    shapes = model_lib.param_shapes(cfg)
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in shapes]
+    specs.append(jax.ShapeDtypeStruct((batch, t), jnp.int32))  # tokens
+    specs.append(jax.ShapeDtypeStruct((batch, t), jnp.int32))  # targets
+    step = model_lib.make_train_step(cfg)
+    lowered = jax.jit(step).lower(*specs)
+    name = f"train_step_{preset}_b{batch}_t{t}"
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  {name}: {len(text)} chars")
+    return {
+        "name": name,
+        "kind": "train_step",
+        "preset": preset,
+        "batch": batch,
+        "seq_len": t,
+        "n_params": len(shapes),
+    }
+
+
+def lower_subtrack(m: int, n: int, r: int, out_dir: str, eta: float) -> list:
+    """Lower both optimizer artifacts for one (m, n, r) bucket."""
+    written = []
+    f32 = jnp.float32
+    adam_fn = optim_lib.make_subtrack_adam()
+    lowered = jax.jit(adam_fn).lower(
+        jax.ShapeDtypeStruct((m, r), f32),  # S
+        jax.ShapeDtypeStruct((r, n), f32),  # M
+        jax.ShapeDtypeStruct((r, n), f32),  # V
+        jax.ShapeDtypeStruct((m, n), f32),  # G
+        jax.ShapeDtypeStruct((), f32),      # debias1
+        jax.ShapeDtypeStruct((), f32),      # debias2
+    )
+    name = f"subtrack_adam_{m}x{n}_r{r}"
+    with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+    print(f"  {name}")
+    written.append({"name": name, "kind": "subtrack_adam", "m": m, "n": n, "r": r})
+
+    upd_fn = optim_lib.make_subspace_update(eta=eta)
+    lowered = jax.jit(upd_fn).lower(
+        jax.ShapeDtypeStruct((m, r), f32),  # S
+        jax.ShapeDtypeStruct((r, n), f32),  # M
+        jax.ShapeDtypeStruct((r, n), f32),  # V
+        jax.ShapeDtypeStruct((m, n), f32),  # G
+        jax.ShapeDtypeStruct((), f32),      # debias2_prev
+    )
+    name = f"subtrack_update_{m}x{n}_r{r}"
+    with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+    print(f"  {name}")
+    written.append({"name": name, "kind": "subtrack_update", "m": m, "n": n, "r": r, "eta": eta})
+    return written
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--presets", default="nano,tiny", help="train_step presets (comma-sep)")
+    ap.add_argument("--batch", type=int, default=4, help="train_step batch size")
+    ap.add_argument(
+        "--subtrack-shapes",
+        default="16x16_4,64x172_8",
+        help="optimizer buckets as mxn_r, comma-sep",
+    )
+    ap.add_argument("--eta", type=float, default=10.0)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {"jax": jax.__version__, "artifacts": []}
+    print("lowering train_step artifacts:")
+    for preset in [p for p in args.presets.split(",") if p]:
+        manifest["artifacts"].append(lower_train_step(preset, args.batch, args.out))
+    print("lowering subtrack optimizer artifacts:")
+    for spec in [s for s in args.subtrack_shapes.split(",") if s]:
+        dims, r = spec.split("_")
+        m, n = dims.split("x")
+        manifest["artifacts"].extend(
+            lower_subtrack(int(m), int(n), int(r), args.out, args.eta)
+        )
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the AOT artifacts).
+
+All kernels run with ``interpret=True``: real-TPU lowering emits Mosaic
+custom-calls the CPU PJRT plugin cannot execute (see DESIGN.md
+§Hardware-Adaptation). Block shapes are still chosen for TPU VMEM/MXU:
+128-multiples on the lane dimension, fp32 accumulation.
+"""
+
+from .adam_update import adam_update
+from .geodesic import geodesic_step
+from .project import project, project_back
+from .recovery import recovery_scale
+
+__all__ = [
+    "adam_update",
+    "geodesic_step",
+    "project",
+    "project_back",
+    "recovery_scale",
+]

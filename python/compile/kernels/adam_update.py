@@ -1,0 +1,70 @@
+"""Pallas kernel: fused Adam moment update + preconditioned direction.
+
+One pass over the low-rank moment tensors computes
+  m′ = β₁m + (1−β₁)g,   v′ = β₂v + (1−β₂)g²,
+  dir = (m′/d₁) / (√(v′/d₂) + ε)
+without materializing intermediates in HBM — three reads, three writes
+(vs. 5 reads/3 writes + 2 temporaries for the unfused jnp chain). This is
+the optimizer's element-wise hot loop (Algorithm 1's G̃ᴼ computation).
+
+The debias factors d₁ = 1−β₁ᵗ and d₂ = 1−β₂ᵗ depend on the step count, so
+they arrive as (1,1) arrays rather than being baked into the HLO.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_BLOCK = 8
+LANE_BLOCK = 128
+
+
+def _adam_kernel(beta1, beta2, eps, m_ref, v_ref, g_ref, d1_ref, d2_ref, mo_ref, vo_ref, do_ref):
+    g = g_ref[...]
+    m_new = beta1 * m_ref[...] + (1.0 - beta1) * g
+    v_new = beta2 * v_ref[...] + (1.0 - beta2) * g * g
+    mo_ref[...] = m_new
+    vo_ref[...] = v_new
+    d1 = d1_ref[0, 0]
+    d2 = d2_ref[0, 0]
+    do_ref[...] = (m_new / d1) / (jnp.sqrt(v_new / d2) + eps)
+
+
+@functools.partial(jax.jit, static_argnames=("beta1", "beta2", "eps"))
+def adam_update(m, v, g, debias1, debias2, beta1=0.9, beta2=0.999, eps=1e-8):
+    """Fused moment update. m, v, g: (r, n); debias1/2: () or (1,1) arrays.
+
+    Returns (m′, v′, dir), all (r, n).
+    """
+    r, n = m.shape
+    pad_r = (-r) % ROW_BLOCK
+    pad_n = (-n) % LANE_BLOCK
+    if pad_r or pad_n:
+        padcfg = ((0, pad_r), (0, pad_n))
+        m_p = jnp.pad(m, padcfg)
+        v_p = jnp.pad(v, padcfg)
+        g_p = jnp.pad(g, padcfg)
+    else:
+        m_p, v_p, g_p = m, v, g
+    rp, np_ = m_p.shape
+    d1 = jnp.asarray(debias1, jnp.float32).reshape(1, 1)
+    d2 = jnp.asarray(debias2, jnp.float32).reshape(1, 1)
+    grid = (rp // ROW_BLOCK, np_ // LANE_BLOCK)
+    kernel = functools.partial(_adam_kernel, beta1, beta2, eps)
+    block = pl.BlockSpec((ROW_BLOCK, LANE_BLOCK), lambda i, j: (i, j))
+    scalar = pl.BlockSpec((1, 1), lambda i, j: (0, 0))
+    m_new, v_new, direction = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[block, block, block, scalar, scalar],
+        out_specs=[block, block, block],
+        out_shape=[
+            jax.ShapeDtypeStruct((rp, np_), m.dtype),
+            jax.ShapeDtypeStruct((rp, np_), v.dtype),
+            jax.ShapeDtypeStruct((rp, np_), m.dtype),
+        ],
+        interpret=True,
+    )(m_p, v_p, g_p, d1, d2)
+    return m_new[:r, :n], v_new[:r, :n], direction[:r, :n]

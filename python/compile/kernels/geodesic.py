@@ -1,0 +1,52 @@
+"""Pallas kernel: rank-1 Grassmann geodesic step (Eq. 5, descent form).
+
+Given the basis S (m×r), the top singular triplet (σ, u, v) of the tangent
+∇F and step size η, computes
+
+    S′ = S + (S·v·(cos θ − 1) − u·sin θ)·vᵀ,   θ = min(σ·η, π/2)
+
+in a single VMEM-resident kernel: one matvec (S·v), one outer-product
+accumulate. O(m·r) — the cheapness that lets SubTrack++ update the subspace
+as often as GaLore pays O(nm²) for.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _geodesic_kernel(eta, s_ref, u_ref, v_ref, sig_ref, o_ref):
+    s = s_ref[...]
+    u = u_ref[...]  # (m, 1)
+    v = v_ref[...]  # (1, r)
+    sigma = sig_ref[0, 0]
+    theta = jnp.minimum(sigma * eta, jnp.float32(jnp.pi / 2))
+    cos_t = jnp.cos(theta)
+    sin_t = jnp.sin(theta)
+    sv = jnp.dot(s, v[0, :], preferred_element_type=jnp.float32)  # (m,)
+    w = sv * (cos_t - 1.0) - u[:, 0] * sin_t
+    o_ref[...] = s + w[:, None] * v
+
+
+@functools.partial(jax.jit, static_argnames=("eta",))
+def geodesic_step(s, u, v, sigma, eta=10.0):
+    """S′ from the rank-1 geodesic. s: (m, r); u: (m,); v: (r,); sigma: ()."""
+    m, r = s.shape
+    u2 = u.reshape(m, 1)
+    v2 = v.reshape(1, r)
+    sig = jnp.asarray(sigma, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        functools.partial(_geodesic_kernel, eta),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((m, r), lambda i: (0, 0)),
+            pl.BlockSpec((m, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, r), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, r), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, r), s.dtype),
+        interpret=True,
+    )(s, u2, v2, sig)

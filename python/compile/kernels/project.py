@@ -1,0 +1,83 @@
+"""Pallas kernel: low-rank projection G̃ = SᵀG and back-projection Ĝ = S·G̃.
+
+The projection is the per-step hot-spot of every low-rank optimizer
+(executed for every 2-D parameter on every iteration, O(mnr)), so it gets
+the MXU treatment: the n (lane) dimension is tiled in 128-wide blocks, the
+m (sublane) contraction stays resident in VMEM, accumulation is fp32.
+
+VMEM budget per grid step (TPU estimate, DESIGN.md §Perf-L1):
+  S block m×r + G block m×128 + out block r×128, all fp32
+  e.g. m=2048, r=512: 2048·512·4 + 2048·128·4 + 512·128·4 ≈ 5.3 MiB — fits
+  a 16 MiB VMEM core with double-buffering headroom on the G stream.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE_BLOCK = 128
+
+
+def _project_kernel(s_ref, g_ref, o_ref):
+    # o = Sᵀ·G for one lane block; fp32 accumulate on the MXU.
+    o_ref[...] = jnp.dot(
+        s_ref[...].T, g_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _project_back_kernel(s_ref, gl_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        s_ref[...], gl_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _pad_lanes(x, block):
+    n = x.shape[-1]
+    pad = (-n) % block
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    return x, n
+
+
+@functools.partial(jax.jit, static_argnames=())
+def project(s, g):
+    """G̃ = SᵀG.  s: (m, r), g: (m, n) → (r, n)."""
+    m, r = s.shape
+    g_p, n = _pad_lanes(g, LANE_BLOCK)
+    n_pad = g_p.shape[1]
+    grid = (n_pad // LANE_BLOCK,)
+    out = pl.pallas_call(
+        _project_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, r), lambda i: (0, 0)),
+            pl.BlockSpec((m, LANE_BLOCK), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((r, LANE_BLOCK), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((r, n_pad), g.dtype),
+        interpret=True,
+    )(s, g_p)
+    return out[:, :n]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def project_back(s, g_low):
+    """Ĝ = S·G̃.  s: (m, r), g_low: (r, n) → (m, n)."""
+    m, r = s.shape
+    gl_p, n = _pad_lanes(g_low, LANE_BLOCK)
+    n_pad = gl_p.shape[1]
+    grid = (n_pad // LANE_BLOCK,)
+    out = pl.pallas_call(
+        _project_back_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, r), lambda i: (0, 0)),
+            pl.BlockSpec((r, LANE_BLOCK), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((m, LANE_BLOCK), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((m, n_pad), g_low.dtype),
+        interpret=True,
+    )(s, gl_p)
+    return out[:, :n]

@@ -1,0 +1,55 @@
+"""Pallas kernel: recovery scaling Λ = φ ⊙ (G − S·G̃)  (Eqs. 10–11).
+
+Column block layout: for each 128-wide lane block the kernel reduces the
+column norms of the optimizer direction and the raw low-rank gradient
+(both r×block), forms φ_j = ‖dir_j‖/‖g̃_j‖, and scales the residual block
+(m×block) — a single fused pass instead of two reductions plus a broadcast
+multiply over HBM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE_BLOCK = 128
+
+
+def _recovery_kernel(dir_ref, gl_ref, res_ref, o_ref):
+    d = dir_ref[...]
+    g = gl_ref[...]
+    num = jnp.sqrt(jnp.sum(d * d, axis=0))  # (block,)
+    den = jnp.sqrt(jnp.sum(g * g, axis=0))
+    phi = jnp.where(den > 1e-30, num / den, 0.0)
+    o_ref[...] = res_ref[...] * phi[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def recovery_scale(direction, g_low, resid):
+    """Λ = φ·resid. direction, g_low: (r, n); resid: (m, n) → (m, n)."""
+    r, n = direction.shape
+    m = resid.shape[0]
+    pad = (-n) % LANE_BLOCK
+    if pad:
+        direction_p = jnp.pad(direction, ((0, 0), (0, pad)))
+        # Pad g_low with ones so φ's denominator stays non-zero in padding.
+        g_low_p = jnp.pad(g_low, ((0, 0), (0, pad)), constant_values=1.0)
+        resid_p = jnp.pad(resid, ((0, 0), (0, pad)))
+    else:
+        direction_p, g_low_p, resid_p = direction, g_low, resid
+    n_pad = direction_p.shape[1]
+    grid = (n_pad // LANE_BLOCK,)
+    out = pl.pallas_call(
+        _recovery_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((r, LANE_BLOCK), lambda i: (0, i)),
+            pl.BlockSpec((r, LANE_BLOCK), lambda i: (0, i)),
+            pl.BlockSpec((m, LANE_BLOCK), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((m, LANE_BLOCK), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((m, n_pad), resid.dtype),
+        interpret=True,
+    )(direction_p, g_low_p, resid_p)
+    return out[:, :n]

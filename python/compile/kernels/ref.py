@@ -1,0 +1,62 @@
+"""Pure-jnp reference oracles for every Pallas kernel (Layer 1).
+
+These are the correctness ground truth: `python/tests/test_kernels.py`
+sweeps shapes/dtypes with hypothesis and asserts the Pallas kernels
+(interpret=True) match these to fp tolerance.
+"""
+
+import jax.numpy as jnp
+
+
+def project_ref(s, g):
+    """Low-rank projection G̃ = SᵀG.  s: (m, r), g: (m, n) -> (r, n)."""
+    return s.T @ g
+
+
+def project_back_ref(s, g_low):
+    """Ĝ = S·G̃.  s: (m, r), g_low: (r, n) -> (m, n)."""
+    return s @ g_low
+
+
+def adam_update_ref(m, v, g, beta1, beta2, eps, debias1, debias2):
+    """Fused Adam moment update + preconditioned direction.
+
+    m, v, g: same shape. Returns (m', v', dir) with
+      m' = β₁m + (1−β₁)g,  v' = β₂v + (1−β₂)g²,
+      dir = (m'/debias1) / (sqrt(v'/debias2) + ε).
+    """
+    m_new = beta1 * m + (1.0 - beta1) * g
+    v_new = beta2 * v + (1.0 - beta2) * g * g
+    direction = (m_new / debias1) / (jnp.sqrt(v_new / debias2) + eps)
+    return m_new, v_new, direction
+
+
+def geodesic_ref(s, u, v, sigma, eta):
+    """Rank-1 Grassmann geodesic step (Eq. 5, descent orientation).
+
+    s: (m, r) orthonormal, u: (m,) left singular vector of ∇F (⊥ span S),
+    v: (r,), sigma scalar. Returns S′ = S + (S·v·(cosθ−1) − u·sinθ)vᵀ with
+    θ = σ·η clamped to π/2 (stability guard, matching the Rust engine).
+    """
+    theta = jnp.minimum(sigma * eta, jnp.float32(jnp.pi / 2))
+    sv = s @ v  # (m,)
+    w = sv * (jnp.cos(theta) - 1.0) - u * jnp.sin(theta)
+    return s + jnp.outer(w, v)
+
+
+def recovery_scale_ref(direction, g_low, resid):
+    """Recovery scaling Λ = φ·resid (Eq. 10-11, Left-projection layout).
+
+    direction, g_low: (r, n); resid: (m, n). φ_j = ‖dir[:,j]‖/‖g_low[:,j]‖.
+    """
+    num = jnp.linalg.norm(direction, axis=0)
+    den = jnp.linalg.norm(g_low, axis=0)
+    phi = jnp.where(den > 1e-30, num / den, 0.0)
+    return resid * phi[None, :]
+
+
+def tangent_ref(s, g):
+    """Tangent ∇F = −2·R·Aᵀ with A = SᵀG, R = G − SA (Eqs. 2–4)."""
+    a = s.T @ g
+    r = g - s @ a
+    return -2.0 * (r @ a.T)

@@ -1,0 +1,154 @@
+"""Layer-2 JAX model: the Llama-family transformer, numerically identical to
+the Rust native engine (rust/src/model/llama.rs).
+
+Parameter layout (must match the Rust ordering exactly — the PJRT engine
+feeds parameters positionally):
+  [embed (v,h)] +
+  per layer: [attn_norm (h,), wq (h,h), wk, wv, wo, mlp_norm (h,),
+              w_gate (f,h), w_up (f,h), w_down (h,f)] +
+  [final_norm (h,), lm_head (v,h)]
+
+Linears compute y = x @ W.T (weights stored (out, in), as in Rust).
+`train_step` returns (loss, *grads) — the artifact the Rust trainer executes.
+"""
+
+import jax
+import jax.numpy as jnp
+
+RMS_EPS = 1e-5
+
+# Scaled-down presets mirrored from rust/src/model/config.rs.
+PRESETS = {
+    "nano": dict(hidden=16, intermediate=44, heads=2, layers=1, vocab=29, seq_len=8),
+    "tiny": dict(hidden=64, intermediate=172, heads=4, layers=2, vocab=512, seq_len=32),
+    "small": dict(hidden=128, intermediate=344, heads=4, layers=4, vocab=1024, seq_len=64),
+    "med": dict(hidden=256, intermediate=688, heads=8, layers=6, vocab=2048, seq_len=128),
+}
+ROPE_THETA = 10_000.0
+
+
+def param_shapes(cfg):
+    """Shapes in the canonical order (tuples; 1-D params as (h,))."""
+    h, f, v = cfg["hidden"], cfg["intermediate"], cfg["vocab"]
+    shapes = [("embed", (v, h))]
+    for l in range(cfg["layers"]):
+        shapes += [
+            (f"layer{l}.attn_norm", (h,)),
+            (f"layer{l}.wq", (h, h)),
+            (f"layer{l}.wk", (h, h)),
+            (f"layer{l}.wv", (h, h)),
+            (f"layer{l}.wo", (h, h)),
+            (f"layer{l}.mlp_norm", (h,)),
+            (f"layer{l}.w_gate", (f, h)),
+            (f"layer{l}.w_up", (f, h)),
+            (f"layer{l}.w_down", (h, f)),
+        ]
+    shapes += [("final_norm", (h,)), ("lm_head", (v, h))]
+    return shapes
+
+
+def init_params(cfg, key):
+    """Random init (for python-side tests; real runs feed Rust params)."""
+    params = []
+    std = 0.02
+    resid_std = std / (2.0 * cfg["layers"]) ** 0.5
+    for name, shape in param_shapes(cfg):
+        key, sub = jax.random.split(key)
+        if len(shape) == 1:
+            params.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith(("wo", "w_down")):
+            params.append(resid_std * jax.random.normal(sub, shape, jnp.float32))
+        else:
+            params.append(std * jax.random.normal(sub, shape, jnp.float32))
+    return params
+
+
+def _rmsnorm(x, gain):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + RMS_EPS) * gain
+
+
+def _rope(x, heads, head_dim):
+    """x: (b, t, h). Rotate pairs (2i, 2i+1) per head, matching Rust."""
+    b, t, h = x.shape
+    x = x.reshape(b, t, heads, head_dim // 2, 2)
+    pos = jnp.arange(t, dtype=jnp.float32)[None, :, None, None]
+    i = jnp.arange(head_dim // 2, dtype=jnp.float32)[None, None, None, :]
+    freq = 1.0 / ROPE_THETA ** (2.0 * i / head_dim)
+    angle = pos * freq  # (1, t, 1, d/2)
+    cos, sin = jnp.cos(angle), jnp.sin(angle)
+    a = x[..., 0]
+    bb = x[..., 1]
+    rot = jnp.stack([a * cos - bb * sin, a * sin + bb * cos], axis=-1)
+    return rot.reshape(b, t, h)
+
+
+def forward_hidden(cfg, params, tokens):
+    """Transformer body → final normed hidden states (b, t, h)."""
+    heads = cfg["heads"]
+    hd = cfg["hidden"] // heads
+    b, t = tokens.shape
+    it = iter(range(len(params)))
+    embed = params[next(it)]
+    x = embed[tokens]  # (b, t, h)
+    for _ in range(cfg["layers"]):
+        attn_norm = params[next(it)]
+        wq = params[next(it)]
+        wk = params[next(it)]
+        wv = params[next(it)]
+        wo = params[next(it)]
+        mlp_norm = params[next(it)]
+        w_gate = params[next(it)]
+        w_up = params[next(it)]
+        w_down = params[next(it)]
+
+        n1 = _rmsnorm(x, attn_norm)
+        q = _rope(n1 @ wq.T, heads, hd)
+        k = _rope(n1 @ wk.T, heads, hd)
+        v = n1 @ wv.T
+        # (b, heads, t, hd)
+        qh = q.reshape(b, t, heads, hd).transpose(0, 2, 1, 3)
+        kh = k.reshape(b, t, heads, hd).transpose(0, 2, 1, 3)
+        vh = v.reshape(b, t, heads, hd).transpose(0, 2, 1, 3)
+        scores = jnp.einsum("bhqd,bhkd->bhqk", qh, kh) / jnp.sqrt(jnp.float32(hd))
+        mask = jnp.tril(jnp.ones((t, t), bool))
+        scores = jnp.where(mask[None, None], scores, -jnp.inf)
+        probs = jax.nn.softmax(scores, axis=-1)
+        attn = jnp.einsum("bhqk,bhkd->bhqd", probs, vh)
+        attn = attn.transpose(0, 2, 1, 3).reshape(b, t, cfg["hidden"])
+        x = x + attn @ wo.T
+
+        n2 = _rmsnorm(x, mlp_norm)
+        gate = n2 @ w_gate.T
+        up = n2 @ w_up.T
+        hact = jax.nn.silu(gate) * up
+        x = x + hact @ w_down.T
+    final_norm = params[next(it)]
+    return _rmsnorm(x, final_norm)
+
+
+def loss_fn(cfg, params, tokens, targets):
+    """Mean next-token cross-entropy (identical to the Rust engine)."""
+    hidden = forward_hidden(cfg, params, tokens)
+    lm_head = params[-1]
+    logits = hidden @ lm_head.T  # (b, t, v)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def make_train_step(cfg):
+    """Build train_step(params..., tokens, targets) → (loss, *grads)."""
+
+    def train_step(*args):
+        n_params = len(param_shapes(cfg))
+        params = list(args[:n_params])
+        tokens, targets = args[n_params], args[n_params + 1]
+        loss, grads = jax.value_and_grad(
+            lambda ps: loss_fn(cfg, ps, tokens, targets)
+        )(params)
+        # Rust expects 1-D grads as 1-row matrices — shapes already match
+        # ((h,) flattens identically), so return as-is.
+        return (loss, *grads)
+
+    return train_step

@@ -1,0 +1,89 @@
+"""Layer-2 composition of the SubTrack++ optimizer step from the Layer-1
+Pallas kernels — lowered as standalone artifacts so the Rust coordinator can
+run the paper's update on the PJRT path.
+
+Two artifacts per (m, n, r) shape bucket:
+
+* ``subtrack_adam``  — the every-step path: project → fused Adam → back-
+  project → recovery scaling. Inputs (S, M, V, G, d1, d2) → (M′, V′, ΔW).
+* ``subtrack_update`` — the every-k-steps path: least-squares residual →
+  tangent → rank-1 (power iteration unrolled) → geodesic kernel → rotated
+  moments (projection-aware, Eqs. 8–9). Inputs (S, M, V, G, t_debias) →
+  (S′, M′, V′).
+
+The orientation convention matches the Rust engine's Left side (m ≤ n);
+the Rust caller transposes Right-side gradients before dispatch.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import adam_update, geodesic_step, project, project_back, recovery_scale
+
+POWER_ITERS = 8
+
+
+def subtrack_adam_step(s, m, v, g, debias1, debias2, beta1=0.9, beta2=0.999, eps=1e-8):
+    """Every-step SubTrack++ math (no subspace motion): returns (m', v', dw).
+
+    dw is the full-size weight delta Ĝ + Λ (recovery scaling included);
+    the caller applies W ← W − lr·scale·dw.
+    """
+    g_low = project(s, g)
+    m_new, v_new, direction = adam_update(
+        m, v, g_low, debias1, debias2, beta1=beta1, beta2=beta2, eps=eps
+    )
+    back = project_back(s, direction)
+    resid = g - project_back(s, g_low)
+    lam = recovery_scale(direction, g_low, resid)
+    return m_new, v_new, back + lam
+
+
+def _power_top1(a, iters=POWER_ITERS):
+    """Top singular triplet of a (m, r) matrix via unrolled power iteration.
+    Deterministic init (column of ones) — adequate because the tangent is
+    strongly rank-1 dominated; mirrors the Rust implementation's role."""
+    m, r = a.shape
+    v = jnp.ones((r,), a.dtype) / jnp.sqrt(jnp.float32(r))
+    u = jnp.zeros((m,), a.dtype)
+    sigma = jnp.float32(0.0)
+    for _ in range(iters):
+        u = a @ v
+        un = jnp.linalg.norm(u)
+        u = jnp.where(un > 1e-30, u / un, u)
+        v = a.T @ u
+        sigma = jnp.linalg.norm(v)
+        v = jnp.where(sigma > 1e-30, v / sigma, v)
+    return sigma, u, v
+
+
+def subtrack_subspace_update(s, m, v, g, debias2_prev, eta=10.0, beta2=0.999):
+    """Every-k-steps Grassmannian update + projection-aware moment rotation.
+
+    s: (dim, r); m, v: (r, n); g: (dim, n) oriented Left.
+    debias2_prev = 1 − β₂^(t−1) (scalar array).
+    Returns (s', m', v').
+    """
+    a = project(s, g)  # r×n least-squares solution (S orthonormal)
+    resid = g - project_back(s, a)
+    tangent = -2.0 * (resid @ a.T)  # (dim, r)
+    sigma, u_vec, v_vec = _power_top1(tangent)
+    # geodesic_step already encodes the descent orientation (−u·sinθ for the
+    # SVD factors of ∇F), matching rust/src/optim/subtrack.rs.
+    s_new = geodesic_step(s, u_vec, v_vec, sigma, eta=eta)
+    # Projection-aware rotation (Eqs. 8–9).
+    q = s_new.T @ s  # (r, r)
+    rot_m = q @ m
+    var = jnp.maximum(v - m * m, 0.0)
+    rot_v = jnp.abs(debias2_prev * ((q * q) @ var + (q @ m) ** 2))
+    return s_new, rot_m, rot_v
+
+
+def make_subtrack_adam(beta1=0.9, beta2=0.999, eps=1e-8):
+    return functools.partial(subtrack_adam_step, beta1=beta1, beta2=beta2, eps=eps)
+
+
+def make_subspace_update(eta=10.0, beta2=0.999):
+    return functools.partial(subtrack_subspace_update, eta=eta, beta2=beta2)

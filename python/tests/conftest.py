@@ -1,0 +1,9 @@
+"""pytest conftest: make `compile` importable from any invocation directory."""
+
+import os
+import sys
+
+_here = os.path.dirname(os.path.abspath(__file__))
+_python_dir = os.path.dirname(_here)
+if _python_dir not in sys.path:
+    sys.path.insert(0, _python_dir)

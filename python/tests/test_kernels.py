@@ -1,0 +1,164 @@
+"""Layer-1 correctness: Pallas kernels (interpret=True) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes; fixed-seed numpy draws the values. This is the
+CORE correctness signal for everything the AOT artifacts embed.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+
+from compile.kernels import (
+    adam_update,
+    geodesic_step,
+    project,
+    project_back,
+    recovery_scale,
+)
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(2, 48),
+    n=st.integers(1, 200),
+    r=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_project_matches_ref(m, n, r, seed):
+    r = min(r, m)
+    rng = np.random.default_rng(seed)
+    s = rand(rng, m, r)
+    g = rand(rng, m, n)
+    got = project(s, g)
+    want = ref.project_ref(s, g)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(2, 48),
+    n=st.integers(1, 200),
+    r=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_project_back_matches_ref(m, n, r, seed):
+    r = min(r, m)
+    rng = np.random.default_rng(seed)
+    s = rand(rng, m, r)
+    g_low = rand(rng, r, n)
+    got = project_back(s, g_low)
+    want = ref.project_back_ref(s, g_low)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    r=st.integers(1, 24),
+    n=st.integers(1, 300),
+    t=st.integers(1, 50),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_adam_update_matches_ref(r, n, t, seed):
+    rng = np.random.default_rng(seed)
+    m = rand(rng, r, n)
+    v = jnp.abs(rand(rng, r, n))
+    g = rand(rng, r, n)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    d1 = 1.0 - b1**t
+    d2 = 1.0 - b2**t
+    got_m, got_v, got_d = adam_update(m, v, g, d1, d2, beta1=b1, beta2=b2, eps=eps)
+    want_m, want_v, want_d = ref.adam_update_ref(m, v, g, b1, b2, eps, d1, d2)
+    np.testing.assert_allclose(got_m, want_m, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(got_v, want_v, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(got_d, want_d, rtol=1e-4, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(2, 64),
+    r=st.integers(1, 8),
+    sigma=st.floats(0.0, 50.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_geodesic_matches_ref(m, r, sigma, seed):
+    r = min(r, m)
+    rng = np.random.default_rng(seed)
+    # Orthonormal S via QR.
+    raw = rng.standard_normal((m, r))
+    q, _ = np.linalg.qr(raw)
+    s = jnp.asarray(q, jnp.float32)
+    u = rand(rng, m)
+    u = u / (jnp.linalg.norm(u) + 1e-30)
+    v = rand(rng, r)
+    v = v / (jnp.linalg.norm(v) + 1e-30)
+    eta = 0.37
+    got = geodesic_step(s, u, v, jnp.float32(sigma), eta=eta)
+    want = ref.geodesic_ref(s, u, v, jnp.float32(sigma), eta)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_geodesic_preserves_orthonormality():
+    rng = np.random.default_rng(7)
+    m, r = 32, 4
+    q, _ = np.linalg.qr(rng.standard_normal((m, r)))
+    s = jnp.asarray(q, jnp.float32)
+    g = jnp.asarray(rng.standard_normal((m, 64)), jnp.float32)
+    # u must be orthogonal to span(S) for exact orthonormality — build it
+    # from the projection residual, as the algorithm does.
+    t = ref.tangent_ref(s, g)
+    u, sv, vt = np.linalg.svd(np.asarray(t), full_matrices=False)
+    s_new = geodesic_step(
+        s,
+        jnp.asarray(u[:, 0]),
+        jnp.asarray(vt[0]),
+        jnp.float32(sv[0]),
+        eta=1e-3,
+    )
+    gram = np.asarray(s_new).T @ np.asarray(s_new)
+    np.testing.assert_allclose(gram, np.eye(r), atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(2, 40),
+    n=st.integers(1, 200),
+    r=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_recovery_scale_matches_ref(m, n, r, seed):
+    rng = np.random.default_rng(seed)
+    direction = rand(rng, r, n)
+    g_low = rand(rng, r, n)
+    resid = rand(rng, m, n)
+    got = recovery_scale(direction, g_low, resid)
+    want = ref.recovery_scale_ref(direction, g_low, resid)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_recovery_scale_zero_denominator():
+    # Columns with zero low-rank gradient must get φ = 0, not inf/nan.
+    direction = jnp.ones((2, 3), jnp.float32)
+    g_low = jnp.zeros((2, 3), jnp.float32)
+    resid = jnp.ones((4, 3), jnp.float32)
+    out = recovery_scale(direction, g_low, resid)
+    assert np.all(np.isfinite(np.asarray(out)))
+    np.testing.assert_allclose(out, 0.0)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_project_exact_on_lane_boundary(dtype):
+    # n an exact multiple of the 128 lane block (no padding path).
+    rng = np.random.default_rng(3)
+    s = jnp.asarray(rng.standard_normal((16, 4)), dtype)
+    g = jnp.asarray(rng.standard_normal((16, 256)), dtype)
+    np.testing.assert_allclose(project(s, g), ref.project_ref(s, g), rtol=1e-5, atol=1e-5)

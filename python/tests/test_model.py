@@ -1,0 +1,103 @@
+"""Layer-2 model correctness: shapes, init loss, gradients, and the
+train_step artifact contract."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import model as model_lib
+
+
+CFG = model_lib.PRESETS["nano"]
+
+
+def _random_params(seed=0):
+    return model_lib.init_params(CFG, jax.random.PRNGKey(seed))
+
+
+def _random_batch(b=2, seed=1):
+    key = jax.random.PRNGKey(seed)
+    t = CFG["seq_len"]
+    k1, k2 = jax.random.split(key)
+    tokens = jax.random.randint(k1, (b, t), 0, CFG["vocab"], jnp.int32)
+    targets = jax.random.randint(k2, (b, t), 0, CFG["vocab"], jnp.int32)
+    return tokens, targets
+
+
+def test_param_shapes_match_rust_layout():
+    shapes = model_lib.param_shapes(CFG)
+    # embed + 9 per layer + final_norm + lm_head
+    assert len(shapes) == 1 + 9 * CFG["layers"] + 2
+    assert shapes[0] == ("embed", (CFG["vocab"], CFG["hidden"]))
+    assert shapes[-1] == ("lm_head", (CFG["vocab"], CFG["hidden"]))
+    assert shapes[1] == ("layer0.attn_norm", (CFG["hidden"],))
+    assert shapes[7] == ("layer0.w_gate", (CFG["intermediate"], CFG["hidden"]))
+
+
+def test_init_loss_near_log_vocab():
+    params = _random_params()
+    tokens, targets = _random_batch()
+    loss = model_lib.loss_fn(CFG, params, tokens, targets)
+    expect = np.log(CFG["vocab"])
+    assert abs(float(loss) - expect) < 0.5, (float(loss), expect)
+
+
+def test_causality():
+    params = _random_params()
+    tokens, targets = _random_batch()
+    h1 = model_lib.forward_hidden(CFG, params, tokens)
+    # Perturb the last position; earlier positions must be unchanged.
+    tokens2 = tokens.at[0, -1].set((tokens[0, -1] + 1) % CFG["vocab"])
+    h2 = model_lib.forward_hidden(CFG, params, tokens2)
+    np.testing.assert_allclose(h1[0, 0], h2[0, 0], atol=1e-6)
+    np.testing.assert_allclose(h1[0, :-1], h2[0, :-1], atol=1e-6)
+
+
+def test_train_step_returns_loss_and_grads():
+    step = model_lib.make_train_step(CFG)
+    params = _random_params()
+    tokens, targets = _random_batch()
+    out = step(*params, tokens, targets)
+    assert len(out) == len(params) + 1
+    loss = out[0]
+    assert loss.shape == ()
+    for p, g in zip(params, out[1:]):
+        assert p.shape == g.shape
+    # Gradients are finite and non-trivial.
+    total = sum(float(jnp.sum(jnp.abs(g))) for g in out[1:])
+    assert np.isfinite(total) and total > 0
+
+
+def test_grad_matches_finite_difference():
+    params = _random_params()
+    tokens, targets = _random_batch(b=1)
+    loss, grads = jax.value_and_grad(
+        lambda ps: model_lib.loss_fn(CFG, ps, tokens, targets)
+    )(params)
+    # Check one entry of wq in layer 0 (index 2).
+    idx, i, j = 2, 1, 3
+    eps = 1e-3
+    pp = [p for p in params]
+    pp[idx] = params[idx].at[i, j].add(eps)
+    lp = model_lib.loss_fn(CFG, pp, tokens, targets)
+    pp[idx] = params[idx].at[i, j].add(-eps)
+    lm = model_lib.loss_fn(CFG, pp, tokens, targets)
+    numeric = (lp - lm) / (2 * eps)
+    assert abs(float(numeric) - float(grads[idx][i, j])) < 5e-3
+
+
+def test_training_overfits_one_batch():
+    params = _random_params()
+    tokens, targets = _random_batch(b=2)
+    val_and_grad = jax.jit(
+        jax.value_and_grad(lambda ps: model_lib.loss_fn(CFG, ps, tokens, targets))
+    )
+    loss0 = None
+    for _ in range(40):
+        loss, grads = val_and_grad(params)
+        if loss0 is None:
+            loss0 = loss
+        params = [p - 0.05 * g for p, g in zip(params, grads)]
+    assert float(loss) < float(loss0) * 0.9, (float(loss0), float(loss))

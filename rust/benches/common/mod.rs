@@ -1,0 +1,26 @@
+//! Shared plumbing for the per-table/figure bench harnesses.
+
+use std::path::Path;
+
+/// Read an env knob with a default (benches are parameterized through env
+/// vars because `cargo bench` owns the CLI).
+pub fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+pub fn env_str(key: &str, default: &str) -> String {
+    std::env::var(key).unwrap_or_else(|_| default.to_string())
+}
+
+/// Save a CSV under results/ and announce it.
+pub fn save_csv(csv: &subtrack::util::csv::CsvWriter, name: &str) {
+    let path = Path::new("results").join(name);
+    csv.save(&path).expect("write results csv");
+    println!("\n[data] {} rows -> {}", csv.len(), path.display());
+}
+
+pub fn banner(id: &str, what: &str) {
+    println!("================================================================");
+    println!("{id} — {what}");
+    println!("================================================================");
+}

@@ -1,0 +1,58 @@
+//! Figure 5 — Grassmannian tracking vs GaLore's SVD on the Ackley function
+//! (rank-1 subspace, interval 10, 100 steps, scale factors 1 and 3).
+//!
+//!     cargo bench --bench fig5_ackley
+
+mod common;
+
+use subtrack::experiments::ackley::figure5_panels;
+use subtrack::util::csv::CsvWriter;
+
+fn main() {
+    common::banner("Figure 5", "subspace tracking robustness on Ackley");
+    let runs = figure5_panels(common::env_usize("SUBTRACK_SEED", 1) as u64);
+    let mut csv = CsvWriter::new(&["tracker", "scale_factor", "step", "x", "y", "f"]);
+    println!(
+        "\n{:<14} {:>4} {:>10} {:>10} {:>10}  reached min?",
+        "tracker", "SF", "final f", "max jump", "mean jump"
+    );
+    for run in &runs {
+        for (i, (x, y, f)) in run.trajectory.iter().enumerate() {
+            csv.row(&[
+                format!("{:?}", run.tracker),
+                format!("{}", run.scale_factor),
+                i.to_string(),
+                format!("{x:.6}"),
+                format!("{y:.6}"),
+                format!("{f:.6}"),
+            ]);
+        }
+        println!(
+            "{:<14} {:>4} {:>10.4} {:>10.4} {:>10.4}  {}",
+            format!("{:?}", run.tracker),
+            run.scale_factor,
+            run.final_value,
+            run.max_jump,
+            run.mean_jump,
+            run.reached_minimum
+        );
+    }
+    // Paper Figure 5 shape: SVD's jumps grow with SF; tracking stays smooth.
+    let svd1 = &runs[1];
+    let svd3 = &runs[3];
+    let grass1 = &runs[0];
+    println!("\nshape checks vs paper Fig 5:");
+    println!(
+        "  SVD max jump grows with SF: {:.4} (SF1) -> {:.4} (SF3): {}",
+        svd1.max_jump,
+        svd3.max_jump,
+        svd3.max_jump > svd1.max_jump
+    );
+    println!(
+        "  tracking keeps smaller jumps than SVD@SF3: {:.4} vs {:.4}: {}",
+        grass1.max_jump,
+        svd3.max_jump,
+        grass1.max_jump <= svd3.max_jump
+    );
+    common::save_csv(&csv, "fig5_ackley.csv");
+}

@@ -1,0 +1,42 @@
+//! Table 1 — evaluation loss pre-training Llama-family models across the
+//! full method battery (scaled testbed; DESIGN.md §Substitutions).
+//!
+//!     cargo bench --bench table1_pretrain
+//!     SUBTRACK_SIZES=tiny,small SUBTRACK_STEPS=400 cargo bench --bench table1_pretrain
+
+mod common;
+
+use subtrack::experiments::pretrain::{self, SweepOpts};
+use subtrack::optim::PRETRAIN_METHODS;
+
+fn main() {
+    common::banner("Table 1", "pre-training eval loss across methods & sizes");
+    let sizes = common::env_str("SUBTRACK_SIZES", "tiny");
+    let steps = common::env_usize("SUBTRACK_STEPS", 250);
+
+    let mut all = Vec::new();
+    for size in sizes.split(',') {
+        let mut opts = SweepOpts::new(size.trim(), steps);
+        opts.batch_size = 8;
+        opts.lr = if size.trim() == "med" { 1e-3 } else { 2e-3 };
+        println!("\n--- {} / {} steps ---", size.trim(), steps);
+        let reports = pretrain::sweep(&opts, PRETRAIN_METHODS);
+        print!("{}", pretrain::loss_table(&reports));
+        all.extend(reports);
+    }
+    // Headline check (the paper's Table 1 shape): SubTrack++ within the top
+    // two methods per size.
+    for size in sizes.split(',') {
+        let mut rows: Vec<_> = all.iter().filter(|r| r.model == size.trim()).collect();
+        rows.sort_by(|a, b| a.final_eval_loss.partial_cmp(&b.final_eval_loss).unwrap());
+        if let Some(pos) = rows.iter().position(|r| r.method == "SubTrack++") {
+            println!(
+                "\n[{}] SubTrack++ rank among {} methods: #{}",
+                size.trim(),
+                rows.len(),
+                pos + 1
+            );
+        }
+    }
+    common::save_csv(&pretrain::summary_csv(&all), "table1_pretrain.csv");
+}

@@ -1,0 +1,65 @@
+//! Tables 4 & 5 — fine-tuning on the synthetic GLUE / SuperGLUE batteries
+//! at rank 8 (DESIGN.md §Substitutions), across the paper's fine-tuning
+//! method set.
+//!
+//!     cargo bench --bench table45_finetune
+//!     SUBTRACK_STEPS=200 SUBTRACK_SUITE=superglue cargo bench --bench table45_finetune
+
+mod common;
+
+use subtrack::data::tasks::TaskKind;
+use subtrack::experiments::finetune::{accuracy_grid, finetune, pretrain_backbone, FinetuneOpts};
+use subtrack::model::ModelConfig;
+use subtrack::util::csv::CsvWriter;
+
+const METHODS: &[&str] = &["full-rank", "badam", "galore", "ldadam", "subtrack++"];
+
+fn main() {
+    common::banner("Tables 4/5", "fine-tuning accuracy (GLUE/SuperGLUE stand-ins)");
+    let suite = common::env_str("SUBTRACK_SUITE", "glue");
+    let steps = common::env_usize("SUBTRACK_STEPS", 120);
+    let cfg = ModelConfig::preset(&common::env_str("SUBTRACK_MODEL", "tiny"));
+    println!("\npre-training {} backbone ...", cfg.name);
+    let backbone = pretrain_backbone(&cfg, common::env_usize("SUBTRACK_PRETRAIN", 60), 42);
+
+    let tasks = if suite == "superglue" { TaskKind::superglue() } else { TaskKind::glue() };
+    let opts = FinetuneOpts { steps, rank: 8, ..FinetuneOpts::default() };
+
+    let mut results = Vec::new();
+    let mut csv = CsvWriter::new(&["suite", "task", "method", "val_accuracy", "wall_s"]);
+    for method in METHODS {
+        for (name, kind) in &tasks {
+            let res = finetune(&backbone, name, *kind, method, &opts);
+            println!(
+                "  {method:<12} {name:<10} acc {:>5.1}%  ({:.1}s)",
+                100.0 * res.val_accuracy,
+                res.wall_time_secs
+            );
+            csv.rowv(&[
+                suite.clone(),
+                name.to_string(),
+                method.to_string(),
+                format!("{:.4}", res.val_accuracy),
+                format!("{:.2}", res.wall_time_secs),
+            ]);
+            results.push(res);
+        }
+    }
+    let task_names: Vec<&str> = tasks.iter().map(|(n, _)| *n).collect();
+    println!("\n{}", accuracy_grid(&results, &task_names, METHODS));
+    // Shape check (paper Tables 4/5): the low-rank methods land close to
+    // full-rank; BAdam trails on the harder tasks.
+    let mean = |m: &str| {
+        let xs: Vec<f32> =
+            results.iter().filter(|r| r.method == m).map(|r| r.val_accuracy).collect();
+        xs.iter().sum::<f32>() / xs.len() as f32
+    };
+    println!(
+        "mean accuracy — full-rank {:.3}, subtrack++ {:.3}, galore {:.3}, badam {:.3}",
+        mean("full-rank"),
+        mean("subtrack++"),
+        mean("galore"),
+        mean("badam")
+    );
+    common::save_csv(&csv, "table45_finetune.csv");
+}

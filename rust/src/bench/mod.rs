@@ -1,0 +1,134 @@
+//! In-tree micro-benchmark harness (criterion is unavailable offline).
+//!
+//! `Bencher` runs warmup + timed iterations and reports mean / p50 / p95 /
+//! min, with enough samples for stable single-core numbers. The per-table
+//! harnesses under `rust/benches/` use it through `cargo bench`
+//! (`harness = false`).
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>10} iters  mean {:>12}  p50 {:>12}  p95 {:>12}",
+            self.name,
+            self.iters,
+            crate::util::human_secs(self.mean_s),
+            crate::util::human_secs(self.p50_s),
+            crate::util::human_secs(self.p95_s),
+        )
+    }
+}
+
+/// Benchmark runner.
+pub struct Bencher {
+    /// Minimum wall time to spend measuring each case.
+    pub measure_time: Duration,
+    /// Warmup time before measuring.
+    pub warmup_time: Duration,
+    /// Upper bound on measured iterations (keeps huge cases bounded).
+    pub max_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            measure_time: Duration::from_millis(700),
+            warmup_time: Duration::from_millis(150),
+            max_iters: 10_000,
+        }
+    }
+}
+
+impl Bencher {
+    /// Fast settings for CI-ish runs.
+    pub fn quick() -> Bencher {
+        Bencher {
+            measure_time: Duration::from_millis(200),
+            warmup_time: Duration::from_millis(50),
+            max_iters: 2_000,
+        }
+    }
+
+    /// Time `f`, preventing the compiler from optimizing the work away via
+    /// the returned value.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        // Warmup.
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup_time {
+            std::hint::black_box(f());
+        }
+        // Measure.
+        let mut samples: Vec<f64> = Vec::new();
+        let m0 = Instant::now();
+        while m0.elapsed() < self.measure_time && samples.len() < self.max_iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len().max(1);
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        BenchResult {
+            name: name.to_string(),
+            iters: samples.len(),
+            mean_s: mean,
+            p50_s: samples.get(n / 2).copied().unwrap_or(0.0),
+            p95_s: samples.get((n as f64 * 0.95) as usize).copied().unwrap_or(0.0),
+            min_s: samples.first().copied().unwrap_or(0.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bencher {
+            measure_time: Duration::from_millis(30),
+            warmup_time: Duration::from_millis(5),
+            max_iters: 100_000,
+        };
+        let r = b.run("noop-ish", || {
+            let mut acc = 0u64;
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.iters > 10);
+        assert!(r.mean_s > 0.0);
+        assert!(r.p95_s >= r.p50_s);
+        assert!(r.p50_s >= r.min_s);
+        assert!(!r.line().is_empty());
+    }
+
+    #[test]
+    fn slower_work_measures_slower() {
+        let b = Bencher {
+            measure_time: Duration::from_millis(40),
+            warmup_time: Duration::from_millis(5),
+            max_iters: 100_000,
+        };
+        let fast = b.run("fast", || {
+            std::hint::black_box((0..10u64).sum::<u64>())
+        });
+        let slow = b.run("slow", || {
+            std::hint::black_box((0..10_000u64).sum::<u64>())
+        });
+        assert!(slow.mean_s > fast.mean_s, "{} !> {}", slow.mean_s, fast.mean_s);
+    }
+}

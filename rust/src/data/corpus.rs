@@ -1,0 +1,225 @@
+//! Synthetic corpora standing in for C4 (DESIGN.md §Substitutions).
+//!
+//! Two generators:
+//! * **Markov** — an order-1 Markov chain over the vocabulary with Zipf
+//!   marginals and sparse, peaked transition rows. Sequences have real
+//!   structure (a transformer's loss drops well below the unigram entropy),
+//!   so optimizer comparisons behave like language pre-training.
+//! * **Hierarchical** — a two-level "topic" chain: a slow hidden topic state
+//!   selects among per-topic transition tables, adding the longer-range
+//!   dependencies that reward attention over pure bigram statistics.
+//!
+//! Both are deterministic given a seed, so every experiment is reproducible.
+
+use crate::model::Batch;
+use crate::util::rng::Rng;
+
+/// Which synthetic corpus to generate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CorpusKind {
+    Markov,
+    Hierarchical,
+}
+
+/// A token-id corpus with a next-token batch sampler.
+pub struct Corpus {
+    pub vocab: usize,
+    tokens: Vec<u32>,
+    rng: Rng,
+}
+
+impl Corpus {
+    /// Generate `len` tokens with the given vocabulary size.
+    pub fn generate(kind: CorpusKind, vocab: usize, len: usize, seed: u64) -> Corpus {
+        let mut rng = Rng::new(seed);
+        let tokens = match kind {
+            CorpusKind::Markov => markov_tokens(vocab, len, &mut rng),
+            CorpusKind::Hierarchical => hierarchical_tokens(vocab, len, &mut rng),
+        };
+        Corpus { vocab, tokens, rng: Rng::new(seed ^ 0xbb) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    pub fn tokens(&self) -> &[u32] {
+        &self.tokens
+    }
+
+    /// Sample a next-token-prediction batch of B sequences × T tokens from
+    /// random windows.
+    pub fn sample_batch(&mut self, b: usize, t: usize) -> Batch {
+        let mut inputs = Vec::with_capacity(b * t);
+        let mut targets = Vec::with_capacity(b * t);
+        let max_start = self.tokens.len().saturating_sub(t + 1).max(1);
+        for _ in 0..b {
+            let start = self.rng.below(max_start);
+            for i in 0..t {
+                inputs.push(self.tokens[start + i]);
+                targets.push(self.tokens[start + i + 1]);
+            }
+        }
+        Batch { inputs, targets, b, t }
+    }
+
+    /// A deterministic evaluation batch (fixed windows from the tail, which
+    /// the random sampler rarely touches).
+    pub fn eval_batch(&self, b: usize, t: usize) -> Batch {
+        let mut inputs = Vec::with_capacity(b * t);
+        let mut targets = Vec::with_capacity(b * t);
+        let tail = self.tokens.len().saturating_sub(b * (t + 1) + 1);
+        for bi in 0..b {
+            let start = tail + bi * (t + 1);
+            for i in 0..t {
+                inputs.push(self.tokens[start + i]);
+                targets.push(self.tokens[start + i + 1]);
+            }
+        }
+        Batch { inputs, targets, b, t }
+    }
+}
+
+/// Zipf weights w_i ∝ 1/(i+1)^s.
+fn zipf_weights(vocab: usize, s: f64) -> Vec<f64> {
+    (0..vocab).map(|i| 1.0 / ((i + 1) as f64).powf(s)).collect()
+}
+
+fn markov_tokens(vocab: usize, len: usize, rng: &mut Rng) -> Vec<u32> {
+    // Sparse peaked transitions: each token has a handful of likely
+    // successors drawn from a Zipf marginal.
+    let fanout = 6.min(vocab);
+    let marginal = zipf_weights(vocab, 1.2);
+    let succ: Vec<Vec<(u32, f64)>> = (0..vocab)
+        .map(|_| {
+            (0..fanout)
+                .map(|rank| {
+                    let tok = rng.categorical(&marginal) as u32;
+                    let w = 1.0 / ((rank + 1) as f64);
+                    (tok, w)
+                })
+                .collect()
+        })
+        .collect();
+    let mut tokens = Vec::with_capacity(len);
+    let mut cur = rng.below(vocab) as u32;
+    for _ in 0..len {
+        tokens.push(cur);
+        let row = &succ[cur as usize];
+        // 10% chance to teleport (keeps the chain ergodic).
+        cur = if rng.uniform() < 0.1 {
+            rng.categorical(&marginal) as u32
+        } else {
+            let ws: Vec<f64> = row.iter().map(|&(_, w)| w).collect();
+            row[rng.categorical(&ws)].0
+        };
+    }
+    tokens
+}
+
+fn hierarchical_tokens(vocab: usize, len: usize, rng: &mut Rng) -> Vec<u32> {
+    let n_topics = 4usize;
+    let marginal = zipf_weights(vocab, 1.1);
+    // Per-topic sparse transitions.
+    let fanout = 5.min(vocab);
+    let tables: Vec<Vec<Vec<(u32, f64)>>> = (0..n_topics)
+        .map(|_| {
+            (0..vocab)
+                .map(|_| {
+                    (0..fanout)
+                        .map(|rank| {
+                            (rng.categorical(&marginal) as u32, 1.0 / ((rank + 1) as f64))
+                        })
+                        .collect()
+                })
+                .collect()
+        })
+        .collect();
+    let mut tokens = Vec::with_capacity(len);
+    let mut topic = 0usize;
+    let mut cur = rng.below(vocab) as u32;
+    for i in 0..len {
+        tokens.push(cur);
+        if i % 64 == 0 && rng.uniform() < 0.5 {
+            topic = rng.below(n_topics);
+        }
+        let row = &tables[topic][cur as usize];
+        cur = if rng.uniform() < 0.05 {
+            rng.categorical(&marginal) as u32
+        } else {
+            let ws: Vec<f64> = row.iter().map(|&(_, w)| w).collect();
+            row[rng.categorical(&ws)].0
+        };
+    }
+    tokens
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_generation() {
+        let a = Corpus::generate(CorpusKind::Markov, 100, 1000, 5);
+        let b = Corpus::generate(CorpusKind::Markov, 100, 1000, 5);
+        assert_eq!(a.tokens(), b.tokens());
+        let c = Corpus::generate(CorpusKind::Markov, 100, 1000, 6);
+        assert_ne!(a.tokens(), c.tokens());
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        for kind in [CorpusKind::Markov, CorpusKind::Hierarchical] {
+            let c = Corpus::generate(kind, 64, 5000, 7);
+            assert_eq!(c.len(), 5000);
+            assert!(c.tokens().iter().all(|&t| (t as usize) < 64));
+        }
+    }
+
+    #[test]
+    fn corpus_has_bigram_structure() {
+        // The Markov chain must be far from i.i.d.: the top bigram should be
+        // much more frequent than under independence.
+        let c = Corpus::generate(CorpusKind::Markov, 50, 50_000, 8);
+        let mut uni = vec![0f64; 50];
+        let mut big = std::collections::HashMap::new();
+        for w in c.tokens().windows(2) {
+            uni[w[0] as usize] += 1.0;
+            *big.entry((w[0], w[1])).or_insert(0f64) += 1.0;
+        }
+        let n = (c.len() - 1) as f64;
+        let (&(a, b), &count) = big.iter().max_by(|x, y| x.1.partial_cmp(y.1).unwrap()).unwrap();
+        let p_joint = count / n;
+        let p_indep = (uni[a as usize] / n) * (uni[b as usize] / n);
+        assert!(
+            p_joint > 3.0 * p_indep,
+            "top bigram not structured: joint {p_joint} vs indep {p_indep}"
+        );
+    }
+
+    #[test]
+    fn batches_are_next_token_shifted() {
+        let mut c = Corpus::generate(CorpusKind::Markov, 64, 10_000, 9);
+        let batch = c.sample_batch(4, 16);
+        assert_eq!(batch.inputs.len(), 64);
+        assert_eq!(batch.targets.len(), 64);
+        // Within each sequence, target[i] == input[i+1].
+        for b in 0..4 {
+            for i in 0..15 {
+                assert_eq!(batch.targets[b * 16 + i], batch.inputs[b * 16 + i + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn eval_batch_deterministic() {
+        let c = Corpus::generate(CorpusKind::Markov, 64, 10_000, 10);
+        let b1 = c.eval_batch(2, 8);
+        let b2 = c.eval_batch(2, 8);
+        assert_eq!(b1.inputs, b2.inputs);
+    }
+}

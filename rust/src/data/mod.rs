@@ -1,0 +1,10 @@
+//! Data pipeline: synthetic corpora (the C4 stand-in), batching, and the
+//! GLUE-style classification task generators used by the fine-tuning
+//! experiments. See DESIGN.md §Substitutions for why synthetic data
+//! preserves the paper's comparisons.
+
+pub mod corpus;
+pub mod tasks;
+
+pub use corpus::{Corpus, CorpusKind};
+pub use tasks::{ClassificationTask, TaskKind};

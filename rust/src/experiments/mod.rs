@@ -1,0 +1,8 @@
+//! Experiment harnesses — one per paper table/figure (DESIGN.md §Experiment
+//! index). The `rust/benches/*` binaries are thin CLI wrappers over these so
+//! every result is also reachable from library tests and examples.
+
+pub mod ackley;
+pub mod complexity;
+pub mod finetune;
+pub mod pretrain;

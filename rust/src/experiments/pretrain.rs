@@ -1,0 +1,197 @@
+//! Pre-training sweep harness — shared by the Table 1/8/9 and Figure 1/3/4/6
+//! benches. Runs one method per call with the paper's protocol scaled to the
+//! testbed (DESIGN.md §Substitutions) and returns the full
+//! [`TrainReport`].
+
+use crate::train::{TrainConfig, Trainer, TrainReport};
+use crate::util::csv::CsvWriter;
+
+/// Options shared by a sweep (mirrors the knobs of Tables 9–10).
+#[derive(Clone, Debug)]
+pub struct SweepOpts {
+    pub model_preset: String,
+    pub steps: usize,
+    pub batch_size: usize,
+    pub seq_len: Option<usize>,
+    pub lr: f32,
+    pub seed: u64,
+    /// Interval chosen so the run has exactly this many subspace updates
+    /// (the paper's Table 9 protocol uses 10).
+    pub target_subspace_updates: usize,
+    /// Optional rank override (defaults to the preset's Table-10 rank analog).
+    pub rank: Option<usize>,
+}
+
+impl SweepOpts {
+    pub fn new(model_preset: &str, steps: usize) -> SweepOpts {
+        SweepOpts {
+            model_preset: model_preset.to_string(),
+            steps,
+            batch_size: 8,
+            seq_len: None,
+            lr: 1e-3,
+            seed: 42,
+            target_subspace_updates: 10,
+            rank: None,
+        }
+    }
+
+    pub fn build_config(&self, method: &str) -> TrainConfig {
+        let mut cfg = TrainConfig::preset(&self.model_preset, method, self.steps);
+        cfg.batch_size = self.batch_size;
+        if let Some(t) = self.seq_len {
+            cfg.model.seq_len = t;
+        }
+        cfg.lr = self.lr;
+        cfg.seed = self.seed;
+        cfg.hp.interval = (self.steps / self.target_subspace_updates.max(1)).max(1);
+        if let Some(r) = self.rank {
+            cfg.hp.rank = r;
+        }
+        // Keep the loss curve light: ~200 points per run.
+        cfg.log_every = (self.steps / 200).max(1);
+        cfg.eval_every = (self.steps / 5).max(1);
+        cfg.eval_batches = 2;
+        cfg
+    }
+}
+
+/// Run one method; returns the report.
+pub fn run_method(opts: &SweepOpts, method: &str) -> TrainReport {
+    let cfg = opts.build_config(method);
+    let mut trainer = Trainer::new(cfg);
+    trainer.run().expect("native training cannot fail")
+}
+
+/// Run several methods under identical settings.
+pub fn sweep(opts: &SweepOpts, methods: &[&str]) -> Vec<TrainReport> {
+    methods.iter().map(|m| run_method(opts, m)).collect()
+}
+
+/// Render a Table-1-style row set: method → final eval loss.
+pub fn loss_table(reports: &[TrainReport]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("{:<28} {:>12}\n", "method", "eval loss"));
+    let best = reports
+        .iter()
+        .map(|r| r.final_eval_loss)
+        .fold(f32::INFINITY, f32::min);
+    for r in reports {
+        let marker = if (r.final_eval_loss - best).abs() < 1e-6 { "  <- best" } else { "" };
+        out.push_str(&format!("{:<28} {:>12.4}{marker}\n", r.method, r.final_eval_loss));
+    }
+    out
+}
+
+/// Render a Table-9-style row set: method → wall time.
+pub fn walltime_table(reports: &[TrainReport]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("{:<28} {:>14} {:>12}\n", "method", "wall time (s)", "eval loss"));
+    for r in reports {
+        out.push_str(&format!(
+            "{:<28} {:>14.2} {:>12.4}\n",
+            r.method, r.wall_time_secs, r.final_eval_loss
+        ));
+    }
+    out
+}
+
+/// Render a Table-8-style row set: method → peak memory.
+pub fn memory_table(reports: &[TrainReport]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<28} {:>16} {:>16} {:>14}\n",
+        "method", "opt-state bytes", "peak RSS", "state params"
+    ));
+    for r in reports {
+        out.push_str(&format!(
+            "{:<28} {:>16} {:>16} {:>14}\n",
+            r.method,
+            crate::util::human_bytes(r.peak_state_bytes),
+            crate::util::human_bytes(r.peak_rss_bytes),
+            r.optimizer_state_params
+        ));
+    }
+    out
+}
+
+/// Summary CSV across methods (Figure 1 bars + Tables 1/8/9 data).
+pub fn summary_csv(reports: &[TrainReport]) -> CsvWriter {
+    let mut w = CsvWriter::new(&[
+        "method",
+        "model",
+        "final_eval_loss",
+        "wall_time_s",
+        "opt_state_bytes",
+        "peak_rss_bytes",
+        "opt_state_params",
+        "subspace_updates",
+    ]);
+    for r in reports {
+        w.row(&[
+            r.method.clone(),
+            r.model.clone(),
+            format!("{:.6}", r.final_eval_loss),
+            format!("{:.3}", r.wall_time_secs),
+            r.peak_state_bytes.to_string(),
+            r.peak_rss_bytes.to_string(),
+            r.optimizer_state_params.to_string(),
+            r.subspace_updates.to_string(),
+        ]);
+    }
+    w
+}
+
+/// Concatenated per-step curves (Figure 4 a/b).
+pub fn curves_csv(reports: &[TrainReport]) -> CsvWriter {
+    let mut w = CsvWriter::new(&["method", "step", "loss", "lr", "elapsed_s"]);
+    for r in reports {
+        for s in &r.steps {
+            w.row(&[
+                r.method.clone(),
+                s.step.to_string(),
+                format!("{:.6}", s.loss),
+                format!("{:.6e}", s.lr),
+                format!("{:.4}", s.elapsed),
+            ]);
+        }
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_opts() -> SweepOpts {
+        let mut o = SweepOpts::new("nano", 12);
+        o.batch_size = 2;
+        o.rank = Some(2);
+        o
+    }
+
+    #[test]
+    fn sweep_and_tables_render() {
+        let opts = quick_opts();
+        let reports = sweep(&opts, &["full-rank", "subtrack++"]);
+        assert_eq!(reports.len(), 2);
+        let t1 = loss_table(&reports);
+        assert!(t1.contains("SubTrack++"));
+        assert!(t1.contains("<- best"));
+        let t9 = walltime_table(&reports);
+        assert!(t9.contains("wall time"));
+        let t8 = memory_table(&reports);
+        assert!(t8.contains("peak RSS"));
+        let csv = summary_csv(&reports);
+        assert_eq!(csv.len(), 2);
+        let curves = curves_csv(&reports);
+        assert!(curves.len() >= 2);
+    }
+
+    #[test]
+    fn interval_targets_subspace_updates() {
+        let opts = SweepOpts::new("nano", 100);
+        let cfg = opts.build_config("subtrack++");
+        assert_eq!(cfg.hp.interval, 10);
+    }
+}

@@ -1,0 +1,36 @@
+//! # SubTrack++ — Grassmannian gradient subspace tracking for scalable LLM training
+//!
+//! Full reproduction of *SubTrack++: Gradient Subspace Tracking for Scalable LLM
+//! Training* (Rajabi, Nonta, Rambhatla; 2025) as a three-layer Rust + JAX/Pallas
+//! stack. This crate is Layer 3: the training coordinator. It owns the training
+//! loop, the optimizer family (the paper's contribution plus every baseline it
+//! compares against), the data pipeline, configuration, metrics and the PJRT
+//! runtime that executes the JAX-lowered (Layer 2) compute graphs embedding the
+//! Pallas (Layer 1) kernels. Python never runs on the training path.
+//!
+//! ## Layout
+//!
+//! * [`tensor`] — dense f32 linear-algebra substrate (gemm, QR, Jacobi SVD,
+//!   power iteration, least squares) built from scratch.
+//! * [`optim`] — `Adam`/`AdamW`, `GaLore`, `Fira`, `LDAdam`, `OnlineSubspaceDescent`,
+//!   `BAdam`, `Apollo`, `GoLore` and [`optim::subtrack::SubTrack`] (the paper).
+//! * [`model`] — Llama-family transformer with a hand-written backward pass
+//!   (the "native" engine) plus the paper's model-size configurations.
+//! * [`data`] — synthetic corpus generators, tokenizer, batcher, and
+//!   GLUE-style classification task generators.
+//! * [`train`] — trainer, LR schedules, metrics, checkpointing, and the
+//!   data-parallel worker simulation.
+//! * [`runtime`] — PJRT engine: loads `artifacts/*.hlo.txt` and executes them.
+//! * [`bench`] — in-tree micro-benchmark harness (criterion-like).
+//! * [`util`] — RNG, CLI/config parsing, JSON/CSV emitters, property testing.
+//! * [`experiments`] — the per-table/figure reproduction harnesses.
+
+pub mod bench;
+pub mod data;
+pub mod experiments;
+pub mod model;
+pub mod optim;
+pub mod runtime;
+pub mod tensor;
+pub mod train;
+pub mod util;

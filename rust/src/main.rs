@@ -1,0 +1,226 @@
+//! `subtrack` — the Layer-3 launcher CLI.
+//!
+//! Subcommands:
+//!   pretrain   run a pre-training job (config file + CLI overrides)
+//!   finetune   fine-tune a backbone on the synthetic GLUE-like battery
+//!   ackley     the Figure-5 robustness study
+//!   inspect    print model-size / optimizer-memory tables (Table 2 analytics)
+//!
+//! Examples:
+//!   subtrack pretrain --config configs/med_subtrack.toml
+//!   subtrack pretrain --model small --method galore --steps 400
+//!   subtrack pretrain --model tiny --method subtrack++ --engine pjrt
+//!   subtrack inspect --sizes 60m,130m,1b
+
+use subtrack::data::tasks::TaskKind;
+use subtrack::experiments::{ackley, finetune};
+use subtrack::model::ModelConfig;
+use subtrack::train::{TrainConfig, Trainer};
+use subtrack::util::cli::Cli;
+use subtrack::util::config::Config;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest: Vec<String> = args.iter().skip(1).cloned().collect();
+    match cmd {
+        "pretrain" => pretrain(&rest),
+        "finetune" => cmd_finetune(&rest),
+        "ackley" => cmd_ackley(&rest),
+        "inspect" => inspect(&rest),
+        _ => {
+            println!(
+                "subtrack — SubTrack++ training coordinator\n\n\
+                 usage: subtrack <pretrain|finetune|ackley|inspect> [options]\n\
+                 run `subtrack <cmd> --help` for per-command options"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn pretrain(args: &[String]) -> anyhow::Result<()> {
+    let cli = Cli::new("subtrack pretrain", "run a pre-training job")
+        .opt("config", None, "TOML config file (configs/*.toml)")
+        .opt("model", Some("small"), "model preset (nano|tiny|small|med)")
+        .opt("method", Some("subtrack++"), "optimizer (see optim::by_name)")
+        .opt("steps", Some("400"), "training steps")
+        .opt("batch-size", Some("8"), "sequences per batch")
+        .opt("lr", Some("1e-3"), "peak learning rate")
+        .opt("rank", None, "projection rank override")
+        .opt("interval", None, "subspace update interval override")
+        .opt("seed", Some("42"), "RNG seed")
+        .opt("workers", Some("1"), "simulated data-parallel workers")
+        .opt("engine", Some("native"), "gradient engine: native|pjrt")
+        .opt("artifacts", Some("artifacts"), "artifact dir for --engine pjrt")
+        .opt("out", None, "write loss curve CSV here")
+        .opt("checkpoint", None, "save final checkpoint to this path prefix");
+    let p = match cli.parse(args) {
+        Ok(p) => p,
+        Err(subtrack::util::cli::HelpOrError::Help(h)) => {
+            println!("{h}");
+            return Ok(());
+        }
+        Err(subtrack::util::cli::HelpOrError::Error(e)) => anyhow::bail!(e),
+    };
+
+    let mut cfg = if let Some(path) = p.get("config") {
+        let file = Config::load(path).map_err(|e| anyhow::anyhow!(e))?;
+        TrainConfig::from_config(&file)
+    } else {
+        TrainConfig::preset(&p.str("model"), &p.str("method"), p.usize("steps"))
+    };
+    if p.get("config").is_some() {
+        // CLI still overrides file values where given explicitly.
+        if p.get("steps") != Some("400") {
+            cfg.steps = p.usize("steps");
+        }
+    }
+    cfg.batch_size = p.usize("batch-size");
+    cfg.lr = p.f32("lr");
+    cfg.seed = p.u64("seed");
+    cfg.workers = p.usize("workers");
+    if let Some(r) = p.get("rank") {
+        cfg.hp.rank = r.parse().unwrap();
+    }
+    if let Some(k) = p.get("interval") {
+        cfg.hp.interval = k.parse().unwrap();
+    }
+
+    println!(
+        "pretrain: model={} ({} params), method={}, steps={}, rank={}, interval={}, engine={}",
+        cfg.model.name,
+        cfg.model.param_count(),
+        cfg.method,
+        cfg.steps,
+        cfg.hp.rank,
+        cfg.hp.interval,
+        p.str("engine"),
+    );
+    let mut trainer = Trainer::new(cfg);
+    if p.str("engine") == "pjrt" {
+        let engine = subtrack::runtime::PjrtEngine::new(
+            &p.str("artifacts"),
+            &trainer.cfg.model.name.clone(),
+            trainer.cfg.batch_size,
+            trainer.cfg.model.seq_len,
+        )?;
+        println!("pjrt engine: artifact {}", engine.artifact_name());
+        trainer = trainer.with_pjrt(engine);
+    }
+    let report = trainer.run()?;
+    println!(
+        "done: eval loss {:.4}, wall {:.1}s, optimizer state {} ({} params), {} subspace updates",
+        report.final_eval_loss,
+        report.wall_time_secs,
+        subtrack::util::human_bytes(report.peak_state_bytes),
+        report.optimizer_state_params,
+        report.subspace_updates,
+    );
+    if let Some(out) = p.get("out") {
+        report.curve_csv().save(out)?;
+        println!("loss curve -> {out}");
+    }
+    if let Some(ckpt) = p.get("checkpoint") {
+        subtrack::train::checkpoint::save(ckpt, &trainer.model.params, report.steps.len())?;
+        println!("checkpoint -> {ckpt}.{{bin,json}}");
+    }
+    Ok(())
+}
+
+fn cmd_finetune(args: &[String]) -> anyhow::Result<()> {
+    let cli = Cli::new("subtrack finetune", "fine-tune on the synthetic GLUE battery")
+        .opt("model", Some("tiny"), "backbone preset")
+        .opt("method", Some("subtrack++"), "optimizer")
+        .opt("suite", Some("glue"), "task suite: glue|superglue")
+        .opt("steps", Some("120"), "fine-tuning steps per task")
+        .opt("pretrain-steps", Some("60"), "backbone pre-training steps")
+        .opt("rank", Some("8"), "projection rank (paper: 8)")
+        .opt("seed", Some("42"), "RNG seed");
+    let p = match cli.parse(args) {
+        Ok(p) => p,
+        Err(subtrack::util::cli::HelpOrError::Help(h)) => {
+            println!("{h}");
+            return Ok(());
+        }
+        Err(subtrack::util::cli::HelpOrError::Error(e)) => anyhow::bail!(e),
+    };
+    let cfg = ModelConfig::preset(&p.str("model"));
+    println!("pre-training backbone ({} steps)...", p.usize("pretrain-steps"));
+    let backbone = finetune::pretrain_backbone(&cfg, p.usize("pretrain-steps"), p.u64("seed"));
+    let tasks = if p.str("suite") == "superglue" {
+        TaskKind::superglue()
+    } else {
+        TaskKind::glue()
+    };
+    let opts = finetune::FinetuneOpts {
+        model_preset: cfg.name.clone(),
+        steps: p.usize("steps"),
+        rank: p.usize("rank"),
+        seed: p.u64("seed"),
+        ..Default::default()
+    };
+    let method = p.str("method");
+    for (name, kind) in tasks {
+        let res = finetune::finetune(&backbone, name, kind, &method, &opts);
+        println!(
+            "{:<10} acc {:>5.1}%  (train loss {:.3}, {:.1}s)",
+            name,
+            100.0 * res.val_accuracy,
+            res.final_train_loss,
+            res.wall_time_secs
+        );
+    }
+    Ok(())
+}
+
+fn cmd_ackley(args: &[String]) -> anyhow::Result<()> {
+    let cli = Cli::new("subtrack ackley", "Figure-5 subspace robustness study")
+        .opt("seed", Some("1"), "RNG seed");
+    let p = match cli.parse(args) {
+        Ok(p) => p,
+        Err(subtrack::util::cli::HelpOrError::Help(h)) => {
+            println!("{h}");
+            return Ok(());
+        }
+        Err(subtrack::util::cli::HelpOrError::Error(e)) => anyhow::bail!(e),
+    };
+    for run in ackley::figure5_panels(p.u64("seed")) {
+        println!(
+            "{:?} SF={}: final f={:.4}, max jump {:.4}, reached minimum: {}",
+            run.tracker, run.scale_factor, run.final_value, run.max_jump, run.reached_minimum
+        );
+    }
+    Ok(())
+}
+
+fn inspect(args: &[String]) -> anyhow::Result<()> {
+    let cli = Cli::new("subtrack inspect", "model/optimizer size analytics (Table 2)")
+        .opt("sizes", Some("60m,130m,350m,1b,3b,7b"), "comma-separated presets");
+    let p = match cli.parse(args) {
+        Ok(p) => p,
+        Err(subtrack::util::cli::HelpOrError::Help(h)) => {
+            println!("{h}");
+            return Ok(());
+        }
+        Err(subtrack::util::cli::HelpOrError::Error(e)) => anyhow::bail!(e),
+    };
+    println!(
+        "{:<8} {:>14} {:>16} {:>18} {:>8}",
+        "size", "params", "adam state", "lowrank state", "ratio"
+    );
+    for name in p.str("sizes").split(',') {
+        let cfg = ModelConfig::preset(name.trim());
+        let adam = cfg.adam_state_params();
+        let lowrank = cfg.lowrank_state_params(cfg.rank);
+        println!(
+            "{:<8} {:>14} {:>16} {:>18} {:>7.2}x",
+            cfg.name,
+            cfg.param_count(),
+            adam,
+            lowrank,
+            adam as f64 / lowrank as f64
+        );
+    }
+    Ok(())
+}

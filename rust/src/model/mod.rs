@@ -1,0 +1,11 @@
+//! Llama-family model definitions: size configurations and the pure-Rust
+//! forward/backward "native" engine, plus the classification head used by
+//! the fine-tuning experiments.
+
+pub mod classifier;
+pub mod config;
+pub mod llama;
+
+pub use classifier::Classifier;
+pub use config::ModelConfig;
+pub use llama::{cross_entropy, Batch, Llama};

@@ -1,0 +1,194 @@
+//! APOLLO (Zhu et al., 2025) — SGD-like memory, AdamW-level performance.
+//!
+//! APOLLO never projects the update back from the subspace. Instead it runs a
+//! tiny Adam in a *random-projection* space purely to estimate channel-wise
+//! learning-rate scaling factors, then applies those factors to the raw
+//! full-rank gradient:
+//!
+//!   G̃ = P·G (P random, re-drawn every k steps),   G̃ᴼ = Adam(G̃)
+//!   φⱼ = ‖G̃ᴼ₍:,ⱼ₎‖ / ‖G̃₍:,ⱼ₎‖,                    W ← W − lr·φ∘G
+//!
+//! Because P need not be orthonormal or accurate, the rank can be far smaller
+//! than GaLore's — the source of APOLLO's memory savings (Figure 1b shows it
+//! mid-pack here because the paper runs it at the same rank).
+
+use super::adam::{AdamCfg, Moments};
+use super::projector::{Projector, Side};
+use super::{HyperParams, Optimizer, Param, ParamKind};
+use crate::tensor::Matrix;
+use crate::util::rng::Rng;
+
+struct MatState {
+    proj: Projector,
+    moments: Moments,
+}
+
+/// APOLLO optimizer.
+pub struct Apollo {
+    hp: HyperParams,
+    adam: AdamCfg,
+    mats: Vec<Option<MatState>>,
+    vecs: Vec<Option<Moments>>,
+    step_no: usize,
+    rng: Rng,
+    n_subspace_updates: usize,
+}
+
+impl Apollo {
+    pub fn new(hp: HyperParams) -> Apollo {
+        Apollo {
+            hp,
+            adam: AdamCfg::from(hp),
+            mats: Vec::new(),
+            vecs: Vec::new(),
+            step_no: 0,
+            rng: Rng::new(hp.seed ^ 0xa901_10),
+            n_subspace_updates: 0,
+        }
+    }
+
+    fn ensure_slots(&mut self, n: usize) {
+        if self.mats.len() != n {
+            self.mats = (0..n).map(|_| None).collect();
+            self.vecs = (0..n).map(|_| None).collect();
+        }
+    }
+}
+
+impl Optimizer for Apollo {
+    fn step(&mut self, lr: f32, params: &mut [Param], grads: &[Matrix]) {
+        assert_eq!(params.len(), grads.len());
+        self.ensure_slots(params.len());
+        let refresh = self.hp.interval > 0 && self.step_no % self.hp.interval == 0;
+        for i in 0..params.len() {
+            let g = &grads[i];
+            match params[i].kind {
+                ParamKind::Matrix2D if g.rows() > 1 && g.cols() > 1 => {
+                    let (m, n) = g.shape();
+                    let needs_init = self.mats[i].is_none();
+                    if needs_init || refresh {
+                        // Cheap random projection — no SVD anywhere.
+                        let proj = Projector::init_random(m, n, self.hp.rank, &mut self.rng);
+                        if needs_init {
+                            let (lm, ln) = proj.lowrank_shape(m, n);
+                            self.mats[i] =
+                                Some(MatState { proj, moments: Moments::new(lm, ln) });
+                        } else {
+                            self.mats[i].as_mut().unwrap().proj = proj;
+                            self.n_subspace_updates += 1;
+                        }
+                    }
+                    let st = self.mats[i].as_mut().unwrap();
+                    let g_low = st.proj.project(g);
+                    let dir = st.moments.update(&self.adam, &g_low);
+                    // Channel-wise scaling of the RAW gradient (no project-back).
+                    let scaled = apply_channel_scale(&dir, &g_low, g, st.proj.side);
+                    params[i].value.axpy(-lr, &scaled);
+                }
+                _ => {
+                    if self.vecs[i].is_none() {
+                        self.vecs[i] = Some(Moments::new(g.rows(), g.cols()));
+                    }
+                    let st = self.vecs[i].as_mut().unwrap();
+                    let dir = st.update(&self.adam, g);
+                    params[i].value.axpy(-lr, &dir);
+                }
+            }
+        }
+        self.step_no += 1;
+    }
+
+    fn state_bytes(&self) -> usize {
+        let mats: usize =
+            self.mats.iter().flatten().map(|s| s.moments.bytes() + s.proj.bytes()).sum();
+        let vecs: usize = self.vecs.iter().flatten().map(|s| s.bytes()).sum();
+        mats + vecs
+    }
+
+    fn state_params(&self) -> usize {
+        let mats: usize =
+            self.mats.iter().flatten().map(|s| s.moments.params() + s.proj.params()).sum();
+        let vecs: usize = self.vecs.iter().flatten().map(|s| s.params()).sum();
+        mats + vecs
+    }
+
+    fn subspace_updates(&self) -> usize {
+        self.n_subspace_updates
+    }
+
+    fn name(&self) -> String {
+        "APOLLO".into()
+    }
+}
+
+/// φⱼ = ‖dir₍:,ⱼ₎‖/‖G̃₍:,ⱼ₎‖ applied along the channel axis of the raw
+/// gradient (columns for Left projections, rows for Right).
+fn apply_channel_scale(dir: &Matrix, g_low: &Matrix, g: &Matrix, side: Side) -> Matrix {
+    match side {
+        Side::Left => {
+            let num = dir.col_norms();
+            let den = g_low.col_norms();
+            let mut out = g.clone();
+            for i in 0..out.rows() {
+                for (j, v) in out.row_mut(i).iter_mut().enumerate() {
+                    let phi = if den[j] > 1e-30 { num[j] / den[j] } else { 1.0 };
+                    *v *= phi;
+                }
+            }
+            out
+        }
+        Side::Right => {
+            let mut out = g.clone();
+            for i in 0..out.rows() {
+                let num = (dir.row(i).iter().map(|&x| (x as f64).powi(2)).sum::<f64>()).sqrt();
+                let den =
+                    (g_low.row(i).iter().map(|&x| (x as f64).powi(2)).sum::<f64>()).sqrt();
+                let phi = if den > 1e-30 { (num / den) as f32 } else { 1.0 };
+                for v in out.row_mut(i) {
+                    *v *= phi;
+                }
+            }
+            out
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::testutil::{run_lstsq, LstsqProblem};
+
+    #[test]
+    fn converges_on_lstsq() {
+        let prob = LstsqProblem::new(64, 10, 14, 100);
+        let mut opt = Apollo::new(HyperParams { rank: 2, interval: 50, ..HyperParams::default() });
+        let (init, fin) = run_lstsq(&mut opt, &prob, 500, 0.02);
+        assert!(fin < init * 0.1, "init={init} final={fin}");
+    }
+
+    #[test]
+    fn works_at_rank_1() {
+        // APOLLO's selling point: usable at extremely low rank.
+        let prob = LstsqProblem::new(64, 10, 14, 101);
+        let mut opt = Apollo::new(HyperParams { rank: 1, interval: 50, ..HyperParams::default() });
+        let (init, fin) = run_lstsq(&mut opt, &prob, 500, 0.02);
+        assert!(fin < init * 0.5, "init={init} final={fin}");
+    }
+
+    #[test]
+    fn updates_are_full_rank_despite_low_rank_state() {
+        // The applied update must touch all channels (it scales the raw
+        // gradient), unlike GaLore whose update is rank-limited.
+        let prob = LstsqProblem::new(32, 6, 20, 102);
+        let mut opt = Apollo::new(HyperParams { rank: 1, interval: 50, ..HyperParams::default() });
+        let mut params = vec![super::super::Param::matrix("w", Matrix::zeros(6, 20))];
+        let (_, g) = prob.loss_grad(&params[0].value);
+        opt.step(0.05, &mut params, std::slice::from_ref(&g));
+        // Every column of W must have moved (g is dense).
+        let w = &params[0].value;
+        for j in 0..20 {
+            let col_norm: f32 = (0..6).map(|i| w.get(i, j).abs()).sum();
+            assert!(col_norm > 0.0, "column {j} untouched");
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! BAdam (Luo et al., 2024) — block coordinate descent with Adam.
+//!
+//! Only one block of parameters is active at a time; Adam states exist only
+//! for the active block (freed on switch). This gives the smallest memory
+//! and wall-time of all baselines (paper Tables 8–9) at the cost of partial
+//! parameter tuning and the worst evaluation loss (Table 1).
+
+use super::adam::{AdamCfg, Moments};
+use super::{HyperParams, Optimizer, Param};
+use crate::tensor::Matrix;
+use crate::util::rng::Rng;
+
+/// Block switching policy ("Switch Mode" in the paper's hyperparameter
+/// tables — the paper uses Random).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SwitchMode {
+    Random,
+    Ordered,
+}
+
+/// BAdam optimizer. Each parameter tensor forms one block.
+pub struct BAdam {
+    adam: AdamCfg,
+    /// Steps between block switches ("Block Switch Interval", paper: 100).
+    pub switch_interval: usize,
+    pub mode: SwitchMode,
+    active: usize,
+    /// Moments for the active block only.
+    state: Option<Moments>,
+    step_no: usize,
+    rng: Rng,
+    n_switches: usize,
+}
+
+impl BAdam {
+    pub fn new(hp: HyperParams) -> BAdam {
+        BAdam {
+            adam: AdamCfg::from(hp),
+            switch_interval: 100,
+            mode: SwitchMode::Random,
+            active: 0,
+            state: None,
+            step_no: 0,
+            rng: Rng::new(hp.seed ^ 0xbada),
+            n_switches: 0,
+        }
+    }
+
+    fn maybe_switch(&mut self, n_blocks: usize) {
+        if self.step_no % self.switch_interval == 0 {
+            let next = match self.mode {
+                SwitchMode::Random => self.rng.below(n_blocks),
+                SwitchMode::Ordered => (self.active + 1) % n_blocks,
+            };
+            if self.step_no > 0 || self.state.is_none() {
+                self.active = next;
+                self.state = None; // moments freed; realloc lazily
+                self.n_switches += 1;
+            }
+        }
+    }
+}
+
+impl Optimizer for BAdam {
+    fn step(&mut self, lr: f32, params: &mut [Param], grads: &[Matrix]) {
+        assert_eq!(params.len(), grads.len());
+        if params.is_empty() {
+            return;
+        }
+        self.maybe_switch(params.len());
+        let i = self.active.min(params.len() - 1);
+        let g = &grads[i];
+        if self.state.as_ref().map(|s| s.m.shape()) != Some(g.shape()) {
+            self.state = Some(Moments::new(g.rows(), g.cols()));
+        }
+        let st = self.state.as_mut().unwrap();
+        let dir = st.update(&self.adam, g);
+        params[i].value.axpy(-lr, &dir);
+        self.step_no += 1;
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.state.as_ref().map(|s| s.bytes()).unwrap_or(0)
+    }
+
+    fn state_params(&self) -> usize {
+        self.state.as_ref().map(|s| s.params()).unwrap_or(0)
+    }
+
+    fn subspace_updates(&self) -> usize {
+        self.n_switches
+    }
+
+    fn name(&self) -> String {
+        "BAdam".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::testutil::LstsqProblem;
+    use crate::optim::Param;
+
+    /// Two-block least-squares problem so block descent has something to
+    /// cycle over.
+    fn two_block_problem() -> (LstsqProblem, LstsqProblem) {
+        (LstsqProblem::new(32, 6, 8, 90), LstsqProblem::new(32, 7, 5, 91))
+    }
+
+    #[test]
+    fn optimizes_blocks_alternately() {
+        let (p1, p2) = two_block_problem();
+        let mut opt = BAdam::new(HyperParams::default());
+        opt.switch_interval = 20;
+        opt.mode = SwitchMode::Ordered;
+        let mut params = vec![
+            Param::matrix("w1", Matrix::zeros(6, 8)),
+            Param::matrix("w2", Matrix::zeros(7, 5)),
+        ];
+        let (l1_init, _) = p1.loss_grad(&params[0].value);
+        let (l2_init, _) = p2.loss_grad(&params[1].value);
+        for _ in 0..400 {
+            let (_, g1) = p1.loss_grad(&params[0].value);
+            let (_, g2) = p2.loss_grad(&params[1].value);
+            opt.step(0.05, &mut params, &[g1, g2]);
+        }
+        let (l1, _) = p1.loss_grad(&params[0].value);
+        let (l2, _) = p2.loss_grad(&params[1].value);
+        assert!(l1 < l1_init * 0.2, "block 1: {l1_init} -> {l1}");
+        assert!(l2 < l2_init * 0.2, "block 2: {l2_init} -> {l2}");
+        assert!(opt.subspace_updates() >= 19, "switches: {}", opt.subspace_updates());
+    }
+
+    #[test]
+    fn memory_is_single_block_only() {
+        let (p1, _) = two_block_problem();
+        let mut opt = BAdam::new(HyperParams::default());
+        opt.mode = SwitchMode::Ordered;
+        let mut params = vec![
+            Param::matrix("w1", Matrix::zeros(6, 8)),
+            Param::matrix("w2", Matrix::zeros(7, 5)),
+        ];
+        let (_, g1) = p1.loss_grad(&params[0].value);
+        let g2 = Matrix::zeros(7, 5);
+        opt.step(0.05, &mut params, &[g1, g2]);
+        // Only one block's moments are held: ≤ max(2·48, 2·35).
+        assert!(opt.state_params() <= 2 * 48);
+        assert!(opt.state_params() > 0);
+    }
+
+    #[test]
+    fn random_mode_visits_multiple_blocks() {
+        let mut opt = BAdam::new(HyperParams { seed: 7, ..HyperParams::default() });
+        opt.switch_interval = 1;
+        let mut params: Vec<Param> =
+            (0..4).map(|i| Param::matrix(&format!("w{i}"), Matrix::zeros(3, 3))).collect();
+        let mut visited = std::collections::BTreeSet::new();
+        for _ in 0..64 {
+            let grads: Vec<Matrix> = (0..4).map(|_| Matrix::full(3, 3, 0.1)).collect();
+            opt.step(0.01, &mut params, &grads);
+            visited.insert(opt.active);
+        }
+        assert!(visited.len() >= 3, "visited {visited:?}");
+    }
+}

@@ -1,0 +1,173 @@
+//! GaLore (Zhao et al., 2024) — gradient low-rank projection with a
+//! truncated-SVD projector recomputed every k steps.
+//!
+//! The Table 2 baseline: optimizer state mr + 2nr, subspace update cost
+//! O(n·m²) (full SVD of the m×n gradient). Moments are *not* rotated when the
+//! projector changes — the known misalignment SubTrack++'s projection-aware
+//! update fixes.
+
+use super::adam::{AdamCfg, Moments};
+use super::projector::Projector;
+use super::{HyperParams, Optimizer, Param, ParamKind};
+use crate::tensor::Matrix;
+
+struct MatState {
+    proj: Projector,
+    moments: Moments,
+}
+
+/// GaLore optimizer.
+pub struct GaLore {
+    hp: HyperParams,
+    adam: AdamCfg,
+    mats: Vec<Option<MatState>>,
+    vecs: Vec<Option<Moments>>,
+    step_no: usize,
+    n_subspace_updates: usize,
+    /// Accumulated wall-time spent in SVD projector refreshes (seconds).
+    pub svd_seconds: f64,
+}
+
+impl GaLore {
+    pub fn new(hp: HyperParams) -> GaLore {
+        GaLore {
+            hp,
+            adam: AdamCfg::from(hp),
+            mats: Vec::new(),
+            vecs: Vec::new(),
+            step_no: 0,
+            n_subspace_updates: 0,
+            svd_seconds: 0.0,
+        }
+    }
+
+    fn ensure_slots(&mut self, n: usize) {
+        if self.mats.len() != n {
+            self.mats = (0..n).map(|_| None).collect();
+            self.vecs = (0..n).map(|_| None).collect();
+        }
+    }
+}
+
+impl Optimizer for GaLore {
+    fn step(&mut self, lr: f32, params: &mut [Param], grads: &[Matrix]) {
+        assert_eq!(params.len(), grads.len());
+        self.ensure_slots(params.len());
+        let refresh = self.hp.interval > 0 && self.step_no % self.hp.interval == 0;
+        for i in 0..params.len() {
+            let g = &grads[i];
+            match params[i].kind {
+                ParamKind::Matrix2D if g.rows() > 1 && g.cols() > 1 => {
+                    let (m, n) = g.shape();
+                    let needs_init = self.mats[i].is_none();
+                    if needs_init || refresh {
+                        // Full truncated SVD of the gradient — O(n·m²).
+                        let t0 = std::time::Instant::now();
+                        let proj = Projector::init_svd(g, self.hp.rank);
+                        self.svd_seconds += t0.elapsed().as_secs_f64();
+                        if needs_init {
+                            let (lm, ln) = proj.lowrank_shape(m, n);
+                            self.mats[i] =
+                                Some(MatState { proj, moments: Moments::new(lm, ln) });
+                        } else {
+                            // Keep moments untouched (GaLore's behaviour).
+                            self.mats[i].as_mut().unwrap().proj = proj;
+                            self.n_subspace_updates += 1;
+                        }
+                    }
+                    let st = self.mats[i].as_mut().unwrap();
+                    let g_low = st.proj.project(g);
+                    let dir = st.moments.update(&self.adam, &g_low);
+                    let delta = st.proj.project_back(&dir);
+                    params[i].value.axpy(-lr * self.hp.scale, &delta);
+                }
+                _ => {
+                    if self.vecs[i].is_none() {
+                        self.vecs[i] = Some(Moments::new(g.rows(), g.cols()));
+                    }
+                    let st = self.vecs[i].as_mut().unwrap();
+                    let dir = st.update(&self.adam, g);
+                    params[i].value.axpy(-lr, &dir);
+                }
+            }
+            if self.adam.weight_decay > 0.0 {
+                let wd = self.adam.weight_decay;
+                params[i].value.apply(|w| w * (1.0 - lr * wd));
+            }
+        }
+        self.step_no += 1;
+    }
+
+    fn state_bytes(&self) -> usize {
+        let mats: usize =
+            self.mats.iter().flatten().map(|s| s.moments.bytes() + s.proj.bytes()).sum();
+        let vecs: usize = self.vecs.iter().flatten().map(|s| s.bytes()).sum();
+        mats + vecs
+    }
+
+    fn state_params(&self) -> usize {
+        let mats: usize =
+            self.mats.iter().flatten().map(|s| s.moments.params() + s.proj.params()).sum();
+        let vecs: usize = self.vecs.iter().flatten().map(|s| s.params()).sum();
+        mats + vecs
+    }
+
+    fn subspace_updates(&self) -> usize {
+        self.n_subspace_updates
+    }
+
+    fn name(&self) -> String {
+        "GaLore".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::testutil::{run_lstsq, LstsqProblem};
+
+    #[test]
+    fn converges_on_lstsq() {
+        let prob = LstsqProblem::new(64, 10, 14, 50);
+        let mut opt = GaLore::new(HyperParams {
+            rank: 4,
+            interval: 20,
+            scale: 1.0,
+            ..HyperParams::default()
+        });
+        let (init, fin) = run_lstsq(&mut opt, &prob, 500, 0.05);
+        assert!(fin < init * 0.05, "init={init} final={fin}");
+        assert!(opt.subspace_updates() > 0);
+        assert!(opt.svd_seconds > 0.0);
+    }
+
+    #[test]
+    fn state_params_match_table2() {
+        let (m, n, r) = (10, 24, 4);
+        let prob = LstsqProblem::new(8, m, n, 51);
+        let mut opt =
+            GaLore::new(HyperParams { rank: r, interval: 10, ..HyperParams::default() });
+        let _ = run_lstsq(&mut opt, &prob, 2, 0.01);
+        assert_eq!(opt.state_params(), m * r + 2 * n * r);
+    }
+
+    #[test]
+    fn full_rank_projection_converges_like_adam() {
+        // With r = min(m,n) the projector is a square orthonormal rotation:
+        // GaLore becomes Adam in rotated coordinates. Adam is not rotation
+        // invariant (element-wise second moments), so losses need not match
+        // exactly — but both must converge to ≪1% of the initial loss.
+        let prob = LstsqProblem::new(32, 6, 8, 52);
+        let mut galore = GaLore::new(HyperParams {
+            rank: 6,
+            interval: 1_000_000,
+            scale: 1.0,
+            ..HyperParams::default()
+        });
+        let mut adam = super::super::Adam::new(AdamCfg::default());
+        let (init, lg) = run_lstsq(&mut galore, &prob, 100, 0.05);
+        let (_, la) = run_lstsq(&mut adam, &prob, 100, 0.05);
+        assert!(lg < init * 0.01, "galore {lg} of init {init}");
+        assert!(la < init * 0.01, "adam {la} of init {init}");
+    }
+}

@@ -1,0 +1,243 @@
+//! The optimizer family: SubTrack++ (the paper's contribution) and every
+//! baseline it is evaluated against.
+//!
+//! | Module      | Method                          | Subspace mechanism                  |
+//! |-------------|---------------------------------|-------------------------------------|
+//! | [`adam`]    | Adam / AdamW (full-rank)        | —                                   |
+//! | [`galore`]  | GaLore (Zhao et al. 2024)       | truncated SVD every k steps         |
+//! | [`fira`]    | Fira (Chen et al. 2025)         | SVD every k + recovery scaling      |
+//! | [`ldadam`]  | LDAdam (Robert et al. 2025)     | power iteration every step + PA + EF|
+//! | [`osd`]     | Online Subspace Descent         | Oja online-PCA step per iteration   |
+//! | [`badam`]   | BAdam (Luo et al. 2024)         | block coordinate descent            |
+//! | [`apollo`]  | APOLLO (Zhu et al. 2025)        | random projection, channel scaling  |
+//! | [`golore`]  | GoLore (He et al. 2025)         | SVD early, random projection late   |
+//! | [`subtrack`]| **SubTrack++** (this paper)     | Grassmannian geodesic rank-1 update |
+//!
+//! All low-rank methods share the convention of the paper (and GaLore):
+//! 2-D parameters are projected per-matrix with rank `r` on the *shorter*
+//! side; 1-D parameters (norms, biases) always take the full-rank Adam path.
+
+pub mod adam;
+pub mod apollo;
+pub mod badam;
+pub mod fira;
+pub mod galore;
+pub mod golore;
+pub mod ldadam;
+pub mod osd;
+pub mod projector;
+pub mod subtrack;
+
+pub use adam::{Adam, AdamCfg};
+pub use apollo::Apollo;
+pub use badam::BAdam;
+pub use fira::Fira;
+pub use galore::GaLore;
+pub use golore::GoLore;
+pub use ldadam::LdAdam;
+pub use osd::OnlineSubspaceDescent;
+pub use subtrack::{Components, SubTrack};
+
+use crate::tensor::Matrix;
+
+/// Whether a parameter participates in low-rank projection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParamKind {
+    /// 2-D weight matrix — eligible for low-rank projection.
+    Matrix2D,
+    /// 1-D parameter (norm gain, bias) — always full-rank Adam.
+    Vector,
+}
+
+/// A named trainable parameter.
+#[derive(Clone, Debug)]
+pub struct Param {
+    pub name: String,
+    pub value: Matrix,
+    pub kind: ParamKind,
+}
+
+impl Param {
+    pub fn matrix(name: &str, value: Matrix) -> Param {
+        Param { name: name.to_string(), value, kind: ParamKind::Matrix2D }
+    }
+
+    pub fn vector(name: &str, value: Matrix) -> Param {
+        Param { name: name.to_string(), value, kind: ParamKind::Vector }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.value.len()
+    }
+}
+
+/// Shared optimizer hyperparameters (paper Table 10 defaults).
+#[derive(Clone, Copy, Debug)]
+pub struct HyperParams {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    /// Low-rank projection rank r.
+    pub rank: usize,
+    /// Subspace update interval k.
+    pub interval: usize,
+    /// GaLore-style scale factor α applied to the projected-back update.
+    pub scale: f32,
+    /// SubTrack++ geodesic step size η.
+    pub eta: f32,
+    /// Recovery-scaling growth limiter ζ.
+    pub zeta: f32,
+    /// Seed for any stochastic pieces (power iteration init, random proj).
+    pub seed: u64,
+}
+
+impl Default for HyperParams {
+    fn default() -> Self {
+        HyperParams {
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.0,
+            rank: 16,
+            interval: 200,
+            scale: 0.25,
+            eta: 10.0,
+            zeta: 1.01,
+            seed: 0,
+        }
+    }
+}
+
+/// A full-parameter optimizer over a set of named parameters.
+///
+/// `lr` is supplied per step so the trainer owns the schedule. `grads` is
+/// parallel to `params`.
+pub trait Optimizer {
+    /// Apply one update step in place.
+    fn step(&mut self, lr: f32, params: &mut [Param], grads: &[Matrix]);
+
+    /// Bytes of optimizer state currently held (moments + projectors +
+    /// auxiliary buffers). Used for the paper's Table 8 accounting.
+    fn state_bytes(&self) -> usize;
+
+    /// Count of optimizer state *parameters* in the paper's Table 2 sense
+    /// (moments + projector entries; excludes auxiliary buffers).
+    fn state_params(&self) -> usize;
+
+    /// How many subspace updates have been performed (diagnostics).
+    fn subspace_updates(&self) -> usize {
+        0
+    }
+
+    /// Method name for logs and tables.
+    fn name(&self) -> String;
+}
+
+/// Construct an optimizer by its table name. Panics on unknown names — the
+/// accepted set is exactly the row labels used across the paper's tables.
+pub fn by_name(name: &str, hp: HyperParams) -> Box<dyn Optimizer> {
+    match name {
+        "adam" | "full-rank" | "adamw" => Box::new(Adam::new(AdamCfg {
+            beta1: hp.beta1,
+            beta2: hp.beta2,
+            eps: hp.eps,
+            weight_decay: hp.weight_decay,
+        })),
+        "galore" => Box::new(GaLore::new(hp)),
+        "fira" => Box::new(Fira::new(hp)),
+        "ldadam" => Box::new(LdAdam::new(hp)),
+        "osd" | "online-subspace-descent" => Box::new(OnlineSubspaceDescent::new(hp)),
+        "badam" => Box::new(BAdam::new(hp)),
+        "apollo" => Box::new(Apollo::new(hp)),
+        "golore" => Box::new(GoLore::new(hp)),
+        "subtrack" | "subtrack++" => Box::new(SubTrack::new(hp, Components::full())),
+        "subtrack-pure" => Box::new(SubTrack::new(hp, Components::pure())),
+        "subtrack-pa" => Box::new(SubTrack::new(hp, Components::pa_only())),
+        "subtrack-rs" => Box::new(SubTrack::new(hp, Components::rs_only())),
+        other => panic!("unknown optimizer: {other}"),
+    }
+}
+
+/// The method names exercised across the paper's pre-training tables.
+pub const PRETRAIN_METHODS: &[&str] =
+    &["full-rank", "galore", "badam", "osd", "ldadam", "fira", "subtrack++"];
+
+#[cfg(test)]
+pub mod testutil {
+    //! Shared optimizer test fixtures: a convex least-squares problem
+    //! `min_W ||X·W − Y||²` whose gradient matrices exercise the full
+    //! projection machinery (m≠n, known optimum).
+
+    use super::*;
+    use crate::tensor::gemm;
+    use crate::util::rng::Rng;
+
+    pub struct LstsqProblem {
+        pub x: Matrix,      // batch×m
+        pub y: Matrix,      // batch×n
+        pub w_star: Matrix, // m×n
+    }
+
+    impl LstsqProblem {
+        pub fn new(batch: usize, m: usize, n: usize, seed: u64) -> LstsqProblem {
+            let mut rng = Rng::new(seed);
+            let x = Matrix::randn(batch, m, 1.0, &mut rng);
+            let w_star = Matrix::randn(m, n, 1.0, &mut rng);
+            let y = gemm::matmul(&x, &w_star);
+            LstsqProblem { x, y, w_star }
+        }
+
+        /// Loss 0.5‖XW−Y‖²/batch and gradient Xᵀ(XW−Y)/batch.
+        pub fn loss_grad(&self, w: &Matrix) -> (f32, Matrix) {
+            let pred = gemm::matmul(&self.x, w);
+            let resid = pred.sub(&self.y);
+            let b = self.x.rows() as f32;
+            let loss = 0.5 * resid.fro_norm().powi(2) / b;
+            let grad = gemm::matmul_tn(&self.x, &resid).scale(1.0 / b);
+            (loss, grad)
+        }
+    }
+
+    /// Run `opt` for `steps` on the least-squares problem; return
+    /// (initial_loss, final_loss).
+    pub fn run_lstsq(
+        opt: &mut dyn Optimizer,
+        prob: &LstsqProblem,
+        steps: usize,
+        lr: f32,
+    ) -> (f32, f32) {
+        let (m, n) = prob.w_star.shape();
+        let mut params = vec![Param::matrix("w", Matrix::zeros(m, n))];
+        let (init_loss, _) = prob.loss_grad(&params[0].value);
+        let mut last = init_loss;
+        for _ in 0..steps {
+            let (loss, grad) = prob.loss_grad(&params[0].value);
+            last = loss;
+            opt.step(lr, &mut params, &[grad]);
+        }
+        (init_loss, last)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factory_knows_all_methods() {
+        for name in PRETRAIN_METHODS {
+            let opt = by_name(name, HyperParams::default());
+            assert!(!opt.name().is_empty());
+        }
+        for name in ["apollo", "golore", "subtrack-pure", "subtrack-pa", "subtrack-rs"] {
+            let _ = by_name(name, HyperParams::default());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown optimizer")]
+    fn factory_rejects_unknown() {
+        let _ = by_name("sgd-9000", HyperParams::default());
+    }
+}

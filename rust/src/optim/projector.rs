@@ -1,0 +1,282 @@
+//! Shared low-rank projection machinery.
+//!
+//! For a gradient matrix G ∈ ℝ^{m×n} the paper (following GaLore) projects on
+//! the *shorter* side: if m ≤ n the subspace basis is S ∈ ℝ^{m×r} over the
+//! left singular directions and the low-rank gradient is G̃ = SᵀG ∈ ℝ^{r×n};
+//! otherwise S ∈ ℝ^{n×r} over right singular directions and G̃ = G·S ∈ ℝ^{m×r}.
+//! This keeps the moment tensors at min(m,n-side) cost: mr + 2nr total
+//! optimizer state per matrix (Table 2).
+
+use crate::tensor::{gemm, svd, Matrix};
+use crate::util::rng::Rng;
+
+/// Which side of the gradient the subspace basis multiplies.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Side {
+    /// m ≤ n: S is m×r, G̃ = SᵀG (r×n).
+    Left,
+    /// m > n: S is n×r, G̃ = G·S (m×r).
+    Right,
+}
+
+/// Pick the projection side for an m×n gradient.
+pub fn side_for(m: usize, n: usize) -> Side {
+    if m <= n {
+        Side::Left
+    } else {
+        Side::Right
+    }
+}
+
+/// An orthonormal (or random, for APOLLO) rank-r subspace basis for one
+/// parameter matrix.
+#[derive(Clone, Debug)]
+pub struct Projector {
+    pub s: Matrix,
+    pub side: Side,
+}
+
+impl Projector {
+    /// Initialize from the rank-r truncated SVD of `g` (GaLore / SubTrack++
+    /// initialization, Eq. (1)).
+    pub fn init_svd(g: &Matrix, rank: usize) -> Projector {
+        let (m, n) = g.shape();
+        let side = side_for(m, n);
+        let t = svd::truncated_svd(g, rank.min(m.min(n)));
+        let s = match side {
+            Side::Left => t.u,  // m×r — left singular vectors
+            Side::Right => t.v, // n×r — right singular vectors
+        };
+        Projector { s, side }
+    }
+
+    /// Initialize with a seeded Gaussian matrix scaled by 1/√r (APOLLO-style
+    /// random projection; *not* orthonormal).
+    pub fn init_random(m: usize, n: usize, rank: usize, rng: &mut Rng) -> Projector {
+        let side = side_for(m, n);
+        let dim = match side {
+            Side::Left => m,
+            Side::Right => n,
+        };
+        let r = rank.min(m.min(n));
+        let s = Matrix::randn(dim, r, 1.0 / (r as f32).sqrt(), rng);
+        Projector { s, side }
+    }
+
+    /// Initialize with a random *orthonormal* basis (GoLore's late-phase
+    /// projector — unbiased directions, valid for projection-back).
+    pub fn init_random_orthonormal(m: usize, n: usize, rank: usize, rng: &mut Rng) -> Projector {
+        let side = side_for(m, n);
+        let dim = match side {
+            Side::Left => m,
+            Side::Right => n,
+        };
+        let r = rank.min(m.min(n));
+        let raw = Matrix::randn(dim, r, 1.0, rng);
+        let (q, _) = crate::tensor::qr::thin_qr(&raw);
+        Projector { s: q, side }
+    }
+
+    /// Rank of the subspace.
+    pub fn rank(&self) -> usize {
+        self.s.cols()
+    }
+
+    /// G̃: project the full gradient into the subspace.
+    pub fn project(&self, g: &Matrix) -> Matrix {
+        match self.side {
+            Side::Left => gemm::matmul_tn(&self.s, g), // (m×r)ᵀ·(m×n) = r×n
+            Side::Right => gemm::matmul(g, &self.s),   // (m×n)·(n×r) = m×r
+        }
+    }
+
+    /// Ĝ: map a low-rank update back to full size.
+    pub fn project_back(&self, lowrank: &Matrix) -> Matrix {
+        match self.side {
+            Side::Left => gemm::matmul(&self.s, lowrank), // (m×r)·(r×n) = m×n
+            Side::Right => gemm::matmul_nt(lowrank, &self.s), // (m×r)·(n×r)ᵀ = m×n
+        }
+    }
+
+    /// The low-rank shape for an m×n gradient under this projector.
+    pub fn lowrank_shape(&self, m: usize, n: usize) -> (usize, usize) {
+        match self.side {
+            Side::Left => (self.rank(), n),
+            Side::Right => (m, self.rank()),
+        }
+    }
+
+    /// Change-of-basis matrix Q = SₜᵀSₜ₋₁ (r×r) between this basis and a
+    /// previous one; the projection-aware moment rotation of Eqs. (8)–(9).
+    pub fn change_of_basis(&self, prev: &Projector) -> Matrix {
+        gemm::matmul_tn(&self.s, &prev.s)
+    }
+
+    /// Number of f32 entries in the basis (mr or nr — Table 2 accounting).
+    pub fn params(&self) -> usize {
+        self.s.len()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.params() * std::mem::size_of::<f32>()
+    }
+}
+
+/// Rotate first moment M ← Q·M (Left) or M·Qᵀ (Right) — Eq. (8)'s
+/// SₜᵀSₜ₋₁·Mₜ₋₁ generalized to both sides.
+pub fn rotate_first_moment(q: &Matrix, m: &Matrix, side: Side) -> Matrix {
+    match side {
+        Side::Left => gemm::matmul(q, m),
+        Side::Right => gemm::matmul_nt(m, q),
+    }
+}
+
+/// Projection-aware second-moment rotation — Eq. (9):
+/// V′ = (1−β₂^{t−1}) · | Q∘² (V − M∘²) + (Q M)∘² |
+/// where ∘ denotes element-wise operations. Negative variance estimates are
+/// clipped at zero (Appendix C). The caller folds in β₂ and the new gradient.
+pub fn rotate_second_moment(
+    q: &Matrix,
+    m: &Matrix,
+    v: &Matrix,
+    side: Side,
+    beta2: f32,
+    t: usize,
+) -> Matrix {
+    let q2 = q.map(|x| x * x);
+    let var = v.zip(m, |v, m| (v - m * m).max(0.0));
+    let rot_var = rotate_first_moment(&q2, &var, side);
+    let rot_m = rotate_first_moment(q, m, side);
+    let rot_m2 = rot_m.map(|x| x * x);
+    let debias = 1.0 - beta2.powi(t.max(1) as i32 - 1);
+    rot_var.zip(&rot_m2, |a, b| (debias * (a + b)).abs())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::qr::orthonormality_defect;
+    use crate::util::proptest;
+
+    #[test]
+    fn side_selection() {
+        assert_eq!(side_for(4, 8), Side::Left);
+        assert_eq!(side_for(8, 4), Side::Right);
+        assert_eq!(side_for(4, 4), Side::Left);
+    }
+
+    #[test]
+    fn svd_init_orthonormal_both_sides() {
+        let mut rng = Rng::new(31);
+        for (m, n) in [(10, 30), (30, 10)] {
+            let g = Matrix::randn(m, n, 1.0, &mut rng);
+            let p = Projector::init_svd(&g, 4);
+            assert_eq!(p.rank(), 4);
+            assert!(orthonormality_defect(&p.s) < 1e-4);
+            let lr = p.project(&g);
+            assert_eq!(lr.shape(), p.lowrank_shape(m, n));
+            let back = p.project_back(&lr);
+            assert_eq!(back.shape(), (m, n));
+        }
+    }
+
+    #[test]
+    fn projection_captures_low_rank_gradient() {
+        // If G is exactly rank 3 and we project with rank 3, the round trip
+        // is lossless.
+        let mut rng = Rng::new(32);
+        let u = Matrix::randn(12, 3, 1.0, &mut rng);
+        let v = Matrix::randn(20, 3, 1.0, &mut rng);
+        let g = gemm::matmul_nt(&u, &v);
+        let p = Projector::init_svd(&g, 3);
+        let back = p.project_back(&p.project(&g));
+        proptest::close(back.data(), g.data(), 1e-3, 1e-3).unwrap();
+    }
+
+    #[test]
+    fn projection_is_contraction() {
+        proptest::check(
+            33,
+            30,
+            |rng| {
+                let (m, n) = proptest::shape(rng, 20, 20);
+                let r = 1 + rng.below(m.min(n));
+                (Matrix::randn(m, n, 1.0, rng), r)
+            },
+            |(g, r)| {
+                let p = Projector::init_svd(g, *r);
+                let back = p.project_back(&p.project(g));
+                // ‖P(G)‖ ≤ ‖G‖ for an orthonormal projector.
+                if back.fro_norm() > g.fro_norm() * (1.0 + 1e-4) + 1e-5 {
+                    return Err(format!("projection expanded: {} > {}", back.fro_norm(), g.fro_norm()));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn change_of_basis_identity_when_same() {
+        let mut rng = Rng::new(34);
+        let g = Matrix::randn(8, 16, 1.0, &mut rng);
+        let p = Projector::init_svd(&g, 5);
+        let q = p.change_of_basis(&p);
+        let defect = q.sub(&Matrix::eye(5)).max_abs();
+        assert!(defect < 1e-4, "SᵀS should be I, defect {defect}");
+    }
+
+    #[test]
+    fn moment_rotation_preserves_under_identity() {
+        let mut rng = Rng::new(35);
+        let m = Matrix::randn(5, 9, 1.0, &mut rng);
+        let v = m.map(|x| x * x + 0.5);
+        let q = Matrix::eye(5);
+        let rm = rotate_first_moment(&q, &m, Side::Left);
+        proptest::close(rm.data(), m.data(), 1e-6, 1e-6).unwrap();
+        // t=1 ⇒ debias factor (1-β₂⁰)=0 ⇒ V′=0; t→∞ ⇒ factor→1.
+        let rv = rotate_second_moment(&q, &m, &v, Side::Left, 0.999, 100_000);
+        proptest::close(rv.data(), v.data(), 1e-2, 1e-2).unwrap();
+    }
+
+    #[test]
+    fn second_moment_rotation_nonnegative() {
+        proptest::check(
+            36,
+            25,
+            |rng| {
+                let r = 1 + rng.below(6);
+                let n = 1 + rng.below(10);
+                let q = Matrix::randn(r, r, 1.0, rng);
+                let m = Matrix::randn(r, n, 1.0, rng);
+                let v = Matrix::randn(r, n, 0.5, rng).map(|x| x.abs());
+                (q, m, v)
+            },
+            |(q, m, v)| {
+                let rv = rotate_second_moment(q, m, v, Side::Left, 0.999, 10);
+                if rv.data().iter().any(|&x| x < 0.0) {
+                    return Err("negative variance after rotation".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn random_projector_shapes() {
+        let mut rng = Rng::new(37);
+        let p = Projector::init_random(6, 20, 4, &mut rng);
+        assert_eq!(p.side, Side::Left);
+        assert_eq!(p.s.shape(), (6, 4));
+        let po = Projector::init_random_orthonormal(20, 6, 4, &mut rng);
+        assert_eq!(po.side, Side::Right);
+        assert!(orthonormality_defect(&po.s) < 1e-4);
+    }
+
+    #[test]
+    fn rank_clamped_to_min_dim() {
+        let mut rng = Rng::new(38);
+        let g = Matrix::randn(3, 10, 1.0, &mut rng);
+        let p = Projector::init_svd(&g, 8);
+        assert_eq!(p.rank(), 3);
+    }
+}

@@ -1,0 +1,587 @@
+//! **SubTrack++** — the paper's contribution (Algorithm 1).
+//!
+//! Three composable components on top of low-rank Adam:
+//!
+//! 1. **Grassmannian subspace tracking** — instead of recomputing a truncated
+//!    SVD of the gradient every k steps (GaLore/Fira), move the existing
+//!    orthonormal basis S along a Grassmann geodesic in the direction of the
+//!    rank-1 approximation of the tangent ∇F = −2·R·Aᵀ, where A is the least
+//!    squares solution of min‖SA − G‖ (= SᵀG for orthonormal S) and
+//!    R = G − SA its residual (Eqs. 2–5). Cost O(mnr) vs SVD's O(nm²).
+//! 2. **Projection-aware optimizer** — when the subspace moves, rotate Adam's
+//!    moments into the new basis with Q = SₜᵀSₜ₋₁ (Eqs. 8–9, Appendix C).
+//! 3. **Recovery scaling** — re-inject the component of the gradient
+//!    discarded by the projection, scaled per-column by
+//!    φᵢ = ‖G̃ᴼ₍:,ᵢ₎‖/‖G̃₍:,ᵢ₎‖ and growth-limited by ζ (Eqs. 10–12).
+//!
+//! The ablation rows of Figure 3/6 correspond to [`Components`] settings.
+
+use super::adam::{AdamCfg, Moments};
+use super::projector::{self, Projector, Side};
+use super::{HyperParams, Optimizer, Param, ParamKind};
+use crate::tensor::{gemm, qr, svd, Matrix};
+use crate::util::rng::Rng;
+use std::time::Instant;
+
+/// Which of the paper's components are enabled (ablation axes of Fig. 3/6).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Components {
+    /// Projection-aware moment rotation (Eqs. 8–9).
+    pub projection_aware: bool,
+    /// Recovery scaling of the discarded gradient component (Eqs. 10–12).
+    pub recovery_scaling: bool,
+}
+
+impl Components {
+    /// Full SubTrack++.
+    pub fn full() -> Components {
+        Components { projection_aware: true, recovery_scaling: true }
+    }
+
+    /// Pure Grassmannian subspace tracking (Fig. 3 baseline).
+    pub fn pure() -> Components {
+        Components { projection_aware: false, recovery_scaling: false }
+    }
+
+    pub fn pa_only() -> Components {
+        Components { projection_aware: true, recovery_scaling: false }
+    }
+
+    pub fn rs_only() -> Components {
+        Components { projection_aware: false, recovery_scaling: true }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match (self.projection_aware, self.recovery_scaling) {
+            (true, true) => "SubTrack++",
+            (true, false) => "SubTrack+PA",
+            (false, true) => "SubTrack+RS",
+            (false, false) => "SubTrack (pure)",
+        }
+    }
+}
+
+/// Wall-time breakdown of one Grassmannian subspace update (Appendix D,
+/// Table 3). All durations in seconds.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct UpdateBreakdown {
+    /// Least-squares solve A = SᵀG (cost function, Eq. 2).
+    pub lstsq: f64,
+    /// Residual R = G − SA.
+    pub residual: f64,
+    /// Partial derivative / tangent ∇F = −2RAᵀ (Eqs. 3–4).
+    pub tangent: f64,
+    /// Rank-1 approximation of ∇F (power iteration).
+    pub rank1: f64,
+    /// Geodesic step (Eq. 5).
+    pub geodesic: f64,
+}
+
+impl UpdateBreakdown {
+    pub fn total(&self) -> f64 {
+        self.lstsq + self.residual + self.tangent + self.rank1 + self.geodesic
+    }
+}
+
+/// One Grassmannian geodesic update of the basis (Eq. 5, rank-1 form).
+///
+/// `g_oriented` must be oriented so rows index the *subspace* dimension:
+/// the caller passes G for Left projections and Gᵀ-view logic for Right.
+/// Returns the updated basis and the stage breakdown.
+///
+/// Rank-1 geodesic: with ∇F ≈ σ·u·vᵀ (u ⊥ span(S) because R ⊥ S), Eq. 5
+/// collapses to
+///   S′ = S + (S·v·(cos(σ·η) − 1) + u·sin(σ·η))·vᵀ
+/// which touches O((m+r)·r) entries — the remaining columns' component
+/// S·(I − vvᵀ) is implicit.
+pub fn grassmannian_step(
+    s: &Matrix,
+    g_oriented: &Matrix,
+    eta: f32,
+    power_iters: usize,
+    rng: &mut Rng,
+) -> (Matrix, UpdateBreakdown) {
+    let mut bd = UpdateBreakdown::default();
+    let (dim, r) = s.shape();
+    debug_assert_eq!(g_oriented.rows(), dim);
+
+    // (1) least squares A = argmin ‖SA − G‖ = SᵀG (S orthonormal).
+    let t0 = Instant::now();
+    let a = gemm::matmul_tn(s, g_oriented); // r×n
+    bd.lstsq = t0.elapsed().as_secs_f64();
+
+    // (2) residual R = G − S·A.
+    let t0 = Instant::now();
+    let mut resid = g_oriented.clone();
+    let sa = gemm::matmul(s, &a);
+    resid.axpy(-1.0, &sa);
+    bd.residual = t0.elapsed().as_secs_f64();
+
+    // (3) tangent ∇F = −2·R·Aᵀ (already in the horizontal space: R ⊥ S).
+    let t0 = Instant::now();
+    let tangent = gemm::matmul_nt(&resid, &a).scale(-2.0); // dim×r
+    bd.tangent = t0.elapsed().as_secs_f64();
+
+    // (4) rank-1 approximation σ·u·vᵀ of the tangent.
+    let t0 = Instant::now();
+    let (sigma, u, v) = svd::power_iteration_top1(&tangent, power_iters, rng);
+    bd.rank1 = t0.elapsed().as_secs_f64();
+
+    // (5) geodesic step of size η (descent direction ⇒ −∇F ⇒ angle −σили...).
+    // Moving against the gradient of the cost: Θ = −σ·η. cos is even and sin
+    // odd, so S′ = S + (S·v·(cos(σ η)−1) − u·sin(σ η))·vᵀ.
+    let t0 = Instant::now();
+    let mut s_new = s.clone();
+    if sigma > 0.0 {
+        // Rotation angle along the geodesic. The paper uses Θ = σ·η with a
+        // constant η (Table 10: η = 10 at pre-training gradient scales where
+        // σ ≈ 1e-4). We clamp at π/2 as a stability guard against abrupt
+        // jumps — the same failure mode Figure 5 demonstrates for SVD — so a
+        // badly scaled σ·η can at most swap one direction, never alias past it.
+        let theta = (sigma * eta).min(std::f32::consts::FRAC_PI_2);
+        let (sin_t, cos_t) = theta.sin_cos();
+        let sv = gemm::matvec(s, &v); // dim-vector
+        // w = sv·(cos−1) − u·sin
+        let w: Vec<f32> =
+            sv.iter().zip(&u).map(|(&svi, &ui)| svi * (cos_t - 1.0) - ui * sin_t).collect();
+        // S′ = S + w·vᵀ  (rank-1 outer product update)
+        let sd = s_new.data_mut();
+        for (i, &wi) in w.iter().enumerate() {
+            if wi == 0.0 {
+                continue;
+            }
+            let row = &mut sd[i * r..(i + 1) * r];
+            for (rv, &vj) in row.iter_mut().zip(&v) {
+                *rv += wi * vj;
+            }
+        }
+    }
+    bd.geodesic = t0.elapsed().as_secs_f64();
+    let _ = dim;
+    (s_new, bd)
+}
+
+/// Per-matrix SubTrack++ state.
+struct MatState {
+    proj: Projector,
+    moments: Moments,
+    /// ‖Λₜ₋₁‖ for the ζ growth limiter (Eq. 12).
+    prev_lambda_norm: f32,
+    /// Count of geodesic updates applied (drives re-orthonormalization guard).
+    updates: usize,
+}
+
+/// Full-rank Adam state for 1-D params.
+struct VecState {
+    moments: Moments,
+}
+
+/// The SubTrack++ optimizer.
+pub struct SubTrack {
+    hp: HyperParams,
+    comps: Components,
+    adam: AdamCfg,
+    mats: Vec<Option<MatState>>,
+    vecs: Vec<Option<VecState>>,
+    step_no: usize,
+    rng: Rng,
+    n_subspace_updates: usize,
+    /// Accumulated stage breakdown across all subspace updates (Appendix D).
+    pub breakdown: UpdateBreakdown,
+    /// Re-orthonormalize the basis after this many geodesic updates (fp drift
+    /// guard; analytically S stays orthonormal because u ⊥ span(S)).
+    pub reorth_every: usize,
+    /// Power-iteration sweeps for the rank-1 approximation.
+    pub power_iters: usize,
+}
+
+impl SubTrack {
+    pub fn new(hp: HyperParams, comps: Components) -> SubTrack {
+        SubTrack {
+            hp,
+            comps,
+            adam: AdamCfg::from(hp),
+            mats: Vec::new(),
+            vecs: Vec::new(),
+            step_no: 0,
+            rng: Rng::new(hp.seed ^ 0x5b71c4),
+            n_subspace_updates: 0,
+            breakdown: UpdateBreakdown::default(),
+            reorth_every: 64,
+            power_iters: 8,
+        }
+    }
+
+    fn ensure_slots(&mut self, n: usize) {
+        if self.mats.len() != n {
+            self.mats = (0..n).map(|_| None).collect();
+            self.vecs = (0..n).map(|_| None).collect();
+        }
+    }
+
+    /// Advance one matrix parameter. Returns the full-size weight delta
+    /// (to be applied as W ← W − lr·delta).
+    fn step_matrix(&mut self, idx: usize, g: &Matrix, is_update_step: bool) -> Matrix {
+        let (m, n) = g.shape();
+        // Initialize on first touch: SVD of G₀ (Eq. 1).
+        if self.mats[idx].is_none() {
+            let proj = Projector::init_svd(g, self.hp.rank);
+            let (lm, ln) = proj.lowrank_shape(m, n);
+            self.mats[idx] = Some(MatState {
+                proj,
+                moments: Moments::new(lm, ln),
+                prev_lambda_norm: 0.0,
+                updates: 0,
+            });
+        }
+
+        let comps = self.comps;
+        let adam = self.adam;
+        let eta = self.hp.eta;
+        let power_iters = self.power_iters;
+        let reorth_every = self.reorth_every;
+        let mut rng = self.rng.split();
+        let st = self.mats[idx].as_mut().unwrap();
+
+        // ---- subspace update every k steps (not at step 0: S₀ is fresh) ----
+        if is_update_step && st.moments.t > 0 {
+            let old_s = st.proj.s.clone();
+            let oriented;
+            let g_oriented: &Matrix = match st.proj.side {
+                Side::Left => g,
+                Side::Right => {
+                    oriented = g.t();
+                    &oriented
+                }
+            };
+            let (mut new_s, bd) =
+                grassmannian_step(&st.proj.s, g_oriented, eta, power_iters, &mut rng);
+            st.updates += 1;
+            if st.updates % reorth_every == 0 {
+                new_s = qr::reorthonormalize(&new_s);
+            }
+            self.breakdown.lstsq += bd.lstsq;
+            self.breakdown.residual += bd.residual;
+            self.breakdown.tangent += bd.tangent;
+            self.breakdown.rank1 += bd.rank1;
+            self.breakdown.geodesic += bd.geodesic;
+            self.n_subspace_updates += 1;
+
+            if comps.projection_aware {
+                // Q = SₜᵀSₜ₋₁ (r×r); rotate moments (Eqs. 8–9).
+                let q = gemm::matmul_tn(&new_s, &old_s);
+                let side = st.proj.side;
+                let rot_m = projector::rotate_first_moment(&q, &st.moments.m, side);
+                let rot_v = projector::rotate_second_moment(
+                    &q,
+                    &st.moments.m,
+                    &st.moments.v,
+                    side,
+                    adam.beta2,
+                    st.moments.t,
+                );
+                st.moments.m = rot_m;
+                st.moments.v = rot_v;
+            }
+            st.proj.s = new_s;
+        }
+
+        // ---- low-rank Adam ----
+        let g_low = st.proj.project(g); // G̃ₜ
+        let dir = st.moments.update(&adam, &g_low); // G̃ᴼₜ (bias-corrected)
+        let mut delta = st.proj.project_back(&dir); // Ĝₜ
+
+        // ---- recovery scaling (Eqs. 10–12) ----
+        if comps.recovery_scaling {
+            let resid = g.sub(&st.proj.project_back(&g_low)); // G − S·G̃
+            let mut lambda = scale_residual(&dir, &g_low, &resid, st.proj.side);
+            // ζ growth limiter.
+            let lnorm = lambda.fro_norm();
+            if st.prev_lambda_norm > 0.0 && lnorm > self.hp.zeta * st.prev_lambda_norm {
+                let target = self.hp.zeta * st.prev_lambda_norm;
+                lambda.scale_mut(target / lnorm);
+                st.prev_lambda_norm = target;
+            } else {
+                st.prev_lambda_norm = lnorm;
+            }
+            delta.axpy(1.0, &lambda);
+        }
+
+        delta
+    }
+}
+
+/// Λ = φ(G)·(G − S·G̃): scale the discarded residual by the ratio of the
+/// optimizer-output column norm to the raw low-rank column norm (Eq. 11).
+/// "Columns" index the non-reduced axis: for Left projections G̃ is r×n and
+/// φ has n entries applied to residual columns; for Right projections G̃ is
+/// m×r and φ has m entries applied to residual rows.
+fn scale_residual(dir: &Matrix, g_low: &Matrix, resid: &Matrix, side: Side) -> Matrix {
+    match side {
+        Side::Left => {
+            let num = dir.col_norms();
+            let den = g_low.col_norms();
+            let mut out = resid.clone();
+            for i in 0..out.rows() {
+                let row = out.row_mut(i);
+                for (j, v) in row.iter_mut().enumerate() {
+                    let phi = if den[j] > 1e-30 { num[j] / den[j] } else { 0.0 };
+                    *v *= phi;
+                }
+            }
+            out
+        }
+        Side::Right => {
+            let mut out = resid.clone();
+            for i in 0..out.rows() {
+                let num = row_norm(dir, i);
+                let den = row_norm(g_low, i);
+                let phi = if den > 1e-30 { num / den } else { 0.0 };
+                for v in out.row_mut(i) {
+                    *v *= phi;
+                }
+            }
+            out
+        }
+    }
+}
+
+fn row_norm(m: &Matrix, i: usize) -> f32 {
+    (m.row(i).iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>()).sqrt() as f32
+}
+
+impl Optimizer for SubTrack {
+    fn step(&mut self, lr: f32, params: &mut [Param], grads: &[Matrix]) {
+        assert_eq!(params.len(), grads.len());
+        self.ensure_slots(params.len());
+        let is_update_step = self.hp.interval > 0 && self.step_no % self.hp.interval == 0;
+        for i in 0..params.len() {
+            let g = &grads[i];
+            match params[i].kind {
+                ParamKind::Matrix2D if g.rows() > 1 && g.cols() > 1 => {
+                    let delta = self.step_matrix(i, g, is_update_step);
+                    // GaLore-style scale α on the whole low-rank update.
+                    params[i].value.axpy(-lr * self.hp.scale, &delta);
+                }
+                _ => {
+                    // Full-rank Adam path for 1-D params.
+                    if self.vecs[i].is_none() {
+                        self.vecs[i] =
+                            Some(VecState { moments: Moments::new(g.rows(), g.cols()) });
+                    }
+                    let st = self.vecs[i].as_mut().unwrap();
+                    let dir = st.moments.update(&self.adam, g);
+                    params[i].value.axpy(-lr, &dir);
+                }
+            }
+            if self.adam.weight_decay > 0.0 {
+                let wd = self.adam.weight_decay;
+                params[i].value.apply(|w| w * (1.0 - lr * wd));
+            }
+        }
+        self.step_no += 1;
+    }
+
+    fn state_bytes(&self) -> usize {
+        let mats: usize = self
+            .mats
+            .iter()
+            .flatten()
+            .map(|s| s.moments.bytes() + s.proj.bytes())
+            .sum();
+        let vecs: usize = self.vecs.iter().flatten().map(|s| s.moments.bytes()).sum();
+        mats + vecs
+    }
+
+    fn state_params(&self) -> usize {
+        let mats: usize = self
+            .mats
+            .iter()
+            .flatten()
+            .map(|s| s.moments.params() + s.proj.params())
+            .sum();
+        let vecs: usize = self.vecs.iter().flatten().map(|s| s.moments.params()).sum();
+        mats + vecs
+    }
+
+    fn subspace_updates(&self) -> usize {
+        self.n_subspace_updates
+    }
+
+    fn name(&self) -> String {
+        self.comps.label().to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::testutil::{run_lstsq, LstsqProblem};
+    use crate::tensor::qr::orthonormality_defect;
+    use crate::util::proptest;
+
+    fn hp(rank: usize, interval: usize) -> HyperParams {
+        HyperParams { rank, interval, scale: 1.0, eta: 0.5, ..HyperParams::default() }
+    }
+
+    #[test]
+    fn converges_on_lstsq_all_variants() {
+        for comps in
+            [Components::full(), Components::pure(), Components::pa_only(), Components::rs_only()]
+        {
+            let prob = LstsqProblem::new(64, 10, 14, 40);
+            let mut opt = SubTrack::new(hp(4, 10), comps);
+            let (init, fin) = run_lstsq(&mut opt, &prob, 700, 0.05);
+            assert!(
+                fin < init * 0.1,
+                "{}: init={init} final={fin}",
+                comps.label()
+            );
+            assert!(opt.subspace_updates() > 0, "subspace must have been updated");
+        }
+    }
+
+    #[test]
+    fn full_beats_pure_on_lstsq() {
+        // The ablation ordering of Fig. 3: full SubTrack++ ≤ pure tracking.
+        let prob = LstsqProblem::new(64, 12, 16, 41);
+        let mut pure = SubTrack::new(hp(3, 10), Components::pure());
+        let mut full = SubTrack::new(hp(3, 10), Components::full());
+        let (_, loss_pure) = run_lstsq(&mut pure, &prob, 300, 0.05);
+        let (_, loss_full) = run_lstsq(&mut full, &prob, 300, 0.05);
+        assert!(
+            loss_full < loss_pure,
+            "full {loss_full} should beat pure {loss_pure}"
+        );
+    }
+
+    #[test]
+    fn geodesic_preserves_orthonormality() {
+        proptest::check(
+            42,
+            20,
+            |rng| {
+                let m = 6 + rng.below(20);
+                let n = 6 + rng.below(20);
+                let r = 1 + rng.below(5);
+                let g = Matrix::randn(m, n, 1.0, rng);
+                let base = Matrix::randn(m, r, 1.0, rng);
+                let (s, _) = crate::tensor::qr::thin_qr(&base);
+                (s, g)
+            },
+            |(s, g)| {
+                let mut rng = Rng::new(7);
+                let (s_new, _) = grassmannian_step(s, g, 0.3, 8, &mut rng);
+                let defect = orthonormality_defect(&s_new);
+                if defect > 1e-3 {
+                    return Err(format!("orthonormality defect {defect}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn geodesic_reduces_estimation_error() {
+        // Moving along the geodesic must reduce F(S) = ‖SSᵀG − G‖² for a
+        // small step when the tangent is nonzero.
+        let mut rng = Rng::new(43);
+        let g = Matrix::randn(20, 30, 1.0, &mut rng);
+        let base = Matrix::randn(20, 4, 1.0, &mut rng);
+        let (s, _) = crate::tensor::qr::thin_qr(&base);
+        let cost = |s: &Matrix| {
+            let a = gemm::matmul_tn(s, &g);
+            let back = gemm::matmul(s, &a);
+            back.sub(&g).fro_norm()
+        };
+        let before = cost(&s);
+        // η chosen so Θ = σ·η stays well inside the first quadrant for this
+        // gradient scale (σ ≈ 2‖R‖‖A‖ ≈ 1e3 here).
+        let (s_new, _) = grassmannian_step(&s, &g, 2e-5, 20, &mut rng);
+        let after = cost(&s_new);
+        assert!(
+            after < before,
+            "geodesic step should reduce estimation error: {after} !< {before}"
+        );
+    }
+
+    #[test]
+    fn repeated_geodesic_converges_to_dominant_subspace() {
+        // Tracking a *fixed* rank-2 signal: iterated geodesic updates should
+        // align S with the true column space.
+        let mut rng = Rng::new(44);
+        let u_true = {
+            let raw = Matrix::randn(16, 2, 1.0, &mut rng);
+            crate::tensor::qr::thin_qr(&raw).0
+        };
+        let coeff = Matrix::randn(2, 24, 1.0, &mut rng);
+        let g = gemm::matmul(&u_true, &coeff);
+        let base = Matrix::randn(16, 2, 1.0, &mut rng);
+        let (mut s, _) = crate::tensor::qr::thin_qr(&base);
+        for _ in 0..500 {
+            let (s2, _) = grassmannian_step(&s, &g, 1e-3, 10, &mut rng);
+            s = s2;
+        }
+        // Alignment: ‖U_trueᵀ S‖_F² → r when subspaces coincide.
+        let overlap = gemm::matmul_tn(&u_true, &s).fro_norm().powi(2);
+        assert!(overlap > 1.9, "subspace overlap {overlap} (want ≈ 2)");
+    }
+
+    #[test]
+    fn zeta_limiter_bounds_lambda_growth() {
+        // With a tiny ζ the recovery term's norm can grow at most ζ× per step.
+        let prob = LstsqProblem::new(32, 8, 12, 45);
+        let mut opt = SubTrack::new(
+            HyperParams { rank: 2, interval: 5, zeta: 1.0001, scale: 1.0, ..Default::default() },
+            Components::rs_only(),
+        );
+        // Just exercise it; the assertion is in the internal state we can
+        // observe via convergence (no blow-up).
+        let (init, fin) = run_lstsq(&mut opt, &prob, 200, 0.05);
+        assert!(fin.is_finite() && fin < init, "no blow-up with tight ζ");
+    }
+
+    #[test]
+    fn state_params_match_table2() {
+        // Table 2: SubTrack++ optimizer state = mr + 2nr  (for m ≤ n:
+        // projector mr, moments 2·(r·n)).
+        let (m, n, r) = (10, 24, 4);
+        let prob = LstsqProblem::new(8, m, n, 46);
+        let mut opt = SubTrack::new(hp(r, 10), Components::full());
+        let _ = run_lstsq(&mut opt, &prob, 2, 0.01);
+        assert_eq!(opt.state_params(), m * r + 2 * n * r);
+    }
+
+    #[test]
+    fn right_side_projection_works() {
+        // m > n exercises the Right-side code path.
+        let prob = LstsqProblem::new(64, 20, 6, 47);
+        let mut opt = SubTrack::new(hp(3, 10), Components::full());
+        let (init, fin) = run_lstsq(&mut opt, &prob, 400, 0.05);
+        assert!(fin < init * 0.1, "right-side convergence: init={init} fin={fin}");
+    }
+
+    #[test]
+    fn vector_params_take_adam_path() {
+        let mut opt = SubTrack::new(hp(4, 10), Components::full());
+        let mut params = vec![Param::vector("b", Matrix::zeros(1, 8))];
+        let g = Matrix::full(1, 8, 1.0);
+        for _ in 0..50 {
+            let gc = g.clone();
+            opt.step(0.1, &mut params, std::slice::from_ref(&gc));
+        }
+        // Moving against constant gradient: values decrease.
+        assert!(params[0].value.get(0, 0) < -1.0);
+        // No projector allocated for the vector param.
+        assert_eq!(opt.subspace_updates(), 0);
+    }
+
+    #[test]
+    fn breakdown_accumulates() {
+        let prob = LstsqProblem::new(32, 10, 12, 48);
+        let mut opt = SubTrack::new(hp(4, 5), Components::full());
+        let _ = run_lstsq(&mut opt, &prob, 30, 0.05);
+        assert!(opt.subspace_updates() >= 5);
+        assert!(opt.breakdown.total() > 0.0);
+    }
+}

@@ -1,0 +1,91 @@
+//! The PJRT gradient engine: executes the JAX-lowered `train_step` artifact
+//! (forward + backward of the Layer-2 model, embedding the Layer-1 Pallas
+//! kernels) with the current Rust-side parameters and returns loss +
+//! gradients to the Layer-3 optimizer.
+//!
+//! Artifact contract (see `python/compile/aot.py`):
+//!   name   : `train_step_<preset>_b<B>_t<T>`
+//!   inputs : every parameter in the Rust layout order (2-D params as f32
+//!            (rows, cols), 1-D params as f32 (len,)), then `inputs` i32
+//!            (B, T), then `targets` i32 (B, T)
+//!   output : tuple(loss f32 scalar, grad per parameter in the same order)
+
+use super::literal;
+use super::PjrtRuntime;
+use crate::model::Batch;
+use crate::optim::{Param, ParamKind};
+use crate::tensor::Matrix;
+
+/// Executes `train_step` artifacts for one (preset, batch-shape) bucket.
+pub struct PjrtEngine {
+    runtime: PjrtRuntime,
+    artifact: String,
+    /// Parameter shapes, captured on first call for output mapping.
+    shapes: Vec<(usize, usize)>,
+}
+
+impl PjrtEngine {
+    /// Create an engine for the given model preset and batch shape. Fails
+    /// fast if the artifact file is missing (run `make artifacts`).
+    pub fn new(
+        artifacts_dir: &str,
+        preset: &str,
+        b: usize,
+        t: usize,
+    ) -> anyhow::Result<PjrtEngine> {
+        let runtime = PjrtRuntime::cpu(artifacts_dir)?;
+        let artifact = format!("train_step_{preset}_b{b}_t{t}");
+        anyhow::ensure!(
+            runtime.has_artifact(&artifact),
+            "artifact {artifact} not found under {artifacts_dir} — run `make artifacts`"
+        );
+        Ok(PjrtEngine { runtime, artifact, shapes: Vec::new() })
+    }
+
+    pub fn artifact_name(&self) -> &str {
+        &self.artifact
+    }
+
+    fn build_inputs(&mut self, params: &[Param], batch: &Batch) -> anyhow::Result<Vec<xla::Literal>> {
+        self.shapes = params.iter().map(|p| p.value.shape()).collect();
+        let mut lits = Vec::with_capacity(params.len() + 2);
+        for p in params {
+            let lit = match p.kind {
+                ParamKind::Matrix2D => literal::matrix_to_literal(&p.value)?,
+                ParamKind::Vector => literal::vector_to_literal(&p.value)?,
+            };
+            lits.push(lit);
+        }
+        lits.push(literal::tokens_to_literal(&batch.inputs, batch.b, batch.t)?);
+        lits.push(literal::tokens_to_literal(&batch.targets, batch.b, batch.t)?);
+        Ok(lits)
+    }
+
+    /// Loss + gradients via the lowered train_step.
+    pub fn loss_and_grad(
+        &mut self,
+        params: &[Param],
+        batch: &Batch,
+    ) -> anyhow::Result<(f32, Vec<Matrix>)> {
+        let inputs = self.build_inputs(params, batch)?;
+        let artifact = self.artifact.clone();
+        let outputs = self.runtime.execute(&artifact, &inputs)?;
+        anyhow::ensure!(
+            outputs.len() == params.len() + 1,
+            "train_step returned {} outputs, expected {}",
+            outputs.len(),
+            params.len() + 1
+        );
+        let loss = literal::literal_to_scalar(&outputs[0])?;
+        let mut grads = Vec::with_capacity(params.len());
+        for (i, (rows, cols)) in self.shapes.iter().enumerate() {
+            grads.push(literal::literal_to_matrix(&outputs[i + 1], *rows, *cols)?);
+        }
+        Ok((loss, grads))
+    }
+
+    /// Loss only (eval path) — reuses the same artifact and discards grads.
+    pub fn loss(&mut self, params: &[Param], batch: &Batch) -> anyhow::Result<f32> {
+        Ok(self.loss_and_grad(params, batch)?.0)
+    }
+}

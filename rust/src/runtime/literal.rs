@@ -1,0 +1,81 @@
+//! Conversions between the in-tree [`Matrix`]/token types and `xla::Literal`.
+
+use crate::tensor::Matrix;
+
+/// Matrix → 2-D f32 literal.
+pub fn matrix_to_literal(m: &Matrix) -> anyhow::Result<xla::Literal> {
+    let bytes: Vec<u8> = m.data().iter().flat_map(|v| v.to_le_bytes()).collect();
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        &[m.rows(), m.cols()],
+        &bytes,
+    )
+    .map_err(|e| anyhow::anyhow!("{e:?}"))
+}
+
+/// Matrix stored as a 1-row vector → 1-D f32 literal of length `cols`.
+pub fn vector_to_literal(m: &Matrix) -> anyhow::Result<xla::Literal> {
+    let bytes: Vec<u8> = m.data().iter().flat_map(|v| v.to_le_bytes()).collect();
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        &[m.len()],
+        &bytes,
+    )
+    .map_err(|e| anyhow::anyhow!("{e:?}"))
+}
+
+/// Token ids → 2-D i32 literal of shape (b, t).
+pub fn tokens_to_literal(tokens: &[u32], b: usize, t: usize) -> anyhow::Result<xla::Literal> {
+    assert_eq!(tokens.len(), b * t);
+    let bytes: Vec<u8> = tokens.iter().flat_map(|&v| (v as i32).to_le_bytes()).collect();
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, &[b, t], &bytes)
+        .map_err(|e| anyhow::anyhow!("{e:?}"))
+}
+
+/// f32 literal → Matrix with the given shape (element count must match).
+pub fn literal_to_matrix(lit: &xla::Literal, rows: usize, cols: usize) -> anyhow::Result<Matrix> {
+    let data: Vec<f32> = lit.to_vec().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    anyhow::ensure!(
+        data.len() == rows * cols,
+        "literal has {} elements, expected {}x{}",
+        data.len(),
+        rows,
+        cols
+    );
+    Ok(Matrix::from_vec(rows, cols, data))
+}
+
+/// Scalar f32 literal → f32.
+pub fn literal_to_scalar(lit: &xla::Literal) -> anyhow::Result<f32> {
+    let data: Vec<f32> = lit.to_vec().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    anyhow::ensure!(data.len() == 1, "expected scalar, got {} elements", data.len());
+    Ok(data[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matrix_literal_roundtrip() {
+        let mut rng = Rng::new(1);
+        let m = Matrix::randn(3, 5, 1.0, &mut rng);
+        let lit = match matrix_to_literal(&m) {
+            Ok(l) => l,
+            Err(_) => return, // xla runtime unavailable
+        };
+        let back = literal_to_matrix(&lit, 3, 5).unwrap();
+        assert_eq!(back.data(), m.data());
+    }
+
+    #[test]
+    fn token_literal_shape() {
+        let toks = vec![1u32, 2, 3, 4, 5, 6];
+        let lit = match tokens_to_literal(&toks, 2, 3) {
+            Ok(l) => l,
+            Err(_) => return,
+        };
+        assert_eq!(lit.element_count(), 6);
+    }
+}

@@ -1,0 +1,102 @@
+//! PJRT runtime — Layer 3's bridge to the JAX-lowered (Layer 2) compute
+//! graphs that embed the Pallas (Layer 1) kernels.
+//!
+//! `make artifacts` runs `python/compile/aot.py` once at build time, writing
+//! HLO **text** modules under `artifacts/` (text, not serialized protos:
+//! jax ≥ 0.5 emits 64-bit instruction ids that the crate's xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids — see DESIGN.md §AOT).
+//! This module loads those files, compiles them once on the PJRT CPU client,
+//! and executes them from the training loop. Python never runs here.
+
+pub mod engine;
+pub mod literal;
+
+pub use engine::PjrtEngine;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A PJRT client plus a compile cache keyed by artifact path.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU-backed runtime rooted at the given artifacts directory.
+    pub fn cpu(artifacts_dir: impl AsRef<Path>) -> anyhow::Result<PjrtRuntime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        Ok(PjrtRuntime {
+            client,
+            artifacts_dir: artifacts_dir.as_ref().to_path_buf(),
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Absolute path of a named artifact.
+    pub fn artifact_path(&self, name: &str) -> PathBuf {
+        self.artifacts_dir.join(format!("{name}.hlo.txt"))
+    }
+
+    /// Whether the artifact file exists (drives graceful skipping in tests
+    /// when `make artifacts` has not run).
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.artifact_path(name).exists()
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&mut self, name: &str) -> anyhow::Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let path = self.artifact_path(name);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow::anyhow!("loading {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(self.cache.get(name).unwrap())
+    }
+
+    /// Execute a loaded artifact on literal inputs; returns the flattened
+    /// tuple elements (every artifact is lowered with `return_tuple=True`).
+    pub fn execute(
+        &mut self,
+        name: &str,
+        inputs: &[xla::Literal],
+    ) -> anyhow::Result<Vec<xla::Literal>> {
+        let exe = self.load(name)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("executing {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching result of {name}: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow::anyhow!("untupling {name}: {e:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_artifact_is_reported() {
+        let mut rt = match PjrtRuntime::cpu("artifacts") {
+            Ok(rt) => rt,
+            Err(_) => return, // PJRT unavailable in this environment
+        };
+        assert!(!rt.has_artifact("no_such_module"));
+        let err = rt.load("no_such_module");
+        assert!(err.is_err());
+    }
+}

@@ -1,0 +1,315 @@
+//! Cache-blocked GEMM in all transpose variants.
+//!
+//! Row-major, single-threaded (the sandbox exposes one core). The `ikj` loop
+//! order streams both B-rows and C-rows sequentially, which autovectorizes
+//! well; blocking keeps the working set inside L2. The transpose variants
+//! avoid materializing Aᵀ/Bᵀ — the subspace math (SᵀG, R·Aᵀ, SₜᵀSₜ₋₁) is
+//! dominated by these.
+
+use super::matrix::Matrix;
+
+/// Tile edge for the k-dimension blocking.
+const KC: usize = 256;
+/// Tile edge for the m-dimension blocking.
+const MC: usize = 64;
+
+/// C = A·B. Shapes: (m×k)·(k×n) → m×n.
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    let (m, k) = a.shape();
+    let (k2, n) = b.shape();
+    assert_eq!(k, k2, "matmul inner dims: {k} vs {k2}");
+    let mut c = Matrix::zeros(m, n);
+    matmul_acc(&mut c, a, b, 1.0);
+    c
+}
+
+/// C += alpha · A·B, in place.
+pub fn matmul_acc(c: &mut Matrix, a: &Matrix, b: &Matrix, alpha: f32) {
+    let (m, k) = a.shape();
+    let (k2, n) = b.shape();
+    assert_eq!(k, k2, "matmul inner dims");
+    assert_eq!(c.shape(), (m, n), "matmul output shape");
+    let ad = a.data();
+    let bd = b.data();
+    let cd = c.data_mut();
+    for i0 in (0..m).step_by(MC) {
+        let i1 = (i0 + MC).min(m);
+        for p0 in (0..k).step_by(KC) {
+            let p1 = (p0 + KC).min(k);
+            // 2×4 register blocking: two C rows share each streamed B row,
+            // and each pass over a C row performs 4 FMAs per element. This
+            // cuts C traffic 4× and B traffic 2× versus the plain axpy form
+            // (measured 20 → ~30+ GFLOPS single-core AVX-512).
+            let mut i = i0;
+            while i + 2 <= i1 {
+                let (c_lo, c_hi) = cd.split_at_mut((i + 1) * n);
+                let crow0 = &mut c_lo[i * n..];
+                let crow1 = &mut c_hi[..n];
+                let arow0 = &ad[i * k..(i + 1) * k];
+                let arow1 = &ad[(i + 1) * k..(i + 2) * k];
+                let mut p = p0;
+                while p + 4 <= p1 {
+                    let x0 = alpha * arow0[p];
+                    let x1 = alpha * arow0[p + 1];
+                    let x2 = alpha * arow0[p + 2];
+                    let x3 = alpha * arow0[p + 3];
+                    let y0 = alpha * arow1[p];
+                    let y1 = alpha * arow1[p + 1];
+                    let y2 = alpha * arow1[p + 2];
+                    let y3 = alpha * arow1[p + 3];
+                    let b0 = &bd[p * n..(p + 1) * n];
+                    let b1 = &bd[(p + 1) * n..(p + 2) * n];
+                    let b2 = &bd[(p + 2) * n..(p + 3) * n];
+                    let b3 = &bd[(p + 3) * n..(p + 4) * n];
+                    // Zip form keeps the loops free of bounds checks so LLVM
+                    // emits packed AVX-512 FMAs.
+                    for (((((cv0, cv1), &v0), &v1), &v2), &v3) in crow0
+                        .iter_mut()
+                        .zip(crow1.iter_mut())
+                        .zip(b0)
+                        .zip(b1)
+                        .zip(b2)
+                        .zip(b3)
+                    {
+                        *cv0 += x0 * v0 + x1 * v1 + x2 * v2 + x3 * v3;
+                        *cv1 += y0 * v0 + y1 * v1 + y2 * v2 + y3 * v3;
+                    }
+                    p += 4;
+                }
+                while p < p1 {
+                    let x = alpha * arow0[p];
+                    let y = alpha * arow1[p];
+                    let brow = &bd[p * n..(p + 1) * n];
+                    for ((cv0, cv1), &bv) in
+                        crow0.iter_mut().zip(crow1.iter_mut()).zip(brow)
+                    {
+                        *cv0 += x * bv;
+                        *cv1 += y * bv;
+                    }
+                    p += 1;
+                }
+                i += 2;
+            }
+            // Remainder row.
+            while i < i1 {
+                let arow = &ad[i * k..(i + 1) * k];
+                let crow = &mut cd[i * n..(i + 1) * n];
+                let mut p = p0;
+                while p + 4 <= p1 {
+                    let a0 = alpha * arow[p];
+                    let a1 = alpha * arow[p + 1];
+                    let a2 = alpha * arow[p + 2];
+                    let a3 = alpha * arow[p + 3];
+                    let b0 = &bd[p * n..(p + 1) * n];
+                    let b1 = &bd[(p + 1) * n..(p + 2) * n];
+                    let b2 = &bd[(p + 2) * n..(p + 3) * n];
+                    let b3 = &bd[(p + 3) * n..(p + 4) * n];
+                    for ((((cv, &v0), &v1), &v2), &v3) in
+                        crow.iter_mut().zip(b0).zip(b1).zip(b2).zip(b3)
+                    {
+                        *cv += a0 * v0 + a1 * v1 + a2 * v2 + a3 * v3;
+                    }
+                    p += 4;
+                }
+                while p < p1 {
+                    let av = alpha * arow[p];
+                    if av != 0.0 {
+                        let brow = &bd[p * n..(p + 1) * n];
+                        for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                            *cv += av * bv;
+                        }
+                    }
+                    p += 1;
+                }
+                i += 1;
+            }
+        }
+    }
+}
+
+/// C = Aᵀ·B. Shapes: (k×m)ᵀ·(k×n) → m×n. A is stored k×m (not transposed).
+///
+/// Beyond small shapes this transposes A once (O(k·m)) and reuses the
+/// register-blocked `matmul` kernel — the strided A[p,i] access pattern of
+/// the direct form caps out well below it.
+pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
+    let (k, m) = a.shape();
+    let (k2, n) = b.shape();
+    assert_eq!(k, k2, "matmul_tn inner dims: {k} vs {k2}");
+    if m * n >= 32 * 32 {
+        return matmul(&a.t(), b);
+    }
+    let mut c = Matrix::zeros(m, n);
+    let ad = a.data();
+    let bd = b.data();
+    let cd = c.data_mut();
+    // C[i,:] += A[p,i] * B[p,:]  — stream both A and B rows.
+    for p0 in (0..k).step_by(KC) {
+        let p1 = (p0 + KC).min(k);
+        for p in p0..p1 {
+            let arow = &ad[p * m..(p + 1) * m];
+            let brow = &bd[p * n..(p + 1) * n];
+            for (i, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let crow = &mut cd[i * n..(i + 1) * n];
+                for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                    *cv += av * bv;
+                }
+            }
+        }
+    }
+    c
+}
+
+/// C = A·Bᵀ. Shapes: (m×k)·(n×k)ᵀ → m×n. B is stored n×k (not transposed).
+///
+/// For anything beyond small shapes, the row-dot formulation is memory-bound
+/// (each C element is an isolated k-length dot product: ~5 GFLOPS measured),
+/// while transposing B once (O(n·k)) and streaming the `ikj` kernel reaches
+/// ~20 GFLOPS — a 4× win on the model's `x·Wᵀ` linears. The crossover lives
+/// around 32² work; below it the transpose overhead dominates.
+pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
+    let (m, k) = a.shape();
+    let (n, k2) = b.shape();
+    assert_eq!(k, k2, "matmul_nt inner dims: {k} vs {k2}");
+    if m * n >= 32 * 32 {
+        return matmul(a, &b.t());
+    }
+    let mut c = Matrix::zeros(m, n);
+    let ad = a.data();
+    let bd = b.data();
+    let cd = c.data_mut();
+    // Small case: direct row dots (transpose not worth it).
+    for i in 0..m {
+        let arow = &ad[i * k..(i + 1) * k];
+        let crow = &mut cd[i * n..(i + 1) * n];
+        for (j, cv) in crow.iter_mut().enumerate() {
+            let brow = &bd[j * k..(j + 1) * k];
+            *cv = arow.iter().zip(brow).map(|(&x, &y)| x * y).sum();
+        }
+    }
+    c
+}
+
+/// y = A·x (matrix-vector).
+pub fn matvec(a: &Matrix, x: &[f32]) -> Vec<f32> {
+    let (m, k) = a.shape();
+    assert_eq!(k, x.len(), "matvec dims");
+    let ad = a.data();
+    (0..m)
+        .map(|i| {
+            let row = &ad[i * k..(i + 1) * k];
+            row.iter().zip(x).map(|(&a, &b)| a * b).sum()
+        })
+        .collect()
+}
+
+/// y = Aᵀ·x (A stored m×k, result length k).
+pub fn matvec_t(a: &Matrix, x: &[f32]) -> Vec<f32> {
+    let (m, k) = a.shape();
+    assert_eq!(m, x.len(), "matvec_t dims");
+    let mut y = vec![0.0f32; k];
+    let ad = a.data();
+    for (i, &xv) in x.iter().enumerate() {
+        if xv == 0.0 {
+            continue;
+        }
+        let row = &ad[i * k..(i + 1) * k];
+        for (yv, &av) in y.iter_mut().zip(row.iter()) {
+            *yv += xv * av;
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+    use crate::util::rng::Rng;
+
+    /// Naive reference matmul for testing.
+    fn naive(a: &Matrix, b: &Matrix) -> Matrix {
+        let (m, k) = a.shape();
+        let (_, n) = b.shape();
+        let mut c = Matrix::zeros(m, n);
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f64;
+                for p in 0..k {
+                    acc += a.get(i, p) as f64 * b.get(p, j) as f64;
+                }
+                c.set(i, j, acc as f32);
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn small_known_product() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let b = Matrix::from_rows(&[&[5.0, 6.0], &[7.0, 8.0]]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data(), &[19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn identity_is_noop() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::randn(7, 7, 1.0, &mut rng);
+        let c = matmul(&a, &Matrix::eye(7));
+        proptest::close(c.data(), a.data(), 1e-6, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn property_matches_naive_all_variants() {
+        proptest::check(
+            42,
+            60,
+            |rng| {
+                let (m, k) = proptest::shape(rng, 33, 40);
+                let n = 1 + rng.below(35);
+                let a = Matrix::randn(m, k, 1.0, rng);
+                let b = Matrix::randn(k, n, 1.0, rng);
+                (a, b)
+            },
+            |(a, b)| {
+                let want = naive(a, b);
+                proptest::close(matmul(a, b).data(), want.data(), 1e-4, 1e-4)?;
+                proptest::close(matmul_tn(&a.t(), b).data(), want.data(), 1e-4, 1e-4)?;
+                proptest::close(matmul_nt(a, &b.t()).data(), want.data(), 1e-4, 1e-4)?;
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn matmul_acc_accumulates() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::randn(5, 6, 1.0, &mut rng);
+        let b = Matrix::randn(6, 4, 1.0, &mut rng);
+        let mut c = Matrix::full(5, 4, 1.0);
+        matmul_acc(&mut c, &a, &b, 2.0);
+        let want = naive(&a, &b).scale(2.0).add(&Matrix::full(5, 4, 1.0));
+        proptest::close(c.data(), want.data(), 1e-4, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn matvec_variants() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]]);
+        assert_eq!(matvec(&a, &[1.0, 0.0, -1.0]), vec![-2.0, -2.0]);
+        assert_eq!(matvec_t(&a, &[1.0, 1.0]), vec![5.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    fn degenerate_shapes() {
+        let a = Matrix::zeros(0, 3);
+        let b = Matrix::zeros(3, 2);
+        assert_eq!(matmul(&a, &b).shape(), (0, 2));
+        let a1 = Matrix::from_rows(&[&[2.0]]);
+        let b1 = Matrix::from_rows(&[&[3.0]]);
+        assert_eq!(matmul(&a1, &b1).data(), &[6.0]);
+    }
+}

@@ -1,0 +1,335 @@
+//! Row-major dense f32 matrix.
+
+use crate::util::rng::Rng;
+use std::fmt;
+
+/// A dense row-major matrix of `f32`.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Matrix {
+    /// Zero matrix of the given shape.
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Matrix filled with a constant.
+    pub fn full(rows: usize, cols: usize, value: f32) -> Matrix {
+        Matrix { rows, cols, data: vec![value; rows * cols] }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Matrix {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    /// Build from an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Matrix {
+        assert_eq!(data.len(), rows * cols, "buffer size mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    /// Build from a nested-slice literal (rows of equal length).
+    pub fn from_rows(rows: &[&[f32]]) -> Matrix {
+        let r = rows.len();
+        let c = rows.first().map(|x| x.len()).unwrap_or(0);
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Matrix { rows: r, cols: c, data }
+    }
+
+    /// i.i.d. N(0, std) entries.
+    pub fn randn(rows: usize, cols: usize, std: f32, rng: &mut Rng) -> Matrix {
+        let mut m = Matrix::zeros(rows, cols);
+        rng.fill_normal(&mut m.data, std);
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// (rows, cols)
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Column `j` copied into a Vec.
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        (0..self.rows).map(|i| self.get(i, j)).collect()
+    }
+
+    /// Transposed copy.
+    pub fn t(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness.
+        const B: usize = 32;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        out.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f32 {
+        // Accumulate in f64 for robustness on large matrices.
+        (self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>()).sqrt() as f32
+    }
+
+    /// Sum of all entries.
+    pub fn sum(&self) -> f32 {
+        self.data.iter().map(|&x| x as f64).sum::<f64>() as f32
+    }
+
+    /// Maximum absolute entry.
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |a, &b| a.max(b.abs()))
+    }
+
+    /// Element-wise map into a new matrix.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Matrix {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    /// In-place element-wise update.
+    pub fn apply(&mut self, f: impl Fn(f32) -> f32) {
+        for v in &mut self.data {
+            *v = f(*v);
+        }
+    }
+
+    /// self + other (new matrix).
+    pub fn add(&self, other: &Matrix) -> Matrix {
+        self.zip(other, |a, b| a + b)
+    }
+
+    /// self - other (new matrix).
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        self.zip(other, |a, b| a - b)
+    }
+
+    /// Hadamard product.
+    pub fn hadamard(&self, other: &Matrix) -> Matrix {
+        self.zip(other, |a, b| a * b)
+    }
+
+    /// Element-wise combine.
+    pub fn zip(&self, other: &Matrix, f: impl Fn(f32, f32) -> f32) -> Matrix {
+        assert_eq!(self.shape(), other.shape(), "shape mismatch");
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(&a, &b)| f(a, b)).collect(),
+        }
+    }
+
+    /// In-place `self += alpha * other` (axpy).
+    pub fn axpy(&mut self, alpha: f32, other: &Matrix) {
+        assert_eq!(self.shape(), other.shape(), "shape mismatch");
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Scaled copy.
+    pub fn scale(&self, alpha: f32) -> Matrix {
+        self.map(|x| alpha * x)
+    }
+
+    /// In-place scale.
+    pub fn scale_mut(&mut self, alpha: f32) {
+        for v in &mut self.data {
+            *v *= alpha;
+        }
+    }
+
+    /// Copy of the leading `k` columns.
+    pub fn take_cols(&self, k: usize) -> Matrix {
+        assert!(k <= self.cols);
+        let mut out = Matrix::zeros(self.rows, k);
+        for i in 0..self.rows {
+            out.row_mut(i).copy_from_slice(&self.row(i)[..k]);
+        }
+        out
+    }
+
+    /// Dot product of columns j1 and j2 (f64 accumulation).
+    pub fn col_dot(&self, j1: usize, j2: usize) -> f64 {
+        let mut acc = 0.0f64;
+        let mut idx1 = j1;
+        let mut idx2 = j2;
+        for _ in 0..self.rows {
+            acc += self.data[idx1] as f64 * self.data[idx2] as f64;
+            idx1 += self.cols;
+            idx2 += self.cols;
+        }
+        acc
+    }
+
+    /// Euclidean norms of each column.
+    pub fn col_norms(&self) -> Vec<f32> {
+        let mut acc = vec![0.0f64; self.cols];
+        for i in 0..self.rows {
+            let row = self.row(i);
+            for (j, &v) in row.iter().enumerate() {
+                acc[j] += (v as f64) * (v as f64);
+            }
+        }
+        acc.into_iter().map(|x| x.sqrt() as f32).collect()
+    }
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
+        let show_rows = self.rows.min(6);
+        for i in 0..show_rows {
+            let row = self.row(i);
+            let cells: Vec<String> =
+                row.iter().take(8).map(|v| format!("{v:>10.4}")).collect();
+            let ell = if self.cols > 8 { " …" } else { "" };
+            writeln!(f, "  [{}{ell}]", cells.join(", "))?;
+        }
+        if self.rows > show_rows {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let m = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        assert_eq!(m.shape(), (2, 2));
+        assert_eq!(m.get(1, 0), 3.0);
+        assert_eq!(m.col(1), vec![2.0, 4.0]);
+        assert_eq!(Matrix::eye(3).get(2, 2), 1.0);
+        assert_eq!(Matrix::eye(3).get(0, 2), 0.0);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(1);
+        let m = Matrix::randn(13, 37, 1.0, &mut rng);
+        assert_eq!(m.t().t(), m);
+        assert_eq!(m.t().get(5, 7), m.get(7, 5));
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0]]);
+        let b = Matrix::from_rows(&[&[3.0, -1.0]]);
+        assert_eq!(a.add(&b).data(), &[4.0, 1.0]);
+        assert_eq!(a.sub(&b).data(), &[-2.0, 3.0]);
+        assert_eq!(a.hadamard(&b).data(), &[3.0, -2.0]);
+        let mut c = a.clone();
+        c.axpy(2.0, &b);
+        assert_eq!(c.data(), &[7.0, 0.0]);
+    }
+
+    #[test]
+    fn norms() {
+        let m = Matrix::from_rows(&[&[3.0, 0.0], &[0.0, 4.0]]);
+        assert!((m.fro_norm() - 5.0).abs() < 1e-6);
+        assert_eq!(m.max_abs(), 4.0);
+        let cn = m.col_norms();
+        assert!((cn[0] - 3.0).abs() < 1e-6 && (cn[1] - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn take_cols_works() {
+        let m = Matrix::from_rows(&[&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]]);
+        let t = m.take_cols(2);
+        assert_eq!(t.shape(), (2, 2));
+        assert_eq!(t.data(), &[1.0, 2.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn col_dot_f64_accumulation() {
+        let m = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0], &[5.0, 6.0]]);
+        assert!((m.col_dot(0, 1) - (2.0 + 12.0 + 30.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn shape_mismatch_panics() {
+        let a = Matrix::zeros(2, 2);
+        let b = Matrix::zeros(2, 3);
+        let _ = a.add(&b);
+    }
+}

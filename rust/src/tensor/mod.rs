@@ -1,0 +1,19 @@
+//! Dense f32 linear-algebra substrate, built from scratch.
+//!
+//! Everything the optimizer family and the native training engine need:
+//! a row-major [`Matrix`], cache-blocked GEMM in all transpose variants,
+//! Householder QR, one-sided Jacobi thin SVD, power iteration for top
+//! singular triplets, and least squares. No external dependencies.
+//!
+//! The paper's subspace math operates per-gradient-matrix (m×n with rank
+//! r ≪ m ≤ n), so all routines are tuned for tall-skinny / short-fat shapes
+//! in the few-hundreds range running on a single CPU core.
+
+pub mod gemm;
+pub mod matrix;
+pub mod ops;
+pub mod qr;
+pub mod svd;
+
+pub use matrix::Matrix;
+pub use svd::{power_iteration_top1, thin_svd, Svd};

@@ -1,0 +1,102 @@
+//! Miscellaneous tensor operations used by the model and optimizers:
+//! numerically-stable softmax, row-wise reductions, clipping.
+
+use super::matrix::Matrix;
+
+/// Row-wise numerically-stable softmax, in place.
+pub fn softmax_rows(m: &mut Matrix) {
+    let cols = m.cols();
+    for i in 0..m.rows() {
+        let row = m.row_mut(i);
+        let max = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+        let _ = cols;
+    }
+}
+
+/// Global gradient-norm clipping over a set of matrices: if the joint L2 norm
+/// exceeds `max_norm`, scale all of them down proportionally. Returns the
+/// pre-clip norm (the paper uses clipping 1.0 in every pre-training run).
+pub fn clip_global_norm(grads: &mut [&mut Matrix], max_norm: f32) -> f32 {
+    let total: f64 = grads
+        .iter()
+        .map(|g| g.data().iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>())
+        .sum();
+    let norm = total.sqrt() as f32;
+    if norm > max_norm && norm > 0.0 {
+        let scale = max_norm / norm;
+        for g in grads.iter_mut() {
+            g.scale_mut(scale);
+        }
+    }
+    norm
+}
+
+/// Mean of a slice.
+pub fn mean(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64) as f32
+}
+
+/// Population variance of a slice.
+pub fn variance(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean(xs) as f64;
+    (xs.iter().map(|&x| (x as f64 - m) * (x as f64 - m)).sum::<f64>() / xs.len() as f64) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut m = Matrix::from_rows(&[&[1.0, 2.0, 3.0], &[1000.0, 1000.0, 1000.0]]);
+        softmax_rows(&mut m);
+        for i in 0..2 {
+            let s: f32 = m.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+        // Large-value row must not produce NaN (stability).
+        assert!((m.get(1, 0) - 1.0 / 3.0).abs() < 1e-5);
+        // Monotone in logits.
+        assert!(m.get(0, 2) > m.get(0, 1) && m.get(0, 1) > m.get(0, 0));
+    }
+
+    #[test]
+    fn clip_scales_when_over() {
+        let mut a = Matrix::from_rows(&[&[3.0, 0.0]]);
+        let mut b = Matrix::from_rows(&[&[0.0, 4.0]]);
+        let pre = clip_global_norm(&mut [&mut a, &mut b], 1.0);
+        assert!((pre - 5.0).abs() < 1e-6);
+        let post = ((a.fro_norm().powi(2) + b.fro_norm().powi(2))).sqrt();
+        assert!((post - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn clip_noop_when_under() {
+        let mut a = Matrix::from_rows(&[&[0.3, 0.0]]);
+        let pre = clip_global_norm(&mut [&mut a], 1.0);
+        assert!((pre - 0.3).abs() < 1e-6);
+        assert_eq!(a.get(0, 0), 0.3);
+    }
+
+    #[test]
+    fn stats() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert!((variance(&[1.0, 2.0, 3.0]) - 2.0 / 3.0).abs() < 1e-6);
+        assert_eq!(mean(&[]), 0.0);
+    }
+}

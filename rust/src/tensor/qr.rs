@@ -1,0 +1,238 @@
+//! Householder QR decomposition and least squares.
+//!
+//! Thin QR (m×n, m ≥ n): A = Q·R with Q m×n orthonormal columns, R n×n upper
+//! triangular. Used to (re-)orthonormalize subspace bases and to solve the
+//! general least-squares problem; the SubTrack++ hot path avoids it because
+//! its basis S is already orthonormal (then argmin_A ‖SA−G‖ = SᵀG).
+
+use super::gemm;
+use super::matrix::Matrix;
+
+/// Thin QR via Householder reflections. Returns (Q m×n, R n×n). Requires m ≥ n.
+pub fn thin_qr(a: &Matrix) -> (Matrix, Matrix) {
+    let (m, n) = a.shape();
+    assert!(m >= n, "thin_qr requires m >= n, got {m}x{n}");
+    // Work on a copy of A; accumulate Householder vectors in-place (LAPACK style).
+    let mut r = a.clone();
+    let mut vs: Vec<Vec<f32>> = Vec::with_capacity(n);
+    for k in 0..n {
+        // Householder vector for column k, rows k..m.
+        let mut v: Vec<f32> = (k..m).map(|i| r.get(i, k)).collect();
+        let norm_x = (v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>()).sqrt() as f32;
+        if norm_x > 0.0 {
+            let alpha = if v[0] >= 0.0 { -norm_x } else { norm_x };
+            v[0] -= alpha;
+            let vnorm =
+                (v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>()).sqrt() as f32;
+            if vnorm > 1e-30 {
+                for x in v.iter_mut() {
+                    *x /= vnorm;
+                }
+                // Apply H = I - 2vvᵀ to R[k.., k..].
+                for j in k..n {
+                    let mut dot = 0.0f64;
+                    for (idx, i) in (k..m).enumerate() {
+                        dot += v[idx] as f64 * r.get(i, j) as f64;
+                    }
+                    let dot = 2.0 * dot as f32;
+                    for (idx, i) in (k..m).enumerate() {
+                        let val = r.get(i, j) - dot * v[idx];
+                        r.set(i, j, val);
+                    }
+                }
+            } else {
+                v = vec![0.0; m - k];
+            }
+        }
+        vs.push(v);
+    }
+    // Extract R (n×n upper triangular).
+    let mut rr = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            rr.set(i, j, r.get(i, j));
+        }
+    }
+    // Form thin Q by applying reflections to the first n columns of I.
+    let mut q = Matrix::zeros(m, n);
+    for j in 0..n {
+        q.set(j, j, 1.0);
+    }
+    for k in (0..n).rev() {
+        let v = &vs[k];
+        if v.iter().all(|&x| x == 0.0) {
+            continue;
+        }
+        for j in 0..n {
+            let mut dot = 0.0f64;
+            for (idx, i) in (k..m).enumerate() {
+                dot += v[idx] as f64 * q.get(i, j) as f64;
+            }
+            let dot = 2.0 * dot as f32;
+            for (idx, i) in (k..m).enumerate() {
+                let val = q.get(i, j) - dot * v[idx];
+                q.set(i, j, val);
+            }
+        }
+    }
+    (q, rr)
+}
+
+/// Re-orthonormalize the columns of `a` in place via thin QR (drift guard).
+/// Sign-fixes columns so the diagonal of R is non-negative, making the result
+/// a continuous deformation of the input basis.
+pub fn reorthonormalize(a: &Matrix) -> Matrix {
+    let (q, r) = thin_qr(a);
+    let mut q = q;
+    let n = q.cols();
+    for j in 0..n {
+        if r.get(j, j) < 0.0 {
+            for i in 0..q.rows() {
+                let v = -q.get(i, j);
+                q.set(i, j, v);
+            }
+        }
+    }
+    q
+}
+
+/// Solve the least squares problem min_X ‖A·X − B‖_F for A m×n (m ≥ n,
+/// full column rank), B m×p. Returns X n×p. Householder QR + back substitution.
+pub fn lstsq(a: &Matrix, b: &Matrix) -> Matrix {
+    let (m, n) = a.shape();
+    let (mb, p) = b.shape();
+    assert_eq!(m, mb, "lstsq row mismatch");
+    let (q, r) = thin_qr(a);
+    // X = R⁻¹ Qᵀ B
+    let qtb = gemm::matmul_tn(&q, b); // n×p
+    let mut x = Matrix::zeros(n, p);
+    for col in 0..p {
+        for i in (0..n).rev() {
+            let mut acc = qtb.get(i, col) as f64;
+            for j in (i + 1)..n {
+                acc -= r.get(i, j) as f64 * x.get(j, col) as f64;
+            }
+            let rii = r.get(i, i);
+            x.set(i, col, if rii.abs() > 1e-30 { (acc / rii as f64) as f32 } else { 0.0 });
+        }
+    }
+    x
+}
+
+/// ‖QᵀQ − I‖_max — orthonormality defect of a basis (test/diagnostic helper).
+pub fn orthonormality_defect(q: &Matrix) -> f32 {
+    let g = gemm::matmul_tn(q, q);
+    let n = g.rows();
+    let mut worst = 0.0f32;
+    for i in 0..n {
+        for j in 0..n {
+            let want = if i == j { 1.0 } else { 0.0 };
+            worst = worst.max((g.get(i, j) - want).abs());
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn qr_reconstructs() {
+        let mut rng = Rng::new(4);
+        let a = Matrix::randn(20, 8, 1.0, &mut rng);
+        let (q, r) = thin_qr(&a);
+        assert_eq!(q.shape(), (20, 8));
+        assert_eq!(r.shape(), (8, 8));
+        let back = gemm::matmul(&q, &r);
+        proptest::close(back.data(), a.data(), 1e-4, 1e-4).unwrap();
+        assert!(orthonormality_defect(&q) < 1e-5, "Q orthonormal");
+    }
+
+    #[test]
+    fn r_is_upper_triangular() {
+        let mut rng = Rng::new(5);
+        let a = Matrix::randn(10, 5, 1.0, &mut rng);
+        let (_, r) = thin_qr(&a);
+        for i in 0..5 {
+            for j in 0..i {
+                assert_eq!(r.get(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn property_qr_roundtrip() {
+        proptest::check(
+            7,
+            40,
+            |rng| {
+                let n = 1 + rng.below(12);
+                let m = n + rng.below(20);
+                Matrix::randn(m, n, 1.0, rng)
+            },
+            |a| {
+                let (q, r) = thin_qr(a);
+                proptest::close(gemm::matmul(&q, &r).data(), a.data(), 2e-4, 2e-3)?;
+                if orthonormality_defect(&q) > 1e-4 {
+                    return Err("Q not orthonormal".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn lstsq_exact_system() {
+        // Overdetermined but consistent: A·x = b exactly.
+        let mut rng = Rng::new(6);
+        let a = Matrix::randn(15, 4, 1.0, &mut rng);
+        let x_true = Matrix::randn(4, 3, 1.0, &mut rng);
+        let b = gemm::matmul(&a, &x_true);
+        let x = lstsq(&a, &b);
+        proptest::close(x.data(), x_true.data(), 1e-3, 1e-3).unwrap();
+    }
+
+    #[test]
+    fn lstsq_residual_orthogonal_to_range() {
+        let mut rng = Rng::new(8);
+        let a = Matrix::randn(20, 5, 1.0, &mut rng);
+        let b = Matrix::randn(20, 2, 1.0, &mut rng);
+        let x = lstsq(&a, &b);
+        let resid = b.sub(&gemm::matmul(&a, &x));
+        // Aᵀ r = 0 at the optimum.
+        let at_r = gemm::matmul_tn(&a, &resid);
+        assert!(at_r.max_abs() < 1e-3, "normal equations hold, got {}", at_r.max_abs());
+    }
+
+    #[test]
+    fn lstsq_orthonormal_a_equals_transpose_product() {
+        // When A has orthonormal columns, lstsq(A, B) == AᵀB. This identity is
+        // the SubTrack++ fast path.
+        let mut rng = Rng::new(9);
+        let raw = Matrix::randn(30, 6, 1.0, &mut rng);
+        let (q, _) = thin_qr(&raw);
+        let b = Matrix::randn(30, 9, 1.0, &mut rng);
+        let x = lstsq(&q, &b);
+        let qt_b = gemm::matmul_tn(&q, &b);
+        proptest::close(x.data(), qt_b.data(), 1e-4, 1e-3).unwrap();
+    }
+
+    #[test]
+    fn reorthonormalize_fixes_drift() {
+        let mut rng = Rng::new(10);
+        let raw = Matrix::randn(25, 5, 1.0, &mut rng);
+        let (q, _) = thin_qr(&raw);
+        // Inject drift.
+        let mut drifted = q.clone();
+        drifted.apply(|x| x * 1.001);
+        drifted.set(0, 0, drifted.get(0, 0) + 0.01);
+        let fixed = reorthonormalize(&drifted);
+        assert!(orthonormality_defect(&fixed) < 1e-5);
+        // Should stay close to the original basis (same subspace, same signs).
+        let diff = fixed.sub(&q).max_abs();
+        assert!(diff < 0.05, "basis moved too much: {diff}");
+    }
+}

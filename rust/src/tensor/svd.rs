@@ -1,0 +1,332 @@
+//! Singular value decomposition: one-sided Jacobi (thin SVD), truncated SVD,
+//! power iteration for top singular triplets, and a randomized range finder.
+//!
+//! These are the subspace engines of the reproduction:
+//! * GaLore/Fira re-initialize their projector with a rank-r truncated SVD of
+//!   the full gradient every k steps — cost O(n·m²) (the paper's Table 2).
+//! * SubTrack++ needs only the **top-1** singular triplet of the m×r tangent
+//!   ∇F — power iteration, O(m·r) per sweep (Appendix D).
+//! * LDAdam's PowerSGD-style update uses one block power-iteration sweep.
+
+use super::gemm;
+use super::matrix::Matrix;
+use super::qr;
+use crate::util::rng::Rng;
+
+/// Thin SVD result: A = U · diag(s) · Vᵀ.
+#[derive(Clone, Debug)]
+pub struct Svd {
+    /// m×k orthonormal columns.
+    pub u: Matrix,
+    /// k singular values, descending.
+    pub s: Vec<f32>,
+    /// n×k orthonormal columns (V, not Vᵀ).
+    pub v: Matrix,
+}
+
+/// Thin SVD via one-sided Jacobi on the (possibly transposed) input.
+///
+/// Works on A m×n. Internally operates on the taller orientation so column
+/// rotations converge; returns factors in the original orientation with
+/// k = min(m, n).
+pub fn thin_svd(a: &Matrix) -> Svd {
+    let (m, n) = a.shape();
+    if m >= n {
+        thin_svd_tall(a)
+    } else {
+        // A = U S Vᵀ  ⇔  Aᵀ = V S Uᵀ
+        let s = thin_svd_tall(&a.t());
+        Svd { u: s.v, s: s.s, v: s.u }
+    }
+}
+
+/// One-sided Jacobi SVD for m ≥ n.
+fn thin_svd_tall(a: &Matrix) -> Svd {
+    let (m, n) = a.shape();
+    debug_assert!(m >= n);
+    let mut w = a.clone(); // columns will be rotated into U·S
+    let mut v = Matrix::eye(n);
+    let max_sweeps = 60;
+    let eps = 1e-10f64;
+    for _ in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let app = w.col_dot(p, p);
+                let aqq = w.col_dot(q, q);
+                let apq = w.col_dot(p, q);
+                if apq.abs() <= eps * (app * aqq).sqrt() || apq == 0.0 {
+                    continue;
+                }
+                off += apq.abs();
+                // Jacobi rotation angle.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = if tau >= 0.0 {
+                    1.0 / (tau + (1.0 + tau * tau).sqrt())
+                } else {
+                    -1.0 / (-tau + (1.0 + tau * tau).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                rotate_cols(&mut w, p, q, c as f32, s as f32);
+                rotate_cols(&mut v, p, q, c as f32, s as f32);
+            }
+        }
+        if off < eps {
+            break;
+        }
+    }
+    // Singular values = column norms; U = normalized columns.
+    let mut sv: Vec<(f32, usize)> =
+        (0..n).map(|j| ((w.col_dot(j, j)).sqrt() as f32, j)).collect();
+    sv.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let mut u = Matrix::zeros(m, n);
+    let mut vv = Matrix::zeros(n, n);
+    let mut s = Vec::with_capacity(n);
+    for (out_j, &(sigma, j)) in sv.iter().enumerate() {
+        s.push(sigma);
+        if sigma > 1e-30 {
+            for i in 0..m {
+                u.set(i, out_j, w.get(i, j) / sigma);
+            }
+        } else {
+            // Null direction: leave zero column (callers treat rank-deficiency
+            // via the singular values).
+            u.set(out_j.min(m - 1), out_j, 1.0);
+        }
+        for i in 0..n {
+            vv.set(i, out_j, v.get(i, j));
+        }
+    }
+    Svd { u, s, v: vv }
+}
+
+#[inline]
+fn rotate_cols(m: &mut Matrix, p: usize, q: usize, c: f32, s: f32) {
+    let cols = m.cols();
+    let data = m.data_mut();
+    let rows = data.len() / cols;
+    let mut idx = 0;
+    for _ in 0..rows {
+        let vp = data[idx + p];
+        let vq = data[idx + q];
+        data[idx + p] = c * vp - s * vq;
+        data[idx + q] = s * vp + c * vq;
+        idx += cols;
+    }
+}
+
+/// Rank-r truncated SVD (GaLore's projector init): returns the leading r
+/// columns of U, the r singular values, and the leading r columns of V.
+pub fn truncated_svd(a: &Matrix, r: usize) -> Svd {
+    let full = thin_svd(a);
+    let k = r.min(full.s.len());
+    Svd { u: full.u.take_cols(k), s: full.s[..k].to_vec(), v: full.v.take_cols(k) }
+}
+
+/// Top-1 singular triplet (σ, u, v) of A via power iteration on AᵀA.
+///
+/// This is SubTrack++'s rank-1 approximation of the tangent vector ∇F
+/// (m×r, r small): O(m·r) per sweep, a few sweeps suffice because the
+/// tangent is strongly rank-1 dominated in practice.
+pub fn power_iteration_top1(a: &Matrix, iters: usize, rng: &mut Rng) -> (f32, Vec<f32>, Vec<f32>) {
+    let (m, n) = a.shape();
+    if m == 0 || n == 0 {
+        return (0.0, vec![0.0; m], vec![0.0; n]);
+    }
+    let mut v: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    normalize(&mut v);
+    let mut u = vec![0.0f32; m];
+    let mut sigma = 0.0f32;
+    for _ in 0..iters.max(1) {
+        // u = A v
+        u = gemm::matvec(a, &v);
+        let un = norm(&u);
+        if un <= 1e-30 {
+            return (0.0, vec![0.0; m], v);
+        }
+        for x in u.iter_mut() {
+            *x /= un;
+        }
+        // v = Aᵀ u
+        v = gemm::matvec_t(a, &u);
+        sigma = norm(&v);
+        if sigma <= 1e-30 {
+            return (0.0, u, vec![0.0; n]);
+        }
+        for x in v.iter_mut() {
+            *x /= sigma;
+        }
+    }
+    (sigma, u, v)
+}
+
+/// Randomized rank-r range finder (Halko-Martinsson-Tropp): Q m×r with
+/// orthonormal columns approximately spanning the range of A. One power
+/// iteration refinement. Used by the APOLLO/GoLore random-projection
+/// baselines and as a fast projector refresh.
+pub fn randomized_range(a: &Matrix, r: usize, rng: &mut Rng) -> Matrix {
+    let (_m, n) = a.shape();
+    let r = r.min(n).max(1);
+    let omega = Matrix::randn(n, r, 1.0, rng);
+    let y = gemm::matmul(a, &omega); // m×r
+    let (q, _) = qr::thin_qr(&y);
+    q
+}
+
+fn norm(x: &[f32]) -> f32 {
+    (x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>()).sqrt() as f32
+}
+
+fn normalize(x: &mut [f32]) {
+    let n = norm(x);
+    if n > 1e-30 {
+        for v in x.iter_mut() {
+            *v /= n;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+
+    fn reconstruct(svd: &Svd) -> Matrix {
+        // U diag(s) Vᵀ
+        let mut us = svd.u.clone();
+        for i in 0..us.rows() {
+            for (j, &sv) in svd.s.iter().enumerate() {
+                us.set(i, j, us.get(i, j) * sv);
+            }
+        }
+        gemm::matmul_nt(&us, &svd.v)
+    }
+
+    #[test]
+    fn svd_reconstructs_tall() {
+        let mut rng = Rng::new(20);
+        let a = Matrix::randn(18, 6, 1.0, &mut rng);
+        let svd = thin_svd(&a);
+        proptest::close(reconstruct(&svd).data(), a.data(), 1e-3, 1e-3).unwrap();
+        assert!(qr::orthonormality_defect(&svd.u) < 1e-4);
+        assert!(qr::orthonormality_defect(&svd.v) < 1e-4);
+        // Descending.
+        for w in svd.s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-6);
+        }
+    }
+
+    #[test]
+    fn svd_reconstructs_wide() {
+        let mut rng = Rng::new(21);
+        let a = Matrix::randn(5, 17, 1.0, &mut rng);
+        let svd = thin_svd(&a);
+        assert_eq!(svd.u.shape(), (5, 5));
+        assert_eq!(svd.v.shape(), (17, 5));
+        proptest::close(reconstruct(&svd).data(), a.data(), 1e-3, 1e-3).unwrap();
+    }
+
+    #[test]
+    fn singular_values_of_diagonal() {
+        let a = Matrix::from_rows(&[&[3.0, 0.0], &[0.0, -4.0], &[0.0, 0.0]]);
+        let svd = thin_svd(&a);
+        assert!((svd.s[0] - 4.0).abs() < 1e-5);
+        assert!((svd.s[1] - 3.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn truncated_svd_best_approximation() {
+        // Rank-2 matrix + small noise: rank-2 truncation must capture it.
+        let mut rng = Rng::new(22);
+        let u = Matrix::randn(20, 2, 1.0, &mut rng);
+        let v = Matrix::randn(8, 2, 1.0, &mut rng);
+        let low = gemm::matmul_nt(&u, &v);
+        let noise = Matrix::randn(20, 8, 0.001, &mut rng);
+        let a = low.add(&noise);
+        let t = truncated_svd(&a, 2);
+        let approx = reconstruct(&t);
+        let err = approx.sub(&a).fro_norm() / a.fro_norm();
+        assert!(err < 0.01, "relative err {err}");
+    }
+
+    #[test]
+    fn property_svd_roundtrip() {
+        proptest::check(
+            23,
+            25,
+            |rng| {
+                let (m, n) = proptest::shape(rng, 24, 24);
+                Matrix::randn(m, n, 1.0, rng)
+            },
+            |a| {
+                let svd = thin_svd(a);
+                let back = reconstruct(&svd);
+                proptest::close(back.data(), a.data(), 5e-3, 5e-3)?;
+                // Frobenius norm preserved by singular values.
+                let s_norm =
+                    (svd.s.iter().map(|&s| (s as f64) * (s as f64)).sum::<f64>()).sqrt() as f32;
+                if (s_norm - a.fro_norm()).abs() > 1e-2 * (1.0 + a.fro_norm()) {
+                    return Err(format!("σ-norm {} vs fro {}", s_norm, a.fro_norm()));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn power_iteration_matches_svd_top1() {
+        let mut rng = Rng::new(24);
+        let a = Matrix::randn(30, 10, 1.0, &mut rng);
+        let svd = thin_svd(&a);
+        let (sigma, u, v) = power_iteration_top1(&a, 50, &mut rng);
+        assert!((sigma - svd.s[0]).abs() / svd.s[0] < 1e-3, "{sigma} vs {}", svd.s[0]);
+        // u matches ±U[:,0]
+        let dot: f32 = u.iter().zip(svd.u.col(0)).map(|(&a, b)| a * b).sum();
+        assert!(dot.abs() > 0.999, "u alignment {dot}");
+        let dotv: f32 = v.iter().zip(svd.v.col(0)).map(|(&a, b)| a * b).sum();
+        assert!(dotv.abs() > 0.999, "v alignment {dotv}");
+    }
+
+    #[test]
+    fn power_iteration_rank1_exact() {
+        // On an exactly rank-1 matrix a single iteration is already exact.
+        let u0 = [1.0f32, 2.0, -1.0];
+        let v0 = [0.5f32, -0.5, 1.0, 2.0];
+        let mut a = Matrix::zeros(3, 4);
+        for i in 0..3 {
+            for j in 0..4 {
+                a.set(i, j, u0[i] * v0[j]);
+            }
+        }
+        let mut rng = Rng::new(25);
+        let (sigma, _, _) = power_iteration_top1(&a, 3, &mut rng);
+        let want = (u0.iter().map(|x| x * x).sum::<f32>()
+            * v0.iter().map(|x| x * x).sum::<f32>())
+        .sqrt();
+        assert!((sigma - want).abs() < 1e-4, "{sigma} vs {want}");
+    }
+
+    #[test]
+    fn power_iteration_zero_matrix() {
+        let a = Matrix::zeros(4, 5);
+        let mut rng = Rng::new(26);
+        let (sigma, _, _) = power_iteration_top1(&a, 10, &mut rng);
+        assert_eq!(sigma, 0.0);
+    }
+
+    #[test]
+    fn randomized_range_captures_low_rank() {
+        let mut rng = Rng::new(27);
+        let u = Matrix::randn(40, 3, 1.0, &mut rng);
+        let v = Matrix::randn(12, 3, 1.0, &mut rng);
+        let a = gemm::matmul_nt(&u, &v);
+        let q = randomized_range(&a, 3, &mut rng);
+        assert!(qr::orthonormality_defect(&q) < 1e-4);
+        // Projection onto range(Q) should capture nearly all of A.
+        let qta = gemm::matmul_tn(&q, &a);
+        let proj = gemm::matmul(&q, &qta);
+        let err = proj.sub(&a).fro_norm() / a.fro_norm();
+        assert!(err < 1e-3, "range capture err {err}");
+    }
+}

@@ -1,0 +1,130 @@
+//! Checkpointing: parameters as a little-endian f32 binary blob plus a JSON
+//! manifest (shapes, names, step, config echo) for integrity checking.
+
+use crate::optim::{Param, ParamKind};
+use crate::util::json::Json;
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// Save parameters to `<path>.bin` + `<path>.json`.
+pub fn save(path: impl AsRef<Path>, params: &[Param], step: usize) -> std::io::Result<()> {
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut bin = std::fs::File::create(path.with_extension("bin"))?;
+    let mut manifest_params = Vec::new();
+    for p in params {
+        for &v in p.value.data() {
+            bin.write_all(&v.to_le_bytes())?;
+        }
+        manifest_params.push(Json::obj(vec![
+            ("name", Json::Str(p.name.clone())),
+            ("rows", Json::Num(p.value.rows() as f64)),
+            ("cols", Json::Num(p.value.cols() as f64)),
+            (
+                "kind",
+                Json::Str(
+                    match p.kind {
+                        ParamKind::Matrix2D => "matrix",
+                        ParamKind::Vector => "vector",
+                    }
+                    .into(),
+                ),
+            ),
+        ]));
+    }
+    let manifest = Json::obj(vec![
+        ("step", Json::Num(step as f64)),
+        ("params", Json::Arr(manifest_params)),
+    ]);
+    std::fs::write(path.with_extension("json"), manifest.to_string())
+}
+
+/// Load a checkpoint into an existing parameter vector (shapes must match).
+/// Returns the saved step.
+pub fn load(path: impl AsRef<Path>, params: &mut [Param]) -> std::io::Result<usize> {
+    let path = path.as_ref();
+    let manifest_text = std::fs::read_to_string(path.with_extension("json"))?;
+    let manifest = Json::parse(&manifest_text)
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))?;
+    let step = manifest.get("step").and_then(|s| s.as_f64()).unwrap_or(0.0) as usize;
+    let listed = match manifest.get("params") {
+        Some(Json::Arr(xs)) => xs,
+        _ => {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "manifest missing params",
+            ))
+        }
+    };
+    if listed.len() != params.len() {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("param count mismatch: {} vs {}", listed.len(), params.len()),
+        ));
+    }
+    for (entry, p) in listed.iter().zip(params.iter()) {
+        let rows = entry.get("rows").and_then(|v| v.as_f64()).unwrap_or(-1.0) as usize;
+        let cols = entry.get("cols").and_then(|v| v.as_f64()).unwrap_or(-1.0) as usize;
+        if (rows, cols) != p.value.shape() {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("shape mismatch for {}", p.name),
+            ));
+        }
+    }
+    let mut bin = std::fs::File::open(path.with_extension("bin"))?;
+    let mut buf = Vec::new();
+    bin.read_to_end(&mut buf)?;
+    let want: usize = params.iter().map(|p| p.numel() * 4).sum();
+    if buf.len() != want {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("blob size {} != expected {}", buf.len(), want),
+        ));
+    }
+    let mut off = 0usize;
+    for p in params.iter_mut() {
+        for v in p.value.data_mut() {
+            *v = f32::from_le_bytes(buf[off..off + 4].try_into().unwrap());
+            off += 4;
+        }
+    }
+    Ok(step)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Llama, ModelConfig};
+
+    #[test]
+    fn roundtrip() {
+        let model = Llama::new(ModelConfig::preset("nano"), 5);
+        let dir = std::env::temp_dir().join("subtrack_ckpt_test");
+        let path = dir.join("ckpt");
+        save(&path, &model.params, 123).unwrap();
+        let mut fresh = Llama::new(ModelConfig::preset("nano"), 999);
+        // Different seed ⇒ different params before load.
+        assert_ne!(fresh.params[0].value.data(), model.params[0].value.data());
+        let step = load(&path, &mut fresh.params).unwrap();
+        assert_eq!(step, 123);
+        for (a, b) in fresh.params.iter().zip(&model.params) {
+            assert_eq!(a.value.data(), b.value.data(), "{}", a.name);
+        }
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let model = Llama::new(ModelConfig::preset("nano"), 6);
+        let dir = std::env::temp_dir().join("subtrack_ckpt_test2");
+        let path = dir.join("ckpt");
+        save(&path, &model.params, 1).unwrap();
+        let mut other = Llama::new(ModelConfig::preset("tiny"), 6);
+        let err = load(&path, &mut other.params);
+        assert!(err.is_err());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -1,0 +1,186 @@
+//! Training metrics: per-step loss curve with wall-clock timestamps, memory
+//! accounting (analytic optimizer-state bytes + measured RSS), and CSV/JSON
+//! export for the figure/table harnesses.
+
+use crate::util::csv::CsvWriter;
+use crate::util::json::Json;
+use std::time::Instant;
+
+/// One recorded step.
+#[derive(Clone, Copy, Debug)]
+pub struct StepRecord {
+    pub step: usize,
+    pub loss: f32,
+    pub lr: f32,
+    /// Seconds since training started.
+    pub elapsed: f64,
+}
+
+/// Streaming metrics log.
+pub struct MetricsLog {
+    start: Instant,
+    pub steps: Vec<StepRecord>,
+    pub evals: Vec<(usize, f32)>,
+    pub peak_state_bytes: usize,
+    pub peak_rss_bytes: usize,
+}
+
+impl MetricsLog {
+    pub fn new() -> MetricsLog {
+        MetricsLog {
+            start: Instant::now(),
+            steps: Vec::new(),
+            evals: Vec::new(),
+            peak_state_bytes: 0,
+            peak_rss_bytes: 0,
+        }
+    }
+
+    pub fn elapsed(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn record_step(&mut self, step: usize, loss: f32, lr: f32, state_bytes: usize) {
+        self.steps.push(StepRecord { step, loss, lr, elapsed: self.elapsed() });
+        self.peak_state_bytes = self.peak_state_bytes.max(state_bytes);
+        if step % 32 == 0 {
+            self.peak_rss_bytes = self.peak_rss_bytes.max(read_rss_bytes());
+        }
+    }
+
+    pub fn record_eval(&mut self, step: usize, loss: f32) {
+        self.evals.push((step, loss));
+    }
+
+    /// Smoothed training loss over the last `window` steps.
+    pub fn recent_loss(&self, window: usize) -> f32 {
+        let n = self.steps.len();
+        if n == 0 {
+            return f32::NAN;
+        }
+        let lo = n.saturating_sub(window);
+        let slice = &self.steps[lo..];
+        slice.iter().map(|s| s.loss as f64).sum::<f64>() as f32 / slice.len() as f32
+    }
+}
+
+impl Default for MetricsLog {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Final report of a training run — the unit every table/figure harness
+/// consumes.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub method: String,
+    pub model: String,
+    pub steps: Vec<StepRecord>,
+    pub evals: Vec<(usize, f32)>,
+    pub final_eval_loss: f32,
+    pub wall_time_secs: f64,
+    pub peak_state_bytes: usize,
+    pub peak_rss_bytes: usize,
+    pub param_count: usize,
+    pub optimizer_state_params: usize,
+    pub subspace_updates: usize,
+}
+
+impl TrainReport {
+    /// Loss-vs-step and loss-vs-walltime series as CSV (Figure 4).
+    pub fn curve_csv(&self) -> CsvWriter {
+        let mut w = CsvWriter::new(&["method", "step", "loss", "lr", "elapsed_s"]);
+        for s in &self.steps {
+            w.row(&[
+                self.method.clone(),
+                s.step.to_string(),
+                format!("{:.6}", s.loss),
+                format!("{:.6e}", s.lr),
+                format!("{:.4}", s.elapsed),
+            ]);
+        }
+        w
+    }
+
+    /// Summary as JSON (EXPERIMENTS.md provenance).
+    pub fn summary_json(&self) -> Json {
+        Json::obj(vec![
+            ("method", Json::Str(self.method.clone())),
+            ("model", Json::Str(self.model.clone())),
+            ("final_eval_loss", Json::Num(self.final_eval_loss as f64)),
+            ("wall_time_secs", Json::Num(self.wall_time_secs)),
+            ("peak_state_bytes", Json::Num(self.peak_state_bytes as f64)),
+            ("peak_rss_bytes", Json::Num(self.peak_rss_bytes as f64)),
+            ("param_count", Json::Num(self.param_count as f64)),
+            ("optimizer_state_params", Json::Num(self.optimizer_state_params as f64)),
+            ("subspace_updates", Json::Num(self.subspace_updates as f64)),
+            ("n_steps", Json::Num(self.steps.len() as f64)),
+        ])
+    }
+}
+
+/// Current process resident-set size in bytes (Linux /proc; 0 elsewhere).
+pub fn read_rss_bytes() -> usize {
+    if let Ok(text) = std::fs::read_to_string("/proc/self/status") {
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("VmRSS:") {
+                let kb: usize = rest
+                    .trim()
+                    .trim_end_matches("kB")
+                    .trim()
+                    .parse()
+                    .unwrap_or(0);
+                return kb * 1024;
+            }
+        }
+    }
+    0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_smooths() {
+        let mut m = MetricsLog::new();
+        for i in 0..10 {
+            m.record_step(i, 10.0 - i as f32, 1e-3, 100 * i);
+        }
+        assert_eq!(m.steps.len(), 10);
+        assert_eq!(m.peak_state_bytes, 900);
+        let recent = m.recent_loss(2);
+        assert!((recent - 1.5).abs() < 1e-5, "recent {recent}");
+    }
+
+    #[test]
+    fn rss_is_positive_on_linux() {
+        let rss = read_rss_bytes();
+        assert!(rss > 1024 * 1024, "rss {rss}");
+    }
+
+    #[test]
+    fn report_csv_has_all_steps() {
+        let report = TrainReport {
+            method: "test".into(),
+            model: "nano".into(),
+            steps: vec![
+                StepRecord { step: 0, loss: 3.0, lr: 1e-3, elapsed: 0.1 },
+                StepRecord { step: 1, loss: 2.5, lr: 1e-3, elapsed: 0.2 },
+            ],
+            evals: vec![],
+            final_eval_loss: 2.4,
+            wall_time_secs: 0.3,
+            peak_state_bytes: 10,
+            peak_rss_bytes: 20,
+            param_count: 5,
+            optimizer_state_params: 10,
+            subspace_updates: 1,
+        };
+        let csv = report.curve_csv().to_string();
+        assert_eq!(csv.lines().count(), 3);
+        let j = report.summary_json();
+        assert_eq!(j.get("final_eval_loss").unwrap().as_f64().unwrap() as f32, 2.4);
+    }
+}

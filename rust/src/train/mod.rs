@@ -1,0 +1,13 @@
+//! The training coordinator: configuration, LR schedules, the trainer loop
+//! (with native and PJRT engines), metrics, checkpointing and the
+//! data-parallel worker simulation.
+
+pub mod checkpoint;
+pub mod metrics;
+pub mod parallel;
+pub mod schedule;
+pub mod trainer;
+
+pub use metrics::{MetricsLog, TrainReport};
+pub use schedule::LrSchedule;
+pub use trainer::{Trainer, TrainConfig};

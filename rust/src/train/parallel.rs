@@ -1,0 +1,114 @@
+//! Data-parallel worker simulation.
+//!
+//! Each worker computes gradients on its shard of the batch (scoped threads
+//! sharing the frozen parameters), then the leader all-reduces (averages)
+//! the shard gradients — the standard DP recipe. On this 1-core sandbox the
+//! point is *correctness of the distributed code path* (gradient averaging
+//! must reproduce the single-worker trajectory bit-for-bit up to fp
+//! reassociation), not speedup; the same code scales across cores elsewhere.
+
+use crate::model::{Batch, Llama};
+use crate::tensor::Matrix;
+
+/// Split a batch into `n` contiguous shards (last shard may be smaller;
+/// empty shards are dropped).
+pub fn shard_batch(batch: &Batch, n: usize) -> Vec<Batch> {
+    let per = (batch.b + n - 1) / n.max(1);
+    let t = batch.t;
+    let mut out = Vec::new();
+    let mut start = 0usize;
+    while start < batch.b {
+        let end = (start + per).min(batch.b);
+        out.push(Batch {
+            inputs: batch.inputs[start * t..end * t].to_vec(),
+            targets: batch.targets[start * t..end * t].to_vec(),
+            b: end - start,
+            t,
+        });
+        start = end;
+    }
+    out
+}
+
+/// Compute loss + gradients with `workers` data-parallel workers and average.
+/// The average is weighted by shard token counts so it equals the
+/// full-batch gradient exactly.
+pub fn data_parallel_loss_grad(
+    model: &Llama,
+    batch: &Batch,
+    workers: usize,
+) -> (f32, Vec<Matrix>) {
+    let shards = shard_batch(batch, workers);
+    let results: Vec<(f32, Vec<Matrix>, usize)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = shards
+            .iter()
+            .map(|shard| {
+                scope.spawn(move || {
+                    let (loss, grads) = model.loss_and_grad(shard);
+                    (loss, grads, shard.tokens())
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    });
+
+    let total_tokens: usize = results.iter().map(|r| r.2).sum();
+    let mut loss = 0.0f64;
+    let mut grads: Vec<Matrix> = model.zero_grads();
+    for (shard_loss, shard_grads, tokens) in results {
+        let w = tokens as f64 / total_tokens as f64;
+        loss += shard_loss as f64 * w;
+        for (acc, g) in grads.iter_mut().zip(&shard_grads) {
+            acc.axpy(w as f32, g);
+        }
+    }
+    (loss as f32, grads)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+    use crate::util::rng::Rng;
+
+    fn setup() -> (Llama, Batch) {
+        let cfg = ModelConfig::preset("nano");
+        let model = Llama::new(cfg.clone(), 3);
+        let mut rng = Rng::new(4);
+        let (b, t) = (4, cfg.seq_len);
+        let inputs: Vec<u32> = (0..b * t).map(|_| rng.below(cfg.vocab) as u32).collect();
+        let targets: Vec<u32> = (0..b * t).map(|_| rng.below(cfg.vocab) as u32).collect();
+        (model, Batch { inputs, targets, b, t })
+    }
+
+    #[test]
+    fn sharding_covers_batch() {
+        let (_, batch) = setup();
+        for n in 1..=5 {
+            let shards = shard_batch(&batch, n);
+            let total: usize = shards.iter().map(|s| s.b).sum();
+            assert_eq!(total, batch.b, "workers={n}");
+            let cat: Vec<u32> = shards.iter().flat_map(|s| s.inputs.clone()).collect();
+            assert_eq!(cat, batch.inputs);
+        }
+    }
+
+    #[test]
+    fn dp_gradients_match_single_worker() {
+        let (model, batch) = setup();
+        let (loss1, grads1) = model.loss_and_grad(&batch);
+        let (loss2, grads2) = data_parallel_loss_grad(&model, &batch, 2);
+        assert!((loss1 - loss2).abs() < 1e-5, "{loss1} vs {loss2}");
+        for (a, b) in grads1.iter().zip(&grads2) {
+            crate::util::proptest::close(a.data(), b.data(), 1e-5, 1e-4).unwrap();
+        }
+    }
+
+    #[test]
+    fn dp_with_more_workers_than_batch() {
+        let (model, batch) = setup();
+        let (loss, grads) = data_parallel_loss_grad(&model, &batch, 16);
+        assert!(loss.is_finite());
+        assert_eq!(grads.len(), model.params.len());
+    }
+}

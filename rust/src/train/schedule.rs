@@ -1,0 +1,80 @@
+//! Learning-rate schedules. The paper's pre-training runs use linear warmup
+//! (1000 steps at 10k total — scaled proportionally here) followed by cosine
+//! decay, the GaLore reference setup.
+
+/// Warmup + cosine decay schedule.
+#[derive(Clone, Copy, Debug)]
+pub struct LrSchedule {
+    pub base_lr: f32,
+    pub warmup_steps: usize,
+    pub total_steps: usize,
+    /// Floor as a fraction of base_lr (cosine decays to this).
+    pub min_ratio: f32,
+}
+
+impl LrSchedule {
+    pub fn new(base_lr: f32, warmup_steps: usize, total_steps: usize) -> LrSchedule {
+        LrSchedule { base_lr, warmup_steps, total_steps, min_ratio: 0.1 }
+    }
+
+    /// Constant schedule (fine-tuning runs).
+    pub fn constant(lr: f32) -> LrSchedule {
+        LrSchedule { base_lr: lr, warmup_steps: 0, total_steps: usize::MAX, min_ratio: 1.0 }
+    }
+
+    /// Learning rate at `step` (0-indexed).
+    pub fn at(&self, step: usize) -> f32 {
+        if self.warmup_steps > 0 && step < self.warmup_steps {
+            return self.base_lr * (step + 1) as f32 / self.warmup_steps as f32;
+        }
+        if self.total_steps == usize::MAX {
+            return self.base_lr;
+        }
+        let decay_steps = self.total_steps.saturating_sub(self.warmup_steps).max(1);
+        let progress =
+            ((step - self.warmup_steps) as f32 / decay_steps as f32).clamp(0.0, 1.0);
+        let cos = 0.5 * (1.0 + (std::f32::consts::PI * progress).cos());
+        self.base_lr * (self.min_ratio + (1.0 - self.min_ratio) * cos)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let s = LrSchedule::new(1.0, 10, 100);
+        assert!((s.at(0) - 0.1).abs() < 1e-6);
+        assert!((s.at(4) - 0.5).abs() < 1e-6);
+        assert!((s.at(9) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cosine_decays_to_floor() {
+        let s = LrSchedule::new(1.0, 10, 100);
+        assert!(s.at(10) > 0.99);
+        let end = s.at(99);
+        assert!((end - 0.1).abs() < 0.02, "end lr {end}");
+        // Monotone decreasing after warmup.
+        let mut prev = s.at(10);
+        for step in 11..100 {
+            let cur = s.at(step);
+            assert!(cur <= prev + 1e-6);
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn constant_is_constant() {
+        let s = LrSchedule::constant(0.01);
+        assert_eq!(s.at(0), 0.01);
+        assert_eq!(s.at(1_000_000), 0.01);
+    }
+
+    #[test]
+    fn beyond_total_clamps_to_floor() {
+        let s = LrSchedule::new(1.0, 0, 50);
+        assert!((s.at(500) - 0.1).abs() < 1e-6);
+    }
+}

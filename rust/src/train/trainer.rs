@@ -1,0 +1,332 @@
+//! The trainer: owns the model, the optimizer, the data stream and the
+//! metrics; drives pre-training and fine-tuning runs for every experiment
+//! harness.
+//!
+//! Engine selection: the **native** engine computes loss/gradients with the
+//! pure-Rust backward pass in [`crate::model::llama`]; the **pjrt** engine
+//! executes the JAX-lowered `train_step` artifact (which embeds the Pallas
+//! kernels) through [`crate::runtime`]. Both produce gradients for the same
+//! Rust-side optimizer family — the paper's contribution always runs in
+//! Layer 3.
+
+use crate::data::{Corpus, CorpusKind};
+use crate::model::{Batch, Llama, ModelConfig};
+use crate::optim::{self, HyperParams, Optimizer};
+use crate::tensor::ops;
+use crate::train::metrics::{MetricsLog, TrainReport};
+use crate::train::parallel;
+use crate::train::schedule::LrSchedule;
+use crate::util::config::Config;
+
+/// Which gradient engine backs the trainer.
+pub enum EngineSel {
+    Native,
+    Pjrt(crate::runtime::PjrtEngine),
+}
+
+/// Everything a training run needs. Built programmatically or from a
+/// `configs/*.toml` file (+ CLI overrides).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub model: ModelConfig,
+    pub method: String,
+    pub hp: HyperParams,
+    pub steps: usize,
+    pub batch_size: usize,
+    pub lr: f32,
+    pub warmup_steps: usize,
+    pub grad_clip: f32,
+    pub seed: u64,
+    /// Simulated data-parallel worker count (1 = off).
+    pub workers: usize,
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    pub corpus_kind: CorpusKind,
+    pub corpus_len: usize,
+    /// Log every N steps (loss curve resolution).
+    pub log_every: usize,
+}
+
+impl TrainConfig {
+    /// Reasonable defaults for a given model preset + method, mirroring the
+    /// paper's Table 10 hyperparameters scaled to this testbed.
+    pub fn preset(model: &str, method: &str, steps: usize) -> TrainConfig {
+        let model = ModelConfig::preset(model);
+        let hp = HyperParams {
+            rank: model.rank,
+            // Match the paper's wall-time protocol by default: interval
+            // sized so a full run has ~10 subspace updates (Table 9).
+            interval: (steps / 10).max(1),
+            scale: 0.25,
+            eta: 10.0,
+            zeta: 1.01,
+            ..HyperParams::default()
+        };
+        TrainConfig {
+            model,
+            method: method.to_string(),
+            hp,
+            steps,
+            batch_size: 8,
+            lr: 1e-3,
+            warmup_steps: steps / 10,
+            grad_clip: 1.0,
+            seed: 42,
+            workers: 1,
+            eval_every: (steps / 10).max(1),
+            eval_batches: 4,
+            corpus_kind: CorpusKind::Markov,
+            corpus_len: 200_000,
+            log_every: 1,
+        }
+    }
+
+    /// Load from a parsed TOML config (see `configs/`).
+    pub fn from_config(cfg: &Config) -> TrainConfig {
+        let model_name = cfg.str("model.preset", "small");
+        let steps = cfg.int("train.steps", 400) as usize;
+        let mut tc = TrainConfig::preset(&model_name, &cfg.str("optim.method", "subtrack++"), steps);
+        tc.model.hidden = cfg.int("model.hidden", tc.model.hidden as i64) as usize;
+        tc.model.layers = cfg.int("model.layers", tc.model.layers as i64) as usize;
+        tc.model.vocab = cfg.int("model.vocab", tc.model.vocab as i64) as usize;
+        tc.model.seq_len = cfg.int("model.seq_len", tc.model.seq_len as i64) as usize;
+        tc.batch_size = cfg.int("train.batch_size", tc.batch_size as i64) as usize;
+        tc.lr = cfg.float("train.lr", tc.lr as f64) as f32;
+        tc.warmup_steps = cfg.int("train.warmup_steps", tc.warmup_steps as i64) as usize;
+        tc.grad_clip = cfg.float("train.grad_clip", tc.grad_clip as f64) as f32;
+        tc.seed = cfg.int("train.seed", tc.seed as i64) as u64;
+        tc.workers = cfg.int("train.workers", 1) as usize;
+        tc.hp.rank = cfg.int("optim.rank", tc.hp.rank as i64) as usize;
+        tc.hp.interval = cfg.int("optim.interval", tc.hp.interval as i64) as usize;
+        tc.hp.scale = cfg.float("optim.scale", tc.hp.scale as f64) as f32;
+        tc.hp.eta = cfg.float("optim.eta", tc.hp.eta as f64) as f32;
+        tc.hp.zeta = cfg.float("optim.zeta", tc.hp.zeta as f64) as f32;
+        tc.corpus_len = cfg.int("data.corpus_len", tc.corpus_len as i64) as usize;
+        tc.corpus_kind = match cfg.str("data.corpus", "markov").as_str() {
+            "hierarchical" => CorpusKind::Hierarchical,
+            _ => CorpusKind::Markov,
+        };
+        tc
+    }
+}
+
+/// The trainer.
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    pub model: Llama,
+    pub opt: Box<dyn Optimizer>,
+    pub corpus: Corpus,
+    pub engine: EngineSel,
+    pub metrics: MetricsLog,
+}
+
+impl Trainer {
+    pub fn new(cfg: TrainConfig) -> Trainer {
+        let model = Llama::new(cfg.model.clone(), cfg.seed);
+        let mut hp = cfg.hp;
+        hp.seed = cfg.seed;
+        let opt = optim::by_name(&cfg.method, hp);
+        let corpus =
+            Corpus::generate(cfg.corpus_kind, cfg.model.vocab, cfg.corpus_len, cfg.seed ^ 0xd474);
+        Trainer {
+            cfg,
+            model,
+            opt,
+            corpus,
+            engine: EngineSel::Native,
+            metrics: MetricsLog::new(),
+        }
+    }
+
+    /// Switch to the PJRT engine (artifacts must exist — see `make artifacts`).
+    pub fn with_pjrt(mut self, engine: crate::runtime::PjrtEngine) -> Trainer {
+        self.engine = EngineSel::Pjrt(engine);
+        self
+    }
+
+    fn compute_loss_grad(&mut self, batch: &Batch) -> anyhow::Result<(f32, Vec<crate::tensor::Matrix>)> {
+        match &mut self.engine {
+            EngineSel::Native => {
+                if self.cfg.workers > 1 {
+                    Ok(parallel::data_parallel_loss_grad(&self.model, batch, self.cfg.workers))
+                } else {
+                    Ok(self.model.loss_and_grad(batch))
+                }
+            }
+            EngineSel::Pjrt(engine) => engine.loss_and_grad(&self.model.params, batch),
+        }
+    }
+
+    /// Mean eval loss over deterministic held-out windows.
+    pub fn eval_loss(&mut self) -> anyhow::Result<f32> {
+        let b = self.cfg.batch_size.min(8);
+        let t = self.cfg.model.seq_len;
+        let mut total = 0.0f64;
+        for i in 0..self.cfg.eval_batches {
+            let batch = shifted_eval_batch(&self.corpus, b, t, i);
+            let loss = match &mut self.engine {
+                EngineSel::Native => self.model.loss(&batch),
+                EngineSel::Pjrt(engine) => engine.loss(&self.model.params, &batch)?,
+            };
+            total += loss as f64;
+        }
+        Ok((total / self.cfg.eval_batches as f64) as f32)
+    }
+
+    /// Run the full training loop; returns the report consumed by the
+    /// table/figure harnesses.
+    pub fn run(&mut self) -> anyhow::Result<TrainReport> {
+        let schedule = LrSchedule::new(self.cfg.lr, self.cfg.warmup_steps, self.cfg.steps);
+        let (b, t) = (self.cfg.batch_size, self.cfg.model.seq_len);
+        for step in 0..self.cfg.steps {
+            let batch = self.corpus.sample_batch(b, t);
+            let (loss, mut grads) = self.compute_loss_grad(&batch)?;
+            if self.cfg.grad_clip > 0.0 {
+                let mut refs: Vec<&mut crate::tensor::Matrix> = grads.iter_mut().collect();
+                ops::clip_global_norm(&mut refs, self.cfg.grad_clip);
+            }
+            let lr = schedule.at(step);
+            self.opt.step(lr, &mut self.model.params, &grads);
+            if step % self.cfg.log_every == 0 {
+                self.metrics.record_step(step, loss, lr, self.opt.state_bytes());
+            }
+            if self.cfg.eval_every > 0 && (step + 1) % self.cfg.eval_every == 0 {
+                let ev = self.eval_loss()?;
+                self.metrics.record_eval(step + 1, ev);
+            }
+        }
+        let final_eval = self.eval_loss()?;
+        Ok(TrainReport {
+            method: self.opt.name(),
+            model: self.cfg.model.name.clone(),
+            steps: self.metrics.steps.clone(),
+            evals: self.metrics.evals.clone(),
+            final_eval_loss: final_eval,
+            wall_time_secs: self.metrics.elapsed(),
+            peak_state_bytes: self.metrics.peak_state_bytes,
+            peak_rss_bytes: self.metrics.peak_rss_bytes.max(super::metrics::read_rss_bytes()),
+            param_count: self.model.param_count(),
+            optimizer_state_params: self.opt.state_params(),
+            subspace_updates: self.opt.subspace_updates(),
+        })
+    }
+}
+
+/// Deterministic eval batches offset by index (so eval_batches > 1 sees
+/// different windows).
+fn shifted_eval_batch(corpus: &Corpus, b: usize, t: usize, index: usize) -> Batch {
+    let base = corpus.eval_batch(b * (index + 1), t);
+    // Keep only the last b sequences of the widened batch.
+    let keep = b * t;
+    let start = base.inputs.len() - keep;
+    Batch {
+        inputs: base.inputs[start..].to_vec(),
+        targets: base.targets[start..].to_vec(),
+        b,
+        t,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg(method: &str) -> TrainConfig {
+        let mut cfg = TrainConfig::preset("nano", method, 30);
+        cfg.batch_size = 4;
+        cfg.corpus_len = 5_000;
+        cfg.lr = 5e-3;
+        cfg.eval_every = 0;
+        cfg.eval_batches = 2;
+        cfg.hp.rank = 4;
+        cfg.hp.interval = 10;
+        cfg
+    }
+
+    #[test]
+    fn native_training_reduces_loss() {
+        let mut tr = Trainer::new(quick_cfg("subtrack++"));
+        let before = tr.eval_loss().unwrap();
+        let report = tr.run().unwrap();
+        assert!(
+            report.final_eval_loss < before,
+            "eval loss should drop: {before} -> {}",
+            report.final_eval_loss
+        );
+        assert_eq!(report.steps.len(), 30);
+        assert!(report.wall_time_secs > 0.0);
+        assert!(report.peak_state_bytes > 0);
+    }
+
+    #[test]
+    fn all_methods_run_a_few_steps() {
+        for method in crate::optim::PRETRAIN_METHODS {
+            let mut cfg = quick_cfg(method);
+            cfg.steps = 5;
+            let mut tr = Trainer::new(cfg);
+            let report = tr.run().unwrap();
+            assert!(report.final_eval_loss.is_finite(), "{method} produced NaN");
+        }
+    }
+
+    #[test]
+    fn config_file_roundtrip() {
+        let text = r#"
+[model]
+preset = "nano"
+seq_len = 8
+
+[optim]
+method = "galore"
+rank = 2
+interval = 5
+
+[train]
+steps = 4
+batch_size = 2
+lr = 0.001
+seed = 7
+"#;
+        let cfg = Config::parse(text).unwrap();
+        let tc = TrainConfig::from_config(&cfg);
+        assert_eq!(tc.model.name, "nano");
+        assert_eq!(tc.method, "galore");
+        assert_eq!(tc.hp.rank, 2);
+        assert_eq!(tc.steps, 4);
+        assert_eq!(tc.seed, 7);
+        let mut tr = Trainer::new(tc);
+        let report = tr.run().unwrap();
+        assert_eq!(report.method, "GaLore");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let r1 = Trainer::new(quick_cfg("subtrack++")).run().unwrap();
+        let r2 = Trainer::new(quick_cfg("subtrack++")).run().unwrap();
+        assert_eq!(r1.final_eval_loss, r2.final_eval_loss);
+        let losses1: Vec<f32> = r1.steps.iter().map(|s| s.loss).collect();
+        let losses2: Vec<f32> = r2.steps.iter().map(|s| s.loss).collect();
+        assert_eq!(losses1, losses2);
+    }
+
+    #[test]
+    fn data_parallel_matches_single_worker() {
+        let mut cfg = quick_cfg("full-rank");
+        cfg.steps = 8;
+        cfg.batch_size = 4;
+        let single = Trainer::new(cfg.clone()).run().unwrap();
+        let mut cfg2 = cfg;
+        cfg2.workers = 2;
+        let multi = Trainer::new(cfg2).run().unwrap();
+        // Same seed, same batches; gradient averaging over shards must give
+        // (numerically) the same trajectory.
+        let rel = (single.final_eval_loss - multi.final_eval_loss).abs()
+            / single.final_eval_loss.max(1e-6);
+        assert!(
+            rel < 1e-3,
+            "DP divergence: {} vs {}",
+            single.final_eval_loss,
+            multi.final_eval_loss
+        );
+    }
+}

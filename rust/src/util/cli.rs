@@ -1,0 +1,238 @@
+//! Command-line argument parsing (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional arguments,
+//! with typed accessors, defaults and a generated `--help` text. Used by the
+//! `subtrack` launcher binary, the examples and every bench harness.
+
+use std::collections::BTreeMap;
+
+/// A declared option (for help text + validation).
+#[derive(Clone, Debug)]
+struct Opt {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative CLI parser.
+pub struct Cli {
+    program: String,
+    about: String,
+    opts: Vec<Opt>,
+    values: BTreeMap<String, String>,
+    positionals: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(program: &str, about: &str) -> Self {
+        Cli {
+            program: program.to_string(),
+            about: about.to_string(),
+            opts: Vec::new(),
+            values: BTreeMap::new(),
+            positionals: Vec::new(),
+        }
+    }
+
+    /// Declare a `--key value` option with an optional default.
+    pub fn opt(mut self, name: &str, default: Option<&str>, help: &str) -> Self {
+        self.opts.push(Opt {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: default.map(|s| s.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare a boolean `--flag`.
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(Opt {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    /// Parse from `std::env::args()` (skipping argv[0]). Prints help and exits
+    /// on `--help`.
+    pub fn parse_env(self) -> Parsed {
+        let args: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse(&args) {
+            Ok(p) => p,
+            Err(HelpOrError::Help(h)) => {
+                println!("{h}");
+                std::process::exit(0);
+            }
+            Err(HelpOrError::Error(e)) => {
+                eprintln!("error: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    /// Parse from an explicit argument list.
+    pub fn parse(mut self, args: &[String]) -> Result<Parsed, HelpOrError> {
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                return Err(HelpOrError::Help(self.help_text()));
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let decl = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .cloned()
+                    .ok_or_else(|| HelpOrError::Error(format!("unknown option --{key}")))?;
+                let val = if decl.is_flag {
+                    inline_val.unwrap_or_else(|| "true".to_string())
+                } else if let Some(v) = inline_val {
+                    v
+                } else {
+                    i += 1;
+                    args.get(i)
+                        .cloned()
+                        .ok_or_else(|| HelpOrError::Error(format!("--{key} needs a value")))?
+                };
+                self.values.insert(key, val);
+            } else {
+                self.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        // Apply defaults.
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                self.values.entry(o.name.clone()).or_insert_with(|| d.clone());
+            }
+        }
+        Ok(Parsed { values: self.values, positionals: self.positionals })
+    }
+
+    fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for o in &self.opts {
+            let kind = if o.is_flag { "" } else { " <value>" };
+            let def = o
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  --{}{kind}\n      {}{def}\n", o.name, o.help));
+        }
+        s
+    }
+}
+
+/// Help-requested vs. parse-error outcomes.
+pub enum HelpOrError {
+    Help(String),
+    Error(String),
+}
+
+/// The parsed arguments.
+#[derive(Debug, Clone)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    pub positionals: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, key: &str) -> String {
+        self.values
+            .get(key)
+            .unwrap_or_else(|| panic!("missing required option --{key}"))
+            .clone()
+    }
+
+    pub fn usize(&self, key: &str) -> usize {
+        self.str(key).parse().unwrap_or_else(|_| panic!("--{key} must be an integer"))
+    }
+
+    pub fn u64(&self, key: &str) -> u64 {
+        self.str(key).parse().unwrap_or_else(|_| panic!("--{key} must be an integer"))
+    }
+
+    pub fn f32(&self, key: &str) -> f32 {
+        self.str(key).parse().unwrap_or_else(|_| panic!("--{key} must be a number"))
+    }
+
+    pub fn f64(&self, key: &str) -> f64 {
+        self.str(key).parse().unwrap_or_else(|_| panic!("--{key} must be a number"))
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        self.values.get(key).map(|v| v == "true" || v == "1").unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_kinds() {
+        let p = Cli::new("t", "test")
+            .opt("steps", Some("100"), "number of steps")
+            .opt("lr", None, "learning rate")
+            .flag("verbose", "extra logging")
+            .parse(&args(&["--steps", "250", "--lr=0.01", "--verbose", "pos1"]))
+            .ok()
+            .unwrap();
+        assert_eq!(p.usize("steps"), 250);
+        assert_eq!(p.f32("lr"), 0.01);
+        assert!(p.bool("verbose"));
+        assert_eq!(p.positionals, vec!["pos1"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = Cli::new("t", "test")
+            .opt("steps", Some("100"), "steps")
+            .parse(&args(&[]))
+            .ok()
+            .unwrap();
+        assert_eq!(p.usize("steps"), 100);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let r = Cli::new("t", "test").parse(&args(&["--nope"]));
+        assert!(matches!(r, Err(HelpOrError::Error(_))));
+    }
+
+    #[test]
+    fn help_requested() {
+        let r = Cli::new("t", "about me").opt("x", None, "an x").parse(&args(&["--help"]));
+        match r {
+            Err(HelpOrError::Help(h)) => {
+                assert!(h.contains("about me"));
+                assert!(h.contains("--x"));
+            }
+            _ => panic!("expected help"),
+        }
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        let r = Cli::new("t", "test").opt("lr", None, "lr").parse(&args(&["--lr"]));
+        assert!(matches!(r, Err(HelpOrError::Error(_))));
+    }
+}

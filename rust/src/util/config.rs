@@ -1,0 +1,265 @@
+//! TOML-subset configuration parser (the `toml` crate is unavailable offline).
+//!
+//! Supports the subset used by `configs/*.toml`: `[section]` and
+//! `[section.sub]` headers, `key = value` with string/int/float/bool/array
+//! values, `#` comments. Keys are flattened to `section.sub.key` dotted paths.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A parsed config: flattened dotted-path -> value.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: BTreeMap<String, Value>,
+}
+
+/// A configuration value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    fn parse(raw: &str) -> Result<Value, String> {
+        let raw = raw.trim();
+        if raw.is_empty() {
+            return Err("empty value".into());
+        }
+        if let Some(inner) = raw.strip_prefix('"') {
+            let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+            return Ok(Value::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+        }
+        if let Some(inner) = raw.strip_prefix('[') {
+            let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+            let mut items = Vec::new();
+            for part in split_top_level(inner) {
+                let part = part.trim();
+                if !part.is_empty() {
+                    items.push(Value::parse(part)?);
+                }
+            }
+            return Ok(Value::Arr(items));
+        }
+        match raw {
+            "true" => return Ok(Value::Bool(true)),
+            "false" => return Ok(Value::Bool(false)),
+            _ => {}
+        }
+        if let Ok(i) = raw.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+        if let Ok(f) = raw.parse::<f64>() {
+            return Ok(Value::Float(f));
+        }
+        Err(format!("cannot parse value: {raw}"))
+    }
+}
+
+/// Split on commas that are not inside quotes or nested brackets.
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            '[' if !in_str => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' if !in_str => {
+                depth = depth.saturating_sub(1);
+                cur.push(c);
+            }
+            ',' if !in_str && depth == 0 => parts.push(std::mem::take(&mut cur)),
+            c => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        parts.push(cur);
+    }
+    parts
+}
+
+impl Config {
+    /// Parse TOML-subset text.
+    pub fn parse(text: &str) -> Result<Config, String> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw_line) in text.lines().enumerate() {
+            let line = strip_comment(raw_line).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(inner) = line.strip_prefix('[') {
+                let inner = inner
+                    .strip_suffix(']')
+                    .ok_or(format!("line {}: bad section header", lineno + 1))?;
+                section = inner.trim().to_string();
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or(format!("line {}: expected key = value", lineno + 1))?;
+            let full_key = if section.is_empty() {
+                key.trim().to_string()
+            } else {
+                format!("{section}.{}", key.trim())
+            };
+            let value =
+                Value::parse(val).map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            cfg.values.insert(full_key, value);
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Config, String> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| format!("{}: {e}", path.as_ref().display()))?;
+        Config::parse(&text)
+    }
+
+    /// Insert/override a value from a `key=value` string (CLI overrides).
+    pub fn set_override(&mut self, key: &str, raw: &str) -> Result<(), String> {
+        // Try typed parse first; fall back to bare string.
+        let v = Value::parse(raw).unwrap_or_else(|_| Value::Str(raw.to_string()));
+        self.values.insert(key.to_string(), v);
+        Ok(())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        match self.values.get(key) {
+            Some(Value::Str(s)) => s.clone(),
+            Some(v) => format!("{v:?}"),
+            None => default.to_string(),
+        }
+    }
+
+    pub fn int(&self, key: &str, default: i64) -> i64 {
+        match self.values.get(key) {
+            Some(Value::Int(i)) => *i,
+            Some(Value::Float(f)) => *f as i64,
+            _ => default,
+        }
+    }
+
+    pub fn float(&self, key: &str, default: f64) -> f64 {
+        match self.values.get(key) {
+            Some(Value::Float(f)) => *f,
+            Some(Value::Int(i)) => *i as f64,
+            _ => default,
+        }
+    }
+
+    pub fn bool(&self, key: &str, default: bool) -> bool {
+        match self.values.get(key) {
+            Some(Value::Bool(b)) => *b,
+            _ => default,
+        }
+    }
+
+    /// All keys under a dotted prefix.
+    pub fn keys_under(&self, prefix: &str) -> Vec<String> {
+        let pfx = format!("{prefix}.");
+        self.values.keys().filter(|k| k.starts_with(&pfx)).cloned().collect()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# top-level
+name = "subtrack"     # trailing comment
+seed = 42
+
+[model]
+hidden = 256
+layers = 4
+rope_theta = 10000.0
+
+[optim.subtrack]
+rank = 16
+eta = 10.0
+components = ["pa", "rs"]
+enabled = true
+"#;
+
+    #[test]
+    fn parse_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str("name", ""), "subtrack");
+        assert_eq!(c.int("seed", 0), 42);
+        assert_eq!(c.int("model.hidden", 0), 256);
+        assert_eq!(c.float("model.rope_theta", 0.0), 10000.0);
+        assert_eq!(c.float("optim.subtrack.eta", 0.0), 10.0);
+        assert!(c.bool("optim.subtrack.enabled", false));
+        match c.get("optim.subtrack.components").unwrap() {
+            Value::Arr(xs) => {
+                assert_eq!(xs.len(), 2);
+                assert_eq!(xs[0], Value::Str("pa".into()));
+            }
+            _ => panic!("expected array"),
+        }
+    }
+
+    #[test]
+    fn defaults_on_missing() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.int("nope", 7), 7);
+        assert_eq!(c.str("nope", "d"), "d");
+    }
+
+    #[test]
+    fn overrides() {
+        let mut c = Config::parse(SAMPLE).unwrap();
+        c.set_override("model.hidden", "512").unwrap();
+        assert_eq!(c.int("model.hidden", 0), 512);
+    }
+
+    #[test]
+    fn comment_inside_string_preserved() {
+        let c = Config::parse(r##"x = "a#b""##).unwrap();
+        assert_eq!(c.str("x", ""), "a#b");
+    }
+
+    #[test]
+    fn keys_under_prefix() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let ks = c.keys_under("model");
+        assert!(ks.contains(&"model.hidden".to_string()));
+        assert!(!ks.contains(&"seed".to_string()));
+    }
+
+    #[test]
+    fn bad_lines_error() {
+        assert!(Config::parse("[unterminated").is_err());
+        assert!(Config::parse("key_no_value").is_err());
+    }
+}

@@ -1,0 +1,142 @@
+//! CSV writer for experiment results.
+//!
+//! Every bench harness writes its series to `results/<id>.csv` through this
+//! writer so figures/tables can be regenerated from the raw data.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::Path;
+
+/// An append-style CSV writer with a fixed header.
+pub struct CsvWriter {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl CsvWriter {
+    /// Create a writer with the given column names.
+    pub fn new(columns: &[&str]) -> Self {
+        CsvWriter { header: columns.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    /// Append a row of raw string cells. Panics if the arity mismatches.
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "csv arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Append a row of display-able cells.
+    pub fn rowv<T: std::fmt::Display>(&mut self, cells: &[T]) {
+        self.row(&cells.iter().map(|c| c.to_string()).collect::<Vec<_>>());
+    }
+
+    /// Number of data rows so far.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Serialize to CSV text (quotes cells containing separators).
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        let emit = |out: &mut String, cells: &[String]| {
+            for (i, c) in cells.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                if c.contains(',') || c.contains('"') || c.contains('\n') {
+                    out.push('"');
+                    out.push_str(&c.replace('"', "\"\""));
+                    out.push('"');
+                } else {
+                    out.push_str(c);
+                }
+            }
+            out.push('\n');
+        };
+        emit(&mut out, &self.header);
+        for r in &self.rows {
+            emit(&mut out, r);
+        }
+        out
+    }
+
+    /// Write to a file, creating parent directories.
+    pub fn save(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        let mut f = fs::File::create(path)?;
+        f.write_all(self.to_string().as_bytes())
+    }
+}
+
+/// Parse a simple CSV (no embedded newlines) back into header + rows.
+pub fn parse_simple(text: &str) -> (Vec<String>, Vec<Vec<String>>) {
+    let mut lines = text.lines();
+    let header = lines
+        .next()
+        .map(|l| split_line(l))
+        .unwrap_or_default();
+    let rows = lines.filter(|l| !l.is_empty()).map(split_line).collect();
+    (header, rows)
+}
+
+fn split_line(line: &str) -> Vec<String> {
+    let mut cells = Vec::new();
+    let mut cur = String::new();
+    let mut in_quotes = false;
+    let mut chars = line.chars().peekable();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' if in_quotes && chars.peek() == Some(&'"') => {
+                cur.push('"');
+                chars.next();
+            }
+            '"' => in_quotes = !in_quotes,
+            ',' if !in_quotes => {
+                cells.push(std::mem::take(&mut cur));
+            }
+            c => cur.push(c),
+        }
+    }
+    cells.push(cur);
+    cells
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_roundtrip() {
+        let mut w = CsvWriter::new(&["step", "loss"]);
+        w.rowv(&[1.0, 3.5]);
+        w.rowv(&[2.0, 3.25]);
+        let s = w.to_string();
+        let (h, rows) = parse_simple(&s);
+        assert_eq!(h, vec!["step", "loss"]);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1][1], "3.25");
+    }
+
+    #[test]
+    fn quoting() {
+        let mut w = CsvWriter::new(&["name"]);
+        w.row(&["a,b \"c\"".to_string()]);
+        let s = w.to_string();
+        let (_, rows) = parse_simple(&s);
+        assert_eq!(rows[0][0], "a,b \"c\"");
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_checked() {
+        let mut w = CsvWriter::new(&["a", "b"]);
+        w.rowv(&[1.0]);
+    }
+}

