@@ -1,22 +1,104 @@
 //! Raw GEMM throughput probe (see EXPERIMENTS.md §Perf).
-use subtrack::tensor::{gemm, Matrix};
+//!
+//! Prints human-readable GFLOPS and merges a machine-readable record into
+//! `BENCH_gemm.json` (shared with `examples/profile_step.rs`, which adds
+//! steps/sec) so the perf trajectory is tracked across PRs:
+//!
+//! ```text
+//! cargo run --release --example gemmbench
+//! SUBTRACK_BENCH_OUT=path.json cargo run --release --example gemmbench
+//! ```
+
+use std::collections::BTreeMap;
+use subtrack::tensor::{gemm, Matrix, Workspace};
+use subtrack::util::json::{merge_into_file, Json};
 use subtrack::util::rng::Rng;
+
+/// Measure mean seconds/op over ~`budget` seconds of repetitions.
+fn time_op(budget: f64, mut op: impl FnMut()) -> f64 {
+    // One untimed warmup rep.
+    op();
+    let t0 = std::time::Instant::now();
+    let mut reps = 0u32;
+    while t0.elapsed().as_secs_f64() < budget {
+        op();
+        reps += 1;
+    }
+    t0.elapsed().as_secs_f64() / reps as f64
+}
+
 fn main() {
+    let out_path =
+        std::env::var("SUBTRACK_BENCH_OUT").unwrap_or_else(|_| "BENCH_gemm.json".to_string());
+    let budget = 0.3f64;
     let mut rng = Rng::new(1);
+    let mut ws = Workspace::new();
+    let mut cases = BTreeMap::new();
+    let auto_threads = gemm::gemm_threads();
+
     for n in [128usize, 256, 512] {
         let a = Matrix::randn(n, n, 1.0, &mut rng);
         let b = Matrix::randn(n, n, 1.0, &mut rng);
-        let t0 = std::time::Instant::now();
-        let mut reps = 0;
-        while t0.elapsed().as_secs_f64() < 1.0 { std::hint::black_box(gemm::matmul(&a, &b)); reps += 1; }
-        let secs = t0.elapsed().as_secs_f64() / reps as f64;
-        let gf = 2.0 * (n as f64).powi(3) / secs / 1e9;
-        println!("matmul {n}: {:.1} ms, {gf:.2} GFLOPS", secs*1e3);
-        let t0 = std::time::Instant::now();
-        let mut reps = 0;
-        while t0.elapsed().as_secs_f64() < 1.0 { std::hint::black_box(gemm::matmul_nt(&a, &b)); reps += 1; }
-        let secs = t0.elapsed().as_secs_f64() / reps as f64;
-        let gf = 2.0 * (n as f64).powi(3) / secs / 1e9;
-        println!("matmul_nt {n}: {:.1} ms, {gf:.2} GFLOPS", secs*1e3);
+        let flops = 2.0 * (n as f64).powi(3);
+        let mut c = ws.take(n, n);
+
+        // (label, thread count, op) triples measured identically.
+        let variants: Vec<(&str, usize)> = vec![
+            ("matmul_1t", 1),
+            ("matmul", 0),
+            ("matmul_nt", 0),
+            ("matmul_tn", 0),
+            ("matmul_into", 0),
+            ("matmul_nt_into", 0),
+            ("matmul_tn_into", 0),
+        ];
+        for (label, forced) in variants {
+            gemm::set_gemm_threads(forced);
+            let secs = match label {
+                "matmul" | "matmul_1t" => {
+                    time_op(budget, || {
+                        std::hint::black_box(gemm::matmul(&a, &b));
+                    })
+                }
+                "matmul_nt" => time_op(budget, || {
+                    std::hint::black_box(gemm::matmul_nt(&a, &b));
+                }),
+                "matmul_tn" => time_op(budget, || {
+                    std::hint::black_box(gemm::matmul_tn(&a, &b));
+                }),
+                "matmul_into" => time_op(budget, || {
+                    gemm::matmul_into(&mut c, &a, &b);
+                    std::hint::black_box(&c);
+                }),
+                "matmul_nt_into" => time_op(budget, || {
+                    gemm::matmul_nt_into(&mut c, &a, &b, &mut ws);
+                    std::hint::black_box(&c);
+                }),
+                "matmul_tn_into" => time_op(budget, || {
+                    gemm::matmul_tn_into(&mut c, &a, &b, &mut ws);
+                    std::hint::black_box(&c);
+                }),
+                _ => unreachable!(),
+            };
+            gemm::set_gemm_threads(0);
+            let gflops = flops / secs / 1e9;
+            println!("{label:<16} {n}: {:8.2} ms  {gflops:7.2} GFLOPS", secs * 1e3);
+            cases.insert(
+                format!("{label}_{n}"),
+                Json::obj(vec![
+                    ("ms", Json::Num(secs * 1e3)),
+                    ("gflops", Json::Num(gflops)),
+                ]),
+            );
+        }
+        ws.give(c);
     }
+
+    let record = Json::obj(vec![
+        ("threads", Json::Num(auto_threads as f64)),
+        ("workspace_misses", Json::Num(ws.misses() as f64)),
+        ("cases", Json::Obj(cases)),
+    ]);
+    merge_into_file(&out_path, "gemm", record).expect("write BENCH_gemm.json");
+    println!("\n[data] gemm record -> {out_path} ({auto_threads} threads auto)");
 }

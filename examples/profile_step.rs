@@ -1,25 +1,94 @@
 //! Per-stage timing of one native train step (L3 profiling harness).
-use subtrack::model::{Llama, ModelConfig, Batch};
-use subtrack::util::rng::Rng;
+//!
+//! Prints forward / loss / loss+grad timings plus full-step throughput
+//! (forward + backward + fused-Adam update through the persistent
+//! workspace), and merges the numbers into `BENCH_gemm.json` next to the
+//! GEMM record from `examples/gemmbench.rs`:
+//!
+//! ```text
+//! cargo run --release --example profile_step [preset]
+//! SUBTRACK_BENCH_OUT=path.json cargo run --release --example profile_step small
+//! ```
+
 use std::time::Instant;
+use subtrack::model::{Batch, Llama, ModelConfig, StepState};
+use subtrack::optim::{Adam, AdamCfg, Optimizer};
+use subtrack::util::json::{merge_section_into_file, Json};
+use subtrack::util::rng::Rng;
+
 fn main() {
     let preset = std::env::args().nth(1).unwrap_or("small".into());
+    let out_path =
+        std::env::var("SUBTRACK_BENCH_OUT").unwrap_or_else(|_| "BENCH_gemm.json".to_string());
     let cfg = ModelConfig::preset(&preset);
-    let model = Llama::new(cfg.clone(), 1);
+    let mut model = Llama::new(cfg.clone(), 1);
     let mut rng = Rng::new(2);
     let (b, t) = (8, cfg.seq_len);
-    let inputs: Vec<u32> = (0..b*t).map(|_| rng.below(cfg.vocab) as u32).collect();
-    let targets: Vec<u32> = (0..b*t).map(|_| rng.below(cfg.vocab) as u32).collect();
+    let inputs: Vec<u32> = (0..b * t).map(|_| rng.below(cfg.vocab) as u32).collect();
+    let targets: Vec<u32> = (0..b * t).map(|_| rng.below(cfg.vocab) as u32).collect();
     let batch = Batch { inputs: inputs.clone(), targets, b, t };
+    let mut state = StepState::new();
+    let mut grads = model.zero_grads();
+    let n = 5;
+
     // forward only
     let t0 = Instant::now();
-    let n = 5;
-    for _ in 0..n { std::hint::black_box(model.forward_hidden(&inputs, b, t)); }
-    println!("forward_hidden: {:.1} ms", t0.elapsed().as_secs_f64()/n as f64*1e3);
+    for _ in 0..n {
+        let cache = model.forward_hidden_ws(&inputs, b, t, &mut state);
+        cache.recycle(&mut state.ws);
+    }
+    let forward_ms = t0.elapsed().as_secs_f64() / n as f64 * 1e3;
+    println!("forward_hidden: {forward_ms:.1} ms");
+
     let t0 = Instant::now();
-    for _ in 0..n { std::hint::black_box(model.loss(&batch)); }
-    println!("loss (fwd+head+CE): {:.1} ms", t0.elapsed().as_secs_f64()/n as f64*1e3);
+    for _ in 0..n {
+        std::hint::black_box(model.loss_ws(&batch, &mut state));
+    }
+    let loss_ms = t0.elapsed().as_secs_f64() / n as f64 * 1e3;
+    println!("loss (fwd+head+CE): {loss_ms:.1} ms");
+
     let t0 = Instant::now();
-    for _ in 0..n { std::hint::black_box(model.loss_and_grad(&batch)); }
-    println!("loss_and_grad: {:.1} ms", t0.elapsed().as_secs_f64()/n as f64*1e3);
+    for _ in 0..n {
+        std::hint::black_box(model.loss_and_grad_into(&batch, &mut grads, &mut state));
+    }
+    let grad_ms = t0.elapsed().as_secs_f64() / n as f64 * 1e3;
+    println!("loss_and_grad: {grad_ms:.1} ms");
+
+    // Full training step: fwd + bwd + fused Adam, steady-state workspace.
+    let mut opt = Adam::new(AdamCfg::default());
+    // Warmup populates the buffer pool and the optimizer state.
+    let _ = model.loss_and_grad_into(&batch, &mut grads, &mut state);
+    opt.step(1e-4, &mut model.params, &grads);
+    state.ws.reset_counters();
+    let steps = 10usize;
+    let t0 = Instant::now();
+    for _ in 0..steps {
+        let _ = model.loss_and_grad_into(&batch, &mut grads, &mut state);
+        opt.step(1e-4, &mut model.params, &grads);
+    }
+    let step_secs = t0.elapsed().as_secs_f64() / steps as f64;
+    let steps_per_sec = 1.0 / step_secs;
+    println!(
+        "full step (fwd+bwd+adam): {:.1} ms  ({steps_per_sec:.2} steps/sec, \
+         {} ws misses over {steps} steps)",
+        step_secs * 1e3,
+        state.ws.misses(),
+    );
+
+    let record = Json::obj(vec![(
+        preset.as_str(),
+        Json::obj(vec![
+            ("forward_ms", Json::Num(forward_ms)),
+            ("loss_ms", Json::Num(loss_ms)),
+            ("loss_and_grad_ms", Json::Num(grad_ms)),
+            ("step_ms", Json::Num(step_secs * 1e3)),
+            ("steps_per_sec", Json::Num(steps_per_sec)),
+            ("steady_state_ws_misses", Json::Num(state.ws.misses() as f64)),
+            ("batch", Json::Num(b as f64)),
+            ("seq_len", Json::Num(t as f64)),
+        ]),
+    )]);
+    // Nested under "profile_step", merging any presets recorded earlier.
+    merge_section_into_file(&out_path, "profile_step", record).expect("write BENCH_gemm.json");
+    println!("[data] profile_step record -> {out_path}");
 }

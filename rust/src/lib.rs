@@ -25,6 +25,11 @@
 //! * [`util`] — RNG, CLI/config parsing, JSON/CSV emitters, property testing.
 //! * [`experiments`] — the per-table/figure reproduction harnesses.
 
+// The tensor kernels and hand-written backward passes index several slices
+// per loop in lockstep; iterator rewrites would obscure the math and, in the
+// GEMM inner loops, the autovectorization-friendly shape.
+#![allow(clippy::needless_range_loop)]
+
 pub mod bench;
 pub mod data;
 pub mod experiments;

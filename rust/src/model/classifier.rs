@@ -83,7 +83,7 @@ impl Classifier {
             dhidden.row_mut(bi * t + t - 1).copy_from_slice(dpooled.row(bi));
         }
         let mut grads = self.body.zero_grads();
-        self.body.backward_hidden(&cache, inputs, dhidden, &mut grads);
+        self.body.backward_hidden(cache, inputs, dhidden, &mut grads);
         grads.push(dhead);
         (loss, grads)
     }

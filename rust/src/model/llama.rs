@@ -9,10 +9,27 @@
 //! Everything operates on flattened (B·T)×H row-major matrices. The backward
 //! pass is exact (verified against central finite differences in the tests
 //! below and in `rust/tests/gradcheck.rs`).
+//!
+//! # The allocation-free step loop
+//!
+//! The `_ws` entry points ([`Llama::forward_hidden_ws`],
+//! [`Llama::backward_hidden_ws`], [`Llama::loss_and_grad_into`]) thread a
+//! persistent [`StepState`] — a [`Workspace`] buffer pool plus a
+//! [`TransposeCache`] of `Wᵀ` per weight — through the whole pass. Every
+//! intermediate (activations, attention probabilities, gradients of
+//! activations, RoPE tables) is leased from the pool and returned before the
+//! step ends, so steady-state steps allocate no matrix buffers (only the
+//! small Vec-of-pointer containers holding them are rebuilt per step); the
+//! transpose cache makes the `x·Wᵀ` linears pay their O(h²) transpose once
+//! per weight *update* instead of once per call. The historical allocating
+//! API ([`Llama::loss`], [`Llama::loss_and_grad`], …) now wraps the `_ws`
+//! path with a throwaway state, which keeps direct weight pokes (e.g.
+//! finite-difference tests) safe: a fresh transpose cache can never be
+//! stale.
 
 use super::config::ModelConfig;
-use crate::optim::Param;
-use crate::tensor::{gemm, ops, Matrix};
+use crate::optim::{Param, TransposeCache};
+use crate::tensor::{gemm, ops, Matrix, Workspace};
 use crate::util::rng::Rng;
 
 /// A training batch of token ids. `inputs[b*t + i]` is position i of sequence
@@ -29,6 +46,23 @@ pub struct Batch {
 impl Batch {
     pub fn tokens(&self) -> usize {
         self.b * self.t
+    }
+}
+
+/// Persistent per-driver state for the zero-allocation step loop: the
+/// scratch-buffer pool and the cached weight transposes. Owned by whoever
+/// drives repeated steps (the trainer, a DP worker, a bench harness). Do not
+/// share one across code that mutates weights without bumping
+/// [`Param::version`] — see the module docs.
+#[derive(Default)]
+pub struct StepState {
+    pub ws: Workspace,
+    pub tcache: TransposeCache,
+}
+
+impl StepState {
+    pub fn new() -> StepState {
+        StepState::default()
     }
 }
 
@@ -76,7 +110,9 @@ pub struct Llama {
     pub params: Vec<Param>,
 }
 
-/// Per-layer forward cache needed by the backward pass.
+/// Per-layer forward cache needed by the backward pass. Every matrix and
+/// vector in here is leased from the step workspace and returned by
+/// `layer_backward` (or [`Cache::recycle`]).
 struct LayerCache {
     /// Input to the layer (pre attention-norm).
     x_in: Matrix,
@@ -104,6 +140,27 @@ struct LayerCache {
     h: Matrix,
 }
 
+impl LayerCache {
+    fn recycle(self, ws: &mut Workspace) {
+        ws.give(self.x_in);
+        ws.give(self.n1);
+        ws.give_vec(self.inv_rms1);
+        ws.give(self.q);
+        ws.give(self.k);
+        ws.give(self.v);
+        for p in self.probs {
+            ws.give(p);
+        }
+        ws.give(self.attn_cat);
+        ws.give(self.x_mid);
+        ws.give(self.n2);
+        ws.give_vec(self.inv_rms2);
+        ws.give(self.z_gate);
+        ws.give(self.z_up);
+        ws.give(self.h);
+    }
+}
+
 /// Full forward cache.
 pub struct Cache {
     layers: Vec<LayerCache>,
@@ -114,6 +171,19 @@ pub struct Cache {
     pub hidden: Matrix,
     b: usize,
     t: usize,
+}
+
+impl Cache {
+    /// Return every buffer to the workspace (used by loss-only paths;
+    /// `backward_hidden_ws` recycles incrementally as it walks the layers).
+    pub fn recycle(self, ws: &mut Workspace) {
+        ws.give(self.hidden);
+        ws.give(self.x_final);
+        ws.give_vec(self.inv_rms_final);
+        for lc in self.layers {
+            lc.recycle(ws);
+        }
+    }
 }
 
 impl Llama {
@@ -174,77 +244,130 @@ impl Llama {
     // ------------------------------------------------------------------
 
     /// Forward through the transformer body, returning the final normed
-    /// hidden states and the cache for backward.
+    /// hidden states and the cache for backward. Allocating wrapper around
+    /// [`forward_hidden_ws`] (fresh state per call).
+    ///
+    /// [`forward_hidden_ws`]: Llama::forward_hidden_ws
     pub fn forward_hidden(&self, inputs: &[u32], b: usize, t: usize) -> Cache {
+        self.forward_hidden_ws(inputs, b, t, &mut StepState::new())
+    }
+
+    /// Workspace-backed forward pass: every cache buffer is leased from
+    /// `state.ws`, weight transposes come from `state.tcache`.
+    pub fn forward_hidden_ws(
+        &self,
+        inputs: &[u32],
+        b: usize,
+        t: usize,
+        state: &mut StepState,
+    ) -> Cache {
         assert_eq!(inputs.len(), b * t);
         let h = self.cfg.hidden;
         // Embedding gather.
         let embed = &self.params[0].value;
-        let mut x = Matrix::zeros(b * t, h);
+        let mut x = state.ws.take_dirty(b * t, h);
         for (row, &id) in inputs.iter().enumerate() {
             x.row_mut(row).copy_from_slice(embed.row(id as usize));
         }
 
         let mut layers = Vec::with_capacity(self.cfg.layers);
         for l in 0..self.cfg.layers {
-            let (x_next, cache) = self.layer_forward(l, &x, b, t);
+            let (x_next, cache) = self.layer_forward(l, x, b, t, state);
             layers.push(cache);
             x = x_next;
         }
 
         // Final RMSNorm.
         let gain = &self.params[self.final_norm_idx()].value;
-        let (hidden, inv_rms_final) = rmsnorm_forward(&x, gain);
+        let mut hidden = state.ws.take_dirty(b * t, h);
+        let mut inv_rms_final = state.ws.take_vec_dirty(b * t);
+        rmsnorm_forward_into(&x, gain, &mut hidden, &mut inv_rms_final);
         Cache { layers, x_final: x, inv_rms_final, hidden, b, t }
     }
 
-    fn layer_forward(&self, l: usize, x_in: &Matrix, b: usize, t: usize) -> (Matrix, LayerCache) {
+    fn layer_forward(
+        &self,
+        l: usize,
+        x_in: Matrix,
+        b: usize,
+        t: usize,
+        state: &mut StepState,
+    ) -> (Matrix, LayerCache) {
         let idx = self.layer_idx(l);
         let cfg = &self.cfg;
         let n_heads = cfg.heads;
         let d = cfg.head_dim();
+        let bt = b * t;
+        let StepState { ws, tcache } = state;
 
         // ---- attention block ----
-        let (n1, inv_rms1) = rmsnorm_forward(x_in, &self.params[idx.attn_norm()].value);
-        let mut q = gemm::matmul_nt(&n1, &self.params[idx.wq()].value);
-        let mut k = gemm::matmul_nt(&n1, &self.params[idx.wk()].value);
-        let v = gemm::matmul_nt(&n1, &self.params[idx.wv()].value);
-        rope_apply(&mut q, t, n_heads, d, cfg.rope_theta, false);
-        rope_apply(&mut k, t, n_heads, d, cfg.rope_theta, false);
+        let mut n1 = ws.take_dirty(bt, cfg.hidden);
+        let mut inv_rms1 = ws.take_vec_dirty(bt);
+        rmsnorm_forward_into(&x_in, &self.params[idx.attn_norm()].value, &mut n1, &mut inv_rms1);
+        // x·Wᵀ through the cached transpose: no per-call O(h²) transpose.
+        let mut q = ws.take_dirty(bt, cfg.hidden);
+        gemm::matmul_into(&mut q, &n1, tcache.get(idx.wq(), &self.params[idx.wq()]));
+        let mut k = ws.take_dirty(bt, cfg.hidden);
+        gemm::matmul_into(&mut k, &n1, tcache.get(idx.wk(), &self.params[idx.wk()]));
+        let mut v = ws.take_dirty(bt, cfg.hidden);
+        gemm::matmul_into(&mut v, &n1, tcache.get(idx.wv(), &self.params[idx.wv()]));
+        rope_apply_ws(&mut q, t, n_heads, d, cfg.rope_theta, false, ws);
+        rope_apply_ws(&mut k, t, n_heads, d, cfg.rope_theta, false, ws);
 
         // Per (batch, head) causal attention.
-        let mut attn_cat = Matrix::zeros(b * t, cfg.hidden);
+        let mut attn_cat = ws.take_dirty(bt, cfg.hidden);
         let mut probs = Vec::with_capacity(b * n_heads);
         let scale = 1.0 / (d as f32).sqrt();
+        let mut qs = ws.take_dirty(t, d);
+        let mut ks = ws.take_dirty(t, d);
+        let mut vs = ws.take_dirty(t, d);
+        let mut out = ws.take_dirty(t, d);
         for bi in 0..b {
             for hi in 0..n_heads {
-                let qs = slice_head(&q, bi, hi, t, d);
-                let ks = slice_head(&k, bi, hi, t, d);
-                let vs = slice_head(&v, bi, hi, t, d);
-                let mut scores = gemm::matmul_nt(&qs, &ks);
+                slice_head_into(&q, &mut qs, bi, hi, t, d);
+                slice_head_into(&k, &mut ks, bi, hi, t, d);
+                slice_head_into(&v, &mut vs, bi, hi, t, d);
+                let mut scores = ws.take_dirty(t, t);
+                gemm::matmul_nt_into(&mut scores, &qs, &ks, ws);
                 scores.scale_mut(scale);
                 causal_mask(&mut scores);
                 ops::softmax_rows(&mut scores);
-                let out = gemm::matmul(&scores, &vs); // T×D
+                gemm::matmul_into(&mut out, &scores, &vs); // T×D
                 write_head(&mut attn_cat, &out, bi, hi, t, d);
                 probs.push(scores);
             }
         }
-        let attn_out = gemm::matmul_nt(&attn_cat, &self.params[idx.wo()].value);
-        let x_mid = x_in.add(&attn_out);
+        ws.give(qs);
+        ws.give(ks);
+        ws.give(vs);
+        ws.give(out);
+        let mut attn_out = ws.take_dirty(bt, cfg.hidden);
+        gemm::matmul_into(&mut attn_out, &attn_cat, tcache.get(idx.wo(), &self.params[idx.wo()]));
+        // Residual, folded in place: x_mid = x_in + attn_out.
+        attn_out.axpy(1.0, &x_in);
+        let x_mid = attn_out;
 
         // ---- MLP block (SwiGLU) ----
-        let (n2, inv_rms2) = rmsnorm_forward(&x_mid, &self.params[idx.mlp_norm()].value);
-        let z_gate = gemm::matmul_nt(&n2, &self.params[idx.w_gate()].value);
-        let z_up = gemm::matmul_nt(&n2, &self.params[idx.w_up()].value);
-        let h_act = z_gate.zip(&z_up, |g, u| silu(g) * u);
-        let mlp_out = gemm::matmul_nt(&h_act, &self.params[idx.w_down()].value);
-        let x_out = x_mid.add(&mlp_out);
+        let mut n2 = ws.take_dirty(bt, cfg.hidden);
+        let mut inv_rms2 = ws.take_vec_dirty(bt);
+        rmsnorm_forward_into(&x_mid, &self.params[idx.mlp_norm()].value, &mut n2, &mut inv_rms2);
+        let f = cfg.intermediate;
+        let mut z_gate = ws.take_dirty(bt, f);
+        gemm::matmul_into(&mut z_gate, &n2, tcache.get(idx.w_gate(), &self.params[idx.w_gate()]));
+        let mut z_up = ws.take_dirty(bt, f);
+        gemm::matmul_into(&mut z_up, &n2, tcache.get(idx.w_up(), &self.params[idx.w_up()]));
+        let mut h_act = ws.take_dirty(bt, f);
+        z_gate.zip_into(&z_up, &mut h_act, |g, u| silu(g) * u);
+        let mut mlp_out = ws.take_dirty(bt, cfg.hidden);
+        let wd_t = tcache.get(idx.w_down(), &self.params[idx.w_down()]);
+        gemm::matmul_into(&mut mlp_out, &h_act, wd_t);
+        mlp_out.axpy(1.0, &x_mid);
+        let x_out = mlp_out;
 
         (
             x_out,
             LayerCache {
-                x_in: x_in.clone(),
+                x_in,
                 n1,
                 inv_rms1,
                 q,
@@ -262,31 +385,76 @@ impl Llama {
         )
     }
 
-    /// Language-model logits for the final hidden states.
+    /// Language-model logits for the final hidden states (allocating).
     pub fn logits(&self, hidden: &Matrix) -> Matrix {
         gemm::matmul_nt(hidden, &self.params[self.head_idx()].value)
     }
 
     /// Full LM forward: mean cross-entropy of next-token prediction.
+    /// Allocating wrapper around [`loss_ws`].
+    ///
+    /// [`loss_ws`]: Llama::loss_ws
     pub fn loss(&self, batch: &Batch) -> f32 {
-        let cache = self.forward_hidden(&batch.inputs, batch.b, batch.t);
-        let logits = self.logits(&cache.hidden);
-        let (loss, _) = cross_entropy(&logits, &batch.targets);
+        self.loss_ws(batch, &mut StepState::new())
+    }
+
+    /// Loss with persistent step state (allocation-free after warmup).
+    pub fn loss_ws(&self, batch: &Batch, state: &mut StepState) -> f32 {
+        let cache = self.forward_hidden_ws(&batch.inputs, batch.b, batch.t, state);
+        let bt = batch.b * batch.t;
+        let head = self.head_idx();
+        let StepState { ws, tcache } = state;
+        let mut logits = ws.take_dirty(bt, self.cfg.vocab);
+        gemm::matmul_into(&mut logits, &cache.hidden, tcache.get(head, &self.params[head]));
+        let loss = cross_entropy_loss(&logits, &batch.targets);
+        ws.give(logits);
+        cache.recycle(ws);
         loss
     }
 
-    /// Loss + full gradient vector (parallel to `self.params`).
+    /// Loss + full gradient vector (parallel to `self.params`). Allocating
+    /// wrapper around [`loss_and_grad_into`].
+    ///
+    /// [`loss_and_grad_into`]: Llama::loss_and_grad_into
     pub fn loss_and_grad(&self, batch: &Batch) -> (f32, Vec<Matrix>) {
-        let cache = self.forward_hidden(&batch.inputs, batch.b, batch.t);
-        let logits = self.logits(&cache.hidden);
-        let (loss, dlogits) = cross_entropy(&logits, &batch.targets);
         let mut grads = self.zero_grads();
-        // Head: logits = hidden·Wᵀ.
-        let head = self.head_idx();
-        grads[head] = gemm::matmul_tn(&dlogits, &cache.hidden);
-        let dhidden = gemm::matmul(&dlogits, &self.params[head].value);
-        self.backward_hidden(&cache, &batch.inputs, dhidden, &mut grads);
+        let loss = self.loss_and_grad_into(batch, &mut grads, &mut StepState::new());
         (loss, grads)
+    }
+
+    /// The steady-state training step: loss + gradients written into the
+    /// caller's persistent `grads` buffers (zeroed first), every temporary
+    /// leased from `state`. After the first (warm-up) step this performs no
+    /// heap allocation — see `rust/tests/zero_alloc.rs`.
+    pub fn loss_and_grad_into(
+        &self,
+        batch: &Batch,
+        grads: &mut [Matrix],
+        state: &mut StepState,
+    ) -> f32 {
+        assert_eq!(grads.len(), self.params.len(), "grads must parallel params");
+        for g in grads.iter_mut() {
+            g.data_mut().fill(0.0);
+        }
+        let cache = self.forward_hidden_ws(&batch.inputs, batch.b, batch.t, state);
+        let bt = batch.b * batch.t;
+        let head = self.head_idx();
+        let (loss, dhidden) = {
+            let StepState { ws, tcache } = state;
+            let mut logits = ws.take_dirty(bt, self.cfg.vocab);
+            gemm::matmul_into(&mut logits, &cache.hidden, tcache.get(head, &self.params[head]));
+            let mut dlogits = ws.take_dirty(bt, self.cfg.vocab);
+            let loss = cross_entropy_into(&logits, &batch.targets, &mut dlogits);
+            ws.give(logits);
+            // Head: logits = hidden·Wᵀ ⇒ dW = dlogitsᵀ·hidden.
+            gemm::matmul_tn_acc(&mut grads[head], &dlogits, &cache.hidden, 1.0, ws);
+            let mut dhidden = ws.take_dirty(bt, self.cfg.hidden);
+            gemm::matmul_into(&mut dhidden, &dlogits, &self.params[head].value);
+            ws.give(dlogits);
+            (loss, dhidden)
+        };
+        self.backward_hidden_ws(cache, &batch.inputs, dhidden, grads, state);
+        loss
     }
 
     // ------------------------------------------------------------------
@@ -294,97 +462,162 @@ impl Llama {
     // ------------------------------------------------------------------
 
     /// Backpropagate `dhidden` (gradient w.r.t. the final normed hidden
-    /// states) through the body, accumulating into `grads`.
+    /// states) through the body, accumulating into `grads`. Allocating
+    /// wrapper around [`backward_hidden_ws`].
+    ///
+    /// [`backward_hidden_ws`]: Llama::backward_hidden_ws
     pub fn backward_hidden(
         &self,
-        cache: &Cache,
+        cache: Cache,
         inputs: &[u32],
         dhidden: Matrix,
         grads: &mut [Matrix],
     ) {
-        let (b, t) = (cache.b, cache.t);
+        self.backward_hidden_ws(cache, inputs, dhidden, grads, &mut StepState::new());
+    }
+
+    /// Workspace-backed backward pass. Consumes the forward cache, recycling
+    /// every buffer (including `dhidden`) into `state.ws` as it goes.
+    pub fn backward_hidden_ws(
+        &self,
+        cache: Cache,
+        inputs: &[u32],
+        dhidden: Matrix,
+        grads: &mut [Matrix],
+        state: &mut StepState,
+    ) {
+        let Cache { mut layers, x_final, inv_rms_final, hidden, b, t } = cache;
+        let ws = &mut state.ws;
         // Final RMSNorm backward.
         let fin = self.final_norm_idx();
-        let (mut dx, dgain) = rmsnorm_backward(
-            &cache.x_final,
-            &cache.inv_rms_final,
+        let mut dx = ws.take_dirty(b * t, self.cfg.hidden);
+        rmsnorm_backward_acc(
+            &x_final,
+            &inv_rms_final,
             &self.params[fin].value,
             &dhidden,
+            &mut dx,
+            &mut grads[fin],
         );
-        grads[fin].axpy(1.0, &dgain);
+        ws.give(dhidden);
+        ws.give(x_final);
+        ws.give_vec(inv_rms_final);
+        ws.give(hidden);
 
         for l in (0..self.cfg.layers).rev() {
-            dx = self.layer_backward(l, &cache.layers[l], dx, b, t, grads);
+            let lc = layers.pop().expect("one cache per layer");
+            dx = self.layer_backward(l, lc, dx, b, t, grads, ws);
         }
 
         // Embedding scatter-add.
         for (row, &id) in inputs.iter().enumerate() {
-            let grow = dx.row(row).to_vec();
+            let grow = dx.row(row);
             let erow = grads[0].row_mut(id as usize);
-            for (e, g) in erow.iter_mut().zip(grow) {
+            for (e, &g) in erow.iter_mut().zip(grow) {
                 *e += g;
             }
         }
+        ws.give(dx);
     }
 
+    #[allow(clippy::too_many_arguments)] // mirrors the math: one arg per tensor in the chain rule
     fn layer_backward(
         &self,
         l: usize,
-        lc: &LayerCache,
+        lc: LayerCache,
         dx_out: Matrix,
         b: usize,
         t: usize,
         grads: &mut [Matrix],
+        ws: &mut Workspace,
     ) -> Matrix {
         let idx = self.layer_idx(l);
         let cfg = &self.cfg;
         let n_heads = cfg.heads;
         let d = cfg.head_dim();
+        let bt = b * t;
+        let f = cfg.intermediate;
 
         // ---- MLP block backward ----
         // x_out = x_mid + h·Wdᵀ
-        let dh = gemm::matmul(&dx_out, &self.params[idx.w_down()].value); // (BT)×F
-        grads[idx.w_down()].axpy(1.0, &gemm::matmul_tn(&dx_out, &lc.h));
+        let mut dh = ws.take_dirty(bt, f);
+        gemm::matmul_into(&mut dh, &dx_out, &self.params[idx.w_down()].value); // (BT)×F
+        gemm::matmul_tn_acc(&mut grads[idx.w_down()], &dx_out, &lc.h, 1.0, ws);
         // h = silu(z1) ⊙ z3
-        let dz_gate = dh.zip(&lc.z_gate, |dh, z| dh * silu_grad(z)).hadamard(&lc.z_up);
-        let dz_up = dh.zip(&lc.z_gate, |dh, z| dh * silu(z));
+        let mut dz_gate = ws.take_dirty(bt, f);
+        {
+            let dhd = dh.data();
+            let zg = lc.z_gate.data();
+            let zu = lc.z_up.data();
+            let o = dz_gate.data_mut();
+            for i in 0..o.len() {
+                o[i] = dhd[i] * silu_grad(zg[i]) * zu[i];
+            }
+        }
+        let mut dz_up = ws.take_dirty(bt, f);
+        {
+            let dhd = dh.data();
+            let zg = lc.z_gate.data();
+            let o = dz_up.data_mut();
+            for i in 0..o.len() {
+                o[i] = dhd[i] * silu(zg[i]);
+            }
+        }
+        ws.give(dh);
         // z1 = n2·Wgᵀ ; z3 = n2·Wuᵀ
-        grads[idx.w_gate()].axpy(1.0, &gemm::matmul_tn(&dz_gate, &lc.n2));
-        grads[idx.w_up()].axpy(1.0, &gemm::matmul_tn(&dz_up, &lc.n2));
-        let mut dn2 = gemm::matmul(&dz_gate, &self.params[idx.w_gate()].value);
-        dn2.axpy(1.0, &gemm::matmul(&dz_up, &self.params[idx.w_up()].value));
+        gemm::matmul_tn_acc(&mut grads[idx.w_gate()], &dz_gate, &lc.n2, 1.0, ws);
+        gemm::matmul_tn_acc(&mut grads[idx.w_up()], &dz_up, &lc.n2, 1.0, ws);
+        let mut dn2 = ws.take(bt, cfg.hidden); // zeroed: accumulated into
+        gemm::matmul_acc(&mut dn2, &dz_gate, &self.params[idx.w_gate()].value, 1.0);
+        gemm::matmul_acc(&mut dn2, &dz_up, &self.params[idx.w_up()].value, 1.0);
+        ws.give(dz_gate);
+        ws.give(dz_up);
         // RMSNorm #2
-        let (dx_mid_norm, dgain2) = rmsnorm_backward(
+        let mut dx_mid_norm = ws.take_dirty(bt, cfg.hidden);
+        rmsnorm_backward_acc(
             &lc.x_mid,
             &lc.inv_rms2,
             &self.params[idx.mlp_norm()].value,
             &dn2,
+            &mut dx_mid_norm,
+            &mut grads[idx.mlp_norm()],
         );
-        grads[idx.mlp_norm()].axpy(1.0, &dgain2);
-        // Residual: dx_mid = dx_out + dx_mid_norm
-        let dx_mid = dx_out.add(&dx_mid_norm);
+        ws.give(dn2);
+        // Residual: dx_mid = dx_out + dx_mid_norm (folded in place).
+        dx_mid_norm.axpy(1.0, &dx_out);
+        let dx_mid = dx_mid_norm;
+        ws.give(dx_out);
 
         // ---- attention block backward ----
         // attn_out = attn_cat·Woᵀ ; x_mid = x_in + attn_out
-        let dattn_cat = gemm::matmul(&dx_mid, &self.params[idx.wo()].value);
-        grads[idx.wo()].axpy(1.0, &gemm::matmul_tn(&dx_mid, &lc.attn_cat));
+        let mut dattn_cat = ws.take_dirty(bt, cfg.hidden);
+        gemm::matmul_into(&mut dattn_cat, &dx_mid, &self.params[idx.wo()].value);
+        gemm::matmul_tn_acc(&mut grads[idx.wo()], &dx_mid, &lc.attn_cat, 1.0, ws);
 
         let scale = 1.0 / (d as f32).sqrt();
-        let mut dq = Matrix::zeros(b * t, cfg.hidden);
-        let mut dk = Matrix::zeros(b * t, cfg.hidden);
-        let mut dv = Matrix::zeros(b * t, cfg.hidden);
+        let mut dq = ws.take_dirty(bt, cfg.hidden);
+        let mut dk = ws.take_dirty(bt, cfg.hidden);
+        let mut dv = ws.take_dirty(bt, cfg.hidden);
+        let mut dout = ws.take_dirty(t, d);
+        let mut vs = ws.take_dirty(t, d);
+        let mut qs = ws.take_dirty(t, d);
+        let mut ks = ws.take_dirty(t, d);
+        let mut dvs = ws.take_dirty(t, d);
+        let mut dqs = ws.take_dirty(t, d);
+        let mut dks = ws.take_dirty(t, d);
+        let mut dp = ws.take_dirty(t, t);
+        let mut ds = ws.take_dirty(t, t);
         for bi in 0..b {
             for hi in 0..n_heads {
                 let p = &lc.probs[bi * n_heads + hi]; // T×T
-                let dout = slice_head(&dattn_cat, bi, hi, t, d); // T×D
-                let vs = slice_head(&lc.v, bi, hi, t, d);
-                let qs = slice_head(&lc.q, bi, hi, t, d);
-                let ks = slice_head(&lc.k, bi, hi, t, d);
+                slice_head_into(&dattn_cat, &mut dout, bi, hi, t, d); // T×D
+                slice_head_into(&lc.v, &mut vs, bi, hi, t, d);
+                slice_head_into(&lc.q, &mut qs, bi, hi, t, d);
+                slice_head_into(&lc.k, &mut ks, bi, hi, t, d);
                 // out = P·V
-                let dvs = gemm::matmul_tn(p, &dout); // T×D
-                let dp = gemm::matmul_nt(&dout, &vs); // T×T
+                gemm::matmul_tn_into(&mut dvs, p, &dout, ws); // T×D
+                gemm::matmul_nt_into(&mut dp, &dout, &vs, ws); // T×T
                 // softmax backward: dS = P ⊙ (dP − rowsum(dP⊙P))
-                let mut ds = Matrix::zeros(t, t);
                 for i in 0..t {
                     let dot: f32 =
                         dp.row(i).iter().zip(p.row(i)).map(|(&a, &b)| a * b).sum();
@@ -394,34 +627,54 @@ impl Llama {
                 }
                 ds.scale_mut(scale);
                 // scores = Q·Kᵀ
-                let dqs = gemm::matmul(&ds, &ks);
-                let dks = gemm::matmul_tn(&ds, &qs);
+                gemm::matmul_into(&mut dqs, &ds, &ks);
+                gemm::matmul_tn_into(&mut dks, &ds, &qs, ws);
                 write_head(&mut dq, &dqs, bi, hi, t, d);
                 write_head(&mut dk, &dks, bi, hi, t, d);
                 write_head(&mut dv, &dvs, bi, hi, t, d);
             }
         }
+        ws.give(dout);
+        ws.give(vs);
+        ws.give(qs);
+        ws.give(ks);
+        ws.give(dvs);
+        ws.give(dqs);
+        ws.give(dks);
+        ws.give(dp);
+        ws.give(ds);
+        ws.give(dattn_cat);
         // RoPE backward = inverse rotation.
-        rope_apply(&mut dq, t, n_heads, d, cfg.rope_theta, true);
-        rope_apply(&mut dk, t, n_heads, d, cfg.rope_theta, true);
+        rope_apply_ws(&mut dq, t, n_heads, d, cfg.rope_theta, true, ws);
+        rope_apply_ws(&mut dk, t, n_heads, d, cfg.rope_theta, true, ws);
 
         // q = n1·Wqᵀ etc.
-        grads[idx.wq()].axpy(1.0, &gemm::matmul_tn(&dq, &lc.n1));
-        grads[idx.wk()].axpy(1.0, &gemm::matmul_tn(&dk, &lc.n1));
-        grads[idx.wv()].axpy(1.0, &gemm::matmul_tn(&dv, &lc.n1));
-        let mut dn1 = gemm::matmul(&dq, &self.params[idx.wq()].value);
-        dn1.axpy(1.0, &gemm::matmul(&dk, &self.params[idx.wk()].value));
-        dn1.axpy(1.0, &gemm::matmul(&dv, &self.params[idx.wv()].value));
+        gemm::matmul_tn_acc(&mut grads[idx.wq()], &dq, &lc.n1, 1.0, ws);
+        gemm::matmul_tn_acc(&mut grads[idx.wk()], &dk, &lc.n1, 1.0, ws);
+        gemm::matmul_tn_acc(&mut grads[idx.wv()], &dv, &lc.n1, 1.0, ws);
+        let mut dn1 = ws.take(bt, cfg.hidden); // zeroed: accumulated into
+        gemm::matmul_acc(&mut dn1, &dq, &self.params[idx.wq()].value, 1.0);
+        gemm::matmul_acc(&mut dn1, &dk, &self.params[idx.wk()].value, 1.0);
+        gemm::matmul_acc(&mut dn1, &dv, &self.params[idx.wv()].value, 1.0);
+        ws.give(dq);
+        ws.give(dk);
+        ws.give(dv);
         // RMSNorm #1
-        let (dx_in_norm, dgain1) = rmsnorm_backward(
+        let mut dx_in_norm = ws.take_dirty(bt, cfg.hidden);
+        rmsnorm_backward_acc(
             &lc.x_in,
             &lc.inv_rms1,
             &self.params[idx.attn_norm()].value,
             &dn1,
+            &mut dx_in_norm,
+            &mut grads[idx.attn_norm()],
         );
-        grads[idx.attn_norm()].axpy(1.0, &dgain1);
+        ws.give(dn1);
         // Residual.
-        dx_mid.add(&dx_in_norm)
+        dx_in_norm.axpy(1.0, &dx_mid);
+        ws.give(dx_mid);
+        lc.recycle(ws);
+        dx_in_norm
     }
 }
 
@@ -441,27 +694,39 @@ fn silu_grad(z: f32) -> f32 {
 }
 
 /// RMSNorm forward: y = x/rms(x) ⊙ g. Returns (y, inv_rms per row).
+/// (Allocating test harness around [`rmsnorm_forward_into`].)
+#[cfg(test)]
 fn rmsnorm_forward(x: &Matrix, gain: &Matrix) -> (Matrix, Vec<f32>) {
     let (rows, h) = x.shape();
-    debug_assert_eq!(gain.len(), h);
-    let g = gain.data();
     let mut y = Matrix::zeros(rows, h);
-    let mut inv = Vec::with_capacity(rows);
+    let mut inv = vec![0.0f32; rows];
+    rmsnorm_forward_into(x, gain, &mut y, &mut inv);
+    (y, inv)
+}
+
+/// Allocation-free RMSNorm forward into caller buffers.
+fn rmsnorm_forward_into(x: &Matrix, gain: &Matrix, y: &mut Matrix, inv: &mut [f32]) {
+    let (rows, h) = x.shape();
+    debug_assert_eq!(gain.len(), h);
+    debug_assert_eq!(y.shape(), (rows, h));
+    debug_assert_eq!(inv.len(), rows);
+    let g = gain.data();
     for i in 0..rows {
         let xr = x.row(i);
         let ms: f32 =
             (xr.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / h as f64) as f32;
         let r = 1.0 / (ms + RMS_EPS).sqrt();
-        inv.push(r);
+        inv[i] = r;
         let yr = y.row_mut(i);
         for j in 0..h {
             yr[j] = xr[j] * r * g[j];
         }
     }
-    (y, inv)
 }
 
 /// RMSNorm backward. Returns (dx, dgain). `inv_rms` from the forward pass.
+/// (Allocating test harness around [`rmsnorm_backward_acc`].)
+#[cfg(test)]
 fn rmsnorm_backward(
     x: &Matrix,
     inv_rms: &[f32],
@@ -469,10 +734,28 @@ fn rmsnorm_backward(
     dy: &Matrix,
 ) -> (Matrix, Matrix) {
     let (rows, h) = x.shape();
-    let g = gain.data();
     let mut dx = Matrix::zeros(rows, h);
     let mut dgain = Matrix::zeros(1, h);
-    let dg = dgain.data_mut();
+    rmsnorm_backward_acc(x, inv_rms, gain, dy, &mut dx, &mut dgain);
+    (dx, dgain)
+}
+
+/// Allocation-free RMSNorm backward: `dx` is overwritten, `dgain_acc` is
+/// accumulated into (so layer gradients can sum straight into the grad
+/// buffer).
+fn rmsnorm_backward_acc(
+    x: &Matrix,
+    inv_rms: &[f32],
+    gain: &Matrix,
+    dy: &Matrix,
+    dx: &mut Matrix,
+    dgain_acc: &mut Matrix,
+) {
+    let (rows, h) = x.shape();
+    debug_assert_eq!(dx.shape(), (rows, h));
+    debug_assert_eq!(dgain_acc.len(), h);
+    let g = gain.data();
+    let dg = dgain_acc.data_mut();
     for i in 0..rows {
         let xr = x.row(i);
         let dyr = dy.row(i);
@@ -489,21 +772,33 @@ fn rmsnorm_backward(
             dxr[j] = dyr[j] * g[j] * r - xr[j] * c;
         }
     }
-    (dx, dgain)
 }
 
 /// Apply (or invert, for backward) rotary position embeddings in place.
 /// Layout: row index = b·T + pos; within a row, head h occupies columns
 /// [h·d, (h+1)·d) and RoPE rotates pairs (2i, 2i+1).
-///
+#[cfg(test)]
+fn rope_apply(x: &mut Matrix, t: usize, n_heads: usize, d: usize, theta: f32, inverse: bool) {
+    rope_apply_ws(x, t, n_heads, d, theta, inverse, &mut Workspace::new());
+}
+
 /// The (cos, sin) table is position×(d/2) and identical across heads,
 /// layers and Q/K — computing it once per call (instead of `powf` +
 /// `sin_cos` per element) removes ~5% of the forward pass (perf log in
-/// EXPERIMENTS.md §Perf).
-fn rope_apply(x: &mut Matrix, t: usize, n_heads: usize, d: usize, theta: f32, inverse: bool) {
+/// EXPERIMENTS.md §Perf). The table buffer (cos/sin interleaved) is leased
+/// from the workspace so steady-state steps never allocate it.
+fn rope_apply_ws(
+    x: &mut Matrix,
+    t: usize,
+    n_heads: usize,
+    d: usize,
+    theta: f32,
+    inverse: bool,
+    ws: &mut Workspace,
+) {
     let half = d / 2;
-    // cos/sin per (pos, i).
-    let mut table = vec![(0.0f32, 0.0f32); t * half];
+    // cos/sin interleaved per (pos, i): table[2·(pos·half+i)] = cos, +1 = sin.
+    let mut table = ws.take_vec_dirty(2 * t * half);
     for pos in 0..t {
         for i in 0..half {
             let freq = 1.0 / theta.powf(2.0 * i as f32 / d as f32);
@@ -512,17 +807,20 @@ fn rope_apply(x: &mut Matrix, t: usize, n_heads: usize, d: usize, theta: f32, in
                 angle = -angle;
             }
             let (sin, cos) = angle.sin_cos();
-            table[pos * half + i] = (cos, sin);
+            table[2 * (pos * half + i)] = cos;
+            table[2 * (pos * half + i) + 1] = sin;
         }
     }
     let rows = x.rows();
     for row in 0..rows {
         let pos = row % t;
-        let trow = &table[pos * half..(pos + 1) * half];
+        let trow = &table[2 * pos * half..2 * (pos + 1) * half];
         let xr = x.row_mut(row);
         for h in 0..n_heads {
             let base = h * d;
-            for (i, &(cos, sin)) in trow.iter().enumerate() {
+            for i in 0..half {
+                let cos = trow[2 * i];
+                let sin = trow[2 * i + 1];
                 let a = xr[base + 2 * i];
                 let b = xr[base + 2 * i + 1];
                 xr[base + 2 * i] = a * cos - b * sin;
@@ -530,16 +828,17 @@ fn rope_apply(x: &mut Matrix, t: usize, n_heads: usize, d: usize, theta: f32, in
             }
         }
     }
+    ws.give_vec(table);
 }
 
-/// Copy the T×D block for (batch, head) out of a (B·T)×H matrix.
-fn slice_head(x: &Matrix, b: usize, h: usize, t: usize, d: usize) -> Matrix {
-    let mut out = Matrix::zeros(t, d);
+/// Copy the T×D block for (batch, head) out of a (B·T)×H matrix into an
+/// existing T×D buffer.
+fn slice_head_into(x: &Matrix, out: &mut Matrix, b: usize, h: usize, t: usize, d: usize) {
+    debug_assert_eq!(out.shape(), (t, d));
     for i in 0..t {
         let src = &x.row(b * t + i)[h * d..(h + 1) * d];
         out.row_mut(i).copy_from_slice(src);
     }
-    out
 }
 
 /// Write a T×D head block back into a (B·T)×H matrix.
@@ -563,16 +862,20 @@ fn causal_mask(scores: &mut Matrix) {
 /// Mean cross-entropy + dlogits. Targets of `u32::MAX` are ignored (padding).
 pub fn cross_entropy(logits: &Matrix, targets: &[u32]) -> (f32, Matrix) {
     let (rows, v) = logits.shape();
-    assert_eq!(rows, targets.len());
     let mut dlogits = Matrix::zeros(rows, v);
+    let loss = cross_entropy_into(logits, targets, &mut dlogits);
+    (loss, dlogits)
+}
+
+/// Allocation-free [`cross_entropy`]: `dlogits` is fully overwritten
+/// (padded rows to zero).
+pub fn cross_entropy_into(logits: &Matrix, targets: &[u32], dlogits: &mut Matrix) -> f32 {
+    let (rows, _) = logits.shape();
+    assert_eq!(rows, targets.len());
+    assert_eq!(dlogits.shape(), logits.shape(), "dlogits shape");
+    dlogits.data_mut().fill(0.0);
     let mut loss = 0.0f64;
-    let mut count = 0usize;
-    for i in 0..rows {
-        if targets[i] == u32::MAX {
-            continue;
-        }
-        count += 1;
-    }
+    let count = targets.iter().filter(|&&t| t != u32::MAX).count();
     let denom = count.max(1) as f32;
     for i in 0..rows {
         let tgt = targets[i];
@@ -593,7 +896,30 @@ pub fn cross_entropy(logits: &Matrix, targets: &[u32]) -> (f32, Matrix) {
             dr[j] = (p - if j == tgt as usize { 1.0 } else { 0.0 }) / denom;
         }
     }
-    ((loss / count.max(1) as f64) as f32, dlogits)
+    (loss / count.max(1) as f64) as f32
+}
+
+/// Loss-only cross entropy (eval path: no dlogits buffer needed).
+fn cross_entropy_loss(logits: &Matrix, targets: &[u32]) -> f32 {
+    let (rows, _) = logits.shape();
+    assert_eq!(rows, targets.len());
+    let mut loss = 0.0f64;
+    let count = targets.iter().filter(|&&t| t != u32::MAX).count();
+    for i in 0..rows {
+        let tgt = targets[i];
+        if tgt == u32::MAX {
+            continue;
+        }
+        let lr = logits.row(i);
+        let max = lr.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut sum = 0.0f64;
+        for &l in lr {
+            sum += ((l - max) as f64).exp();
+        }
+        let log_sum = (sum as f32).ln() + max;
+        loss += (log_sum - lr[tgt as usize]) as f64;
+    }
+    (loss / count.max(1) as f64) as f32
 }
 
 #[cfg(test)]
@@ -668,6 +994,32 @@ mod tests {
         }
     }
 
+    /// The workspace-backed path must agree with the allocating wrapper
+    /// bit-for-bit, including across repeated calls that reuse the pool and
+    /// the transpose cache.
+    #[test]
+    fn ws_path_matches_wrapper_and_is_stable() {
+        let model = Llama::new(ModelConfig::preset("tiny"), 13);
+        let batch = tiny_batch(&model.cfg, 14);
+        let (l1, g1) = model.loss_and_grad(&batch);
+        let mut state = StepState::new();
+        let mut grads = model.zero_grads();
+        let l2 = model.loss_and_grad_into(&batch, &mut grads, &mut state);
+        assert_eq!(l1, l2);
+        for (a, b) in g1.iter().zip(&grads) {
+            assert_eq!(a.data(), b.data());
+        }
+        // Second call through the same state: pooled buffers + cached
+        // transposes must not change anything.
+        let l3 = model.loss_and_grad_into(&batch, &mut grads, &mut state);
+        assert_eq!(l1, l3);
+        for (a, b) in g1.iter().zip(&grads) {
+            assert_eq!(a.data(), b.data());
+        }
+        // Loss-only path agrees too.
+        assert_eq!(model.loss(&batch), model.loss_ws(&batch, &mut state));
+    }
+
     #[test]
     fn cross_entropy_matches_manual() {
         // Two rows, V=3; uniform logits ⇒ loss = ln 3, dlogits = (1/3 − onehot)/2.
@@ -685,6 +1037,8 @@ mod tests {
         assert!((loss - 3f32.ln()).abs() < 1e-5);
         // Padded row contributes zero gradient.
         assert_eq!(dl.row(1), &[0.0, 0.0, 0.0]);
+        // Loss-only variant agrees with the full one.
+        assert_eq!(cross_entropy_loss(&logits, &[0, u32::MAX]), loss);
     }
 
     #[test]

@@ -8,4 +8,4 @@ pub mod llama;
 
 pub use classifier::Classifier;
 pub use config::ModelConfig;
-pub use llama::{cross_entropy, Batch, Llama};
+pub use llama::{cross_entropy, Batch, Llama, StepState};

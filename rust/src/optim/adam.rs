@@ -44,7 +44,24 @@ impl Moments {
     /// Standard Adam update: fold in `grad`, return the preconditioned update
     /// direction `m̂ ⊘ (√v̂ + ε)` (bias-corrected).
     pub fn update(&mut self, cfg: &AdamCfg, grad: &Matrix) -> Matrix {
+        let (rows, cols) = self.m.shape();
+        let mut out = Matrix::zeros(rows, cols);
+        self.update_into(cfg, grad, &mut out);
+        out
+    }
+
+    /// Allocation-free [`update`]: fold in `grad`, write the bias-corrected
+    /// direction into `out` (typically a workspace buffer).
+    ///
+    /// [`update`]: Moments::update
+    pub fn update_into(&mut self, cfg: &AdamCfg, grad: &Matrix, out: &mut Matrix) {
         debug_assert_eq!(self.m.shape(), grad.shape());
+        self.fold(cfg, grad);
+        self.direction_into(cfg, out);
+    }
+
+    /// Fold `grad` into the first/second moments (no direction computed).
+    fn fold(&mut self, cfg: &AdamCfg, grad: &Matrix) {
         self.t += 1;
         let b1 = cfg.beta1;
         let b2 = cfg.beta2;
@@ -57,15 +74,23 @@ impl Moments {
         for (v, &g) in vd.iter_mut().zip(gd) {
             *v = b2 * *v + (1.0 - b2) * g * g;
         }
-        self.direction(cfg)
     }
 
     /// Preconditioned direction from the current moments (bias-corrected).
     pub fn direction(&self, cfg: &AdamCfg) -> Matrix {
-        let bc1 = 1.0 - cfg.beta1.powi(self.t as i32);
-        let bc2 = 1.0 - cfg.beta2.powi(self.t as i32);
         let (rows, cols) = self.m.shape();
         let mut out = Matrix::zeros(rows, cols);
+        self.direction_into(cfg, &mut out);
+        out
+    }
+
+    /// Allocation-free [`direction`].
+    ///
+    /// [`direction`]: Moments::direction
+    pub fn direction_into(&self, cfg: &AdamCfg, out: &mut Matrix) {
+        assert_eq!(out.shape(), self.m.shape(), "direction shape");
+        let bc1 = 1.0 - cfg.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - cfg.beta2.powi(self.t as i32);
         let od = out.data_mut();
         let md = self.m.data();
         let vd = self.v.data();
@@ -74,7 +99,51 @@ impl Moments {
             let vhat = vd[i] / bc2;
             od[i] = mhat / (vhat.sqrt() + cfg.eps);
         }
-        out
+    }
+
+    /// Fused single-pass Adam(W) step: folds `grad` into m/v and applies the
+    /// bias-corrected preconditioned update (and decoupled decay) directly to
+    /// `param` — one sweep over memory, zero temporaries. Arithmetic is
+    /// element-for-element identical to `update` + `decay` + `axpy(-lr, ·)`,
+    /// so trajectories match the unfused path bit-for-bit.
+    ///
+    /// `weight_decay` is explicit (not read from `cfg`) because callers that
+    /// apply their own decay elsewhere pass 0 here.
+    pub fn fused_step(
+        &mut self,
+        cfg: &AdamCfg,
+        lr: f32,
+        weight_decay: f32,
+        param: &mut Matrix,
+        grad: &Matrix,
+    ) {
+        debug_assert_eq!(self.m.shape(), grad.shape());
+        debug_assert_eq!(param.shape(), grad.shape());
+        self.t += 1;
+        let b1 = cfg.beta1;
+        let b2 = cfg.beta2;
+        let bc1 = 1.0 - b1.powi(self.t as i32);
+        let bc2 = 1.0 - b2.powi(self.t as i32);
+        let decay = 1.0 - lr * weight_decay;
+        let md = self.m.data_mut();
+        let vd = self.v.data_mut();
+        let pd = param.data_mut();
+        let gd = grad.data();
+        for i in 0..gd.len() {
+            let g = gd[i];
+            let m = b1 * md[i] + (1.0 - b1) * g;
+            let v = b2 * vd[i] + (1.0 - b2) * g * g;
+            md[i] = m;
+            vd[i] = v;
+            let mhat = m / bc1;
+            let vhat = v / bc2;
+            let dir = mhat / (vhat.sqrt() + cfg.eps);
+            let mut p = pd[i];
+            if weight_decay > 0.0 {
+                p *= decay;
+            }
+            pd[i] = p + (-lr) * dir;
+        }
     }
 
     /// Unbias-corrected raw output M ⊘ √(V+ε) as written in the paper's
@@ -117,13 +186,9 @@ impl Optimizer for Adam {
         assert_eq!(params.len(), grads.len());
         self.ensure_states(params);
         for ((p, g), st) in params.iter_mut().zip(grads).zip(&mut self.states) {
-            let dir = st.update(&self.cfg, g);
-            if self.cfg.weight_decay > 0.0 {
-                // Decoupled (AdamW) decay.
-                let wd = self.cfg.weight_decay;
-                p.value.apply(|w| w * (1.0 - lr * wd));
-            }
-            p.value.axpy(-lr, &dir);
+            // Single fused m/v/param sweep (decoupled decay folded in).
+            st.fused_step(&self.cfg, lr, self.cfg.weight_decay, &mut p.value, g);
+            p.mark_dirty();
         }
     }
 
@@ -185,6 +250,29 @@ mod tests {
         // Pure decay: w = 1 * (1 - 0.1*0.1) = 0.99
         assert!((params[0].value.get(0, 0) - 0.99).abs() < 1e-5);
         assert_eq!(opt.name(), "AdamW");
+    }
+
+    #[test]
+    fn fused_step_matches_unfused() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(4);
+        let cfg = AdamCfg { weight_decay: 0.05, ..AdamCfg::default() };
+        let mut p_fused = Matrix::randn(6, 5, 1.0, &mut rng);
+        let mut p_ref = p_fused.clone();
+        let mut st_fused = Moments::new(6, 5);
+        let mut st_ref = Moments::new(6, 5);
+        let lr = 0.01;
+        for step in 0..5u64 {
+            let g = Matrix::randn(6, 5, 0.5, &mut Rng::new(100 + step));
+            st_fused.fused_step(&cfg, lr, cfg.weight_decay, &mut p_fused, &g);
+            // Reference: unfused update + decoupled decay + axpy.
+            let dir = st_ref.update(&cfg, &g);
+            p_ref.apply(|w| w * (1.0 - lr * cfg.weight_decay));
+            p_ref.axpy(-lr, &dir);
+        }
+        assert_eq!(p_fused.data(), p_ref.data(), "fused path must be bit-identical");
+        assert_eq!(st_fused.m.data(), st_ref.m.data());
+        assert_eq!(st_fused.v.data(), st_ref.v.data());
     }
 
     #[test]

@@ -83,7 +83,7 @@ impl Optimizer for Apollo {
                     let dir = st.moments.update(&self.adam, &g_low);
                     // Channel-wise scaling of the RAW gradient (no project-back).
                     let scaled = apply_channel_scale(&dir, &g_low, g, st.proj.side);
-                    params[i].value.axpy(-lr, &scaled);
+                    params[i].axpy_update(-lr, &scaled);
                 }
                 _ => {
                     if self.vecs[i].is_none() {
@@ -91,7 +91,7 @@ impl Optimizer for Apollo {
                     }
                     let st = self.vecs[i].as_mut().unwrap();
                     let dir = st.update(&self.adam, g);
-                    params[i].value.axpy(-lr, &dir);
+                    params[i].axpy_update(-lr, &dir);
                 }
             }
         }

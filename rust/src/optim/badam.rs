@@ -75,7 +75,7 @@ impl Optimizer for BAdam {
         }
         let st = self.state.as_mut().unwrap();
         let dir = st.update(&self.adam, g);
-        params[i].value.axpy(-lr, &dir);
+        params[i].axpy_update(-lr, &dir);
         self.step_no += 1;
     }
 

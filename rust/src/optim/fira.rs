@@ -11,7 +11,7 @@
 use super::adam::{AdamCfg, Moments};
 use super::projector::{Projector, Side};
 use super::{HyperParams, Optimizer, Param, ParamKind};
-use crate::tensor::Matrix;
+use crate::tensor::{Matrix, Workspace};
 
 struct MatState {
     proj: Projector,
@@ -29,6 +29,8 @@ pub struct Fira {
     n_subspace_updates: usize,
     /// Accumulated SVD refresh wall-time (seconds).
     pub svd_seconds: f64,
+    /// Per-step projection/recovery scratch (zero steady-state allocation).
+    ws: Workspace,
 }
 
 impl Fira {
@@ -41,6 +43,7 @@ impl Fira {
             step_no: 0,
             n_subspace_updates: 0,
             svd_seconds: 0.0,
+            ws: Workspace::new(),
         }
     }
 
@@ -52,35 +55,42 @@ impl Fira {
     }
 }
 
-/// Column/row-wise φ scaling of the residual — shared with SubTrack++'s
-/// recovery component (see `subtrack::scale_residual`; duplicated here in the
-/// baseline's own terms to keep the two methods independently auditable).
-fn fira_scale_residual(dir: &Matrix, g_low: &Matrix, resid: &Matrix, side: Side) -> Matrix {
+/// Column/row-wise φ scaling of the residual, in place — shared with
+/// SubTrack++'s recovery component (see `subtrack::scale_residual_inplace`;
+/// duplicated here in the baseline's own terms to keep the two methods
+/// independently auditable). φ scratch is leased from `ws`.
+fn fira_scale_residual(
+    dir: &Matrix,
+    g_low: &Matrix,
+    resid: &mut Matrix,
+    side: Side,
+    ws: &mut Workspace,
+) {
     match side {
         Side::Left => {
-            let num = dir.col_norms();
-            let den = g_low.col_norms();
-            let mut out = resid.clone();
-            for i in 0..out.rows() {
-                for (j, v) in out.row_mut(i).iter_mut().enumerate() {
+            let mut num = ws.take_vec_dirty(dir.cols());
+            let mut den = ws.take_vec_dirty(g_low.cols());
+            dir.col_norms_into(&mut num);
+            g_low.col_norms_into(&mut den);
+            for i in 0..resid.rows() {
+                for (j, v) in resid.row_mut(i).iter_mut().enumerate() {
                     let phi = if den[j] > 1e-30 { num[j] / den[j] } else { 0.0 };
                     *v *= phi;
                 }
             }
-            out
+            ws.give_vec(num);
+            ws.give_vec(den);
         }
         Side::Right => {
-            let mut out = resid.clone();
-            for i in 0..out.rows() {
+            for i in 0..resid.rows() {
                 let num = (dir.row(i).iter().map(|&x| (x as f64).powi(2)).sum::<f64>()).sqrt();
                 let den =
                     (g_low.row(i).iter().map(|&x| (x as f64).powi(2)).sum::<f64>()).sqrt();
                 let phi = if den > 1e-30 { (num / den) as f32 } else { 0.0 };
-                for v in out.row_mut(i) {
+                for v in resid.row_mut(i) {
                     *v *= phi;
                 }
             }
-            out
         }
     }
 }
@@ -113,13 +123,23 @@ impl Optimizer for Fira {
                         }
                     }
                     let zeta = self.hp.zeta;
-                    let st = self.mats[i].as_mut().unwrap();
-                    let g_low = st.proj.project(g);
-                    let dir = st.moments.update(&self.adam, &g_low);
-                    let mut delta = st.proj.project_back(&dir);
-                    // Recovery scaling + limiter.
-                    let resid = g.sub(&st.proj.project_back(&g_low));
-                    let mut lambda = fira_scale_residual(&dir, &g_low, &resid, st.proj.side);
+                    let adam = self.adam;
+                    let scale = self.hp.scale;
+                    // Disjoint borrows: scratch pool vs per-matrix state.
+                    let Fira { ws, mats, .. } = &mut *self;
+                    let st = mats[i].as_mut().expect("initialized above");
+                    let (lm, ln) = st.proj.lowrank_shape(m, n);
+                    let mut g_low = ws.take_dirty(lm, ln);
+                    st.proj.project_into(g, &mut g_low, ws);
+                    let mut dir = ws.take_dirty(lm, ln);
+                    st.moments.update_into(&adam, &g_low, &mut dir);
+                    let mut delta = ws.take_dirty(m, n);
+                    st.proj.project_back_into(&dir, &mut delta, ws);
+                    // Recovery scaling + limiter, all in workspace buffers.
+                    let mut lambda = ws.take_dirty(m, n);
+                    st.proj.project_back_into(&g_low, &mut lambda, ws); // S·G̃
+                    lambda.zip_assign(g, |back, gv| gv - back); // G − S·G̃
+                    fira_scale_residual(&dir, &g_low, &mut lambda, st.proj.side, ws);
                     let lnorm = lambda.fro_norm();
                     if st.prev_lambda_norm > 0.0 && lnorm > zeta * st.prev_lambda_norm {
                         let target = zeta * st.prev_lambda_norm;
@@ -129,15 +149,20 @@ impl Optimizer for Fira {
                         st.prev_lambda_norm = lnorm;
                     }
                     delta.axpy(1.0, &lambda);
-                    params[i].value.axpy(-lr * self.hp.scale, &delta);
+                    params[i].axpy_update(-lr * scale, &delta);
+                    ws.give(lambda);
+                    ws.give(delta);
+                    ws.give(dir);
+                    ws.give(g_low);
                 }
                 _ => {
                     if self.vecs[i].is_none() {
                         self.vecs[i] = Some(Moments::new(g.rows(), g.cols()));
                     }
+                    let adam = self.adam;
                     let st = self.vecs[i].as_mut().unwrap();
-                    let dir = st.update(&self.adam, g);
-                    params[i].value.axpy(-lr, &dir);
+                    st.fused_step(&adam, lr, 0.0, &mut params[i].value, g);
+                    params[i].mark_dirty();
                 }
             }
         }
@@ -160,6 +185,10 @@ impl Optimizer for Fira {
 
     fn subspace_updates(&self) -> usize {
         self.n_subspace_updates
+    }
+
+    fn workspace_misses(&self) -> usize {
+        self.ws.misses()
     }
 
     fn name(&self) -> String {

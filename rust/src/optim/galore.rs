@@ -9,7 +9,7 @@
 use super::adam::{AdamCfg, Moments};
 use super::projector::Projector;
 use super::{HyperParams, Optimizer, Param, ParamKind};
-use crate::tensor::Matrix;
+use crate::tensor::{Matrix, Workspace};
 
 struct MatState {
     proj: Projector,
@@ -26,6 +26,8 @@ pub struct GaLore {
     n_subspace_updates: usize,
     /// Accumulated wall-time spent in SVD projector refreshes (seconds).
     pub svd_seconds: f64,
+    /// Per-step projection scratch (zero steady-state allocation).
+    ws: Workspace,
 }
 
 impl GaLore {
@@ -38,6 +40,7 @@ impl GaLore {
             step_no: 0,
             n_subspace_updates: 0,
             svd_seconds: 0.0,
+            ws: Workspace::new(),
         }
     }
 
@@ -75,24 +78,35 @@ impl Optimizer for GaLore {
                             self.n_subspace_updates += 1;
                         }
                     }
-                    let st = self.mats[i].as_mut().unwrap();
-                    let g_low = st.proj.project(g);
-                    let dir = st.moments.update(&self.adam, &g_low);
-                    let delta = st.proj.project_back(&dir);
-                    params[i].value.axpy(-lr * self.hp.scale, &delta);
+                    let adam = self.adam;
+                    let scale = self.hp.scale;
+                    // Disjoint borrows: scratch pool vs per-matrix state.
+                    let GaLore { ws, mats, .. } = &mut *self;
+                    let st = mats[i].as_mut().expect("initialized above");
+                    let (lm, ln) = st.proj.lowrank_shape(m, n);
+                    let mut g_low = ws.take_dirty(lm, ln);
+                    st.proj.project_into(g, &mut g_low, ws);
+                    let mut dir = ws.take_dirty(lm, ln);
+                    st.moments.update_into(&adam, &g_low, &mut dir);
+                    let mut delta = ws.take_dirty(m, n);
+                    st.proj.project_back_into(&dir, &mut delta, ws);
+                    params[i].axpy_update(-lr * scale, &delta);
+                    ws.give(delta);
+                    ws.give(dir);
+                    ws.give(g_low);
                 }
                 _ => {
                     if self.vecs[i].is_none() {
                         self.vecs[i] = Some(Moments::new(g.rows(), g.cols()));
                     }
+                    let adam = self.adam;
                     let st = self.vecs[i].as_mut().unwrap();
-                    let dir = st.update(&self.adam, g);
-                    params[i].value.axpy(-lr, &dir);
+                    st.fused_step(&adam, lr, 0.0, &mut params[i].value, g);
+                    params[i].mark_dirty();
                 }
             }
             if self.adam.weight_decay > 0.0 {
-                let wd = self.adam.weight_decay;
-                params[i].value.apply(|w| w * (1.0 - lr * wd));
+                params[i].decay(1.0 - lr * self.adam.weight_decay);
             }
         }
         self.step_no += 1;
@@ -114,6 +128,10 @@ impl Optimizer for GaLore {
 
     fn subspace_updates(&self) -> usize {
         self.n_subspace_updates
+    }
+
+    fn workspace_misses(&self) -> usize {
+        self.ws.misses()
     }
 
     fn name(&self) -> String {

@@ -50,24 +50,111 @@ pub enum ParamKind {
 }
 
 /// A named trainable parameter.
+///
+/// The `version` counter backs the [`TransposeCache`] invalidation contract:
+/// every optimizer write must go through [`Param::axpy_update`] /
+/// [`Param::decay`] (or call [`Param::mark_dirty`] after mutating `value`
+/// directly) so cached `Wᵀ` copies are recomputed exactly when the weight
+/// changed.
 #[derive(Clone, Debug)]
 pub struct Param {
     pub name: String,
     pub value: Matrix,
     pub kind: ParamKind,
+    version: u64,
 }
 
 impl Param {
     pub fn matrix(name: &str, value: Matrix) -> Param {
-        Param { name: name.to_string(), value, kind: ParamKind::Matrix2D }
+        Param { name: name.to_string(), value, kind: ParamKind::Matrix2D, version: 0 }
     }
 
     pub fn vector(name: &str, value: Matrix) -> Param {
-        Param { name: name.to_string(), value, kind: ParamKind::Vector }
+        Param { name: name.to_string(), value, kind: ParamKind::Vector, version: 0 }
     }
 
     pub fn numel(&self) -> usize {
         self.value.len()
+    }
+
+    /// Monotone write counter (see [`TransposeCache`]).
+    #[inline]
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Record an out-of-band mutation of `value`.
+    #[inline]
+    pub fn mark_dirty(&mut self) {
+        self.version += 1;
+    }
+
+    /// `value += alpha · other`, bumping the version.
+    pub fn axpy_update(&mut self, alpha: f32, other: &Matrix) {
+        self.value.axpy(alpha, other);
+        self.version += 1;
+    }
+
+    /// `value *= factor` (decoupled weight decay), bumping the version.
+    pub fn decay(&mut self, factor: f32) {
+        self.value.scale_mut(factor);
+        self.version += 1;
+    }
+}
+
+/// Cached `Wᵀ` per parameter, invalidated by [`Param::version`].
+///
+/// The model's linears compute `x·Wᵀ`; materializing the transpose once per
+/// weight *update* instead of once per GEMM call removes an O(rows·cols)
+/// transpose from every layer of every step. Entries rebuild in place (the
+/// old buffer is reused when the shape matches), so steady-state steps with
+/// unchanged or optimizer-updated weights never allocate here after warmup.
+#[derive(Default)]
+pub struct TransposeCache {
+    entries: Vec<Option<(u64, Matrix)>>,
+    /// Number of transpose recomputations performed (diagnostics/tests).
+    recomputes: usize,
+}
+
+impl TransposeCache {
+    pub fn new() -> TransposeCache {
+        TransposeCache::default()
+    }
+
+    /// The cached transpose of `param.value`, recomputing iff the parameter
+    /// version changed since the last call for this `idx`.
+    pub fn get(&mut self, idx: usize, param: &Param) -> &Matrix {
+        if self.entries.len() <= idx {
+            self.entries.resize_with(idx + 1, || None);
+        }
+        let want_shape = (param.value.cols(), param.value.rows());
+        let fresh = matches!(
+            &self.entries[idx],
+            Some((ver, t)) if *ver == param.version() && t.shape() == want_shape
+        );
+        if !fresh {
+            self.recomputes += 1;
+            let mut buf = match self.entries[idx].take() {
+                Some((_, old)) if old.shape() == want_shape => old,
+                _ => Matrix::zeros(want_shape.0, want_shape.1),
+            };
+            param.value.transpose_into(&mut buf);
+            self.entries[idx] = Some((param.version(), buf));
+        }
+        match &self.entries[idx] {
+            Some((_, t)) => t,
+            None => unreachable!("entry populated above"),
+        }
+    }
+
+    /// Drop every cached transpose (use after wholesale parameter
+    /// replacement, e.g. checkpoint load into a live trainer).
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+
+    pub fn recomputes(&self) -> usize {
+        self.recomputes
     }
 }
 
@@ -127,6 +214,15 @@ pub trait Optimizer {
 
     /// How many subspace updates have been performed (diagnostics).
     fn subspace_updates(&self) -> usize {
+        0
+    }
+
+    /// Misses of the optimizer's internal scratch [`Workspace`] (0 for
+    /// optimizers that keep no per-step scratch). Steady-state steps must
+    /// not grow this — see `rust/tests/zero_alloc.rs`.
+    ///
+    /// [`Workspace`]: crate::tensor::Workspace
+    fn workspace_misses(&self) -> usize {
         0
     }
 
@@ -239,5 +335,33 @@ mod tests {
     #[should_panic(expected = "unknown optimizer")]
     fn factory_rejects_unknown() {
         let _ = by_name("sgd-9000", HyperParams::default());
+    }
+
+    #[test]
+    fn transpose_cache_invalidates_on_write() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(5);
+        let mut p = Param::matrix("w", Matrix::randn(4, 6, 1.0, &mut rng));
+        let mut tc = TransposeCache::new();
+        let t1 = tc.get(0, &p).clone();
+        assert_eq!(t1, p.value.t());
+        // Repeated reads with no write: served from cache.
+        let _ = tc.get(0, &p);
+        let _ = tc.get(0, &p);
+        assert_eq!(tc.recomputes(), 1);
+        // Optimizer-style write invalidates.
+        let delta = Matrix::full(4, 6, 1.0);
+        p.axpy_update(-0.5, &delta);
+        let t2 = tc.get(0, &p).clone();
+        assert_eq!(tc.recomputes(), 2);
+        assert_eq!(t2, p.value.t());
+        assert_ne!(t1, t2);
+        // decay() and mark_dirty() also bump.
+        let v = p.version();
+        p.decay(0.9);
+        p.mark_dirty();
+        assert_eq!(p.version(), v + 2);
+        let t3 = tc.get(0, &p).clone();
+        assert_eq!(t3, p.value.t());
     }
 }

@@ -106,7 +106,7 @@ impl Optimizer for OnlineSubspaceDescent {
                     let g_low = st.proj.project(g);
                     let dir = st.moments.update(&self.adam, &g_low);
                     let delta = st.proj.project_back(&dir);
-                    params[i].value.axpy(-lr * self.hp.scale, &delta);
+                    params[i].axpy_update(-lr * self.hp.scale, &delta);
                 }
                 _ => {
                     if self.vecs[i].is_none() {
@@ -114,7 +114,7 @@ impl Optimizer for OnlineSubspaceDescent {
                     }
                     let st = self.vecs[i].as_mut().unwrap();
                     let dir = st.update(&self.adam, g);
-                    params[i].value.axpy(-lr, &dir);
+                    params[i].axpy_update(-lr, &dir);
                 }
             }
         }

@@ -7,7 +7,7 @@
 //! This keeps the moment tensors at min(m,n-side) cost: mr + 2nr total
 //! optimizer state per matrix (Table 2).
 
-use crate::tensor::{gemm, svd, Matrix};
+use crate::tensor::{gemm, svd, Matrix, Workspace};
 use crate::util::rng::Rng;
 
 /// Which side of the gradient the subspace basis multiplies.
@@ -90,11 +90,33 @@ impl Projector {
         }
     }
 
+    /// Allocation-free [`project`]: writes G̃ into `out` (shape
+    /// [`lowrank_shape`]), leasing transpose scratch from `ws`.
+    ///
+    /// [`project`]: Projector::project
+    /// [`lowrank_shape`]: Projector::lowrank_shape
+    pub fn project_into(&self, g: &Matrix, out: &mut Matrix, ws: &mut Workspace) {
+        match self.side {
+            Side::Left => gemm::matmul_tn_into(out, &self.s, g, ws),
+            Side::Right => gemm::matmul_into(out, g, &self.s),
+        }
+    }
+
     /// Ĝ: map a low-rank update back to full size.
     pub fn project_back(&self, lowrank: &Matrix) -> Matrix {
         match self.side {
             Side::Left => gemm::matmul(&self.s, lowrank), // (m×r)·(r×n) = m×n
             Side::Right => gemm::matmul_nt(lowrank, &self.s), // (m×r)·(n×r)ᵀ = m×n
+        }
+    }
+
+    /// Allocation-free [`project_back`]: writes Ĝ into the full-size `out`.
+    ///
+    /// [`project_back`]: Projector::project_back
+    pub fn project_back_into(&self, lowrank: &Matrix, out: &mut Matrix, ws: &mut Workspace) {
+        match self.side {
+            Side::Left => gemm::matmul_into(out, &self.s, lowrank),
+            Side::Right => gemm::matmul_nt_into(out, lowrank, &self.s, ws),
         }
     }
 
@@ -208,11 +230,36 @@ mod tests {
                 let back = p.project_back(&p.project(g));
                 // ‖P(G)‖ ≤ ‖G‖ for an orthonormal projector.
                 if back.fro_norm() > g.fro_norm() * (1.0 + 1e-4) + 1e-5 {
-                    return Err(format!("projection expanded: {} > {}", back.fro_norm(), g.fro_norm()));
+                    return Err(format!(
+                        "projection expanded: {} > {}",
+                        back.fro_norm(),
+                        g.fro_norm()
+                    ));
                 }
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn into_variants_match_allocating_paths() {
+        let mut rng = Rng::new(39);
+        let mut ws = Workspace::new();
+        for (m, n) in [(10, 30), (30, 10)] {
+            let g = Matrix::randn(m, n, 1.0, &mut rng);
+            let p = Projector::init_svd(&g, 4);
+            let low = p.project(&g);
+            let (lm, ln) = p.lowrank_shape(m, n);
+            let mut low2 = ws.take(lm, ln);
+            p.project_into(&g, &mut low2, &mut ws);
+            assert_eq!(low.data(), low2.data(), "project_into diverged ({m}x{n})");
+            let back = p.project_back(&low);
+            let mut back2 = ws.take(m, n);
+            p.project_back_into(&low2, &mut back2, &mut ws);
+            assert_eq!(back.data(), back2.data(), "project_back_into diverged ({m}x{n})");
+            ws.give(low2);
+            ws.give(back2);
+        }
     }
 
     #[test]

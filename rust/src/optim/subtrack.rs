@@ -19,7 +19,7 @@
 use super::adam::{AdamCfg, Moments};
 use super::projector::{self, Projector, Side};
 use super::{HyperParams, Optimizer, Param, ParamKind};
-use crate::tensor::{gemm, qr, svd, Matrix};
+use crate::tensor::{gemm, qr, svd, Matrix, Workspace};
 use crate::util::rng::Rng;
 use std::time::Instant;
 
@@ -193,6 +193,9 @@ pub struct SubTrack {
     pub reorth_every: usize,
     /// Power-iteration sweeps for the rank-1 approximation.
     pub power_iters: usize,
+    /// Scratch pool for the per-step projection/recovery buffers — zero
+    /// steady-state allocation (see `tensor::workspace`).
+    ws: Workspace,
 }
 
 impl SubTrack {
@@ -209,6 +212,7 @@ impl SubTrack {
             breakdown: UpdateBreakdown::default(),
             reorth_every: 64,
             power_iters: 8,
+            ws: Workspace::new(),
         }
     }
 
@@ -219,9 +223,19 @@ impl SubTrack {
         }
     }
 
-    /// Advance one matrix parameter. Returns the full-size weight delta
-    /// (to be applied as W ← W − lr·delta).
-    fn step_matrix(&mut self, idx: usize, g: &Matrix, is_update_step: bool) -> Matrix {
+    /// Advance one matrix parameter, applying W ← W + lr_scaled·delta in
+    /// place (`lr_scaled` is −lr·α). All per-step buffers are leased from
+    /// the optimizer's workspace, so steady-state steps allocate nothing;
+    /// only the periodic geodesic subspace update (every k steps) builds
+    /// temporaries.
+    fn step_matrix(
+        &mut self,
+        idx: usize,
+        g: &Matrix,
+        is_update_step: bool,
+        param: &mut Param,
+        lr_scaled: f32,
+    ) {
         let (m, n) = g.shape();
         // Initialize on first touch: SVD of G₀ (Eq. 1).
         if self.mats[idx].is_none() {
@@ -238,10 +252,13 @@ impl SubTrack {
         let comps = self.comps;
         let adam = self.adam;
         let eta = self.hp.eta;
+        let zeta = self.hp.zeta;
         let power_iters = self.power_iters;
         let reorth_every = self.reorth_every;
         let mut rng = self.rng.split();
-        let st = self.mats[idx].as_mut().unwrap();
+        // Disjoint field borrows: scratch pool + per-matrix state + counters.
+        let SubTrack { ws, mats, breakdown, n_subspace_updates, .. } = self;
+        let st = mats[idx].as_mut().expect("initialized above");
 
         // ---- subspace update every k steps (not at step 0: S₀ is fresh) ----
         if is_update_step && st.moments.t > 0 {
@@ -260,12 +277,12 @@ impl SubTrack {
             if st.updates % reorth_every == 0 {
                 new_s = qr::reorthonormalize(&new_s);
             }
-            self.breakdown.lstsq += bd.lstsq;
-            self.breakdown.residual += bd.residual;
-            self.breakdown.tangent += bd.tangent;
-            self.breakdown.rank1 += bd.rank1;
-            self.breakdown.geodesic += bd.geodesic;
-            self.n_subspace_updates += 1;
+            breakdown.lstsq += bd.lstsq;
+            breakdown.residual += bd.residual;
+            breakdown.tangent += bd.tangent;
+            breakdown.rank1 += bd.rank1;
+            breakdown.geodesic += bd.geodesic;
+            *n_subspace_updates += 1;
 
             if comps.projection_aware {
                 // Q = SₜᵀSₜ₋₁ (r×r); rotate moments (Eqs. 8–9).
@@ -286,62 +303,79 @@ impl SubTrack {
             st.proj.s = new_s;
         }
 
-        // ---- low-rank Adam ----
-        let g_low = st.proj.project(g); // G̃ₜ
-        let dir = st.moments.update(&adam, &g_low); // G̃ᴼₜ (bias-corrected)
-        let mut delta = st.proj.project_back(&dir); // Ĝₜ
+        // ---- low-rank Adam (workspace-backed, allocation-free) ----
+        let (lm, ln) = st.proj.lowrank_shape(m, n);
+        let mut g_low = ws.take_dirty(lm, ln); // G̃ₜ
+        st.proj.project_into(g, &mut g_low, ws);
+        let mut dir = ws.take_dirty(lm, ln); // G̃ᴼₜ (bias-corrected)
+        st.moments.update_into(&adam, &g_low, &mut dir);
+        let mut delta = ws.take_dirty(m, n); // Ĝₜ
+        st.proj.project_back_into(&dir, &mut delta, ws);
 
         // ---- recovery scaling (Eqs. 10–12) ----
         if comps.recovery_scaling {
-            let resid = g.sub(&st.proj.project_back(&g_low)); // G − S·G̃
-            let mut lambda = scale_residual(&dir, &g_low, &resid, st.proj.side);
+            let mut lambda = ws.take_dirty(m, n);
+            st.proj.project_back_into(&g_low, &mut lambda, ws); // S·G̃
+            lambda.zip_assign(g, |back, gv| gv - back); // G − S·G̃
+            scale_residual_inplace(&dir, &g_low, &mut lambda, st.proj.side, ws);
             // ζ growth limiter.
             let lnorm = lambda.fro_norm();
-            if st.prev_lambda_norm > 0.0 && lnorm > self.hp.zeta * st.prev_lambda_norm {
-                let target = self.hp.zeta * st.prev_lambda_norm;
+            if st.prev_lambda_norm > 0.0 && lnorm > zeta * st.prev_lambda_norm {
+                let target = zeta * st.prev_lambda_norm;
                 lambda.scale_mut(target / lnorm);
                 st.prev_lambda_norm = target;
             } else {
                 st.prev_lambda_norm = lnorm;
             }
             delta.axpy(1.0, &lambda);
+            ws.give(lambda);
         }
 
-        delta
+        param.axpy_update(lr_scaled, &delta);
+        ws.give(delta);
+        ws.give(dir);
+        ws.give(g_low);
     }
 }
 
 /// Λ = φ(G)·(G − S·G̃): scale the discarded residual by the ratio of the
-/// optimizer-output column norm to the raw low-rank column norm (Eq. 11).
-/// "Columns" index the non-reduced axis: for Left projections G̃ is r×n and
-/// φ has n entries applied to residual columns; for Right projections G̃ is
-/// m×r and φ has m entries applied to residual rows.
-fn scale_residual(dir: &Matrix, g_low: &Matrix, resid: &Matrix, side: Side) -> Matrix {
+/// optimizer-output column norm to the raw low-rank column norm (Eq. 11),
+/// in place. "Columns" index the non-reduced axis: for Left projections G̃
+/// is r×n and φ has n entries applied to residual columns; for Right
+/// projections G̃ is m×r and φ has m entries applied to residual rows.
+/// The φ numerator/denominator scratch is leased from `ws`.
+fn scale_residual_inplace(
+    dir: &Matrix,
+    g_low: &Matrix,
+    resid: &mut Matrix,
+    side: Side,
+    ws: &mut Workspace,
+) {
     match side {
         Side::Left => {
-            let num = dir.col_norms();
-            let den = g_low.col_norms();
-            let mut out = resid.clone();
-            for i in 0..out.rows() {
-                let row = out.row_mut(i);
+            let mut num = ws.take_vec_dirty(dir.cols());
+            let mut den = ws.take_vec_dirty(g_low.cols());
+            dir.col_norms_into(&mut num);
+            g_low.col_norms_into(&mut den);
+            for i in 0..resid.rows() {
+                let row = resid.row_mut(i);
                 for (j, v) in row.iter_mut().enumerate() {
                     let phi = if den[j] > 1e-30 { num[j] / den[j] } else { 0.0 };
                     *v *= phi;
                 }
             }
-            out
+            ws.give_vec(num);
+            ws.give_vec(den);
         }
         Side::Right => {
-            let mut out = resid.clone();
-            for i in 0..out.rows() {
+            for i in 0..resid.rows() {
                 let num = row_norm(dir, i);
                 let den = row_norm(g_low, i);
                 let phi = if den > 1e-30 { num / den } else { 0.0 };
-                for v in out.row_mut(i) {
+                for v in resid.row_mut(i) {
                     *v *= phi;
                 }
             }
-            out
         }
     }
 }
@@ -355,28 +389,28 @@ impl Optimizer for SubTrack {
         assert_eq!(params.len(), grads.len());
         self.ensure_slots(params.len());
         let is_update_step = self.hp.interval > 0 && self.step_no % self.hp.interval == 0;
+        let adam = self.adam;
+        let scale = self.hp.scale;
         for i in 0..params.len() {
             let g = &grads[i];
             match params[i].kind {
                 ParamKind::Matrix2D if g.rows() > 1 && g.cols() > 1 => {
-                    let delta = self.step_matrix(i, g, is_update_step);
                     // GaLore-style scale α on the whole low-rank update.
-                    params[i].value.axpy(-lr * self.hp.scale, &delta);
+                    self.step_matrix(i, g, is_update_step, &mut params[i], -lr * scale);
                 }
                 _ => {
-                    // Full-rank Adam path for 1-D params.
+                    // Full-rank Adam path for 1-D params (fused, no temps).
                     if self.vecs[i].is_none() {
                         self.vecs[i] =
                             Some(VecState { moments: Moments::new(g.rows(), g.cols()) });
                     }
                     let st = self.vecs[i].as_mut().unwrap();
-                    let dir = st.moments.update(&self.adam, g);
-                    params[i].value.axpy(-lr, &dir);
+                    st.moments.fused_step(&adam, lr, 0.0, &mut params[i].value, g);
+                    params[i].mark_dirty();
                 }
             }
-            if self.adam.weight_decay > 0.0 {
-                let wd = self.adam.weight_decay;
-                params[i].value.apply(|w| w * (1.0 - lr * wd));
+            if adam.weight_decay > 0.0 {
+                params[i].decay(1.0 - lr * adam.weight_decay);
             }
         }
         self.step_no += 1;
@@ -406,6 +440,10 @@ impl Optimizer for SubTrack {
 
     fn subspace_updates(&self) -> usize {
         self.n_subspace_updates
+    }
+
+    fn workspace_misses(&self) -> usize {
+        self.ws.misses()
     }
 
     fn name(&self) -> String {

@@ -1,29 +1,114 @@
 //! Cache-blocked GEMM in all transpose variants.
 //!
-//! Row-major, single-threaded (the sandbox exposes one core). The `ikj` loop
-//! order streams both B-rows and C-rows sequentially, which autovectorizes
-//! well; blocking keeps the working set inside L2. The transpose variants
-//! avoid materializing Aᵀ/Bᵀ — the subspace math (SᵀG, R·Aᵀ, SₜᵀSₜ₋₁) is
-//! dominated by these.
+//! Row-major. The `ikj` loop order streams both B-rows and C-rows
+//! sequentially, which autovectorizes well; blocking keeps the working set
+//! inside L2. The transpose variants avoid materializing Aᵀ/Bᵀ on small
+//! shapes — the subspace math (SᵀG, R·Aᵀ, SₜᵀSₜ₋₁) is dominated by these.
+//!
+//! Two step-loop-oriented extensions on top of the out-of-place API:
+//!
+//! * **`_into` / `_acc` variants** write into caller-provided buffers
+//!   (typically leased from a [`Workspace`]) so steady-state training steps
+//!   perform no heap allocation. The transpose variants borrow their Aᵀ/Bᵀ
+//!   scratch from the workspace too.
+//! * **Row-block threading**: `matmul_acc` splits C's rows across
+//!   `std::thread::scope` workers (no external deps). Each row of C is
+//!   computed by exactly one worker with the identical single-thread kernel,
+//!   so results are **bit-identical** for any worker count. Auto mode
+//!   threads only above [`PAR_FLOPS`] and degrades to the single-core path
+//!   when `available_parallelism() == 1`; `set_gemm_threads` forces a count
+//!   (used by the DP worker plumbing in `train::parallel` and by tests).
 
 use super::matrix::Matrix;
+use super::workspace::Workspace;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Tile edge for the k-dimension blocking.
 const KC: usize = 256;
 /// Tile edge for the m-dimension blocking.
 const MC: usize = 64;
 
+/// FLOP count (2·m·k·n) below which auto mode stays single-threaded: forking
+/// scoped threads costs tens of microseconds, which only pays off once the
+/// kernel itself runs for a comparable time.
+pub const PAR_FLOPS: usize = 1 << 21;
+
+/// 0 = auto (size-gated `available_parallelism`), otherwise a forced count.
+static GEMM_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// Set inside data-parallel worker threads: the cores are already taken
+    /// by sibling workers, so nested GEMM forking would only oversubscribe.
+    static FORCE_SINGLE: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// Force the GEMM worker count (0 restores auto). Threading is bit-exact, so
+/// this only affects speed, never results.
+pub fn set_gemm_threads(n: usize) {
+    GEMM_THREADS.store(n, Ordering::Relaxed);
+}
+
+/// Run `f` with GEMM threading disabled on *this* thread (results are
+/// bit-identical either way). Used by data-parallel workers, which already
+/// occupy one core each — nested forking would oversubscribe the machine.
+pub fn run_single_threaded<R>(f: impl FnOnce() -> R) -> R {
+    let prev = FORCE_SINGLE.with(|c| c.replace(true));
+    let r = f();
+    FORCE_SINGLE.with(|c| c.set(prev));
+    r
+}
+
+/// The worker count GEMM (and the data-parallel trainer plumbing) will use:
+/// the forced count if set, else `available_parallelism`.
+pub fn gemm_threads() -> usize {
+    let forced = GEMM_THREADS.load(Ordering::Relaxed);
+    if forced > 0 {
+        forced
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+}
+
+/// Workers for one m×k×n product: 1 inside [`run_single_threaded`] or when
+/// forced to 1, when auto-mode work is below [`PAR_FLOPS`], or when only one
+/// core is available; never more than m.
+fn plan_threads(m: usize, k: usize, n: usize) -> usize {
+    if FORCE_SINGLE.with(|c| c.get()) {
+        return 1;
+    }
+    let forced = GEMM_THREADS.load(Ordering::Relaxed);
+    let cap = if forced > 0 {
+        forced
+    } else {
+        let flops = 2usize.saturating_mul(m).saturating_mul(k).saturating_mul(n);
+        if flops < PAR_FLOPS {
+            return 1;
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    };
+    cap.min(m).max(1)
+}
+
 /// C = A·B. Shapes: (m×k)·(k×n) → m×n.
 pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
-    let (m, k) = a.shape();
-    let (k2, n) = b.shape();
-    assert_eq!(k, k2, "matmul inner dims: {k} vs {k2}");
+    let (m, _) = a.shape();
+    let (_, n) = b.shape();
     let mut c = Matrix::zeros(m, n);
     matmul_acc(&mut c, a, b, 1.0);
     c
 }
 
-/// C += alpha · A·B, in place.
+/// C = A·B into a caller-provided buffer (shape-checked, overwritten).
+pub fn matmul_into(c: &mut Matrix, a: &Matrix, b: &Matrix) {
+    let (m, k) = a.shape();
+    let (k2, n) = b.shape();
+    assert_eq!(k, k2, "matmul inner dims: {k} vs {k2}");
+    assert_eq!(c.shape(), (m, n), "matmul output shape");
+    c.data_mut().fill(0.0);
+    matmul_acc(c, a, b, 1.0);
+}
+
+/// C += alpha · A·B, in place. Parallel across row blocks of C.
 pub fn matmul_acc(c: &mut Matrix, a: &Matrix, b: &Matrix, alpha: f32) {
     let (m, k) = a.shape();
     let (k2, n) = b.shape();
@@ -32,8 +117,46 @@ pub fn matmul_acc(c: &mut Matrix, a: &Matrix, b: &Matrix, alpha: f32) {
     let ad = a.data();
     let bd = b.data();
     let cd = c.data_mut();
-    for i0 in (0..m).step_by(MC) {
-        let i1 = (i0 + MC).min(m);
+    let threads = plan_threads(m, k, n);
+    if threads <= 1 {
+        matmul_acc_rows(cd, ad, bd, m, k, n, alpha);
+        return;
+    }
+    let rows_per = m.div_ceil(threads);
+    std::thread::scope(|scope| {
+        let mut cd_rest: &mut [f32] = cd;
+        let mut ad_rest: &[f32] = ad;
+        let mut left = m;
+        while left > 0 {
+            let rows = rows_per.min(left);
+            let (c_chunk, c_next) = std::mem::take(&mut cd_rest).split_at_mut(rows * n);
+            let (a_chunk, a_next) = ad_rest.split_at(rows * k);
+            cd_rest = c_next;
+            ad_rest = a_next;
+            left -= rows;
+            if left == 0 {
+                // Last chunk runs on the calling thread: one fork fewer.
+                matmul_acc_rows(c_chunk, a_chunk, bd, rows, k, n, alpha);
+            } else {
+                scope.spawn(move || matmul_acc_rows(c_chunk, a_chunk, bd, rows, k, n, alpha));
+            }
+        }
+    });
+}
+
+/// The single-thread kernel over a contiguous row block: `cd` is `rows`×n,
+/// `ad` is `rows`×k, `bd` the full k×n B.
+fn matmul_acc_rows(
+    cd: &mut [f32],
+    ad: &[f32],
+    bd: &[f32],
+    rows: usize,
+    k: usize,
+    n: usize,
+    alpha: f32,
+) {
+    for i0 in (0..rows).step_by(MC) {
+        let i1 = (i0 + MC).min(rows);
         for p0 in (0..k).step_by(KC) {
             let p1 = (p0 + KC).min(k);
             // 2×4 register blocking: two C rows share each streamed B row,
@@ -90,7 +213,9 @@ pub fn matmul_acc(c: &mut Matrix, a: &Matrix, b: &Matrix, alpha: f32) {
                 }
                 i += 2;
             }
-            // Remainder row.
+            // Remainder row. No `av == 0` shortcut: a zero A entry must still
+            // multiply B so NaN/Inf in B propagates into C (grad_clip relies
+            // on non-finite values surfacing, not being silently dropped).
             while i < i1 {
                 let arow = &ad[i * k..(i + 1) * k];
                 let crow = &mut cd[i * n..(i + 1) * n];
@@ -113,11 +238,9 @@ pub fn matmul_acc(c: &mut Matrix, a: &Matrix, b: &Matrix, alpha: f32) {
                 }
                 while p < p1 {
                     let av = alpha * arow[p];
-                    if av != 0.0 {
-                        let brow = &bd[p * n..(p + 1) * n];
-                        for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
-                            *cv += av * bv;
-                        }
+                    let brow = &bd[p * n..(p + 1) * n];
+                    for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                        *cv += av * bv;
                     }
                     p += 1;
                 }
@@ -133,26 +256,49 @@ pub fn matmul_acc(c: &mut Matrix, a: &Matrix, b: &Matrix, alpha: f32) {
 /// register-blocked `matmul` kernel — the strided A[p,i] access pattern of
 /// the direct form caps out well below it.
 pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
+    let (_, m) = a.shape();
+    let (_, n) = b.shape();
+    let mut c = Matrix::zeros(m, n);
+    matmul_tn_acc(&mut c, a, b, 1.0, &mut Workspace::new());
+    c
+}
+
+/// C = Aᵀ·B into a caller-provided buffer; Aᵀ scratch leased from `ws`.
+pub fn matmul_tn_into(c: &mut Matrix, a: &Matrix, b: &Matrix, ws: &mut Workspace) {
     let (k, m) = a.shape();
     let (k2, n) = b.shape();
     assert_eq!(k, k2, "matmul_tn inner dims: {k} vs {k2}");
+    assert_eq!(c.shape(), (m, n), "matmul_tn output shape");
+    c.data_mut().fill(0.0);
+    matmul_tn_acc(c, a, b, 1.0, ws);
+}
+
+/// C += alpha · Aᵀ·B, in place; Aᵀ scratch leased from `ws`.
+pub fn matmul_tn_acc(c: &mut Matrix, a: &Matrix, b: &Matrix, alpha: f32, ws: &mut Workspace) {
+    let (k, m) = a.shape();
+    let (k2, n) = b.shape();
+    assert_eq!(k, k2, "matmul_tn inner dims: {k} vs {k2}");
+    assert_eq!(c.shape(), (m, n), "matmul_tn output shape");
     if m * n >= 32 * 32 {
-        return matmul(&a.t(), b);
+        // Dirty lease: transpose_into writes every element.
+        let mut at = ws.take_dirty(m, k);
+        a.transpose_into(&mut at);
+        matmul_acc(c, &at, b, alpha);
+        ws.give(at);
+        return;
     }
-    let mut c = Matrix::zeros(m, n);
     let ad = a.data();
     let bd = b.data();
     let cd = c.data_mut();
-    // C[i,:] += A[p,i] * B[p,:]  — stream both A and B rows.
+    // C[i,:] += alpha · A[p,i] · B[p,:] — stream both A and B rows. Zero A
+    // entries are NOT skipped so non-finite B values propagate.
     for p0 in (0..k).step_by(KC) {
         let p1 = (p0 + KC).min(k);
         for p in p0..p1 {
             let arow = &ad[p * m..(p + 1) * m];
             let brow = &bd[p * n..(p + 1) * n];
             for (i, &av) in arow.iter().enumerate() {
-                if av == 0.0 {
-                    continue;
-                }
+                let av = alpha * av;
                 let crow = &mut cd[i * n..(i + 1) * n];
                 for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
                     *cv += av * bv;
@@ -160,7 +306,6 @@ pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
             }
         }
     }
-    c
 }
 
 /// C = A·Bᵀ. Shapes: (m×k)·(n×k)ᵀ → m×n. B is stored n×k (not transposed).
@@ -171,13 +316,27 @@ pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
 /// ~20 GFLOPS — a 4× win on the model's `x·Wᵀ` linears. The crossover lives
 /// around 32² work; below it the transpose overhead dominates.
 pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
+    let (m, _) = a.shape();
+    let (n, _) = b.shape();
+    let mut c = Matrix::zeros(m, n);
+    matmul_nt_into(&mut c, a, b, &mut Workspace::new());
+    c
+}
+
+/// C = A·Bᵀ into a caller-provided buffer; Bᵀ scratch leased from `ws`.
+pub fn matmul_nt_into(c: &mut Matrix, a: &Matrix, b: &Matrix, ws: &mut Workspace) {
     let (m, k) = a.shape();
     let (n, k2) = b.shape();
     assert_eq!(k, k2, "matmul_nt inner dims: {k} vs {k2}");
+    assert_eq!(c.shape(), (m, n), "matmul_nt output shape");
     if m * n >= 32 * 32 {
-        return matmul(a, &b.t());
+        // Dirty lease: transpose_into writes every element.
+        let mut bt = ws.take_dirty(k, n);
+        b.transpose_into(&mut bt);
+        matmul_into(c, a, &bt);
+        ws.give(bt);
+        return;
     }
-    let mut c = Matrix::zeros(m, n);
     let ad = a.data();
     let bd = b.data();
     let cd = c.data_mut();
@@ -190,32 +349,35 @@ pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
             *cv = arow.iter().zip(brow).map(|(&x, &y)| x * y).sum();
         }
     }
-    c
 }
 
 /// y = A·x (matrix-vector).
 pub fn matvec(a: &Matrix, x: &[f32]) -> Vec<f32> {
-    let (m, k) = a.shape();
-    assert_eq!(k, x.len(), "matvec dims");
-    let ad = a.data();
-    (0..m)
-        .map(|i| {
-            let row = &ad[i * k..(i + 1) * k];
-            row.iter().zip(x).map(|(&a, &b)| a * b).sum()
-        })
-        .collect()
+    let mut y = vec![0.0f32; a.rows()];
+    matvec_into(&mut y, a, x);
+    y
 }
 
-/// y = Aᵀ·x (A stored m×k, result length k).
+/// y = A·x into a caller-provided slice of length `a.rows()`.
+pub fn matvec_into(y: &mut [f32], a: &Matrix, x: &[f32]) {
+    let (m, k) = a.shape();
+    assert_eq!(k, x.len(), "matvec dims");
+    assert_eq!(m, y.len(), "matvec output len");
+    let ad = a.data();
+    for (i, yv) in y.iter_mut().enumerate() {
+        let row = &ad[i * k..(i + 1) * k];
+        *yv = row.iter().zip(x).map(|(&a, &b)| a * b).sum();
+    }
+}
+
+/// y = Aᵀ·x (A stored m×k, result length k). Zero x entries are not skipped
+/// (NaN/Inf rows of A must propagate).
 pub fn matvec_t(a: &Matrix, x: &[f32]) -> Vec<f32> {
     let (m, k) = a.shape();
     assert_eq!(m, x.len(), "matvec_t dims");
     let mut y = vec![0.0f32; k];
     let ad = a.data();
     for (i, &xv) in x.iter().enumerate() {
-        if xv == 0.0 {
-            continue;
-        }
         let row = &ad[i * k..(i + 1) * k];
         for (yv, &av) in y.iter_mut().zip(row.iter()) {
             *yv += xv * av;
@@ -265,6 +427,7 @@ mod tests {
 
     #[test]
     fn property_matches_naive_all_variants() {
+        let mut ws = Workspace::new();
         proptest::check(
             42,
             60,
@@ -276,13 +439,74 @@ mod tests {
                 (a, b)
             },
             |(a, b)| {
+                let (m, _) = a.shape();
+                let (_, n) = b.shape();
                 let want = naive(a, b);
                 proptest::close(matmul(a, b).data(), want.data(), 1e-4, 1e-4)?;
                 proptest::close(matmul_tn(&a.t(), b).data(), want.data(), 1e-4, 1e-4)?;
                 proptest::close(matmul_nt(a, &b.t()).data(), want.data(), 1e-4, 1e-4)?;
+                // _into variants, through a shared workspace with dirty
+                // buffers (the _into contract is overwrite, not accumulate).
+                let mut c = ws.take(m, n);
+                c.data_mut().fill(7.5);
+                matmul_into(&mut c, a, b);
+                proptest::close(c.data(), want.data(), 1e-4, 1e-4)?;
+                c.data_mut().fill(-3.25);
+                matmul_tn_into(&mut c, &a.t(), b, &mut ws);
+                proptest::close(c.data(), want.data(), 1e-4, 1e-4)?;
+                c.data_mut().fill(0.125);
+                matmul_nt_into(&mut c, a, &b.t(), &mut ws);
+                proptest::close(c.data(), want.data(), 1e-4, 1e-4)?;
+                // Accumulating transpose variant: C += 2·AᵀB on top of ones.
+                let mut acc = ws.take(m, n);
+                acc.data_mut().fill(1.0);
+                matmul_tn_acc(&mut acc, &a.t(), b, 2.0, &mut ws);
+                let want_acc = want.scale(2.0).map(|v| v + 1.0);
+                proptest::close(acc.data(), want_acc.data(), 1e-3, 1e-3)?;
+                ws.give(acc);
+                ws.give(c);
+                // matvec_into matches matvec.
+                let x: Vec<f32> = (0..a.cols()).map(|i| (i as f32) * 0.25 - 1.0).collect();
+                let y1 = matvec(a, &x);
+                let mut y2 = vec![9.0f32; a.rows()];
+                matvec_into(&mut y2, a, &x);
+                proptest::close(&y1, &y2, 1e-6, 1e-6)?;
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn threaded_matmul_bit_identical() {
+        // Every row of C is computed by exactly one worker running the same
+        // scalar kernel, so any thread count must be bit-identical.
+        let mut rng = Rng::new(77);
+        let a = Matrix::randn(101, 64, 1.0, &mut rng);
+        let b = Matrix::randn(64, 53, 1.0, &mut rng);
+        set_gemm_threads(1);
+        let c1 = matmul(&a, &b);
+        for threads in [2usize, 4] {
+            set_gemm_threads(threads);
+            let ct = matmul(&a, &b);
+            assert_eq!(
+                c1.data(),
+                ct.data(),
+                "threads={threads} diverged from single-thread"
+            );
+        }
+        set_gemm_threads(0);
+    }
+
+    #[test]
+    fn threaded_degenerate_and_tiny_shapes() {
+        set_gemm_threads(4);
+        let a = Matrix::zeros(0, 3);
+        let b = Matrix::zeros(3, 2);
+        assert_eq!(matmul(&a, &b).shape(), (0, 2));
+        let a1 = Matrix::from_rows(&[&[2.0]]);
+        let b1 = Matrix::from_rows(&[&[3.0]]);
+        assert_eq!(matmul(&a1, &b1).data(), &[6.0]);
+        set_gemm_threads(0);
     }
 
     #[test]
@@ -311,5 +535,73 @@ mod tests {
         let a1 = Matrix::from_rows(&[&[2.0]]);
         let b1 = Matrix::from_rows(&[&[3.0]]);
         assert_eq!(matmul(&a1, &b1).data(), &[6.0]);
+    }
+
+    #[test]
+    fn degenerate_shapes_into_variants() {
+        let mut ws = Workspace::new();
+        // 0×k · k×n and m×k · k×0 through every _into variant.
+        let a = ws.take(0, 3);
+        let b = ws.take(3, 2);
+        let mut c = ws.take(0, 2);
+        matmul_into(&mut c, &a, &b);
+        matmul_tn_into(&mut c, &Matrix::zeros(3, 0), &b, &mut ws);
+        let mut c2 = ws.take(4, 0);
+        matmul_nt_into(&mut c2, &Matrix::zeros(4, 3), &Matrix::zeros(0, 3), &mut ws);
+        assert_eq!(c2.shape(), (4, 0));
+        let mut y: Vec<f32> = Vec::new();
+        matvec_into(&mut y, &Matrix::zeros(0, 3), &[1.0, 2.0, 3.0]);
+        ws.give(a);
+        ws.give(b);
+        ws.give(c);
+        ws.give(c2);
+    }
+
+    #[test]
+    fn nonfinite_values_propagate() {
+        // A NaN in B must reach C even when the matching A entry is zero —
+        // the old kernels skipped `av == 0` terms and silently swallowed it.
+        let k = 5;
+        // matmul remainder-row path: a single row, NaN at B's remainder index.
+        let mut a = Matrix::zeros(1, k);
+        a.set(0, 4, 0.0);
+        a.set(0, 0, 1.0);
+        let mut b = Matrix::full(k, 2, 1.0);
+        b.set(4, 0, f32::NAN);
+        let c = matmul(&a, &b);
+        assert!(c.get(0, 0).is_nan(), "matmul dropped NaN behind a zero weight");
+        // matmul_tn small path.
+        let mut at = Matrix::zeros(k, 1);
+        at.set(0, 0, 1.0); // A[4,0] = 0 stays zero
+        let c = matmul_tn(&at, &b);
+        assert!(c.get(0, 0).is_nan(), "matmul_tn dropped NaN behind a zero weight");
+        // matvec_t with a zero x entry against a NaN row of A.
+        let mut m = Matrix::full(2, 3, 1.0);
+        m.set(1, 1, f32::NAN);
+        let y = matvec_t(&m, &[1.0, 0.0]);
+        assert!(y[1].is_nan(), "matvec_t dropped NaN behind a zero x entry");
+        // Inf propagates the same way (0·Inf is NaN, so use a nonzero weight).
+        a.set(0, 4, 2.0);
+        b.set(4, 0, f32::INFINITY);
+        let c = matmul(&a, &b);
+        assert!(c.get(0, 0).is_infinite());
+    }
+
+    #[test]
+    fn workspace_scratch_reuse_in_transpose_variants() {
+        // The Aᵀ/Bᵀ scratch leased inside matmul_tn_into / matmul_nt_into
+        // must come back to the pool: repeated calls add no misses.
+        let mut rng = Rng::new(9);
+        let a = Matrix::randn(40, 48, 1.0, &mut rng);
+        let b = Matrix::randn(40, 36, 1.0, &mut rng);
+        let mut ws = Workspace::new();
+        let mut c = ws.take(48, 36);
+        matmul_tn_into(&mut c, &a, &b, &mut ws);
+        let misses = ws.misses();
+        for _ in 0..3 {
+            matmul_tn_into(&mut c, &a, &b, &mut ws);
+        }
+        assert_eq!(ws.misses(), misses, "steady-state tn_into allocated");
+        ws.give(c);
     }
 }

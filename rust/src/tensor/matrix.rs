@@ -123,7 +123,18 @@ impl Matrix {
     /// Transposed copy.
     pub fn t(&self) -> Matrix {
         let mut out = Matrix::zeros(self.cols, self.rows);
-        // Blocked transpose for cache friendliness.
+        self.transpose_into(&mut out);
+        out
+    }
+
+    /// Transpose into an existing `cols`×`rows` buffer (blocked for cache
+    /// friendliness; every output entry is written).
+    pub fn transpose_into(&self, out: &mut Matrix) {
+        assert_eq!(
+            out.shape(),
+            (self.cols, self.rows),
+            "transpose_into output shape"
+        );
         const B: usize = 32;
         for ib in (0..self.rows).step_by(B) {
             for jb in (0..self.cols).step_by(B) {
@@ -134,7 +145,17 @@ impl Matrix {
                 }
             }
         }
-        out
+    }
+
+    /// Consume the matrix, releasing its backing buffer (workspace recycling).
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Overwrite `self` with the contents of a same-shaped matrix.
+    pub fn copy_from(&mut self, src: &Matrix) {
+        assert_eq!(self.shape(), src.shape(), "shape mismatch");
+        self.data.copy_from_slice(&src.data);
     }
 
     /// Frobenius norm.
@@ -194,6 +215,24 @@ impl Matrix {
         }
     }
 
+    /// Element-wise combine into an existing same-shaped buffer
+    /// (allocation-free `zip`).
+    pub fn zip_into(&self, other: &Matrix, out: &mut Matrix, f: impl Fn(f32, f32) -> f32) {
+        assert_eq!(self.shape(), other.shape(), "shape mismatch");
+        assert_eq!(self.shape(), out.shape(), "shape mismatch");
+        for ((o, &a), &b) in out.data.iter_mut().zip(&self.data).zip(&other.data) {
+            *o = f(a, b);
+        }
+    }
+
+    /// In-place element-wise combine: `self[i] = f(self[i], other[i])`.
+    pub fn zip_assign(&mut self, other: &Matrix, f: impl Fn(f32, f32) -> f32) {
+        assert_eq!(self.shape(), other.shape(), "shape mismatch");
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a = f(*a, b);
+        }
+    }
+
     /// In-place `self += alpha * other` (axpy).
     pub fn axpy(&mut self, alpha: f32, other: &Matrix) {
         assert_eq!(self.shape(), other.shape(), "shape mismatch");
@@ -235,6 +274,18 @@ impl Matrix {
             idx2 += self.cols;
         }
         acc
+    }
+
+    /// Euclidean norms of each column written into `out` (len = cols).
+    /// Matches [`col_norms`] bit-for-bit: `col_dot` accumulates rows in the
+    /// same order, in f64.
+    ///
+    /// [`col_norms`]: Matrix::col_norms
+    pub fn col_norms_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.cols, "col_norms_into length");
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = self.col_dot(j, j).sqrt() as f32;
+        }
     }
 
     /// Euclidean norms of each column.
@@ -317,6 +368,41 @@ mod tests {
         let t = m.take_cols(2);
         assert_eq!(t.shape(), (2, 2));
         assert_eq!(t.data(), &[1.0, 2.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn transpose_into_matches_t() {
+        let mut rng = Rng::new(8);
+        let m = Matrix::randn(13, 37, 1.0, &mut rng);
+        let mut out = Matrix::full(37, 13, 9.0);
+        m.transpose_into(&mut out);
+        assert_eq!(out, m.t());
+        let back = out.into_vec();
+        assert_eq!(back.len(), 13 * 37);
+    }
+
+    #[test]
+    fn zip_into_and_assign() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0]]);
+        let b = Matrix::from_rows(&[&[3.0, -1.0]]);
+        let mut out = Matrix::full(1, 2, 5.0);
+        a.zip_into(&b, &mut out, |x, y| x * y);
+        assert_eq!(out.data(), &[3.0, -2.0]);
+        out.zip_assign(&a, |o, x| o + x);
+        assert_eq!(out.data(), &[4.0, 0.0]);
+        let mut c = Matrix::zeros(1, 2);
+        c.copy_from(&a);
+        assert_eq!(c.data(), a.data());
+    }
+
+    #[test]
+    fn col_norms_into_matches_col_norms() {
+        let mut rng = Rng::new(9);
+        let m = Matrix::randn(11, 7, 1.0, &mut rng);
+        let want = m.col_norms();
+        let mut got = vec![0.0f32; 7];
+        m.col_norms_into(&mut got);
+        assert_eq!(want, got);
     }
 
     #[test]

@@ -7,13 +7,54 @@
 //!
 //! The paper's subspace math operates per-gradient-matrix (m×n with rank
 //! r ≪ m ≤ n), so all routines are tuned for tall-skinny / short-fat shapes
-//! in the few-hundreds range running on a single CPU core.
+//! in the few-hundreds range.
+//!
+//! # Step-loop architecture: workspaces, `_into` kernels, threading
+//!
+//! The training hot path (forward → backward → optimizer) is built to
+//! perform **zero matrix-buffer allocation in steady state** (a handful of
+//! small pointer-sized `Vec` containers — layer-cache lists, attention-prob
+//! vectors — still allocate per step) and to use every core:
+//!
+//! * **Workspace ownership.** A [`Workspace`] is a pool of reusable buffers
+//!   keyed by element count. Each long-lived driver owns exactly one: the
+//!   trainer's `StepState` (shared by `Llama::forward_hidden_ws` /
+//!   `backward_hidden_ws`), and each low-rank optimizer (SubTrack++,
+//!   GaLore, Fira) owns a private one for its projection / recovery
+//!   buffers. Every buffer `take`n during a step is `give`n back before the
+//!   step ends, so from step 2 onward the pool serves all requests without
+//!   touching the allocator (asserted by `rust/tests/zero_alloc.rs`). The
+//!   GEMM `_into`/`_acc` variants ([`gemm::matmul_into`],
+//!   [`gemm::matmul_tn_acc`], …) write into caller-provided buffers and
+//!   lease their Aᵀ/Bᵀ scratch from the same pool.
+//!
+//! * **Transpose-cache invalidation.** The model's linears compute `x·Wᵀ`;
+//!   the `optim::TransposeCache` keeps one materialized `Wᵀ` per parameter
+//!   so the O(h²) transpose is paid once per *weight update*, not once per
+//!   layer per step. Correctness contract: every `Param` carries a version
+//!   counter, every optimizer write goes through `Param::axpy_update` /
+//!   `Param::decay` / `Param::mark_dirty` (which bump it), and the cache
+//!   recomputes an entry iff its recorded version differs. Code that
+//!   mutates `param.value` directly without bumping must never share a
+//!   `TransposeCache` across the mutation (the allocating `Llama::loss` /
+//!   `loss_and_grad` wrappers build a fresh cache per call for exactly this
+//!   reason — finite-difference tests poke weights directly).
+//!
+//! * **Threading.** [`gemm::matmul_acc`] splits C's rows across scoped
+//!   threads; each row is computed by the identical scalar kernel, so
+//!   results are bit-identical for any worker count, and auto mode degrades
+//!   to the single-core path for small products or single-core hosts.
+//!   QR ([`qr`]) and the SVD power iteration ([`svd`]) remain
+//!   single-threaded — they run once per subspace refresh, off the
+//!   steady-state path (tracked in ROADMAP.md "Open items").
 
 pub mod gemm;
 pub mod matrix;
 pub mod ops;
 pub mod qr;
 pub mod svd;
+pub mod workspace;
 
 pub use matrix::Matrix;
 pub use svd::{power_iteration_top1, thin_svd, Svd};
+pub use workspace::Workspace;

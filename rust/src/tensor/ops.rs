@@ -40,6 +40,23 @@ pub fn clip_global_norm(grads: &mut [&mut Matrix], max_norm: f32) -> f32 {
     norm
 }
 
+/// [`clip_global_norm`] over an owned gradient slice — the trainer's
+/// hot-path form, avoiding the per-step `Vec<&mut Matrix>` of references.
+pub fn clip_global_norm_slice(grads: &mut [Matrix], max_norm: f32) -> f32 {
+    let total: f64 = grads
+        .iter()
+        .map(|g| g.data().iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>())
+        .sum();
+    let norm = total.sqrt() as f32;
+    if norm > max_norm && norm > 0.0 {
+        let scale = max_norm / norm;
+        for g in grads.iter_mut() {
+            g.scale_mut(scale);
+        }
+    }
+    norm
+}
+
 /// Mean of a slice.
 pub fn mean(xs: &[f32]) -> f32 {
     if xs.is_empty() {
@@ -83,6 +100,21 @@ mod tests {
         assert!((pre - 5.0).abs() < 1e-6);
         let post = ((a.fro_norm().powi(2) + b.fro_norm().powi(2))).sqrt();
         assert!((post - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn clip_slice_matches_ref_form() {
+        let mut a1 = Matrix::from_rows(&[&[3.0, 0.0]]);
+        let mut b1 = Matrix::from_rows(&[&[0.0, 4.0]]);
+        let pre_ref = clip_global_norm(&mut [&mut a1, &mut b1], 1.0);
+        let mut owned = vec![
+            Matrix::from_rows(&[&[3.0, 0.0]]),
+            Matrix::from_rows(&[&[0.0, 4.0]]),
+        ];
+        let pre_slice = clip_global_norm_slice(&mut owned, 1.0);
+        assert_eq!(pre_ref, pre_slice);
+        assert_eq!(owned[0].data(), a1.data());
+        assert_eq!(owned[1].data(), b1.data());
     }
 
     #[test]

@@ -1,0 +1,202 @@
+//! Reusable scratch-buffer arena for the allocation-free hot path.
+//!
+//! A [`Workspace`] hands out reusable buffers keyed by *element count* (not
+//! shape), so a buffer released as 512×128 can be re-issued as 128×512 — the
+//! forward/backward pass and the optimizer projection paths cycle through a
+//! fixed set of sizes every step, and after the first (warm-up) step every
+//! `take` is a pool hit. The hit/miss counters make that property testable:
+//! steady-state training steps must add **zero** misses (see
+//! `rust/tests/zero_alloc.rs`).
+//!
+//! Ownership protocol: `take` transfers ownership of a buffer to the caller;
+//! the caller returns it with `give` when done. Buffers that are *not*
+//! returned are simply dropped (correct, but they cost a fresh allocation —
+//! a miss — the next time that size is requested). Zero-length requests are
+//! served without touching the pool or the counters: `Vec::new()` does not
+//! allocate, so degenerate 0-dim shapes can never cause steady-state misses.
+
+use super::matrix::Matrix;
+use std::collections::HashMap;
+
+/// A pool of reusable `f32` buffers keyed by length.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    pools: HashMap<usize, Vec<Vec<f32>>>,
+    hits: usize,
+    misses: usize,
+    /// Total f32 elements ever allocated by this workspace (high-water cost).
+    allocated: usize,
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace::default()
+    }
+
+    /// Take a zeroed `rows`×`cols` matrix from the pool (allocating on miss).
+    pub fn take(&mut self, rows: usize, cols: usize) -> Matrix {
+        Matrix::from_vec(rows, cols, self.take_vec(rows * cols))
+    }
+
+    /// Take a `rows`×`cols` matrix with **unspecified contents** (stale data
+    /// from a previous lease). Only for callers that fully overwrite every
+    /// element before reading — skipping the zero-fill saves a full memory
+    /// sweep per lease on the hot path. Accumulation targets must use
+    /// [`take`] instead.
+    ///
+    /// [`take`]: Workspace::take
+    pub fn take_dirty(&mut self, rows: usize, cols: usize) -> Matrix {
+        Matrix::from_vec(rows, cols, self.take_vec_dirty(rows * cols))
+    }
+
+    /// Take a zeroed buffer of `len` f32s from the pool (allocating on miss).
+    pub fn take_vec(&mut self, len: usize) -> Vec<f32> {
+        let mut v = self.take_vec_dirty(len);
+        v.fill(0.0);
+        v
+    }
+
+    /// [`take_vec`] without the zero-fill: contents are unspecified; the
+    /// caller must write every element before reading.
+    ///
+    /// [`take_vec`]: Workspace::take_vec
+    pub fn take_vec_dirty(&mut self, len: usize) -> Vec<f32> {
+        if len == 0 {
+            return Vec::new();
+        }
+        match self.pools.get_mut(&len).and_then(|p| p.pop()) {
+            Some(v) => {
+                self.hits += 1;
+                v
+            }
+            None => {
+                self.misses += 1;
+                self.allocated += len;
+                vec![0.0; len]
+            }
+        }
+    }
+
+    /// Return a matrix's buffer to the pool.
+    pub fn give(&mut self, m: Matrix) {
+        self.give_vec(m.into_vec());
+    }
+
+    /// Return a raw buffer to the pool.
+    pub fn give_vec(&mut self, v: Vec<f32>) {
+        if v.is_empty() {
+            return;
+        }
+        self.pools.entry(v.len()).or_default().push(v);
+    }
+
+    /// Pool hits since construction (or the last [`reset_counters`]).
+    ///
+    /// [`reset_counters`]: Workspace::reset_counters
+    pub fn hits(&self) -> usize {
+        self.hits
+    }
+
+    /// Pool misses (fresh allocations) since construction / counter reset.
+    pub fn misses(&self) -> usize {
+        self.misses
+    }
+
+    /// Total f32 elements this workspace has ever allocated.
+    pub fn allocated_elems(&self) -> usize {
+        self.allocated
+    }
+
+    pub fn reset_counters(&mut self) {
+        self.hits = 0;
+        self.misses = 0;
+    }
+
+    /// Drop every pooled buffer (keeps counters).
+    pub fn clear(&mut self) {
+        self.pools.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reuse_is_a_hit() {
+        let mut ws = Workspace::new();
+        let m = ws.take(3, 4);
+        assert_eq!(ws.misses(), 1);
+        ws.give(m);
+        let m2 = ws.take(3, 4);
+        assert_eq!((ws.hits(), ws.misses()), (1, 1));
+        assert!(m2.data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn mismatched_shapes_share_buffers_by_numel() {
+        let mut ws = Workspace::new();
+        let mut m = ws.take(3, 4);
+        m.set(2, 1, 7.0);
+        ws.give(m);
+        // Same element count, different shape: must be a hit, and zeroed.
+        let m2 = ws.take(4, 3);
+        assert_eq!(m2.shape(), (4, 3));
+        assert_eq!((ws.hits(), ws.misses()), (1, 1));
+        assert!(m2.data().iter().all(|&v| v == 0.0));
+        ws.give(m2);
+        // Different element count: a miss.
+        let m3 = ws.take(5, 5);
+        assert_eq!((ws.hits(), ws.misses()), (1, 2));
+        ws.give(m3);
+    }
+
+    #[test]
+    fn dirty_take_skips_the_zero_fill() {
+        let mut ws = Workspace::new();
+        let mut m = ws.take_dirty(2, 3);
+        m.data_mut().fill(4.5);
+        ws.give(m);
+        // Dirty lease: stale contents survive (hit counted as usual).
+        let m2 = ws.take_dirty(2, 3);
+        assert_eq!((ws.hits(), ws.misses()), (1, 1));
+        assert!(m2.data().iter().all(|&v| v == 4.5));
+        ws.give(m2);
+        // Zeroed lease of the same buffer wipes it.
+        let m3 = ws.take(3, 2);
+        assert!(m3.data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn zero_len_never_counts() {
+        let mut ws = Workspace::new();
+        let a = ws.take(0, 7);
+        let b = ws.take(3, 0);
+        assert_eq!(a.shape(), (0, 7));
+        assert_eq!(b.shape(), (3, 0));
+        ws.give(a);
+        ws.give(b);
+        let _ = ws.take(0, 0);
+        assert_eq!((ws.hits(), ws.misses()), (0, 0));
+        assert_eq!(ws.allocated_elems(), 0);
+    }
+
+    #[test]
+    fn steady_state_has_no_misses() {
+        let mut ws = Workspace::new();
+        // Simulate three "steps", each cycling the same set of shapes.
+        let mut misses_after_first = 0;
+        for step in 0..3 {
+            let a = ws.take(8, 16);
+            let b = ws.take(16, 4);
+            let c = ws.take(8, 4);
+            ws.give(a);
+            ws.give(b);
+            ws.give(c);
+            if step == 0 {
+                misses_after_first = ws.misses();
+            }
+        }
+        assert_eq!(ws.misses(), misses_after_first, "steady state must not allocate");
+    }
+}

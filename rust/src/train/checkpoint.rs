@@ -90,6 +90,8 @@ pub fn load(path: impl AsRef<Path>, params: &mut [Param]) -> std::io::Result<usi
             *v = f32::from_le_bytes(buf[off..off + 4].try_into().unwrap());
             off += 4;
         }
+        // Invalidate any cached transposes of the overwritten weights.
+        p.mark_dirty();
     }
     Ok(step)
 }

@@ -10,6 +10,14 @@
 use crate::model::{Batch, Llama};
 use crate::tensor::Matrix;
 
+/// Default data-parallel worker count: the same plumbing the GEMM row-block
+/// threading uses (a forced `gemm::set_gemm_threads` count if set, otherwise
+/// `available_parallelism`). `TrainConfig::workers == 0` resolves through
+/// this, so one knob governs both levels of parallelism.
+pub fn auto_workers() -> usize {
+    crate::tensor::gemm::gemm_threads()
+}
+
 /// Split a batch into `n` contiguous shards (last shard may be smaller;
 /// empty shards are dropped).
 pub fn shard_batch(batch: &Batch, n: usize) -> Vec<Batch> {
@@ -44,8 +52,12 @@ pub fn data_parallel_loss_grad(
             .iter()
             .map(|shard| {
                 scope.spawn(move || {
-                    let (loss, grads) = model.loss_and_grad(shard);
-                    (loss, grads, shard.tokens())
+                    // Each worker owns one core; nested GEMM forking would
+                    // only oversubscribe (results are identical either way).
+                    crate::tensor::gemm::run_single_threaded(|| {
+                        let (loss, grads) = model.loss_and_grad(shard);
+                        (loss, grads, shard.tokens())
+                    })
                 })
             })
             .collect();

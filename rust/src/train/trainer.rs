@@ -10,7 +10,7 @@
 //! Layer 3.
 
 use crate::data::{Corpus, CorpusKind};
-use crate::model::{Batch, Llama, ModelConfig};
+use crate::model::{Batch, Llama, ModelConfig, StepState};
 use crate::optim::{self, HyperParams, Optimizer};
 use crate::tensor::ops;
 use crate::train::metrics::{MetricsLog, TrainReport};
@@ -85,7 +85,8 @@ impl TrainConfig {
     pub fn from_config(cfg: &Config) -> TrainConfig {
         let model_name = cfg.str("model.preset", "small");
         let steps = cfg.int("train.steps", 400) as usize;
-        let mut tc = TrainConfig::preset(&model_name, &cfg.str("optim.method", "subtrack++"), steps);
+        let method = cfg.str("optim.method", "subtrack++");
+        let mut tc = TrainConfig::preset(&model_name, &method, steps);
         tc.model.hidden = cfg.int("model.hidden", tc.model.hidden as i64) as usize;
         tc.model.layers = cfg.int("model.layers", tc.model.layers as i64) as usize;
         tc.model.vocab = cfg.int("model.vocab", tc.model.vocab as i64) as usize;
@@ -118,6 +119,9 @@ pub struct Trainer {
     pub corpus: Corpus,
     pub engine: EngineSel,
     pub metrics: MetricsLog,
+    /// Persistent step-loop state (workspace + transpose cache): the native
+    /// engine's forward/backward allocates no buffers after the first step.
+    pub state: StepState,
 }
 
 impl Trainer {
@@ -135,6 +139,7 @@ impl Trainer {
             corpus,
             engine: EngineSel::Native,
             metrics: MetricsLog::new(),
+            state: StepState::new(),
         }
     }
 
@@ -144,16 +149,33 @@ impl Trainer {
         self
     }
 
-    fn compute_loss_grad(&mut self, batch: &Batch) -> anyhow::Result<(f32, Vec<crate::tensor::Matrix>)> {
+    /// Loss + gradients for one batch. On the native single-worker path the
+    /// gradients are written into the caller's persistent buffers
+    /// (allocation-free steady state); the DP and PJRT paths replace them.
+    fn compute_loss_grad(
+        &mut self,
+        batch: &Batch,
+        grads: &mut Vec<crate::tensor::Matrix>,
+    ) -> anyhow::Result<f32> {
+        // workers == 0 means "auto": reuse the GEMM worker-count plumbing.
+        let workers =
+            if self.cfg.workers == 0 { parallel::auto_workers() } else { self.cfg.workers };
         match &mut self.engine {
             EngineSel::Native => {
-                if self.cfg.workers > 1 {
-                    Ok(parallel::data_parallel_loss_grad(&self.model, batch, self.cfg.workers))
+                if workers > 1 {
+                    let (loss, g) =
+                        parallel::data_parallel_loss_grad(&self.model, batch, workers);
+                    *grads = g;
+                    Ok(loss)
                 } else {
-                    Ok(self.model.loss_and_grad(batch))
+                    Ok(self.model.loss_and_grad_into(batch, grads, &mut self.state))
                 }
             }
-            EngineSel::Pjrt(engine) => engine.loss_and_grad(&self.model.params, batch),
+            EngineSel::Pjrt(engine) => {
+                let (loss, g) = engine.loss_and_grad(&self.model.params, batch)?;
+                *grads = g;
+                Ok(loss)
+            }
         }
     }
 
@@ -165,7 +187,7 @@ impl Trainer {
         for i in 0..self.cfg.eval_batches {
             let batch = shifted_eval_batch(&self.corpus, b, t, i);
             let loss = match &mut self.engine {
-                EngineSel::Native => self.model.loss(&batch),
+                EngineSel::Native => self.model.loss_ws(&batch, &mut self.state),
                 EngineSel::Pjrt(engine) => engine.loss(&self.model.params, &batch)?,
             };
             total += loss as f64;
@@ -178,12 +200,13 @@ impl Trainer {
     pub fn run(&mut self) -> anyhow::Result<TrainReport> {
         let schedule = LrSchedule::new(self.cfg.lr, self.cfg.warmup_steps, self.cfg.steps);
         let (b, t) = (self.cfg.batch_size, self.cfg.model.seq_len);
+        // Gradient buffers persist across steps (zero-allocation hot path).
+        let mut grads = self.model.zero_grads();
         for step in 0..self.cfg.steps {
             let batch = self.corpus.sample_batch(b, t);
-            let (loss, mut grads) = self.compute_loss_grad(&batch)?;
+            let loss = self.compute_loss_grad(&batch, &mut grads)?;
             if self.cfg.grad_clip > 0.0 {
-                let mut refs: Vec<&mut crate::tensor::Matrix> = grads.iter_mut().collect();
-                ops::clip_global_norm(&mut refs, self.cfg.grad_clip);
+                ops::clip_global_norm_slice(&mut grads, self.cfg.grad_clip);
             }
             let lr = schedule.at(step);
             self.opt.step(lr, &mut self.model.params, &grads);

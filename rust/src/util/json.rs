@@ -52,6 +52,7 @@ impl Json {
     }
 
     /// Serialize to a compact JSON string.
+    #[allow(clippy::inherent_to_string)] // adding Display would shadow-trap future `{}` formatting
     pub fn to_string(&self) -> String {
         let mut s = String::new();
         self.write(&mut s);
@@ -109,6 +110,52 @@ impl Json {
             return Err(format!("trailing data at byte {}", p.pos));
         }
         Ok(v)
+    }
+}
+
+/// Read-modify-write helper for cross-run JSON ledgers (e.g.
+/// `BENCH_gemm.json`): parse the file at `path` (treating a missing or
+/// corrupt file as `{}`), set `key` → `value` at the top level, write back.
+pub fn merge_into_file(path: &str, key: &str, value: Json) -> std::io::Result<()> {
+    let mut root = read_root_object(path);
+    if let Json::Obj(map) = &mut root {
+        map.insert(key.to_string(), value);
+    }
+    std::fs::write(path, root.to_string())
+}
+
+/// Like [`merge_into_file`], but `value` (an object) is merged entry-by-entry
+/// into the existing object under `key` instead of replacing it — so e.g.
+/// per-preset profile records accumulate across runs.
+pub fn merge_section_into_file(path: &str, key: &str, value: Json) -> std::io::Result<()> {
+    let mut root = read_root_object(path);
+    if let Json::Obj(map) = &mut root {
+        let mut section = match map.remove(key) {
+            Some(Json::Obj(m)) => m,
+            _ => BTreeMap::new(),
+        };
+        match value {
+            Json::Obj(new) => section.extend(new),
+            other => {
+                map.insert(key.to_string(), other);
+                return std::fs::write(path, root.to_string());
+            }
+        }
+        map.insert(key.to_string(), Json::Obj(section));
+    }
+    std::fs::write(path, root.to_string())
+}
+
+/// The file's top-level object, or `{}` when missing/corrupt/non-object.
+fn read_root_object(path: &str) -> Json {
+    let root = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|text| Json::parse(&text).ok())
+        .unwrap_or_else(|| Json::Obj(BTreeMap::new()));
+    if matches!(root, Json::Obj(_)) {
+        root
+    } else {
+        Json::Obj(BTreeMap::new())
     }
 }
 
@@ -347,5 +394,36 @@ mod tests {
     fn unicode_escape() {
         let j = Json::parse(r#""Aé""#).unwrap();
         assert_eq!(j.as_str(), Some("Aé"));
+    }
+
+    #[test]
+    fn merge_helpers_accumulate_a_ledger() {
+        let dir = std::env::temp_dir().join(format!("subtrack_json_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ledger.json");
+        let path = path.to_str().unwrap();
+        let _ = std::fs::remove_file(path);
+        // Missing file behaves as {}.
+        merge_into_file(path, "gemm", Json::obj(vec![("gflops", Json::Num(3.0))])).unwrap();
+        // Replacing one key preserves the other.
+        merge_section_into_file(path, "profile", Json::obj(vec![("small", Json::Num(1.0))]))
+            .unwrap();
+        merge_section_into_file(path, "profile", Json::obj(vec![("med", Json::Num(2.0))]))
+            .unwrap();
+        let root = Json::parse(&std::fs::read_to_string(path).unwrap()).unwrap();
+        assert_eq!(
+            root.get("gemm").and_then(|g| g.get("gflops")).and_then(Json::as_f64),
+            Some(3.0)
+        );
+        // Section entries accumulated instead of replacing each other.
+        assert_eq!(
+            root.get("profile").and_then(|p| p.get("small")).and_then(Json::as_f64),
+            Some(1.0)
+        );
+        assert_eq!(
+            root.get("profile").and_then(|p| p.get("med")).and_then(Json::as_f64),
+            Some(2.0)
+        );
+        let _ = std::fs::remove_file(path);
     }
 }

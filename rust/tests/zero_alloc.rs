@@ -1,0 +1,95 @@
+//! The zero-allocation acceptance gate for the native training step.
+//!
+//! A steady-state step (after the first, warm-up step) must allocate zero
+//! matrix/vector *buffers* across forward, backward, and the optimizer
+//! update (small Vec-of-pointer containers are exempt). The observable
+//! proxy is workspace cache misses: every buffer the hot path uses is
+//! leased from a `Workspace`, so a steady-state buffer allocation shows up
+//! as a miss. Three consecutive steps are driven; misses may only occur on
+//! step 1.
+
+use subtrack::model::{Batch, Llama, ModelConfig, StepState};
+use subtrack::optim::{self, Adam, AdamCfg, HyperParams, Optimizer};
+use subtrack::util::rng::Rng;
+
+fn batch_for(cfg: &ModelConfig, b: usize, seed: u64) -> Batch {
+    let mut rng = Rng::new(seed);
+    let t = cfg.seq_len;
+    let inputs: Vec<u32> = (0..b * t).map(|_| rng.below(cfg.vocab) as u32).collect();
+    let targets: Vec<u32> = (0..b * t).map(|_| rng.below(cfg.vocab) as u32).collect();
+    Batch { inputs, targets, b, t }
+}
+
+/// Drive 3 full native steps with the given optimizer; return the
+/// (model-ws misses, optimizer-ws misses) observed after each step.
+fn misses_per_step(opt: &mut dyn Optimizer, steps: usize) -> Vec<(usize, usize)> {
+    let cfg = ModelConfig::preset("tiny");
+    let mut model = Llama::new(cfg.clone(), 5);
+    let batch = batch_for(&cfg, 4, 6);
+    let mut state = StepState::new();
+    let mut grads = model.zero_grads();
+    let mut out = Vec::new();
+    for _ in 0..steps {
+        let loss = model.loss_and_grad_into(&batch, &mut grads, &mut state);
+        assert!(loss.is_finite());
+        opt.step(1e-3, &mut model.params, &grads);
+        out.push((state.ws.misses(), opt.workspace_misses()));
+    }
+    out
+}
+
+#[test]
+fn adam_step_is_allocation_free_after_warmup() {
+    let mut opt = Adam::new(AdamCfg::default());
+    let misses = misses_per_step(&mut opt, 3);
+    assert!(misses[0].0 > 0, "warm-up step must populate the pool");
+    assert_eq!(
+        misses[0], misses[1],
+        "step 2 added workspace misses: {misses:?}"
+    );
+    assert_eq!(
+        misses[1], misses[2],
+        "step 3 added workspace misses: {misses:?}"
+    );
+    // Fused Adam keeps no per-step scratch at all.
+    assert_eq!(opt.workspace_misses(), 0);
+}
+
+#[test]
+fn subtrack_step_is_allocation_free_after_warmup() {
+    // Interval beyond the horizon: the periodic geodesic update (which may
+    // allocate) stays out of the steady-state window under test.
+    let hp = HyperParams { rank: 4, interval: 100, scale: 1.0, ..HyperParams::default() };
+    let mut opt = optim::by_name("subtrack++", hp);
+    let misses = misses_per_step(opt.as_mut(), 3);
+    assert!(misses[0].0 > 0 && misses[0].1 > 0, "warm-up must populate both pools");
+    assert_eq!(misses[0], misses[1], "step 2 allocated: {misses:?}");
+    assert_eq!(misses[1], misses[2], "step 3 allocated: {misses:?}");
+}
+
+#[test]
+fn galore_and_fira_steps_are_allocation_free_between_refreshes() {
+    for method in ["galore", "fira"] {
+        let hp = HyperParams { rank: 4, interval: 100, scale: 1.0, ..HyperParams::default() };
+        let mut opt = optim::by_name(method, hp);
+        let misses = misses_per_step(opt.as_mut(), 3);
+        assert_eq!(misses[0], misses[1], "{method} step 2 allocated: {misses:?}");
+        assert_eq!(misses[1], misses[2], "{method} step 3 allocated: {misses:?}");
+    }
+}
+
+#[test]
+fn eval_after_training_reuses_the_pool() {
+    // Mixing loss-only evals into the loop must also settle: the eval path
+    // shares the same pool and shapes.
+    let cfg = ModelConfig::preset("tiny");
+    let model = Llama::new(cfg.clone(), 7);
+    let batch = batch_for(&cfg, 4, 8);
+    let mut state = StepState::new();
+    let _ = model.loss_ws(&batch, &mut state);
+    let after_first = state.ws.misses();
+    for _ in 0..3 {
+        let _ = model.loss_ws(&batch, &mut state);
+    }
+    assert_eq!(state.ws.misses(), after_first, "loss_ws steady state allocated");
+}

@@ -1,0 +1,116 @@
+//! Minimal in-tree shim of the `anyhow` crate.
+//!
+//! The build environment is fully offline, so instead of the crates.io
+//! dependency this workspace vendors the tiny subset the codebase uses:
+//! [`Error`], [`Result`], and the `anyhow!` / `bail!` / `ensure!` macros.
+//! `Error` is a plain message carrier; any `std::error::Error` converts into
+//! it via `?`, which covers `std::io::Error` and friends.
+
+use std::fmt;
+
+/// A string-backed error value (shim of `anyhow::Error`).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg(msg: impl fmt::Display) -> Error {
+        Error { msg: msg.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string or a displayable expression.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        Err(std::io::Error::new(std::io::ErrorKind::Other, "disk on fire"))?;
+        Ok(())
+    }
+
+    #[test]
+    fn conversions_and_macros() {
+        let e = anyhow!("plain");
+        assert_eq!(format!("{e}"), "plain");
+        let x = 3;
+        let e = anyhow!("value {x} and {}", 4);
+        assert_eq!(format!("{e:?}"), "value 3 and 4");
+        let msg = String::from("owned");
+        let e = anyhow!(msg);
+        assert_eq!(e.to_string(), "owned");
+        assert!(io_fail().is_err());
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        fn check(ok: bool) -> Result<u32> {
+            ensure!(ok, "wanted {}", true);
+            Ok(7)
+        }
+        assert!(check(false).is_err());
+        assert_eq!(check(true).unwrap(), 7);
+        fn always() -> Result<()> {
+            bail!("nope");
+        }
+        assert!(always().is_err());
+    }
+}
