@@ -10,7 +10,8 @@
 //! ```
 
 use std::collections::BTreeMap;
-use subtrack::tensor::{gemm, Matrix, Workspace};
+use subtrack::optim::subtrack::grassmannian_step_ws;
+use subtrack::tensor::{gemm, qr, svd, Matrix, Workspace};
 use subtrack::util::json::{merge_into_file, Json};
 use subtrack::util::rng::Rng;
 
@@ -94,10 +95,68 @@ fn main() {
         ws.give(c);
     }
 
+    // ---- refresh-path kernels (QR / SVD / power iteration / geodesic) ----
+    // Timed at 1 worker and at the auto plan so the ledger tracks the
+    // threaded-refresh win across PRs (ROADMAP "refresh wall-time" item).
+    println!("\nrefresh-path kernels (m=256, n=256, r=16):");
+    let (m, n, r) = (256usize, 256usize, 16usize);
+    let g = Matrix::randn(m, n, 1.0, &mut rng);
+    let base = Matrix::randn(m, r, 1.0, &mut rng);
+    let (s_basis, _) = qr::thin_qr(&base);
+    let mut refresh = BTreeMap::new();
+    for (label, forced) in [("1t", 1usize), ("auto", 0usize)] {
+        gemm::set_gemm_threads(forced);
+        let mut q = ws.take(m, r);
+        let mut rr = ws.take(r, r);
+        let tall = Matrix::randn(m, r, 1.0, &mut rng);
+        let qr_secs = time_op(budget, || {
+            qr::thin_qr_into(&tall, &mut q, &mut rr, &mut ws);
+            std::hint::black_box(&q);
+        });
+        ws.give(q);
+        ws.give(rr);
+        let mut basis = ws.take(m, r);
+        let svd_secs = time_op(budget, || {
+            svd::truncated_basis_into(&g, false, &mut basis, &mut ws);
+            std::hint::black_box(&basis);
+        });
+        ws.give(basis);
+        let mut rng_pi = Rng::new(7);
+        let mut u = vec![0.0f32; m];
+        let mut v = vec![0.0f32; n];
+        let power_secs = time_op(budget, || {
+            let sigma = svd::power_iteration_top1_ws(&g, 8, &mut rng_pi, &mut u, &mut v);
+            std::hint::black_box(sigma);
+        });
+        let mut rng_gs = Rng::new(8);
+        let mut s_work = s_basis.clone();
+        let geo_secs = time_op(budget, || {
+            s_work.copy_from(&s_basis);
+            std::hint::black_box(grassmannian_step_ws(
+                &mut s_work,
+                &g,
+                1e-3,
+                8,
+                &mut rng_gs,
+                &mut ws,
+            ));
+        });
+        gemm::set_gemm_threads(0);
+        for (kernel, secs) in [
+            ("thin_qr", qr_secs),
+            ("truncated_svd", svd_secs),
+            ("power_top1", power_secs),
+            ("grassmannian", geo_secs),
+        ] {
+            println!("{kernel:<16} [{label:<4}]: {:8.3} ms", secs * 1e3);
+            refresh.insert(format!("{kernel}_{label}"), Json::Num(secs * 1e3));
+        }
+    }
     let record = Json::obj(vec![
         ("threads", Json::Num(auto_threads as f64)),
         ("workspace_misses", Json::Num(ws.misses() as f64)),
         ("cases", Json::Obj(cases)),
+        ("refresh_ms", Json::Obj(refresh)),
     ]);
     merge_into_file(&out_path, "gemm", record).expect("write BENCH_gemm.json");
     println!("\n[data] gemm record -> {out_path} ({auto_threads} threads auto)");

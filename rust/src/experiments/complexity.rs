@@ -115,6 +115,8 @@ mod tests {
     use super::*;
 
     #[test]
+    #[ignore = "wall-clock comparison: scheduler noise on shared/1-core CI runners makes \
+                timing ratios flaky; run explicitly or via `cargo bench table2`"]
     fn subtrack_update_faster_than_svd_at_scale() {
         // At the regime the paper cares about (square weight matrices,
         // r ≪ m), one Grassmannian update must beat one truncated SVD.
@@ -127,6 +129,8 @@ mod tests {
     }
 
     #[test]
+    #[ignore = "wall-clock scaling fit: environment-dependent on loaded CI runners; the \
+                table2 bench harness reports the exponents with proper repetitions"]
     fn svd_scales_worse_than_subtrack() {
         let samples = measure_grid(&[48, 96, 192], 8, 3);
         let e_svd = scaling_exponent(&samples, "svd");

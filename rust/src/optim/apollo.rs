@@ -15,7 +15,7 @@
 use super::adam::{AdamCfg, Moments};
 use super::projector::{Projector, Side};
 use super::{HyperParams, Optimizer, Param, ParamKind};
-use crate::tensor::Matrix;
+use crate::tensor::{Matrix, Workspace};
 use crate::util::rng::Rng;
 
 struct MatState {
@@ -32,6 +32,9 @@ pub struct Apollo {
     step_no: usize,
     rng: Rng,
     n_subspace_updates: usize,
+    /// Per-step projection/scaling scratch (zero steady-state allocation;
+    /// the periodic projector re-draw writes into the existing basis).
+    ws: Workspace,
 }
 
 impl Apollo {
@@ -44,6 +47,7 @@ impl Apollo {
             step_no: 0,
             rng: Rng::new(hp.seed ^ 0xa901_10),
             n_subspace_updates: 0,
+            ws: Workspace::new(),
         }
     }
 
@@ -66,32 +70,44 @@ impl Optimizer for Apollo {
                 ParamKind::Matrix2D if g.rows() > 1 && g.cols() > 1 => {
                     let (m, n) = g.shape();
                     let needs_init = self.mats[i].is_none();
-                    if needs_init || refresh {
+                    if needs_init {
                         // Cheap random projection — no SVD anywhere.
                         let proj = Projector::init_random(m, n, self.hp.rank, &mut self.rng);
-                        if needs_init {
-                            let (lm, ln) = proj.lowrank_shape(m, n);
-                            self.mats[i] =
-                                Some(MatState { proj, moments: Moments::new(lm, ln) });
-                        } else {
-                            self.mats[i].as_mut().unwrap().proj = proj;
-                            self.n_subspace_updates += 1;
-                        }
+                        let (lm, ln) = proj.lowrank_shape(m, n);
+                        self.mats[i] =
+                            Some(MatState { proj, moments: Moments::new(lm, ln) });
+                    } else if refresh {
+                        // Re-draw the sketch into the existing basis buffer.
+                        let st = self.mats[i].as_mut().expect("initialized above");
+                        st.proj.refresh_random_into(&mut self.rng);
+                        self.n_subspace_updates += 1;
                     }
-                    let st = self.mats[i].as_mut().unwrap();
-                    let g_low = st.proj.project(g);
-                    let dir = st.moments.update(&self.adam, &g_low);
+                    let adam = self.adam;
+                    // Disjoint borrows: scratch pool vs per-matrix state.
+                    let Apollo { ws, mats, .. } = &mut *self;
+                    let st = mats[i].as_mut().expect("initialized above");
+                    let (lm, ln) = st.proj.lowrank_shape(m, n);
+                    let mut g_low = ws.take_dirty(lm, ln);
+                    st.proj.project_into(g, &mut g_low, ws);
+                    let mut dir = ws.take_dirty(lm, ln);
+                    st.moments.update_into(&adam, &g_low, &mut dir);
                     // Channel-wise scaling of the RAW gradient (no project-back).
-                    let scaled = apply_channel_scale(&dir, &g_low, g, st.proj.side);
+                    let mut scaled = ws.take_dirty(m, n);
+                    scaled.copy_from(g);
+                    apply_channel_scale_inplace(&dir, &g_low, &mut scaled, st.proj.side, ws);
                     params[i].axpy_update(-lr, &scaled);
+                    ws.give(scaled);
+                    ws.give(dir);
+                    ws.give(g_low);
                 }
                 _ => {
                     if self.vecs[i].is_none() {
                         self.vecs[i] = Some(Moments::new(g.rows(), g.cols()));
                     }
+                    let adam = self.adam;
                     let st = self.vecs[i].as_mut().unwrap();
-                    let dir = st.update(&self.adam, g);
-                    params[i].axpy_update(-lr, &dir);
+                    st.fused_step(&adam, lr, 0.0, &mut params[i].value, g);
+                    params[i].mark_dirty();
                 }
             }
         }
@@ -116,29 +132,41 @@ impl Optimizer for Apollo {
         self.n_subspace_updates
     }
 
+    fn workspace_misses(&self) -> usize {
+        self.ws.misses()
+    }
+
     fn name(&self) -> String {
         "APOLLO".into()
     }
 }
 
 /// φⱼ = ‖dir₍:,ⱼ₎‖/‖G̃₍:,ⱼ₎‖ applied along the channel axis of the raw
-/// gradient (columns for Left projections, rows for Right).
-fn apply_channel_scale(dir: &Matrix, g_low: &Matrix, g: &Matrix, side: Side) -> Matrix {
+/// gradient copy in `out` (columns for Left projections, rows for Right),
+/// in place; the Left-side φ scratch is leased from `ws`.
+fn apply_channel_scale_inplace(
+    dir: &Matrix,
+    g_low: &Matrix,
+    out: &mut Matrix,
+    side: Side,
+    ws: &mut Workspace,
+) {
     match side {
         Side::Left => {
-            let num = dir.col_norms();
-            let den = g_low.col_norms();
-            let mut out = g.clone();
+            let mut num = ws.take_vec_dirty(dir.cols());
+            let mut den = ws.take_vec_dirty(g_low.cols());
+            dir.col_norms_into(&mut num);
+            g_low.col_norms_into(&mut den);
             for i in 0..out.rows() {
                 for (j, v) in out.row_mut(i).iter_mut().enumerate() {
                     let phi = if den[j] > 1e-30 { num[j] / den[j] } else { 1.0 };
                     *v *= phi;
                 }
             }
-            out
+            ws.give_vec(num);
+            ws.give_vec(den);
         }
         Side::Right => {
-            let mut out = g.clone();
             for i in 0..out.rows() {
                 let num = (dir.row(i).iter().map(|&x| (x as f64).powi(2)).sum::<f64>()).sqrt();
                 let den =
@@ -148,7 +176,6 @@ fn apply_channel_scale(dir: &Matrix, g_low: &Matrix, g: &Matrix, side: Side) -> 
                     *v *= phi;
                 }
             }
-            out
         }
     }
 }

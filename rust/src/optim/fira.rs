@@ -108,9 +108,8 @@ impl Optimizer for Fira {
                     let needs_init = self.mats[i].is_none();
                     if needs_init || refresh {
                         let t0 = std::time::Instant::now();
-                        let proj = Projector::init_svd(g, self.hp.rank);
-                        self.svd_seconds += t0.elapsed().as_secs_f64();
                         if needs_init {
+                            let proj = Projector::init_svd(g, self.hp.rank);
                             let (lm, ln) = proj.lowrank_shape(m, n);
                             self.mats[i] = Some(MatState {
                                 proj,
@@ -118,9 +117,12 @@ impl Optimizer for Fira {
                                 prev_lambda_norm: 0.0,
                             });
                         } else {
-                            self.mats[i].as_mut().unwrap().proj = proj;
-                            self.n_subspace_updates += 1;
+                            // In-place refresh with workspace-leased scratch.
+                            let Fira { ws, mats, n_subspace_updates, .. } = &mut *self;
+                            mats[i].as_mut().unwrap().proj.refresh_svd_into(g, ws);
+                            *n_subspace_updates += 1;
                         }
+                        self.svd_seconds += t0.elapsed().as_secs_f64();
                     }
                     let zeta = self.hp.zeta;
                     let adam = self.adam;
@@ -189,6 +191,10 @@ impl Optimizer for Fira {
 
     fn workspace_misses(&self) -> usize {
         self.ws.misses()
+    }
+
+    fn projector_defect(&self) -> Option<f32> {
+        Some(self.mats.iter().flatten().map(|s| s.proj.defect()).fold(0.0f32, f32::max))
     }
 
     fn name(&self) -> String {

@@ -66,17 +66,20 @@ impl Optimizer for GaLore {
                     if needs_init || refresh {
                         // Full truncated SVD of the gradient — O(n·m²).
                         let t0 = std::time::Instant::now();
-                        let proj = Projector::init_svd(g, self.hp.rank);
-                        self.svd_seconds += t0.elapsed().as_secs_f64();
                         if needs_init {
+                            let proj = Projector::init_svd(g, self.hp.rank);
                             let (lm, ln) = proj.lowrank_shape(m, n);
                             self.mats[i] =
                                 Some(MatState { proj, moments: Moments::new(lm, ln) });
                         } else {
-                            // Keep moments untouched (GaLore's behaviour).
-                            self.mats[i].as_mut().unwrap().proj = proj;
-                            self.n_subspace_updates += 1;
+                            // Refresh in place: the new basis lands in the
+                            // existing buffer, SVD scratch is workspace-leased,
+                            // moments stay untouched (GaLore's behaviour).
+                            let GaLore { ws, mats, n_subspace_updates, .. } = &mut *self;
+                            mats[i].as_mut().unwrap().proj.refresh_svd_into(g, ws);
+                            *n_subspace_updates += 1;
                         }
+                        self.svd_seconds += t0.elapsed().as_secs_f64();
                     }
                     let adam = self.adam;
                     let scale = self.hp.scale;
@@ -132,6 +135,10 @@ impl Optimizer for GaLore {
 
     fn workspace_misses(&self) -> usize {
         self.ws.misses()
+    }
+
+    fn projector_defect(&self) -> Option<f32> {
+        Some(self.mats.iter().flatten().map(|s| s.proj.defect()).fold(0.0f32, f32::max))
     }
 
     fn name(&self) -> String {

@@ -6,7 +6,7 @@
 use super::adam::{AdamCfg, Moments};
 use super::projector::Projector;
 use super::{HyperParams, Optimizer, Param, ParamKind};
-use crate::tensor::Matrix;
+use crate::tensor::{Matrix, Workspace};
 use crate::util::rng::Rng;
 
 struct MatState {
@@ -27,6 +27,9 @@ pub struct GoLore {
     /// reference recipe switches in the last third of training; the trainer
     /// sets this from the configured total step budget.
     pub switch_after: usize,
+    /// Per-step projection + refresh scratch (zero steady-state allocation;
+    /// refresh steps miss only on their first occurrence).
+    ws: Workspace,
 }
 
 impl GoLore {
@@ -40,6 +43,7 @@ impl GoLore {
             rng: Rng::new(hp.seed ^ 0x601e),
             n_subspace_updates: 0,
             switch_after: 1000,
+            ws: Workspace::new(),
         }
     }
 
@@ -63,34 +67,51 @@ impl Optimizer for GoLore {
                 ParamKind::Matrix2D if g.rows() > 1 && g.cols() > 1 => {
                     let (m, n) = g.shape();
                     let needs_init = self.mats[i].is_none();
-                    if needs_init || refresh {
+                    if needs_init {
                         let proj = if late_phase {
                             Projector::init_random_orthonormal(m, n, self.hp.rank, &mut self.rng)
                         } else {
                             Projector::init_svd(g, self.hp.rank)
                         };
-                        if needs_init {
-                            let (lm, ln) = proj.lowrank_shape(m, n);
-                            self.mats[i] =
-                                Some(MatState { proj, moments: Moments::new(lm, ln) });
+                        let (lm, ln) = proj.lowrank_shape(m, n);
+                        self.mats[i] =
+                            Some(MatState { proj, moments: Moments::new(lm, ln) });
+                    } else if refresh {
+                        // In-place refresh with workspace-leased scratch.
+                        let GoLore { ws, mats, rng, n_subspace_updates, .. } = &mut *self;
+                        let st = mats[i].as_mut().expect("initialized above");
+                        if late_phase {
+                            st.proj.refresh_random_orthonormal_into(rng, ws);
                         } else {
-                            self.mats[i].as_mut().unwrap().proj = proj;
-                            self.n_subspace_updates += 1;
+                            st.proj.refresh_svd_into(g, ws);
                         }
+                        *n_subspace_updates += 1;
                     }
-                    let st = self.mats[i].as_mut().unwrap();
-                    let g_low = st.proj.project(g);
-                    let dir = st.moments.update(&self.adam, &g_low);
-                    let delta = st.proj.project_back(&dir);
-                    params[i].axpy_update(-lr * self.hp.scale, &delta);
+                    let adam = self.adam;
+                    let scale = self.hp.scale;
+                    // Disjoint borrows: scratch pool vs per-matrix state.
+                    let GoLore { ws, mats, .. } = &mut *self;
+                    let st = mats[i].as_mut().expect("initialized above");
+                    let (lm, ln) = st.proj.lowrank_shape(m, n);
+                    let mut g_low = ws.take_dirty(lm, ln);
+                    st.proj.project_into(g, &mut g_low, ws);
+                    let mut dir = ws.take_dirty(lm, ln);
+                    st.moments.update_into(&adam, &g_low, &mut dir);
+                    let mut delta = ws.take_dirty(m, n);
+                    st.proj.project_back_into(&dir, &mut delta, ws);
+                    params[i].axpy_update(-lr * scale, &delta);
+                    ws.give(delta);
+                    ws.give(dir);
+                    ws.give(g_low);
                 }
                 _ => {
                     if self.vecs[i].is_none() {
                         self.vecs[i] = Some(Moments::new(g.rows(), g.cols()));
                     }
+                    let adam = self.adam;
                     let st = self.vecs[i].as_mut().unwrap();
-                    let dir = st.update(&self.adam, g);
-                    params[i].axpy_update(-lr, &dir);
+                    st.fused_step(&adam, lr, 0.0, &mut params[i].value, g);
+                    params[i].mark_dirty();
                 }
             }
         }
@@ -113,6 +134,14 @@ impl Optimizer for GoLore {
 
     fn subspace_updates(&self) -> usize {
         self.n_subspace_updates
+    }
+
+    fn workspace_misses(&self) -> usize {
+        self.ws.misses()
+    }
+
+    fn projector_defect(&self) -> Option<f32> {
+        Some(self.mats.iter().flatten().map(|s| s.proj.defect()).fold(0.0f32, f32::max))
     }
 
     fn name(&self) -> String {
@@ -154,5 +183,7 @@ mod tests {
         opt.switch_after = 0; // random from the first refresh
         let (init, fin) = run_lstsq(&mut opt, &prob, 200, 0.05);
         assert!(fin < init, "still optimizes with pure random projections");
+        // Random-orthonormal refreshes must keep the basis orthonormal.
+        assert!(opt.projector_defect().unwrap() < 1e-4);
     }
 }

@@ -219,11 +219,21 @@ pub trait Optimizer {
 
     /// Misses of the optimizer's internal scratch [`Workspace`] (0 for
     /// optimizers that keep no per-step scratch). Steady-state steps must
-    /// not grow this — see `rust/tests/zero_alloc.rs`.
+    /// not grow this, and refresh steps only on their first occurrence —
+    /// see `rust/tests/zero_alloc.rs`.
     ///
     /// [`Workspace`]: crate::tensor::Workspace
     fn workspace_misses(&self) -> usize {
         0
+    }
+
+    /// Worst orthonormality defect ‖SᵀS − I‖_max over the optimizer's
+    /// current projector bases, or `None` for methods without orthonormal
+    /// projectors (full-rank Adam, APOLLO's Gaussian sketch, BAdam's block
+    /// masks). The property suite in `rust/tests/subspace_props.rs` gates
+    /// every refresh mechanism on this staying small.
+    fn projector_defect(&self) -> Option<f32> {
+        None
     }
 
     /// Method name for logs and tables.

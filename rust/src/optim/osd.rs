@@ -5,12 +5,15 @@
 //! Oja's rule: S ← orth(S + η_pca·(I − SSᵀ)·G·GᵀS). We fold the
 //! normalization into a periodic QR pass (every `reorth_every` steps) plus a
 //! column-norm rescale each step, which matches the reference description's
-//! cost profile while staying numerically stable in fp32.
+//! cost profile while staying numerically stable in fp32. Like the other
+//! per-iteration refresher (LDAdam), the whole step runs out of the
+//! optimizer-owned workspace: the Oja temporaries, the Gᵀ view, the QR
+//! scratch, and the projection buffers are all leased.
 
 use super::adam::{AdamCfg, Moments};
 use super::projector::{Projector, Side};
 use super::{HyperParams, Optimizer, Param, ParamKind};
-use crate::tensor::{gemm, qr, Matrix};
+use crate::tensor::{gemm, qr, Matrix, Workspace};
 
 struct MatState {
     proj: Projector,
@@ -29,6 +32,8 @@ pub struct OnlineSubspaceDescent {
     pub pca_lr: f32,
     /// Full QR re-orthonormalization cadence.
     pub reorth_every: usize,
+    /// Per-step Oja + projection scratch (zero steady-state allocation).
+    ws: Workspace,
 }
 
 impl OnlineSubspaceDescent {
@@ -41,6 +46,7 @@ impl OnlineSubspaceDescent {
             n_subspace_updates: 0,
             pca_lr: 0.1,
             reorth_every: 10,
+            ws: Workspace::new(),
         }
     }
 
@@ -53,21 +59,38 @@ impl OnlineSubspaceDescent {
 }
 
 /// One Oja update of the basis given the oriented gradient (rows = subspace
-/// dimension): S ← S + η·(I − SSᵀ)·G·(GᵀS), normalized.
+/// dimension): S ← S + η·(I − SSᵀ)·G·(GᵀS), normalized. Allocating wrapper
+/// around [`oja_step_ws`] for tests and one-off callers.
+#[cfg(test)]
 fn oja_step(s: &Matrix, g_oriented: &Matrix, pca_lr: f32) -> Matrix {
-    let gts = gemm::matmul_tn(g_oriented, s); // n×r
-    let ggts = gemm::matmul(g_oriented, &gts); // m×r
-    // Project out the existing span: (I − SSᵀ)·GGᵀS.
-    let st_ggts = gemm::matmul_tn(s, &ggts); // r×r
-    let within = gemm::matmul(s, &st_ggts); // m×r
-    let ortho = ggts.sub(&within);
-    // Normalize the step so η is scale-free w.r.t. the gradient magnitude.
-    let norm = ortho.fro_norm();
     let mut s_new = s.clone();
-    if norm > 1e-30 {
-        s_new.axpy(pca_lr / norm, &ortho);
-    }
+    oja_step_ws(&mut s_new, g_oriented, pca_lr, &mut Workspace::new());
     s_new
+}
+
+/// The Oja update in place, every temporary leased from `ws`.
+fn oja_step_ws(s: &mut Matrix, g_oriented: &Matrix, pca_lr: f32, ws: &mut Workspace) {
+    let (dim, r) = s.shape();
+    let ncols = g_oriented.cols();
+    let mut gts = ws.take_dirty(ncols, r);
+    gemm::matmul_tn_into(&mut gts, g_oriented, s, ws); // n×r
+    let mut ggts = ws.take_dirty(dim, r);
+    gemm::matmul_into(&mut ggts, g_oriented, &gts); // m×r
+    // Project out the existing span: ortho = (I − SSᵀ)·GGᵀS, in place.
+    let mut st_ggts = ws.take_dirty(r, r);
+    gemm::matmul_tn_into(&mut st_ggts, s, &ggts, ws); // r×r
+    let mut within = ws.take_dirty(dim, r);
+    gemm::matmul_into(&mut within, s, &st_ggts); // m×r
+    ggts.zip_assign(&within, |a, b| a - b);
+    // Normalize the step so η is scale-free w.r.t. the gradient magnitude.
+    let norm = ggts.fro_norm();
+    if norm > 1e-30 {
+        s.axpy(pca_lr / norm, &ggts);
+    }
+    ws.give(within);
+    ws.give(st_ggts);
+    ws.give(ggts);
+    ws.give(gts);
 }
 
 impl Optimizer for OnlineSubspaceDescent {
@@ -87,34 +110,47 @@ impl Optimizer for OnlineSubspaceDescent {
                     }
                     let pca_lr = self.pca_lr;
                     let reorth = self.reorth_every;
-                    let st = self.mats[i].as_mut().unwrap();
-                    // Online PCA projector update every step.
-                    let mut new_s = match st.proj.side {
-                        Side::Left => oja_step(&st.proj.s, g, pca_lr),
+                    let adam = self.adam;
+                    let scale = self.hp.scale;
+                    // Disjoint borrows: scratch pool vs per-matrix state.
+                    let OnlineSubspaceDescent { ws, mats, n_subspace_updates, .. } = &mut *self;
+                    let st = mats[i].as_mut().expect("initialized above");
+                    // Online PCA projector update every step, in place.
+                    match st.proj.side {
+                        Side::Left => oja_step_ws(&mut st.proj.s, g, pca_lr, ws),
                         Side::Right => {
-                            let gt = g.t();
-                            oja_step(&st.proj.s, &gt, pca_lr)
+                            let mut gt = ws.take_dirty(n, m);
+                            g.transpose_into(&mut gt);
+                            oja_step_ws(&mut st.proj.s, &gt, pca_lr, ws);
+                            ws.give(gt);
                         }
-                    };
+                    }
                     st.steps += 1;
                     if st.steps % reorth == 0 {
-                        new_s = qr::reorthonormalize(&new_s);
+                        qr::reorthonormalize_in_place(&mut st.proj.s, ws);
                     }
-                    st.proj.s = new_s;
-                    self.n_subspace_updates += 1;
+                    *n_subspace_updates += 1;
 
-                    let g_low = st.proj.project(g);
-                    let dir = st.moments.update(&self.adam, &g_low);
-                    let delta = st.proj.project_back(&dir);
-                    params[i].axpy_update(-lr * self.hp.scale, &delta);
+                    let (lm, ln) = st.proj.lowrank_shape(m, n);
+                    let mut g_low = ws.take_dirty(lm, ln);
+                    st.proj.project_into(g, &mut g_low, ws);
+                    let mut dir = ws.take_dirty(lm, ln);
+                    st.moments.update_into(&adam, &g_low, &mut dir);
+                    let mut delta = ws.take_dirty(m, n);
+                    st.proj.project_back_into(&dir, &mut delta, ws);
+                    params[i].axpy_update(-lr * scale, &delta);
+                    ws.give(delta);
+                    ws.give(dir);
+                    ws.give(g_low);
                 }
                 _ => {
                     if self.vecs[i].is_none() {
                         self.vecs[i] = Some(Moments::new(g.rows(), g.cols()));
                     }
+                    let adam = self.adam;
                     let st = self.vecs[i].as_mut().unwrap();
-                    let dir = st.update(&self.adam, g);
-                    params[i].axpy_update(-lr, &dir);
+                    st.fused_step(&adam, lr, 0.0, &mut params[i].value, g);
+                    params[i].mark_dirty();
                 }
             }
         }
@@ -136,6 +172,14 @@ impl Optimizer for OnlineSubspaceDescent {
 
     fn subspace_updates(&self) -> usize {
         self.n_subspace_updates
+    }
+
+    fn workspace_misses(&self) -> usize {
+        self.ws.misses()
+    }
+
+    fn projector_defect(&self) -> Option<f32> {
+        Some(self.mats.iter().flatten().map(|s| s.proj.defect()).fold(0.0f32, f32::max))
     }
 
     fn name(&self) -> String {

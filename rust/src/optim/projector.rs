@@ -7,7 +7,8 @@
 //! This keeps the moment tensors at min(m,n-side) cost: mr + 2nr total
 //! optimizer state per matrix (Table 2).
 
-use crate::tensor::{gemm, svd, Matrix, Workspace};
+use super::adam::Moments;
+use crate::tensor::{gemm, qr, svd, Matrix, Workspace};
 use crate::util::rng::Rng;
 
 /// Which side of the gradient the subspace basis multiplies.
@@ -75,6 +76,41 @@ impl Projector {
         let raw = Matrix::randn(dim, r, 1.0, rng);
         let (q, _) = crate::tensor::qr::thin_qr(&raw);
         Projector { s: q, side }
+    }
+
+    /// Refresh the basis from the rank-r truncated SVD of `g`, **in place**:
+    /// the new singular vectors land directly in the existing basis buffer
+    /// and all SVD scratch is leased from `ws`. Bit-identical to replacing
+    /// the projector with [`Projector::init_svd`] of the same gradient.
+    pub fn refresh_svd_into(&mut self, g: &Matrix, ws: &mut Workspace) {
+        svd::truncated_basis_into(g, self.side == Side::Right, &mut self.s, ws);
+    }
+
+    /// Refresh with a fresh random orthonormal basis, in place (GoLore's
+    /// late-phase refresh); QR scratch leased from `ws`. Bit-identical to
+    /// [`Projector::init_random_orthonormal`] at the same RNG state.
+    pub fn refresh_random_orthonormal_into(&mut self, rng: &mut Rng, ws: &mut Workspace) {
+        let (dim, r) = self.s.shape();
+        let mut raw = ws.take_dirty(dim, r);
+        rng.fill_normal(raw.data_mut(), 1.0);
+        let mut rr = ws.take_dirty(r, r);
+        qr::thin_qr_into(&raw, &mut self.s, &mut rr, ws);
+        ws.give(rr);
+        ws.give(raw);
+    }
+
+    /// Refresh with a fresh Gaussian sketch scaled by 1/√r, in place
+    /// (APOLLO's projector re-draw; *not* orthonormal). Bit-identical to
+    /// [`Projector::init_random`] at the same RNG state.
+    pub fn refresh_random_into(&mut self, rng: &mut Rng) {
+        let r = self.s.cols();
+        rng.fill_normal(self.s.data_mut(), 1.0 / (r as f32).sqrt());
+    }
+
+    /// Orthonormality defect ‖SᵀS − I‖_max of the current basis
+    /// (diagnostic; see `Optimizer::projector_defect`).
+    pub fn defect(&self) -> f32 {
+        qr::orthonormality_defect(&self.s)
     }
 
     /// Rank of the subspace.
@@ -151,6 +187,53 @@ pub fn rotate_first_moment(q: &Matrix, m: &Matrix, side: Side) -> Matrix {
         Side::Left => gemm::matmul(q, m),
         Side::Right => gemm::matmul_nt(m, q),
     }
+}
+
+/// Allocation-free [`rotate_first_moment`]: writes into `out`, leasing
+/// transpose scratch from `ws`.
+pub fn rotate_first_moment_into(
+    q: &Matrix,
+    m: &Matrix,
+    side: Side,
+    out: &mut Matrix,
+    ws: &mut Workspace,
+) {
+    match side {
+        Side::Left => gemm::matmul_into(out, q, m),
+        Side::Right => gemm::matmul_nt_into(out, m, q, ws),
+    }
+}
+
+/// Projection-aware rotation of a full [`Moments`] pair, in place — the
+/// Eqs. (8)–(9) update every refresh step applies, with all temporaries
+/// leased from `ws` (the allocation-free periodic-path form of
+/// [`rotate_first_moment`] + [`rotate_second_moment`]; element-for-element
+/// identical arithmetic).
+pub fn rotate_moments_into(
+    q: &Matrix,
+    moments: &mut Moments,
+    side: Side,
+    beta2: f32,
+    ws: &mut Workspace,
+) {
+    let (mr, mc) = moments.m.shape();
+    let mut rot_m = ws.take_dirty(mr, mc);
+    rotate_first_moment_into(q, &moments.m, side, &mut rot_m, ws);
+    // V′ = (1−β₂^{t−1}) · | Q∘² (V − M∘²) + (Q M)∘² |  (Eq. 9)
+    let (qr_, qc) = q.shape();
+    let mut q2 = ws.take_dirty(qr_, qc);
+    q.zip_into(q, &mut q2, |a, _| a * a);
+    let mut var = ws.take_dirty(mr, mc);
+    moments.v.zip_into(&moments.m, &mut var, |v, m| (v - m * m).max(0.0));
+    let mut rot_var = ws.take_dirty(mr, mc);
+    rotate_first_moment_into(&q2, &var, side, &mut rot_var, ws);
+    let debias = 1.0 - beta2.powi(moments.t.max(1) as i32 - 1);
+    rot_var.zip_into(&rot_m, &mut moments.v, |a, b| (debias * (a + b * b)).abs());
+    moments.m.copy_from(&rot_m);
+    ws.give(rot_var);
+    ws.give(var);
+    ws.give(q2);
+    ws.give(rot_m);
 }
 
 /// Projection-aware second-moment rotation — Eq. (9):
@@ -317,6 +400,61 @@ mod tests {
         let po = Projector::init_random_orthonormal(20, 6, 4, &mut rng);
         assert_eq!(po.side, Side::Right);
         assert!(orthonormality_defect(&po.s) < 1e-4);
+    }
+
+    #[test]
+    fn refresh_svd_into_matches_init_svd() {
+        let mut rng = Rng::new(40);
+        let mut ws = Workspace::new();
+        for (m, n) in [(10, 30), (30, 10)] {
+            let g0 = Matrix::randn(m, n, 1.0, &mut rng);
+            let g1 = Matrix::randn(m, n, 1.0, &mut rng);
+            let mut p = Projector::init_svd(&g0, 4);
+            p.refresh_svd_into(&g1, &mut ws);
+            let fresh = Projector::init_svd(&g1, 4);
+            assert_eq!(p.s.data(), fresh.s.data(), "refresh diverged ({m}x{n})");
+            // Second refresh with the same shapes: no new allocations.
+            let misses = ws.misses();
+            p.refresh_svd_into(&g0, &mut ws);
+            assert_eq!(ws.misses(), misses, "steady-state refresh allocated");
+        }
+    }
+
+    #[test]
+    fn refresh_random_orthonormal_matches_init() {
+        let mut ws = Workspace::new();
+        let mut rng_a = Rng::new(41);
+        let mut rng_b = Rng::new(41);
+        let g = Matrix::randn(12, 20, 1.0, &mut Rng::new(1));
+        let mut p = Projector::init_svd(&g, 3);
+        p.refresh_random_orthonormal_into(&mut rng_a, &mut ws);
+        let fresh = Projector::init_random_orthonormal(12, 20, 3, &mut rng_b);
+        assert_eq!(p.s.data(), fresh.s.data());
+        assert!(p.defect() < 1e-4);
+    }
+
+    #[test]
+    fn rotate_moments_into_matches_allocating_rotation() {
+        let mut rng = Rng::new(42);
+        let mut ws = Workspace::new();
+        for side in [Side::Left, Side::Right] {
+            let r = 4;
+            let (rows, cols) = match side {
+                Side::Left => (r, 9),
+                Side::Right => (9, r),
+            };
+            let q = Matrix::randn(r, r, 1.0, &mut rng);
+            let mut moments = Moments::new(rows, cols);
+            moments.m = Matrix::randn(rows, cols, 1.0, &mut rng);
+            moments.v = Matrix::randn(rows, cols, 0.5, &mut rng).map(|x| x.abs());
+            moments.t = 7;
+            let want_m = rotate_first_moment(&q, &moments.m, side);
+            let want_v =
+                rotate_second_moment(&q, &moments.m, &moments.v, side, 0.999, moments.t);
+            rotate_moments_into(&q, &mut moments, side, 0.999, &mut ws);
+            assert_eq!(moments.m.data(), want_m.data(), "{side:?} first moment");
+            assert_eq!(moments.v.data(), want_v.data(), "{side:?} second moment");
+        }
     }
 
     #[test]

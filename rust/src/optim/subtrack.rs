@@ -101,37 +101,60 @@ pub fn grassmannian_step(
     power_iters: usize,
     rng: &mut Rng,
 ) -> (Matrix, UpdateBreakdown) {
+    let mut s_new = s.clone();
+    let bd =
+        grassmannian_step_ws(&mut s_new, g_oriented, eta, power_iters, rng, &mut Workspace::new());
+    (s_new, bd)
+}
+
+/// Allocation-free [`grassmannian_step`]: updates the basis **in place**,
+/// leasing every temporary (A, R, ∇F, the power-iteration vectors, and the
+/// geodesic combination) from `ws` — the every-k-steps refresh allocates
+/// nothing after its first occurrence.
+pub fn grassmannian_step_ws(
+    s: &mut Matrix,
+    g_oriented: &Matrix,
+    eta: f32,
+    power_iters: usize,
+    rng: &mut Rng,
+    ws: &mut Workspace,
+) -> UpdateBreakdown {
     let mut bd = UpdateBreakdown::default();
     let (dim, r) = s.shape();
     debug_assert_eq!(g_oriented.rows(), dim);
+    let ncols = g_oriented.cols();
 
     // (1) least squares A = argmin ‖SA − G‖ = SᵀG (S orthonormal).
     let t0 = Instant::now();
-    let a = gemm::matmul_tn(s, g_oriented); // r×n
+    let mut a = ws.take_dirty(r, ncols);
+    gemm::matmul_tn_into(&mut a, s, g_oriented, ws);
     bd.lstsq = t0.elapsed().as_secs_f64();
 
-    // (2) residual R = G − S·A.
+    // (2) residual R = G − S·A (accumulated directly into the G copy).
     let t0 = Instant::now();
-    let mut resid = g_oriented.clone();
-    let sa = gemm::matmul(s, &a);
-    resid.axpy(-1.0, &sa);
+    let mut resid = ws.take_dirty(dim, ncols);
+    resid.copy_from(g_oriented);
+    gemm::matmul_acc(&mut resid, s, &a, -1.0);
     bd.residual = t0.elapsed().as_secs_f64();
 
     // (3) tangent ∇F = −2·R·Aᵀ (already in the horizontal space: R ⊥ S).
     let t0 = Instant::now();
-    let tangent = gemm::matmul_nt(&resid, &a).scale(-2.0); // dim×r
+    let mut tangent = ws.take_dirty(dim, r);
+    gemm::matmul_nt_into(&mut tangent, &resid, &a, ws);
+    tangent.scale_mut(-2.0);
     bd.tangent = t0.elapsed().as_secs_f64();
 
     // (4) rank-1 approximation σ·u·vᵀ of the tangent.
     let t0 = Instant::now();
-    let (sigma, u, v) = svd::power_iteration_top1(&tangent, power_iters, rng);
+    let mut u = ws.take_vec_dirty(dim);
+    let mut v = ws.take_vec_dirty(r);
+    let sigma = svd::power_iteration_top1_ws(&tangent, power_iters, rng, &mut u, &mut v);
     bd.rank1 = t0.elapsed().as_secs_f64();
 
-    // (5) geodesic step of size η (descent direction ⇒ −∇F ⇒ angle −σили...).
-    // Moving against the gradient of the cost: Θ = −σ·η. cos is even and sin
-    // odd, so S′ = S + (S·v·(cos(σ η)−1) − u·sin(σ η))·vᵀ.
+    // (5) geodesic step of size η (descent direction ⇒ −∇F ⇒ angle −σ·η).
+    // Moving against the gradient of the cost: cos is even and sin odd, so
+    // S′ = S + (S·v·(cos(σ η)−1) − u·sin(σ η))·vᵀ.
     let t0 = Instant::now();
-    let mut s_new = s.clone();
     if sigma > 0.0 {
         // Rotation angle along the geodesic. The paper uses Θ = σ·η with a
         // constant η (Table 10: η = 10 at pre-training gradient scales where
@@ -140,13 +163,15 @@ pub fn grassmannian_step(
         // badly scaled σ·η can at most swap one direction, never alias past it.
         let theta = (sigma * eta).min(std::f32::consts::FRAC_PI_2);
         let (sin_t, cos_t) = theta.sin_cos();
-        let sv = gemm::matvec(s, &v); // dim-vector
-        // w = sv·(cos−1) − u·sin
-        let w: Vec<f32> =
-            sv.iter().zip(&u).map(|(&svi, &ui)| svi * (cos_t - 1.0) - ui * sin_t).collect();
+        let mut sv = ws.take_vec_dirty(dim);
+        gemm::matvec_into(&mut sv, s, &v); // dim-vector S·v
+        // w = sv·(cos−1) − u·sin, combined in place.
+        for (svi, &ui) in sv.iter_mut().zip(&u) {
+            *svi = *svi * (cos_t - 1.0) - ui * sin_t;
+        }
         // S′ = S + w·vᵀ  (rank-1 outer product update)
-        let sd = s_new.data_mut();
-        for (i, &wi) in w.iter().enumerate() {
+        let sd = s.data_mut();
+        for (i, &wi) in sv.iter().enumerate() {
             if wi == 0.0 {
                 continue;
             }
@@ -155,10 +180,15 @@ pub fn grassmannian_step(
                 *rv += wi * vj;
             }
         }
+        ws.give_vec(sv);
     }
     bd.geodesic = t0.elapsed().as_secs_f64();
-    let _ = dim;
-    (s_new, bd)
+    ws.give_vec(v);
+    ws.give_vec(u);
+    ws.give(tangent);
+    ws.give(resid);
+    ws.give(a);
+    bd
 }
 
 /// Per-matrix SubTrack++ state.
@@ -261,21 +291,30 @@ impl SubTrack {
         let st = mats[idx].as_mut().expect("initialized above");
 
         // ---- subspace update every k steps (not at step 0: S₀ is fresh) ----
+        // The whole periodic path runs out of the optimizer workspace: the
+        // basis moves in place, the previous basis / Gᵀ view / change-of-basis
+        // matrix are leased, and the moment rotation writes back into the
+        // moment buffers — zero allocation after the first refresh.
         if is_update_step && st.moments.t > 0 {
-            let old_s = st.proj.s.clone();
-            let oriented;
-            let g_oriented: &Matrix = match st.proj.side {
-                Side::Left => g,
+            let (dim, r) = st.proj.s.shape();
+            let mut old_s = ws.take_dirty(dim, r);
+            old_s.copy_from(&st.proj.s);
+            let bd = match st.proj.side {
+                Side::Left => {
+                    grassmannian_step_ws(&mut st.proj.s, g, eta, power_iters, &mut rng, ws)
+                }
                 Side::Right => {
-                    oriented = g.t();
-                    &oriented
+                    let mut gt = ws.take_dirty(n, m);
+                    g.transpose_into(&mut gt);
+                    let bd =
+                        grassmannian_step_ws(&mut st.proj.s, &gt, eta, power_iters, &mut rng, ws);
+                    ws.give(gt);
+                    bd
                 }
             };
-            let (mut new_s, bd) =
-                grassmannian_step(&st.proj.s, g_oriented, eta, power_iters, &mut rng);
             st.updates += 1;
             if st.updates % reorth_every == 0 {
-                new_s = qr::reorthonormalize(&new_s);
+                qr::reorthonormalize_in_place(&mut st.proj.s, ws);
             }
             breakdown.lstsq += bd.lstsq;
             breakdown.residual += bd.residual;
@@ -286,21 +325,12 @@ impl SubTrack {
 
             if comps.projection_aware {
                 // Q = SₜᵀSₜ₋₁ (r×r); rotate moments (Eqs. 8–9).
-                let q = gemm::matmul_tn(&new_s, &old_s);
-                let side = st.proj.side;
-                let rot_m = projector::rotate_first_moment(&q, &st.moments.m, side);
-                let rot_v = projector::rotate_second_moment(
-                    &q,
-                    &st.moments.m,
-                    &st.moments.v,
-                    side,
-                    adam.beta2,
-                    st.moments.t,
-                );
-                st.moments.m = rot_m;
-                st.moments.v = rot_v;
+                let mut q = ws.take_dirty(r, r);
+                gemm::matmul_tn_into(&mut q, &st.proj.s, &old_s, ws);
+                projector::rotate_moments_into(&q, &mut st.moments, st.proj.side, adam.beta2, ws);
+                ws.give(q);
             }
-            st.proj.s = new_s;
+            ws.give(old_s);
         }
 
         // ---- low-rank Adam (workspace-backed, allocation-free) ----
@@ -444,6 +474,10 @@ impl Optimizer for SubTrack {
 
     fn workspace_misses(&self) -> usize {
         self.ws.misses()
+    }
+
+    fn projector_defect(&self) -> Option<f32> {
+        Some(self.mats.iter().flatten().map(|s| s.proj.defect()).fold(0.0f32, f32::max))
     }
 
     fn name(&self) -> String {

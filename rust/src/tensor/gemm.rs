@@ -11,15 +11,19 @@
 //!   (typically leased from a [`Workspace`]) so steady-state training steps
 //!   perform no heap allocation. The transpose variants borrow their Aᵀ/Bᵀ
 //!   scratch from the workspace too.
-//! * **Row-block threading**: `matmul_acc` splits C's rows across
-//!   `std::thread::scope` workers (no external deps). Each row of C is
-//!   computed by exactly one worker with the identical single-thread kernel,
-//!   so results are **bit-identical** for any worker count. Auto mode
-//!   threads only above [`PAR_FLOPS`] and degrades to the single-core path
-//!   when `available_parallelism() == 1`; `set_gemm_threads` forces a count
-//!   (used by the DP worker plumbing in `train::parallel` and by tests).
+//! * **Row-block threading**: `matmul_acc` splits C's rows across the
+//!   persistent [`pool`] workers (no external deps, no per-call forks).
+//!   Each row of C is computed by exactly one worker with the identical
+//!   single-thread kernel, so results are **bit-identical** for any worker
+//!   count. Auto mode threads only above [`PAR_FLOPS`] and degrades to the
+//!   single-core path when `available_parallelism() == 1`;
+//!   `set_gemm_threads` (or the `GEMM_THREADS` env var, read once) forces a
+//!   count (used by the DP worker plumbing in `train::parallel`, CI, and
+//!   tests). The same plan gates the threaded QR/SVD/matvec kernels, so one
+//!   knob budgets every level of parallelism.
 
 use super::matrix::Matrix;
+use super::pool::{self, SendPtr};
 use super::workspace::Workspace;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -33,8 +37,41 @@ const MC: usize = 64;
 /// kernel itself runs for a comparable time.
 pub const PAR_FLOPS: usize = 1 << 21;
 
+/// Auto-threading threshold for the non-GEMM kernels (QR reflector fan,
+/// Jacobi rounds, matvec blocks). Dispatch on the persistent pool costs
+/// ~1 µs — far below a scoped-thread fork — so these engage much earlier
+/// than [`PAR_FLOPS`]; at the repo's refresh shapes (m = n = 256, r ≤ 32)
+/// the Jacobi rounds and power-iteration matvecs clear this bar while
+/// genuinely tiny updates (thin-QR trailing blocks at r ≤ 16) stay
+/// sequential.
+pub const PAR_KERNEL_FLOPS: usize = 1 << 17;
+
 /// 0 = auto (size-gated `available_parallelism`), otherwise a forced count.
-static GEMM_THREADS: AtomicUsize = AtomicUsize::new(0);
+/// `usize::MAX` is the "unset" sentinel: the first read seeds the value from
+/// the `GEMM_THREADS` environment variable (CI exercises both kernel paths
+/// by running the suite under `GEMM_THREADS=1` and `GEMM_THREADS=8`).
+static GEMM_THREADS: AtomicUsize = AtomicUsize::new(usize::MAX);
+
+/// The forced worker count: explicit [`set_gemm_threads`] value, else the
+/// `GEMM_THREADS` env var (parsed once), else 0 (auto).
+fn forced_threads() -> usize {
+    let cur = GEMM_THREADS.load(Ordering::Relaxed);
+    if cur != usize::MAX {
+        return cur;
+    }
+    let from_env = std::env::var("GEMM_THREADS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .unwrap_or(0);
+    // Only replace the sentinel so a concurrent `set_gemm_threads` wins.
+    let _ = GEMM_THREADS.compare_exchange(
+        usize::MAX,
+        from_env,
+        Ordering::Relaxed,
+        Ordering::Relaxed,
+    );
+    GEMM_THREADS.load(Ordering::Relaxed)
+}
 
 thread_local! {
     /// Set inside data-parallel worker threads: the cores are already taken
@@ -42,10 +79,13 @@ thread_local! {
     static FORCE_SINGLE: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
 }
 
-/// Force the GEMM worker count (0 restores auto). Threading is bit-exact, so
-/// this only affects speed, never results.
+/// Force the GEMM worker count (0 restores the `GEMM_THREADS` env default,
+/// or auto when the variable is unset). Threading is bit-exact, so this only
+/// affects speed, never results.
 pub fn set_gemm_threads(n: usize) {
-    GEMM_THREADS.store(n, Ordering::Relaxed);
+    // Storing the sentinel makes the next read re-resolve the env var, so a
+    // test that restores "auto" does not erase a CI-wide GEMM_THREADS=N.
+    GEMM_THREADS.store(if n == 0 { usize::MAX } else { n }, Ordering::Relaxed);
 }
 
 /// Run `f` with GEMM threading disabled on *this* thread (results are
@@ -61,7 +101,7 @@ pub fn run_single_threaded<R>(f: impl FnOnce() -> R) -> R {
 /// The worker count GEMM (and the data-parallel trainer plumbing) will use:
 /// the forced count if set, else `available_parallelism`.
 pub fn gemm_threads() -> usize {
-    let forced = GEMM_THREADS.load(Ordering::Relaxed);
+    let forced = forced_threads();
     if forced > 0 {
         forced
     } else {
@@ -73,10 +113,10 @@ pub fn gemm_threads() -> usize {
 /// forced to 1, when auto-mode work is below [`PAR_FLOPS`], or when only one
 /// core is available; never more than m.
 fn plan_threads(m: usize, k: usize, n: usize) -> usize {
-    if FORCE_SINGLE.with(|c| c.get()) {
+    if FORCE_SINGLE.with(|c| c.get()) || pool::on_worker() {
         return 1;
     }
-    let forced = GEMM_THREADS.load(Ordering::Relaxed);
+    let forced = forced_threads();
     let cap = if forced > 0 {
         forced
     } else {
@@ -87,6 +127,26 @@ fn plan_threads(m: usize, k: usize, n: usize) -> usize {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
     };
     cap.min(m).max(1)
+}
+
+/// The worker plan for non-GEMM kernels (QR reflector columns, Jacobi
+/// rotation pairs, matvec blocks): same opt-outs and forced count as
+/// [`plan_threads`], with the caller supplying its own flop estimate for the
+/// auto gate. `tasks` bounds the useful fan-out.
+pub(crate) fn plan_kernel_threads(flops: usize, tasks: usize) -> usize {
+    if FORCE_SINGLE.with(|c| c.get()) || pool::on_worker() {
+        return 1;
+    }
+    let forced = forced_threads();
+    let cap = if forced > 0 {
+        forced
+    } else {
+        if flops < PAR_KERNEL_FLOPS {
+            return 1;
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    };
+    cap.min(tasks).max(1)
 }
 
 /// C = A·B. Shapes: (m×k)·(k×n) → m×n.
@@ -123,24 +183,18 @@ pub fn matmul_acc(c: &mut Matrix, a: &Matrix, b: &Matrix, alpha: f32) {
         return;
     }
     let rows_per = m.div_ceil(threads);
-    std::thread::scope(|scope| {
-        let mut cd_rest: &mut [f32] = cd;
-        let mut ad_rest: &[f32] = ad;
-        let mut left = m;
-        while left > 0 {
-            let rows = rows_per.min(left);
-            let (c_chunk, c_next) = std::mem::take(&mut cd_rest).split_at_mut(rows * n);
-            let (a_chunk, a_next) = ad_rest.split_at(rows * k);
-            cd_rest = c_next;
-            ad_rest = a_next;
-            left -= rows;
-            if left == 0 {
-                // Last chunk runs on the calling thread: one fork fewer.
-                matmul_acc_rows(c_chunk, a_chunk, bd, rows, k, n, alpha);
-            } else {
-                scope.spawn(move || matmul_acc_rows(c_chunk, a_chunk, bd, rows, k, n, alpha));
-            }
-        }
+    let n_chunks = m.div_ceil(rows_per);
+    // Disjoint row-block writes into C, one chunk per pool task. Every row
+    // is computed by the identical scalar kernel whatever the chunking, so
+    // any worker count gives bit-identical results.
+    let c_base = SendPtr::new(cd.as_mut_ptr());
+    pool::run(threads, n_chunks, &|t| {
+        let row0 = t * rows_per;
+        let rows = rows_per.min(m - row0);
+        let c_chunk =
+            unsafe { std::slice::from_raw_parts_mut(c_base.get().add(row0 * n), rows * n) };
+        let a_chunk = &ad[row0 * k..(row0 + rows) * k];
+        matmul_acc_rows(c_chunk, a_chunk, bd, rows, k, n, alpha);
     });
 }
 
@@ -358,14 +412,34 @@ pub fn matvec(a: &Matrix, x: &[f32]) -> Vec<f32> {
     y
 }
 
-/// y = A·x into a caller-provided slice of length `a.rows()`.
+/// y = A·x into a caller-provided slice of length `a.rows()`. Threaded over
+/// output row blocks: each `y[i]` is one sequential dot product whichever
+/// worker computes it, so results are bit-identical for any worker count.
 pub fn matvec_into(y: &mut [f32], a: &Matrix, x: &[f32]) {
     let (m, k) = a.shape();
     assert_eq!(k, x.len(), "matvec dims");
     assert_eq!(m, y.len(), "matvec output len");
     let ad = a.data();
-    for (i, yv) in y.iter_mut().enumerate() {
-        let row = &ad[i * k..(i + 1) * k];
+    let threads = plan_kernel_threads(2usize.saturating_mul(m).saturating_mul(k), m);
+    if threads <= 1 {
+        matvec_rows(y, ad, x, k, 0);
+        return;
+    }
+    let rows_per = m.div_ceil(threads);
+    let n_chunks = m.div_ceil(rows_per);
+    let y_base = SendPtr::new(y.as_mut_ptr());
+    pool::run(threads, n_chunks, &|t| {
+        let row0 = t * rows_per;
+        let rows = rows_per.min(m - row0);
+        let y_chunk = unsafe { std::slice::from_raw_parts_mut(y_base.get().add(row0), rows) };
+        matvec_rows(y_chunk, ad, x, k, row0);
+    });
+}
+
+/// Row-block matvec kernel: `y_chunk[i] = A[row0+i, :] · x`.
+fn matvec_rows(y_chunk: &mut [f32], ad: &[f32], x: &[f32], k: usize, row0: usize) {
+    for (i, yv) in y_chunk.iter_mut().enumerate() {
+        let row = &ad[(row0 + i) * k..(row0 + i + 1) * k];
         *yv = row.iter().zip(x).map(|(&a, &b)| a * b).sum();
     }
 }
@@ -373,17 +447,57 @@ pub fn matvec_into(y: &mut [f32], a: &Matrix, x: &[f32]) {
 /// y = Aᵀ·x (A stored m×k, result length k). Zero x entries are not skipped
 /// (NaN/Inf rows of A must propagate).
 pub fn matvec_t(a: &Matrix, x: &[f32]) -> Vec<f32> {
+    let mut y = vec![0.0f32; a.cols()];
+    matvec_t_into(&mut y, a, x);
+    y
+}
+
+/// y = Aᵀ·x into a caller-provided slice of length `a.cols()`. Threaded over
+/// output column blocks; each `y[j]` accumulates rows in index order (f32,
+/// the same sequence the historical row-streaming kernel produced), so
+/// results are bit-identical for any worker count.
+pub fn matvec_t_into(y: &mut [f32], a: &Matrix, x: &[f32]) {
     let (m, k) = a.shape();
     assert_eq!(m, x.len(), "matvec_t dims");
-    let mut y = vec![0.0f32; k];
+    assert_eq!(k, y.len(), "matvec_t output len");
     let ad = a.data();
-    for (i, &xv) in x.iter().enumerate() {
-        let row = &ad[i * k..(i + 1) * k];
-        for (yv, &av) in y.iter_mut().zip(row.iter()) {
-            *yv += xv * av;
+    let threads = plan_kernel_threads(2usize.saturating_mul(m).saturating_mul(k), k);
+    if threads <= 1 {
+        // Row-streaming form: one sequential pass over A (the column-block
+        // kernel would stride by k per element). Produces bit-identical
+        // results — each y[j] still accumulates over i in index order.
+        y.fill(0.0);
+        for (i, &xv) in x.iter().enumerate() {
+            let row = &ad[i * k..(i + 1) * k];
+            for (yv, &av) in y.iter_mut().zip(row.iter()) {
+                *yv += xv * av;
+            }
         }
+        return;
     }
-    y
+    let cols_per = k.div_ceil(threads);
+    let n_chunks = k.div_ceil(cols_per);
+    let y_base = SendPtr::new(y.as_mut_ptr());
+    pool::run(threads, n_chunks, &|t| {
+        let col0 = t * cols_per;
+        let cols = cols_per.min(k - col0);
+        let y_chunk = unsafe { std::slice::from_raw_parts_mut(y_base.get().add(col0), cols) };
+        matvec_t_cols(y_chunk, ad, x, k, col0);
+    });
+}
+
+/// Column-block matvec_t kernel: `y_chunk[j] = Σ_i x[i]·A[i, col0+j]`,
+/// accumulated over i in order (bit-identical to the row-streaming form).
+fn matvec_t_cols(y_chunk: &mut [f32], ad: &[f32], x: &[f32], k: usize, col0: usize) {
+    for (j, yv) in y_chunk.iter_mut().enumerate() {
+        let mut acc = 0.0f32;
+        let mut idx = col0 + j;
+        for &xv in x {
+            acc += xv * ad[idx];
+            idx += k;
+        }
+        *yv = acc;
+    }
 }
 
 #[cfg(test)]

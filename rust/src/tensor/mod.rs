@@ -40,17 +40,38 @@
 //!   `loss_and_grad` wrappers build a fresh cache per call for exactly this
 //!   reason — finite-difference tests poke weights directly).
 //!
-//! * **Threading.** [`gemm::matmul_acc`] splits C's rows across scoped
-//!   threads; each row is computed by the identical scalar kernel, so
-//!   results are bit-identical for any worker count, and auto mode degrades
-//!   to the single-core path for small products or single-core hosts.
-//!   QR ([`qr`]) and the SVD power iteration ([`svd`]) remain
-//!   single-threaded — they run once per subspace refresh, off the
-//!   steady-state path (tracked in ROADMAP.md "Open items").
+//! * **Threading: one persistent pool, one budget.** All kernel fan-out
+//!   runs on the [`pool`] — `available_parallelism() − 1` long-lived
+//!   workers spawned on first use (replacing PR-1's per-call
+//!   `thread::scope` forks). [`gemm::matmul_acc`] splits C's rows into
+//!   blocks, [`qr::thin_qr`] fans its trailing-matrix reflector update out
+//!   per column, the [`svd`] Jacobi sweep runs round-robin rounds of
+//!   disjoint column pairs, and the power-iteration matvecs split by
+//!   output block. In every case one task's output depends only on its
+//!   index and is produced by the identical sequential kernel, so results
+//!   are **bit-identical for any worker count** (gated by
+//!   `rust/tests/subspace_props.rs`). The same plan gates everything:
+//!   `gemm::set_gemm_threads` / the `GEMM_THREADS` env var force a count,
+//!   auto mode threads only above [`gemm::PAR_FLOPS`] (GEMM) /
+//!   [`gemm::PAR_KERNEL_FLOPS`] (pool-dispatched QR/SVD/matvec), and the
+//!   data-parallel trainer shards run on the same pool with nested kernel
+//!   fan-out opted out (`gemm::run_single_threaded`; nested [`pool::run`]
+//!   executes inline regardless) — so DP workers and kernels can never
+//!   oversubscribe the machine.
+//!
+//! * **Allocation-free refresh paths.** The every-k-steps subspace
+//!   machinery has `_into` workspace-backed forms mirroring the GEMM ones:
+//!   [`qr::thin_qr_into`] / [`qr::reorthonormalize_in_place`],
+//!   [`svd::truncated_basis_into`] (the projector-refresh primitive),
+//!   [`svd::power_iteration_top1_ws`] and [`svd::randomized_range_into`].
+//!   All seven low-rank optimizers lease their refresh temporaries from
+//!   their own workspace, so misses occur only on the first step and the
+//!   first refresh (gated by `rust/tests/zero_alloc.rs`).
 
 pub mod gemm;
 pub mod matrix;
 pub mod ops;
+pub mod pool;
 pub mod qr;
 pub mod svd;
 pub mod workspace;

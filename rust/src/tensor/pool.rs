@@ -1,0 +1,337 @@
+//! Persistent worker pool shared by every threaded kernel.
+//!
+//! PR-1's `matmul_acc` forked `std::thread::scope` workers per call; at
+//! refresh-path shapes (a few hundred rows) the fork/join overhead is
+//! comparable to the kernel itself. This pool spawns
+//! `available_parallelism() − 1` long-lived workers once, on first use, and
+//! every threaded kernel (GEMM row blocks, QR reflector columns, Jacobi
+//! rotation pairs, matvec blocks) and the data-parallel trainer shards draw
+//! from the same budget through [`run`].
+//!
+//! # Execution model
+//!
+//! [`run`]`(workers, n_tasks, f)` executes `f(0)`, …, `f(n_tasks − 1)`
+//! exactly once each, distributed over at most `workers` participants (the
+//! calling thread plus pool workers). Task indices are handed out through a
+//! shared atomic counter, so *which* thread runs a task is scheduling-
+//! dependent — kernels must therefore make each task's output depend only on
+//! its index, which is exactly the bit-identical-per-row/column contract the
+//! GEMM kernel established. The caller blocks until every task has finished,
+//! so closures may borrow stack data (the borrow is lifetime-erased
+//! internally and provably outlives the run).
+//!
+//! # Nesting and the shared budget
+//!
+//! A task running *on* a pool worker never re-enters the pool: nested
+//! [`run`] calls execute inline on that worker ([`on_worker`] guards this).
+//! Combined with `gemm::run_single_threaded` (the data-parallel workers'
+//! opt-out) this makes oversubscription impossible: one level of the stack
+//! owns the cores at a time. Concurrent top-level callers simply queue; the
+//! job counter still guarantees exactly-once execution of every task.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// A raw mutable pointer that may be shared across pool tasks.
+///
+/// Wrapper contract: tasks must write **disjoint** regions (row blocks,
+/// column strides, pair columns) — the pool gives no other synchronization.
+/// This is how kernels hand each task its slice of an output buffer without
+/// borrow-splitting gymnastics at closure-capture time.
+#[derive(Clone, Copy)]
+pub struct SendPtr<T>(*mut T);
+
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    pub fn new(p: *mut T) -> SendPtr<T> {
+        SendPtr(p)
+    }
+
+    /// The wrapped pointer. All safety obligations of raw-pointer access
+    /// apply; additionally, concurrent tasks must touch disjoint elements.
+    #[inline]
+    pub fn get(self) -> *mut T {
+        self.0
+    }
+}
+
+/// One unit of fan-out: a lifetime-erased task function plus the shared
+/// completion state. Cloned once per participating worker.
+#[derive(Clone)]
+struct Job {
+    /// Erased borrow of the caller's closure. Valid for the whole job:
+    /// the caller blocks in [`run`] until `remaining` hits zero.
+    f: &'static (dyn Fn(usize) + Sync),
+    shared: Arc<JobShared>,
+}
+
+struct JobShared {
+    /// Next task index to claim.
+    next: AtomicUsize,
+    n_tasks: usize,
+    /// Worker copies of the job still running (the caller's own
+    /// participation is not counted — it knows when it finished).
+    remaining: AtomicUsize,
+    /// Set when a worker-side task panicked; re-raised on the caller.
+    panicked: std::sync::atomic::AtomicBool,
+    done_lock: Mutex<()>,
+    done_cv: Condvar,
+}
+
+/// Lock that tolerates poisoning: a panic inside a pool task must never
+/// cascade into a secondary panic (or abort) on the synchronization path.
+fn relock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+impl JobShared {
+    /// Claim-and-run loop shared by workers and the caller.
+    fn drain(&self, f: &(dyn Fn(usize) + Sync)) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.n_tasks {
+                return;
+            }
+            f(i);
+        }
+    }
+
+    fn signal_done(&self) {
+        let _guard = relock(&self.done_lock);
+        if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            self.done_cv.notify_all();
+        }
+    }
+
+    /// Block until every worker copy of the job finished. MUST run before
+    /// the caller's borrow of `f` ends — including on unwind — because
+    /// workers hold a lifetime-erased reference to it.
+    fn wait(&self) {
+        let mut guard = relock(&self.done_lock);
+        while self.remaining.load(Ordering::Acquire) > 0 {
+            guard = self.done_cv.wait(guard).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+/// Drop guard: waits for outstanding workers even when the caller's own
+/// task panics, so the erased closure borrow can never dangle.
+struct WaitOnDrop<'a>(&'a JobShared);
+
+impl Drop for WaitOnDrop<'_> {
+    fn drop(&mut self) {
+        self.0.wait();
+    }
+}
+
+/// The pool: a shared job queue the long-lived workers block on.
+struct Pool {
+    queue: Mutex<VecDeque<Job>>,
+    cv: Condvar,
+    n_workers: usize,
+}
+
+impl Pool {
+    fn worker_main(pool: Arc<Pool>) {
+        ON_WORKER.with(|w| w.set(true));
+        loop {
+            let job = {
+                let mut q = relock(&pool.queue);
+                loop {
+                    if let Some(job) = q.pop_front() {
+                        break job;
+                    }
+                    q = pool.cv.wait(q).unwrap_or_else(|e| e.into_inner());
+                }
+            };
+            // A panicking task must not kill the worker or strand the
+            // caller: record it, signal completion, re-raise caller-side.
+            let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                job.shared.drain(job.f);
+            }));
+            if res.is_err() {
+                job.shared.panicked.store(true, Ordering::Release);
+            }
+            job.shared.signal_done();
+        }
+    }
+}
+
+static POOL: OnceLock<Arc<Pool>> = OnceLock::new();
+
+thread_local! {
+    /// True on pool worker threads: nested `run` executes inline.
+    static ON_WORKER: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+fn pool() -> &'static Arc<Pool> {
+    POOL.get_or_init(|| {
+        let n_workers =
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).saturating_sub(1);
+        let pool = Arc::new(Pool {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            n_workers,
+        });
+        for _ in 0..n_workers {
+            let p = Arc::clone(&pool);
+            std::thread::Builder::new()
+                .name("subtrack-pool".into())
+                .spawn(move || Pool::worker_main(p))
+                .expect("spawn pool worker");
+        }
+        pool
+    })
+}
+
+/// Whether the current thread is a pool worker (used by kernels to skip
+/// re-planning: nested fan-out would run inline anyway).
+pub fn on_worker() -> bool {
+    ON_WORKER.with(|w| w.get())
+}
+
+/// Maximum useful participant count: the caller plus every pool worker.
+pub fn max_participants() -> usize {
+    pool().n_workers + 1
+}
+
+/// Execute `f(0..n_tasks)` with up to `workers` participants (calling thread
+/// included). Falls back to a plain sequential loop when the fan-out cannot
+/// help (one task, one worker, already on a pool worker, or no pool workers
+/// exist). Blocks until every task completed.
+pub fn run(workers: usize, n_tasks: usize, f: &(dyn Fn(usize) + Sync)) {
+    if n_tasks == 0 {
+        return;
+    }
+    let workers = workers.min(n_tasks);
+    if workers <= 1 || on_worker() {
+        for i in 0..n_tasks {
+            f(i);
+        }
+        return;
+    }
+    let pool = pool();
+    let extra = (workers - 1).min(pool.n_workers);
+    if extra == 0 {
+        for i in 0..n_tasks {
+            f(i);
+        }
+        return;
+    }
+    let shared = Arc::new(JobShared {
+        next: AtomicUsize::new(0),
+        n_tasks,
+        remaining: AtomicUsize::new(extra),
+        panicked: std::sync::atomic::AtomicBool::new(false),
+        done_lock: Mutex::new(()),
+        done_cv: Condvar::new(),
+    });
+    // Erase the borrow's lifetime: sound because this function does not
+    // return (or unwind — see `WaitOnDrop`) until `remaining == 0`, i.e.
+    // until no worker holds `f` anymore.
+    let f_static: &'static (dyn Fn(usize) + Sync) = unsafe {
+        std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f)
+    };
+    {
+        let mut q = relock(&pool.queue);
+        for _ in 0..extra {
+            q.push_back(Job { f: f_static, shared: Arc::clone(&shared) });
+        }
+    }
+    if extra == 1 {
+        pool.cv.notify_one();
+    } else {
+        pool.cv.notify_all();
+    }
+    {
+        // The caller participates too — it is one of the `workers` budget —
+        // and waits for the workers even if its own task panics.
+        let _wait = WaitOnDrop(&shared);
+        shared.drain(f);
+        // Reclaim job copies no worker has popped yet: every task is claimed
+        // by now, so a late pop would be a no-op — but waiting for a *busy*
+        // worker (occupied with an unrelated long job) to pop-and-discard it
+        // would stall this caller behind work it has no part in.
+        let mut q = relock(&pool.queue);
+        q.retain(|job| {
+            let mine = Arc::ptr_eq(&job.shared, &shared);
+            if mine {
+                // No worker will signal for this copy; account for it here
+                // (the caller is the one about to wait, so no notify needed).
+                shared.remaining.fetch_sub(1, Ordering::AcqRel);
+            }
+            !mine
+        });
+    }
+    if shared.panicked.load(Ordering::Acquire) {
+        panic!("worker-pool task panicked (see stderr for the original panic)");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn every_task_runs_exactly_once() {
+        for n_tasks in [0usize, 1, 2, 7, 64, 1000] {
+            for workers in [1usize, 2, 8] {
+                let counts: Vec<AtomicU32> =
+                    (0..n_tasks).map(|_| AtomicU32::new(0)).collect();
+                run(workers, n_tasks, &|i| {
+                    counts[i].fetch_add(1, Ordering::Relaxed);
+                });
+                for (i, c) in counts.iter().enumerate() {
+                    assert_eq!(
+                        c.load(Ordering::Relaxed),
+                        1,
+                        "task {i} ran wrong count (tasks={n_tasks} workers={workers})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn borrows_stack_data_mutably_through_disjoint_tasks() {
+        let mut data = vec![0u64; 128];
+        let base = data.as_mut_ptr() as usize;
+        run(4, 128, &|i| {
+            // Each task owns element i — disjoint writes.
+            unsafe { *(base as *mut u64).add(i) = i as u64 * 3 };
+        });
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v, i as u64 * 3);
+        }
+    }
+
+    #[test]
+    fn nested_runs_execute_inline_without_deadlock() {
+        let total = AtomicU32::new(0);
+        run(8, 8, &|_| {
+            run(8, 4, &|_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    fn concurrent_top_level_callers_share_the_pool() {
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                scope.spawn(|| {
+                    let sum = AtomicU32::new(0);
+                    run(4, 100, &|i| {
+                        sum.fetch_add(i as u32, Ordering::Relaxed);
+                    });
+                    assert_eq!(sum.load(Ordering::Relaxed), 4950);
+                });
+            }
+        });
+    }
+}

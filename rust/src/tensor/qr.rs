@@ -4,20 +4,53 @@
 //! triangular. Used to (re-)orthonormalize subspace bases and to solve the
 //! general least-squares problem; the SubTrack++ hot path avoids it because
 //! its basis S is already orthonormal (then argmin_A ‖SA−G‖ = SᵀG).
+//!
+//! # Threading and workspaces
+//!
+//! The trailing-matrix update `H·W[k.., k..]` — the O(mn²) bulk of the
+//! factorization — is parallelized across *columns* on the persistent
+//! [`pool`]: each column's reflection is one sequential f64 dot plus a
+//! scaled subtraction, computed entirely by whichever worker claims it, so
+//! results are **bit-identical for any worker count** (the same contract as
+//! `gemm::matmul_acc`). [`thin_qr_into`] leases its working copy and the
+//! packed Householder vectors from a caller [`Workspace`], making the
+//! subspace-refresh paths allocation-free after warm-up.
 
 use super::gemm;
 use super::matrix::Matrix;
+use super::pool::{self, SendPtr};
+use super::workspace::Workspace;
 
 /// Thin QR via Householder reflections. Returns (Q m×n, R n×n). Requires m ≥ n.
 pub fn thin_qr(a: &Matrix) -> (Matrix, Matrix) {
     let (m, n) = a.shape();
+    let mut q = Matrix::zeros(m, n);
+    let mut r = Matrix::zeros(n, n);
+    thin_qr_into(a, &mut q, &mut r, &mut Workspace::new());
+    (q, r)
+}
+
+/// Allocation-free [`thin_qr`]: writes Q (m×n) and R (n×n) into
+/// caller-provided buffers, leasing the m×n working copy and the packed
+/// Householder vectors from `ws`. Outputs are fully overwritten.
+pub fn thin_qr_into(a: &Matrix, q: &mut Matrix, r: &mut Matrix, ws: &mut Workspace) {
+    let (m, n) = a.shape();
     assert!(m >= n, "thin_qr requires m >= n, got {m}x{n}");
-    // Work on a copy of A; accumulate Householder vectors in-place (LAPACK style).
-    let mut r = a.clone();
-    let mut vs: Vec<Vec<f32>> = Vec::with_capacity(n);
+    assert_eq!(q.shape(), (m, n), "thin_qr Q output shape");
+    assert_eq!(r.shape(), (n, n), "thin_qr R output shape");
+    // Reduce a working copy of A in place (LAPACK style).
+    let mut w = ws.take_dirty(m, n);
+    w.copy_from(a);
+    // Householder vectors, packed: v_k has m−k entries at offset
+    // k·m − k(k−1)/2. Every entry is written below (the degenerate branches
+    // store explicit zeros), so a dirty lease is safe.
+    let mut vs = ws.take_vec_dirty(packed_len(m, n));
     for k in 0..n {
-        // Householder vector for column k, rows k..m.
-        let mut v: Vec<f32> = (k..m).map(|i| r.get(i, k)).collect();
+        let v = &mut vs[packed_off(m, k)..packed_off(m, k + 1)];
+        // Gather column k, rows k..m.
+        for (idx, i) in (k..m).enumerate() {
+            v[idx] = w.get(i, k);
+        }
         let norm_x = (v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>()).sqrt() as f32;
         if norm_x > 0.0 {
             let alpha = if v[0] >= 0.0 { -norm_x } else { norm_x };
@@ -28,72 +61,124 @@ pub fn thin_qr(a: &Matrix) -> (Matrix, Matrix) {
                 for x in v.iter_mut() {
                     *x /= vnorm;
                 }
-                // Apply H = I - 2vvᵀ to R[k.., k..].
-                for j in k..n {
-                    let mut dot = 0.0f64;
-                    for (idx, i) in (k..m).enumerate() {
-                        dot += v[idx] as f64 * r.get(i, j) as f64;
-                    }
-                    let dot = 2.0 * dot as f32;
-                    for (idx, i) in (k..m).enumerate() {
-                        let val = r.get(i, j) - dot * v[idx];
-                        r.set(i, j, val);
-                    }
-                }
+                // Apply H = I − 2vvᵀ to W[k.., k..] (threaded per column).
+                reflect_block(&mut w, k, v, k, n);
             } else {
-                v = vec![0.0; m - k];
+                v.fill(0.0);
             }
         }
-        vs.push(v);
+        // norm_x == 0 ⇒ the gathered column was all zeros ⇒ v already zero.
     }
     // Extract R (n×n upper triangular).
-    let mut rr = Matrix::zeros(n, n);
+    r.data_mut().fill(0.0);
     for i in 0..n {
         for j in i..n {
-            rr.set(i, j, r.get(i, j));
+            r.set(i, j, w.get(i, j));
         }
     }
     // Form thin Q by applying reflections to the first n columns of I.
-    let mut q = Matrix::zeros(m, n);
+    q.data_mut().fill(0.0);
     for j in 0..n {
         q.set(j, j, 1.0);
     }
     for k in (0..n).rev() {
-        let v = &vs[k];
+        let v = &vs[packed_off(m, k)..packed_off(m, k + 1)];
         if v.iter().all(|&x| x == 0.0) {
             continue;
         }
-        for j in 0..n {
+        reflect_block(q, k, v, 0, n);
+    }
+    ws.give_vec(vs);
+    ws.give(w);
+}
+
+/// Total packed length of the n Householder vectors: Σ_{k<n} (m−k).
+fn packed_len(m: usize, n: usize) -> usize {
+    n * m - n.saturating_sub(1) * n / 2
+}
+
+/// Offset of v_k in the packed buffer.
+fn packed_off(m: usize, k: usize) -> usize {
+    k * m - k.saturating_sub(1) * k / 2
+}
+
+/// Apply the reflector H = I − 2vvᵀ (acting on rows k..rows) to columns
+/// [jlo, jhi) of `w`, fanning column blocks out over the worker pool. Each
+/// column is processed start-to-finish by one worker with the identical
+/// sequential kernel, so any worker count is bit-identical.
+fn reflect_block(w: &mut Matrix, k: usize, v: &[f32], jlo: usize, jhi: usize) {
+    let (rows, ncols) = w.shape();
+    debug_assert_eq!(v.len(), rows - k);
+    let cols = jhi - jlo;
+    if cols == 0 || v.is_empty() {
+        return;
+    }
+    let flops = 4usize.saturating_mul(rows - k).saturating_mul(cols);
+    let threads = gemm::plan_kernel_threads(flops, cols);
+    let base = SendPtr::new(w.data_mut().as_mut_ptr());
+    if threads <= 1 {
+        reflect_cols(base, ncols, k, v, jlo, jhi);
+        return;
+    }
+    let per = cols.div_ceil(threads);
+    let chunks = cols.div_ceil(per);
+    pool::run(threads, chunks, &|t| {
+        let lo = jlo + t * per;
+        let hi = (lo + per).min(jhi);
+        reflect_cols(base, ncols, k, v, lo, hi);
+    });
+}
+
+/// Sequential per-column reflector kernel over columns [jlo, jhi): for each
+/// column, an f64 dot with v over rows k.. then the rank-1 subtraction.
+/// Tasks touch disjoint columns of the shared buffer.
+fn reflect_cols(base: SendPtr<f32>, ncols: usize, k: usize, v: &[f32], jlo: usize, jhi: usize) {
+    for j in jlo..jhi {
+        unsafe {
             let mut dot = 0.0f64;
-            for (idx, i) in (k..m).enumerate() {
-                dot += v[idx] as f64 * q.get(i, j) as f64;
+            let mut idx = k * ncols + j;
+            for &vi in v {
+                dot += vi as f64 * (*base.get().add(idx)) as f64;
+                idx += ncols;
             }
-            let dot = 2.0 * dot as f32;
-            for (idx, i) in (k..m).enumerate() {
-                let val = q.get(i, j) - dot * v[idx];
-                q.set(i, j, val);
+            let scale = 2.0 * dot as f32;
+            let mut idx = k * ncols + j;
+            for &vi in v {
+                let p = base.get().add(idx);
+                *p -= scale * vi;
+                idx += ncols;
             }
         }
     }
-    (q, rr)
 }
 
-/// Re-orthonormalize the columns of `a` in place via thin QR (drift guard).
+/// Re-orthonormalize the columns of `a` via thin QR (drift guard).
 /// Sign-fixes columns so the diagonal of R is non-negative, making the result
 /// a continuous deformation of the input basis.
 pub fn reorthonormalize(a: &Matrix) -> Matrix {
-    let (q, r) = thin_qr(a);
-    let mut q = q;
-    let n = q.cols();
+    let mut s = a.clone();
+    reorthonormalize_in_place(&mut s, &mut Workspace::new());
+    s
+}
+
+/// Allocation-free [`reorthonormalize`]: replaces `s` with the sign-fixed Q
+/// of its thin QR, leasing all scratch from `ws`.
+pub fn reorthonormalize_in_place(s: &mut Matrix, ws: &mut Workspace) {
+    let (m, n) = s.shape();
+    let mut q = ws.take_dirty(m, n);
+    let mut r = ws.take_dirty(n, n);
+    thin_qr_into(s, &mut q, &mut r, ws);
     for j in 0..n {
         if r.get(j, j) < 0.0 {
-            for i in 0..q.rows() {
+            for i in 0..m {
                 let v = -q.get(i, j);
                 q.set(i, j, v);
             }
         }
     }
-    q
+    s.copy_from(&q);
+    ws.give(q);
+    ws.give(r);
 }
 
 /// Solve the least squares problem min_X ‖A·X − B‖_F for A m×n (m ≥ n,
@@ -185,6 +270,42 @@ mod tests {
     }
 
     #[test]
+    fn into_variant_reuses_workspace_and_matches() {
+        // Repeated thin_qr_into calls with recurring shapes must settle to
+        // zero new misses, and agree with the allocating wrapper bitwise.
+        let mut rng = Rng::new(11);
+        let mut ws = Workspace::new();
+        let a = Matrix::randn(24, 6, 1.0, &mut rng);
+        let (q_want, r_want) = thin_qr(&a);
+        let mut q = ws.take_dirty(24, 6);
+        let mut r = ws.take_dirty(6, 6);
+        thin_qr_into(&a, &mut q, &mut r, &mut ws);
+        assert_eq!(q.data(), q_want.data());
+        assert_eq!(r.data(), r_want.data());
+        let misses = ws.misses();
+        for _ in 0..3 {
+            thin_qr_into(&a, &mut q, &mut r, &mut ws);
+        }
+        assert_eq!(ws.misses(), misses, "steady-state thin_qr_into allocated");
+        ws.give(q);
+        ws.give(r);
+    }
+
+    #[test]
+    fn rank_deficient_columns_are_handled() {
+        // A duplicate column makes one Householder step degenerate; the
+        // factorization must still reconstruct A.
+        let mut rng = Rng::new(12);
+        let mut a = Matrix::randn(12, 4, 1.0, &mut rng);
+        for i in 0..12 {
+            let v = a.get(i, 0);
+            a.set(i, 2, v);
+        }
+        let (q, r) = thin_qr(&a);
+        proptest::close(gemm::matmul(&q, &r).data(), a.data(), 1e-4, 1e-3).unwrap();
+    }
+
+    #[test]
     fn lstsq_exact_system() {
         // Overdetermined but consistent: A·x = b exactly.
         let mut rng = Rng::new(6);
@@ -234,5 +355,9 @@ mod tests {
         // Should stay close to the original basis (same subspace, same signs).
         let diff = fixed.sub(&q).max_abs();
         assert!(diff < 0.05, "basis moved too much: {diff}");
+        // In-place variant agrees bitwise.
+        let mut in_place = drifted.clone();
+        reorthonormalize_in_place(&mut in_place, &mut Workspace::new());
+        assert_eq!(in_place.data(), fixed.data());
     }
 }

@@ -7,10 +7,30 @@
 //! * SubTrack++ needs only the **top-1** singular triplet of the m×r tangent
 //!   ∇F — power iteration, O(m·r) per sweep (Appendix D).
 //! * LDAdam's PowerSGD-style update uses one block power-iteration sweep.
+//!
+//! # Threading and workspaces
+//!
+//! The Jacobi sweep is organized as a **round-robin tournament**: each round
+//! is a fixed, worker-count-independent set of disjoint column pairs, and a
+//! pair's rotation touches only its own two columns of W and V. Pairs of a
+//! round therefore fan out over the persistent [`pool`] with no races and
+//! **bit-identical results for any worker count** (each pair's arithmetic is
+//! the same sequential kernel wherever it runs). The power iteration is
+//! blocked the same way through the threaded `gemm::matvec_into` /
+//! `matvec_t_into` kernels. [`truncated_basis_into`],
+//! [`power_iteration_top1_ws`] and [`randomized_range_into`] lease every
+//! *matrix/vector buffer* from a caller [`Workspace`], so the every-k-steps
+//! projector refreshes add no workspace misses after their first occurrence
+//! (the gate `rust/tests/zero_alloc.rs` measures). Small containers are
+//! exempt, as everywhere in the step loop: the sweep's per-pair convergence
+//! slots and, when a round actually fans out, the pool's per-run job state
+//! still allocate a few dozen bytes.
 
 use super::gemm;
 use super::matrix::Matrix;
+use super::pool::{self, SendPtr};
 use super::qr;
+use super::workspace::Workspace;
 use crate::util::rng::Rng;
 
 /// Thin SVD result: A = U · diag(s) · Vᵀ.
@@ -46,36 +66,7 @@ fn thin_svd_tall(a: &Matrix) -> Svd {
     debug_assert!(m >= n);
     let mut w = a.clone(); // columns will be rotated into U·S
     let mut v = Matrix::eye(n);
-    let max_sweeps = 60;
-    let eps = 1e-10f64;
-    for _ in 0..max_sweeps {
-        let mut off = 0.0f64;
-        for p in 0..n {
-            for q in (p + 1)..n {
-                let app = w.col_dot(p, p);
-                let aqq = w.col_dot(q, q);
-                let apq = w.col_dot(p, q);
-                if apq.abs() <= eps * (app * aqq).sqrt() || apq == 0.0 {
-                    continue;
-                }
-                off += apq.abs();
-                // Jacobi rotation angle.
-                let tau = (aqq - app) / (2.0 * apq);
-                let t = if tau >= 0.0 {
-                    1.0 / (tau + (1.0 + tau * tau).sqrt())
-                } else {
-                    -1.0 / (-tau + (1.0 + tau * tau).sqrt())
-                };
-                let c = 1.0 / (1.0 + t * t).sqrt();
-                let s = c * t;
-                rotate_cols(&mut w, p, q, c as f32, s as f32);
-                rotate_cols(&mut v, p, q, c as f32, s as f32);
-            }
-        }
-        if off < eps {
-            break;
-        }
-    }
+    jacobi_sweeps(&mut w, &mut v);
     // Singular values = column norms; U = normalized columns.
     let mut sv: Vec<(f32, usize)> =
         (0..n).map(|j| ((w.col_dot(j, j)).sqrt() as f32, j)).collect();
@@ -101,18 +92,140 @@ fn thin_svd_tall(a: &Matrix) -> Svd {
     Svd { u, s, v: vv }
 }
 
-#[inline]
-fn rotate_cols(m: &mut Matrix, p: usize, q: usize, c: f32, s: f32) {
-    let cols = m.cols();
-    let data = m.data_mut();
-    let rows = data.len() / cols;
-    let mut idx = 0;
+/// Run one-sided Jacobi rotation sweeps on `w` (m×n, m ≥ n), accumulating
+/// the right rotations into `v` (n×n, initialized to identity by the
+/// caller). On return the columns of `w` are mutually orthogonal (U·S) and
+/// `v` holds the right singular vectors, both unsorted.
+///
+/// Each sweep is a round-robin tournament over column pairs: the pairs of a
+/// round are disjoint, every pair's rotation reads and writes only its own
+/// two columns, and the round schedule is fixed — so fanning the pairs of a
+/// round over the pool is race-free and bit-identical for any worker count.
+fn jacobi_sweeps(w: &mut Matrix, v: &mut Matrix) {
+    let (m, n) = w.shape();
+    debug_assert!(m >= n);
+    debug_assert_eq!(v.shape(), (n, n));
+    if n < 2 {
+        return;
+    }
+    let eps = 1e-10f64;
+    let max_sweeps = 60;
+    // Pad to even: index `n` (when n is odd) is a bye.
+    let np = n + n % 2;
+    let pairs = np / 2;
+    // Per-pair |apq| contributions, summed in fixed pair order after each
+    // round so the convergence test is scheduling-independent.
+    let mut offs = vec![0.0f64; pairs];
+    let wbase = SendPtr::new(w.data_mut().as_mut_ptr());
+    let vbase = SendPtr::new(v.data_mut().as_mut_ptr());
+    // ~2m per dot ×3, ~4(m+n) per rotation pair applied to W and V.
+    let flops = (6 * m + 4 * (m + n)).saturating_mul(pairs);
+    let threads = gemm::plan_kernel_threads(flops, pairs);
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for round in 0..np - 1 {
+            let obase = SendPtr::new(offs.as_mut_ptr());
+            pool::run(threads, pairs, &|i| {
+                let (a, b) = round_robin_pair(np, round, i);
+                let contribution = if a >= n || b >= n {
+                    0.0 // bye pair (odd n)
+                } else {
+                    let (p, q) = if a < b { (a, b) } else { (b, a) };
+                    // SAFETY: pairs of one round are disjoint, and a pair
+                    // touches only columns p and q of w/v and slot i of offs.
+                    unsafe { jacobi_pair(wbase, m, vbase, n, p, q, eps) }
+                };
+                unsafe { *obase.get().add(i) = contribution };
+            });
+            for &o in offs.iter() {
+                off += o;
+            }
+        }
+        if off < eps {
+            break;
+        }
+    }
+}
+
+/// Pair `i` of round `round` in the circle-method tournament over `np`
+/// (even) players: player np−1 sits fixed, the rest rotate. Every round's
+/// pairs are disjoint and all C(np, 2) pairs occur once per np−1 rounds.
+fn round_robin_pair(np: usize, round: usize, i: usize) -> (usize, usize) {
+    let md = np - 1;
+    if i == 0 {
+        (np - 1, round % md)
+    } else {
+        ((round + i) % md, (round + md - i) % md)
+    }
+}
+
+/// One Jacobi rotation on columns (p, q): column dots, the rotation angle,
+/// and the rotation applied to `w` (m rows) and `v` (n rows). Returns the
+/// |apq| convergence contribution (0 when the pair is already orthogonal).
+///
+/// # Safety
+/// Caller must guarantee no concurrent task touches columns p or q.
+unsafe fn jacobi_pair(
+    wbase: SendPtr<f32>,
+    m: usize,
+    vbase: SendPtr<f32>,
+    n: usize,
+    p: usize,
+    q: usize,
+    eps: f64,
+) -> f64 {
+    let app = col_dot_raw(wbase.get(), n, m, p, p);
+    let aqq = col_dot_raw(wbase.get(), n, m, q, q);
+    let apq = col_dot_raw(wbase.get(), n, m, p, q);
+    if apq.abs() <= eps * (app * aqq).sqrt() || apq == 0.0 {
+        return 0.0;
+    }
+    // Jacobi rotation angle.
+    let tau = (aqq - app) / (2.0 * apq);
+    let t = if tau >= 0.0 {
+        1.0 / (tau + (1.0 + tau * tau).sqrt())
+    } else {
+        -1.0 / (-tau + (1.0 + tau * tau).sqrt())
+    };
+    let c = 1.0 / (1.0 + t * t).sqrt();
+    let s = c * t;
+    rotate_pair_raw(wbase.get(), n, m, p, q, c as f32, s as f32);
+    rotate_pair_raw(vbase.get(), n, n, p, q, c as f32, s as f32);
+    apq.abs()
+}
+
+/// Σ_i base[i,j1]·base[i,j2] over a row-major `rows`×`ncols` buffer, f64.
+unsafe fn col_dot_raw(base: *const f32, ncols: usize, rows: usize, j1: usize, j2: usize) -> f64 {
+    let mut acc = 0.0f64;
+    let mut i1 = j1;
+    let mut i2 = j2;
     for _ in 0..rows {
-        let vp = data[idx + p];
-        let vq = data[idx + q];
-        data[idx + p] = c * vp - s * vq;
-        data[idx + q] = s * vp + c * vq;
-        idx += cols;
+        acc += (*base.add(i1)) as f64 * (*base.add(i2)) as f64;
+        i1 += ncols;
+        i2 += ncols;
+    }
+    acc
+}
+
+/// Apply the Givens rotation to columns (p, q) of a `rows`×`ncols` buffer.
+unsafe fn rotate_pair_raw(
+    base: *mut f32,
+    ncols: usize,
+    rows: usize,
+    p: usize,
+    q: usize,
+    c: f32,
+    s: f32,
+) {
+    let mut ip = p;
+    let mut iq = q;
+    for _ in 0..rows {
+        let vp = *base.add(ip);
+        let vq = *base.add(iq);
+        *base.add(ip) = c * vp - s * vq;
+        *base.add(iq) = s * vp + c * vq;
+        ip += ncols;
+        iq += ncols;
     }
 }
 
@@ -124,41 +237,118 @@ pub fn truncated_svd(a: &Matrix, r: usize) -> Svd {
     Svd { u: full.u.take_cols(k), s: full.s[..k].to_vec(), v: full.v.take_cols(k) }
 }
 
+/// Allocation-free truncated-SVD basis: writes the leading `out.cols()`
+/// **left** singular vectors of `a` into `out` (`right = false`, m×r) or the
+/// leading **right** singular vectors (`right = true`, n×r), leasing every
+/// temporary from `ws`. This is the projector-refresh primitive: the basis
+/// lands directly in the optimizer-owned buffer, bit-identical to the
+/// corresponding columns of [`truncated_svd`].
+pub fn truncated_basis_into(a: &Matrix, right: bool, out: &mut Matrix, ws: &mut Workspace) {
+    let (m, n) = a.shape();
+    let r = out.cols();
+    let tall = m >= n;
+    let (big, small) = if tall { (m, n) } else { (n, m) };
+    assert!(r <= small, "truncated basis rank {r} exceeds min dim {small}");
+    assert_eq!(out.rows(), if right { n } else { m }, "truncated basis output rows");
+    // Work on the taller orientation, like `thin_svd`.
+    let mut w = ws.take_dirty(big, small);
+    if tall {
+        w.copy_from(a);
+    } else {
+        a.transpose_into(&mut w);
+    }
+    let mut v = ws.take(small, small);
+    for i in 0..small {
+        v.set(i, i, 1.0);
+    }
+    jacobi_sweeps(&mut w, &mut v);
+    let mut sv: Vec<(f32, usize)> =
+        (0..small).map(|j| ((w.col_dot(j, j)).sqrt() as f32, j)).collect();
+    sv.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    // Which factor holds the requested vectors: the normalized W columns are
+    // the tall orientation's left factor, the V accumulator its right one;
+    // a wide input swaps the roles (we decomposed Aᵀ).
+    let from_w = right != tall;
+    out.data_mut().fill(0.0);
+    for (out_j, &(sigma, j)) in sv.iter().take(r).enumerate() {
+        if from_w {
+            if sigma > 1e-30 {
+                for i in 0..big {
+                    out.set(i, out_j, w.get(i, j) / sigma);
+                }
+            } else {
+                out.set(out_j.min(big - 1), out_j, 1.0);
+            }
+        } else {
+            for i in 0..small {
+                out.set(i, out_j, v.get(i, j));
+            }
+        }
+    }
+    ws.give(w);
+    ws.give(v);
+}
+
 /// Top-1 singular triplet (σ, u, v) of A via power iteration on AᵀA.
 ///
 /// This is SubTrack++'s rank-1 approximation of the tangent vector ∇F
 /// (m×r, r small): O(m·r) per sweep, a few sweeps suffice because the
 /// tangent is strongly rank-1 dominated in practice.
 pub fn power_iteration_top1(a: &Matrix, iters: usize, rng: &mut Rng) -> (f32, Vec<f32>, Vec<f32>) {
+    let mut u = vec![0.0f32; a.rows()];
+    let mut v = vec![0.0f32; a.cols()];
+    let sigma = power_iteration_top1_ws(a, iters, rng, &mut u, &mut v);
+    (sigma, u, v)
+}
+
+/// Allocation-free [`power_iteration_top1`]: writes the left/right singular
+/// vectors into caller-provided slices (`u` of length m, `v` of length n,
+/// typically workspace-leased) and returns σ. The matvec kernels are the
+/// threaded blocked ones, bit-identical for any worker count.
+pub fn power_iteration_top1_ws(
+    a: &Matrix,
+    iters: usize,
+    rng: &mut Rng,
+    u: &mut [f32],
+    v: &mut [f32],
+) -> f32 {
     let (m, n) = a.shape();
+    assert_eq!(u.len(), m, "power iteration u length");
+    assert_eq!(v.len(), n, "power iteration v length");
     if m == 0 || n == 0 {
-        return (0.0, vec![0.0; m], vec![0.0; n]);
+        u.fill(0.0);
+        v.fill(0.0);
+        return 0.0;
     }
-    let mut v: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
-    normalize(&mut v);
-    let mut u = vec![0.0f32; m];
+    for x in v.iter_mut() {
+        *x = rng.normal_f32(0.0, 1.0);
+    }
+    normalize(v);
+    u.fill(0.0);
     let mut sigma = 0.0f32;
     for _ in 0..iters.max(1) {
         // u = A v
-        u = gemm::matvec(a, &v);
-        let un = norm(&u);
+        gemm::matvec_into(u, a, v);
+        let un = norm(u);
         if un <= 1e-30 {
-            return (0.0, vec![0.0; m], v);
+            u.fill(0.0);
+            return 0.0;
         }
         for x in u.iter_mut() {
             *x /= un;
         }
         // v = Aᵀ u
-        v = gemm::matvec_t(a, &u);
-        sigma = norm(&v);
+        gemm::matvec_t_into(v, a, u);
+        sigma = norm(v);
         if sigma <= 1e-30 {
-            return (0.0, u, vec![0.0; n]);
+            v.fill(0.0);
+            return 0.0;
         }
         for x in v.iter_mut() {
             *x /= sigma;
         }
     }
-    (sigma, u, v)
+    sigma
 }
 
 /// Randomized rank-r range finder (Halko-Martinsson-Tropp): Q m×r with
@@ -166,12 +356,30 @@ pub fn power_iteration_top1(a: &Matrix, iters: usize, rng: &mut Rng) -> (f32, Ve
 /// iteration refinement. Used by the APOLLO/GoLore random-projection
 /// baselines and as a fast projector refresh.
 pub fn randomized_range(a: &Matrix, r: usize, rng: &mut Rng) -> Matrix {
-    let (_m, n) = a.shape();
+    let (m, n) = a.shape();
     let r = r.min(n).max(1);
-    let omega = Matrix::randn(n, r, 1.0, rng);
-    let y = gemm::matmul(a, &omega); // m×r
-    let (q, _) = qr::thin_qr(&y);
+    let mut q = Matrix::zeros(m, r);
+    randomized_range_into(a, &mut q, rng, &mut Workspace::new());
     q
+}
+
+/// Allocation-free [`randomized_range`]: writes the m×r orthonormal range
+/// basis into `q`, leasing the Gaussian test matrix, the sample matrix, and
+/// the QR scratch from `ws`.
+pub fn randomized_range_into(a: &Matrix, q: &mut Matrix, rng: &mut Rng, ws: &mut Workspace) {
+    let (m, n) = a.shape();
+    let r = q.cols();
+    assert!(r >= 1 && r <= n, "randomized range rank {r} outside 1..={n}");
+    assert_eq!(q.rows(), m, "randomized range output rows");
+    let mut omega = ws.take_dirty(n, r);
+    rng.fill_normal(omega.data_mut(), 1.0);
+    let mut y = ws.take_dirty(m, r);
+    gemm::matmul_into(&mut y, a, &omega); // m×r sample of range(A)
+    let mut rr = ws.take_dirty(r, r);
+    qr::thin_qr_into(&y, q, &mut rr, ws);
+    ws.give(rr);
+    ws.give(y);
+    ws.give(omega);
 }
 
 fn norm(x: &[f32]) -> f32 {
@@ -272,6 +480,59 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn truncated_basis_into_matches_truncated_svd() {
+        let mut rng = Rng::new(28);
+        let mut ws = Workspace::new();
+        for (m, n) in [(18, 7), (7, 18), (9, 9)] {
+            let a = Matrix::randn(m, n, 1.0, &mut rng);
+            let r = 3;
+            let t = truncated_svd(&a, r);
+            let mut left = ws.take_dirty(m, r);
+            truncated_basis_into(&a, false, &mut left, &mut ws);
+            assert_eq!(left.data(), t.u.data(), "left basis diverged ({m}x{n})");
+            let mut right = ws.take_dirty(n, r);
+            truncated_basis_into(&a, true, &mut right, &mut ws);
+            assert_eq!(right.data(), t.v.data(), "right basis diverged ({m}x{n})");
+            ws.give(left);
+            ws.give(right);
+        }
+    }
+
+    #[test]
+    fn truncated_basis_into_reuses_workspace() {
+        let mut rng = Rng::new(29);
+        let mut ws = Workspace::new();
+        let a = Matrix::randn(20, 10, 1.0, &mut rng);
+        let mut out = ws.take_dirty(20, 4);
+        truncated_basis_into(&a, false, &mut out, &mut ws);
+        let misses = ws.misses();
+        for _ in 0..3 {
+            truncated_basis_into(&a, false, &mut out, &mut ws);
+        }
+        assert_eq!(ws.misses(), misses, "steady-state refresh allocated");
+        ws.give(out);
+    }
+
+    #[test]
+    fn round_robin_schedule_is_a_tournament() {
+        for np in [2usize, 4, 6, 12] {
+            let mut seen = std::collections::HashSet::new();
+            for round in 0..np - 1 {
+                let mut used = vec![false; np];
+                for i in 0..np / 2 {
+                    let (a, b) = round_robin_pair(np, round, i);
+                    assert!(a != b && a < np && b < np, "bad pair ({a},{b})");
+                    assert!(!used[a] && !used[b], "round {round} reuses a column");
+                    used[a] = true;
+                    used[b] = true;
+                    seen.insert((a.min(b), a.max(b)));
+                }
+            }
+            assert_eq!(seen.len(), np * (np - 1) / 2, "np={np} missed pairs");
+        }
     }
 
     #[test]

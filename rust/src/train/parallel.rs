@@ -1,14 +1,22 @@
 //! Data-parallel worker simulation.
 //!
-//! Each worker computes gradients on its shard of the batch (scoped threads
-//! sharing the frozen parameters), then the leader all-reduces (averages)
-//! the shard gradients — the standard DP recipe. On this 1-core sandbox the
-//! point is *correctness of the distributed code path* (gradient averaging
-//! must reproduce the single-worker trajectory bit-for-bit up to fp
-//! reassociation), not speedup; the same code scales across cores elsewhere.
+//! Each worker computes gradients on its shard of the batch (persistent
+//! [`pool`] workers sharing the frozen parameters), then the leader
+//! all-reduces (averages) the shard gradients — the standard DP recipe.
+//! Shards and the GEMM/QR/SVD kernels draw from the **same** worker pool,
+//! so the two levels of parallelism share one thread budget: while a shard
+//! runs, its thread opts out of nested kernel fan-out via
+//! [`gemm::run_single_threaded`] (the pool would run nested fan-out inline
+//! anyway). On this 1-core sandbox the point is *correctness of the
+//! distributed code path* (gradient averaging must reproduce the
+//! single-worker trajectory bit-for-bit up to fp reassociation), not
+//! speedup; the same code scales across cores elsewhere.
+//!
+//! [`gemm::run_single_threaded`]: crate::tensor::gemm::run_single_threaded
 
 use crate::model::{Batch, Llama};
-use crate::tensor::Matrix;
+use crate::tensor::{pool, Matrix};
+use std::sync::Mutex;
 
 /// Default data-parallel worker count: the same plumbing the GEMM row-block
 /// threading uses (a forced `gemm::set_gemm_threads` count if set, otherwise
@@ -47,23 +55,23 @@ pub fn data_parallel_loss_grad(
     workers: usize,
 ) -> (f32, Vec<Matrix>) {
     let shards = shard_batch(batch, workers);
-    let results: Vec<(f32, Vec<Matrix>, usize)> = std::thread::scope(|scope| {
-        let handles: Vec<_> = shards
-            .iter()
-            .map(|shard| {
-                scope.spawn(move || {
-                    // Each worker owns one core; nested GEMM forking would
-                    // only oversubscribe (results are identical either way).
-                    crate::tensor::gemm::run_single_threaded(|| {
-                        let (loss, grads) = model.loss_and_grad(shard);
-                        (loss, grads, shard.tokens())
-                    })
-                })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    let slots: Vec<Mutex<Option<(f32, Vec<Matrix>, usize)>>> =
+        shards.iter().map(|_| Mutex::new(None)).collect();
+    pool::run(workers, shards.len(), &|i| {
+        // Each shard owns one pool slot; nested GEMM fan-out inside a shard
+        // would only oversubscribe (results are identical either way).
+        let out = crate::tensor::gemm::run_single_threaded(|| {
+            let (loss, grads) = model.loss_and_grad(&shards[i]);
+            (loss, grads, shards[i].tokens())
+        });
+        *slots[i].lock().expect("shard slot poisoned") = Some(out);
     });
 
+    // Reduce in fixed shard order so the average is scheduling-independent.
+    let results: Vec<(f32, Vec<Matrix>, usize)> = slots
+        .into_iter()
+        .map(|s| s.into_inner().expect("shard slot poisoned").expect("shard did not run"))
+        .collect();
     let total_tokens: usize = results.iter().map(|r| r.2).sum();
     let mut loss = 0.0f64;
     let mut grads: Vec<Matrix> = model.zero_grads();

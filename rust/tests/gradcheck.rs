@@ -42,10 +42,16 @@ fn tiny_model_gradcheck_spot_entries() {
         model.params[pi].value.data_mut()[flat] = orig;
         let numeric = (lp - lm) / (2.0 * eps);
         let analytic = grads[pi].data()[flat];
-        let tol = 2e-2f32.max(0.1 * numeric.abs().max(analytic.abs()));
+        // f32 central differences of a ≈ln(V) loss cancel catastrophically:
+        // the quotient carries ~ε·|loss|/(2·eps) of float noise, and libm
+        // exp/ln rounding differs across platforms. Fold that floor into the
+        // tolerance explicitly so the check is environment-robust instead of
+        // relying on a magic constant.
+        let noise = 8.0 * f32::EPSILON * lp.abs().max(lm.abs()) / (2.0 * eps);
+        let tol = (2e-2f32 + noise).max(0.1 * numeric.abs().max(analytic.abs()));
         assert!(
             (numeric - analytic).abs() < tol,
-            "param {} entry {flat}: numeric {numeric} vs analytic {analytic}",
+            "param {} entry {flat}: numeric {numeric} vs analytic {analytic} (tol {tol})",
             model.params[pi].name
         );
     }

@@ -1,0 +1,324 @@
+//! Property-test suite for the subspace-refresh kernels and the projector
+//! invariants every low-rank optimizer depends on (the gate for this PR's
+//! threaded/workspace-backed QR and SVD).
+//!
+//! Three layers:
+//! 1. **Factorization invariants** over random shapes/seeds — QᵀQ = I,
+//!    R upper-triangular, ‖QR − A‖ small; UᵀU = I, VᵀV = I, singular values
+//!    descending, reconstruction error bounded.
+//! 2. **Determinism**: `thin_qr` / `thin_svd` / power iteration are
+//!    bit-identical for 1, 2, and 8 workers, and under the data-parallel
+//!    thread-budget opt-out (`gemm::run_single_threaded`) — the same
+//!    guarantee PR-1 established for `matmul_acc`.
+//! 3. **Projector orthonormality after refresh** for every optimizer that
+//!    maintains an orthonormal basis, via `Optimizer::projector_defect`.
+
+use subtrack::optim::{self, HyperParams, Optimizer, Param};
+use subtrack::tensor::{gemm, qr, svd, Matrix};
+use subtrack::util::proptest;
+use subtrack::util::rng::Rng;
+
+// ---------------------------------------------------------------- layer 1
+
+/// Reconstruct U·diag(s)·Vᵀ.
+fn reconstruct(u: &Matrix, s: &[f32], v: &Matrix) -> Matrix {
+    let mut us = u.clone();
+    for i in 0..us.rows() {
+        for (j, &sv) in s.iter().enumerate() {
+            us.set(i, j, us.get(i, j) * sv);
+        }
+    }
+    gemm::matmul_nt(&us, v)
+}
+
+#[test]
+fn qr_invariants_over_random_shapes() {
+    proptest::check(
+        1001,
+        40,
+        |rng| {
+            let n = 1 + rng.below(14);
+            let m = n + rng.below(26);
+            Matrix::randn(m, n, 1.0 + rng.uniform_range(0.0, 4.0), rng)
+        },
+        |a| {
+            let (m, n) = a.shape();
+            let (q, r) = qr::thin_qr(a);
+            if q.shape() != (m, n) || r.shape() != (n, n) {
+                return Err("bad factor shapes".into());
+            }
+            // QᵀQ = I.
+            let defect = qr::orthonormality_defect(&q);
+            if defect > 1e-4 {
+                return Err(format!("QᵀQ defect {defect}"));
+            }
+            // R strictly upper triangular below the diagonal.
+            for i in 0..n {
+                for j in 0..i {
+                    if r.get(i, j) != 0.0 {
+                        return Err(format!("R[{i},{j}] = {} below diagonal", r.get(i, j)));
+                    }
+                }
+            }
+            // ‖QR − A‖ small relative to ‖A‖.
+            let back = gemm::matmul(&q, &r);
+            let err = back.sub(a).fro_norm() / a.fro_norm().max(1e-12);
+            if err > 1e-4 {
+                return Err(format!("‖QR−A‖/‖A‖ = {err}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn svd_invariants_over_random_shapes() {
+    proptest::check(
+        1002,
+        25,
+        |rng| {
+            let (m, n) = proptest::shape(rng, 26, 26);
+            Matrix::randn(m, n, 1.0, rng)
+        },
+        |a| {
+            let (m, n) = a.shape();
+            let k = m.min(n);
+            let f = svd::thin_svd(a);
+            if f.u.shape() != (m, k) || f.v.shape() != (n, k) || f.s.len() != k {
+                return Err("bad factor shapes".into());
+            }
+            // Orthonormal factors. Rank-deficient inputs may carry padded
+            // null columns in U; gate on the numerically meaningful ones by
+            // checking the Gram diagonal matches 0/1 within tolerance.
+            if qr::orthonormality_defect(&f.u) > 1e-3 {
+                return Err(format!("UᵀU defect {}", qr::orthonormality_defect(&f.u)));
+            }
+            if qr::orthonormality_defect(&f.v) > 1e-3 {
+                return Err(format!("VᵀV defect {}", qr::orthonormality_defect(&f.v)));
+            }
+            // Singular values non-negative, descending.
+            for w in f.s.windows(2) {
+                if w[1] > w[0] + 1e-6 {
+                    return Err(format!("singular values not descending: {:?}", f.s));
+                }
+            }
+            if f.s.iter().any(|&x| x < 0.0) {
+                return Err("negative singular value".into());
+            }
+            // Reconstruction.
+            let back = reconstruct(&f.u, &f.s, &f.v);
+            let denom = a.fro_norm().max(1e-12);
+            let err = back.sub(a).fro_norm() / denom;
+            if err > 1e-3 {
+                return Err(format!("‖UΣVᵀ−A‖/‖A‖ = {err}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn truncated_rank_never_exceeds_and_captures_dominant_energy() {
+    proptest::check(
+        1003,
+        20,
+        |rng| {
+            let (m, n) = proptest::shape(rng, 20, 20);
+            let r = 1 + rng.below(m.min(n));
+            (Matrix::randn(m, n, 1.0, rng), r)
+        },
+        |(a, r)| {
+            let t = svd::truncated_svd(a, *r);
+            if t.s.len() > *r {
+                return Err("rank overflow".into());
+            }
+            // Best rank-r approximation error ≤ ‖A‖ (trivial bound) and the
+            // captured energy matches the kept singular values.
+            let back = reconstruct(&t.u, &t.s, &t.v);
+            let kept: f64 = t.s.iter().map(|&s| (s as f64) * (s as f64)).sum();
+            let total = (a.fro_norm() as f64).powi(2);
+            let resid = (back.sub(a).fro_norm() as f64).powi(2);
+            if resid > total - kept + 1e-2 * total.max(1.0) {
+                return Err(format!("Eckart-Young violated: resid {resid} kept {kept}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------- layer 2
+
+/// Serializes every test that mutates the process-global worker-count knob:
+/// the default harness runs tests of this binary concurrently, and without
+/// the guard one test's `set_gemm_threads` could overlap another's "base"
+/// computation, making the bit-identity comparison vacuous (N vs N).
+static THREAD_KNOB: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+/// The refresh-kernel outputs for one input, captured for comparison.
+fn refresh_outputs(a: &Matrix) -> (Matrix, Matrix, Matrix, Matrix, f32, Vec<f32>, Vec<f32>) {
+    let (q, r) = qr::thin_qr(a);
+    let f = svd::thin_svd(a);
+    let (sigma, u, v) = svd::power_iteration_top1(a, 12, &mut Rng::new(99));
+    (q, r, f.u, f.v, sigma, u, v)
+}
+
+#[test]
+fn refresh_kernels_bit_identical_across_worker_counts() {
+    let _guard = THREAD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    let mut rng = Rng::new(2001);
+    // Tall enough that forced worker counts genuinely fan out.
+    let a = Matrix::randn(96, 24, 1.0, &mut rng);
+    gemm::set_gemm_threads(1);
+    let base = refresh_outputs(&a);
+    for workers in [2usize, 8] {
+        gemm::set_gemm_threads(workers);
+        let got = refresh_outputs(&a);
+        assert_eq!(base.0.data(), got.0.data(), "Q diverged at {workers} workers");
+        assert_eq!(base.1.data(), got.1.data(), "R diverged at {workers} workers");
+        assert_eq!(base.2.data(), got.2.data(), "U diverged at {workers} workers");
+        assert_eq!(base.3.data(), got.3.data(), "V diverged at {workers} workers");
+        assert_eq!(base.4, got.4, "σ diverged at {workers} workers");
+        assert_eq!(base.5, got.5, "power-u diverged at {workers} workers");
+        assert_eq!(base.6, got.6, "power-v diverged at {workers} workers");
+    }
+    // The data-parallel opt-out must also be bit-identical: inside
+    // run_single_threaded the kernels take the single-worker path even
+    // though the forced count is 8.
+    let single = gemm::run_single_threaded(|| refresh_outputs(&a));
+    assert_eq!(base.0.data(), single.0.data(), "Q diverged under DP opt-out");
+    assert_eq!(base.2.data(), single.2.data(), "U diverged under DP opt-out");
+    assert_eq!(base.4, single.4, "σ diverged under DP opt-out");
+    gemm::set_gemm_threads(0);
+}
+
+#[test]
+fn threaded_gemm_matches_across_worker_counts_property() {
+    // Extends PR-1's fixed-shape check with random shapes: any worker count
+    // must reproduce the single-thread product bitwise.
+    let _guard = THREAD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    proptest::check(
+        2002,
+        12,
+        |rng| {
+            let m = 1 + rng.below(80);
+            let k = 1 + rng.below(48);
+            let n = 1 + rng.below(48);
+            (Matrix::randn(m, k, 1.0, rng), Matrix::randn(k, n, 1.0, rng))
+        },
+        |(a, b)| {
+            gemm::set_gemm_threads(1);
+            let want = gemm::matmul(a, b);
+            for workers in [2usize, 8] {
+                gemm::set_gemm_threads(workers);
+                let got = gemm::matmul(a, b);
+                if want.data() != got.data() {
+                    gemm::set_gemm_threads(0);
+                    return Err(format!("matmul diverged at {workers} workers"));
+                }
+            }
+            gemm::set_gemm_threads(0);
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------- layer 3
+
+/// Drive one optimizer on a small least-squares problem long enough to cross
+/// several refresh boundaries; returns the final projector defect.
+fn drive(method: &str, m: usize, n: usize, steps: usize) -> (f32, usize) {
+    let mut rng = Rng::new(3000);
+    let x = Matrix::randn(32, m, 1.0, &mut rng);
+    let w_star = Matrix::randn(m, n, 1.0, &mut rng);
+    let y = gemm::matmul(&x, &w_star);
+    let hp = HyperParams { rank: 3, interval: 7, scale: 1.0, eta: 0.5, ..HyperParams::default() };
+    let mut opt = optim::by_name(method, hp);
+    let mut params = vec![Param::matrix("w", Matrix::zeros(m, n))];
+    for _ in 0..steps {
+        let pred = gemm::matmul(&x, &params[0].value);
+        let resid = pred.sub(&y);
+        let grad = gemm::matmul_tn(&x, &resid).scale(1.0 / 32.0);
+        opt.step(0.05, &mut params, std::slice::from_ref(&grad));
+    }
+    let defect = opt.projector_defect().expect("method should expose a projector");
+    (defect, opt.subspace_updates())
+}
+
+#[test]
+fn projectors_stay_orthonormal_after_refresh_for_every_optimizer() {
+    // (method, defect tolerance): SVD/QR-refreshed bases are orthonormal to
+    // fp precision; the Grassmannian geodesic is analytically orthonormal
+    // with small drift; OSD's Oja step tolerates more drift between its
+    // periodic QR passes.
+    let cases: &[(&str, f32)] = &[
+        ("subtrack++", 1e-3),
+        ("subtrack-pure", 1e-3),
+        ("galore", 1e-4),
+        ("fira", 1e-4),
+        ("golore", 1e-4),
+        ("ldadam", 1e-4),
+        ("osd", 0.05),
+    ];
+    for &(method, tol) in cases {
+        // Both orientations: m ≤ n (Left projection) and m > n (Right).
+        for (m, n) in [(10, 14), (14, 10)] {
+            let (defect, updates) = drive(method, m, n, 30);
+            assert!(updates > 0, "{method} ({m}x{n}) never refreshed its subspace");
+            assert!(
+                defect < tol,
+                "{method} ({m}x{n}): projector defect {defect} exceeds {tol} \
+                 after {updates} refreshes"
+            );
+        }
+    }
+}
+
+#[test]
+fn projector_defect_none_for_methods_without_orthonormal_projectors() {
+    for method in ["full-rank", "apollo", "badam"] {
+        let opt = optim::by_name(method, HyperParams::default());
+        assert!(
+            opt.projector_defect().is_none(),
+            "{method} should not report a projector defect"
+        );
+    }
+}
+
+#[test]
+fn projection_roundtrip_is_contraction_for_refreshed_projectors() {
+    // After any number of refreshes the projection/back-projection pair must
+    // remain a contraction in Frobenius norm (orthonormal S ⇒ ‖S Sᵀ G‖ ≤ ‖G‖):
+    // the workspace-backed refresh path must not break this.
+    proptest::check(
+        3001,
+        10,
+        |rng| {
+            let (m, n) = proptest::shape(rng, 16, 16);
+            let m = m.max(2);
+            let n = n.max(2);
+            let steps = 8 + rng.below(12);
+            (Matrix::randn(m, n, 1.0, rng), steps)
+        },
+        |(g0, steps)| {
+            let (m, n) = g0.shape();
+            let hp = HyperParams {
+                rank: 2.min(m.min(n)),
+                interval: 3,
+                scale: 1.0,
+                eta: 0.5,
+                ..HyperParams::default()
+            };
+            let mut opt = optim::by_name("subtrack++", hp);
+            let mut params = vec![Param::matrix("w", Matrix::zeros(m, n))];
+            for _ in 0..*steps {
+                let grad = g0.sub(&params[0].value).scale(0.1);
+                opt.step(0.05, &mut params, std::slice::from_ref(&grad));
+            }
+            let defect = opt.projector_defect().expect("subtrack has a projector");
+            if defect > 1e-3 {
+                return Err(format!("defect {defect} after {steps} steps"));
+            }
+            Ok(())
+        },
+    );
+}

@@ -7,6 +7,11 @@
 //! leased from a `Workspace`, so a steady-state buffer allocation shows up
 //! as a miss. Three consecutive steps are driven; misses may only occur on
 //! step 1.
+//!
+//! The refresh-boundary gate extends this to the **periodic** subspace
+//! paths: driving past an every-k-steps refresh (interval 4, 9 steps),
+//! misses may occur only on step 1 and on the *first* refresh step — the
+//! second refresh must be served entirely from the pool.
 
 use subtrack::model::{Batch, Llama, ModelConfig, StepState};
 use subtrack::optim::{self, Adam, AdamCfg, HyperParams, Optimizer};
@@ -69,10 +74,57 @@ fn subtrack_step_is_allocation_free_after_warmup() {
 
 #[test]
 fn galore_and_fira_steps_are_allocation_free_between_refreshes() {
-    for method in ["galore", "fira"] {
+    // APOLLO rides along: its sketch re-draw is in place, so its whole
+    // step family shares the same flat-misses profile.
+    for method in ["galore", "fira", "apollo"] {
         let hp = HyperParams { rank: 4, interval: 100, scale: 1.0, ..HyperParams::default() };
         let mut opt = optim::by_name(method, hp);
         let misses = misses_per_step(opt.as_mut(), 3);
+        assert_eq!(misses[0], misses[1], "{method} step 2 allocated: {misses:?}");
+        assert_eq!(misses[1], misses[2], "{method} step 3 allocated: {misses:?}");
+    }
+}
+
+#[test]
+fn refresh_boundary_allocates_only_on_the_first_refresh() {
+    // interval = 4 over 9 steps: refreshes fire on steps 5 and 9 (step_no 4
+    // and 8; step 1 initializes instead of refreshing). Workspace misses may
+    // appear on step 1 (warm-up) and step 5 (first refresh populates the
+    // refresh-shape pools) — step 9's refresh must be allocation-free.
+    for method in ["subtrack++", "galore", "fira", "golore"] {
+        let hp = HyperParams { rank: 4, interval: 4, scale: 1.0, ..HyperParams::default() };
+        let mut opt = optim::by_name(method, hp);
+        let misses = misses_per_step(opt.as_mut(), 9);
+        assert!(misses[0].0 > 0, "{method}: warm-up step must populate the pool");
+        for i in 1..4 {
+            assert_eq!(
+                misses[i],
+                misses[0],
+                "{method} step {} (pre-refresh steady state) allocated: {misses:?}",
+                i + 1
+            );
+        }
+        for i in 5..9 {
+            assert_eq!(
+                misses[i],
+                misses[4],
+                "{method} step {} (incl. second refresh on step 9) allocated: {misses:?}",
+                i + 1
+            );
+        }
+    }
+}
+
+#[test]
+fn per_iteration_refreshers_are_allocation_free_after_warmup() {
+    // LDAdam and OSD move their subspace every step; their whole step —
+    // error feedback / Oja update, warm-started refresh, moment rotation,
+    // projection — must be served from the pool after step 1.
+    for method in ["ldadam", "osd"] {
+        let hp = HyperParams { rank: 4, scale: 1.0, ..HyperParams::default() };
+        let mut opt = optim::by_name(method, hp);
+        let misses = misses_per_step(opt.as_mut(), 3);
+        assert!(misses[0].1 > 0, "{method}: warm-up must populate the optimizer pool");
         assert_eq!(misses[0], misses[1], "{method} step 2 allocated: {misses:?}");
         assert_eq!(misses[1], misses[2], "{method} step 3 allocated: {misses:?}");
     }
