@@ -152,6 +152,31 @@ fn main() {
             refresh.insert(format!("{kernel}_{label}"), Json::Num(secs * 1e3));
         }
     }
+    // ---- WY-blocked QR block-size sweep (GEMM_QR_BLOCK tuning data) ----
+    // nb = 1 is the per-column reflector fan; larger panels route the
+    // trailing update and Q formation through the GEMM kernels. Timed at a
+    // wider shape (n = 64) where the trailing matrix is big enough for the
+    // compute-over-bandwidth trade to show.
+    println!("\nWY-blocked QR sweep (m=256, n=64):");
+    let (qm, qn) = (256usize, 64usize);
+    let tall_wide = Matrix::randn(qm, qn, 1.0, &mut rng);
+    for (label, forced) in [("1t", 1usize), ("auto", 0usize)] {
+        gemm::set_gemm_threads(forced);
+        for nb in [1usize, 2, 4, 8, 16, 32] {
+            let mut q = ws.take(qm, qn);
+            let mut rr = ws.take(qn, qn);
+            let secs = time_op(budget, || {
+                qr::thin_qr_into_blocked(&tall_wide, &mut q, &mut rr, &mut ws, nb);
+                std::hint::black_box(&q);
+            });
+            ws.give(q);
+            ws.give(rr);
+            println!("thin_qr nb={nb:<3} [{label:<4}]: {:8.3} ms", secs * 1e3);
+            refresh.insert(format!("thin_qr_n{qn}_nb{nb}_{label}"), Json::Num(secs * 1e3));
+        }
+        gemm::set_gemm_threads(0);
+    }
+
     let record = Json::obj(vec![
         ("threads", Json::Num(auto_threads as f64)),
         ("workspace_misses", Json::Num(ws.misses() as f64)),

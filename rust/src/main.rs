@@ -122,7 +122,9 @@ fn pretrain(args: &[String]) -> anyhow::Result<()> {
         println!("loss curve -> {out}");
     }
     if let Some(ckpt) = p.get("checkpoint") {
-        subtrack::train::checkpoint::save(ckpt, &trainer.model.params, report.steps.len())?;
+        // The true final training step — NOT the logged-curve length, which
+        // undercounts whenever log_every > 1.
+        subtrack::train::checkpoint::save(ckpt, &trainer.model.params, report.total_steps)?;
         println!("checkpoint -> {ckpt}.{{bin,json}}");
     }
     Ok(())

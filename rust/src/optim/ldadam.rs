@@ -64,8 +64,9 @@ impl LdAdam {
 /// One block power-iteration sweep, warm-started from the previous basis:
 /// S ← orth(Ĝ·(ĜᵀS)) where Ĝ is the (error-corrected) gradient oriented so
 /// rows index the subspace dimension. O(mnr), computed in place with
-/// workspace-leased temporaries (the GEMMs and the QR trailing update are
-/// the threaded kernels).
+/// workspace-leased temporaries; the orthonormalization is the WY-blocked
+/// `thin_qr_into` (rank ≥ the panel width), so both the power sweep and the
+/// QR trailing/Q-formation updates run through the threaded GEMM kernels.
 fn power_refresh_into(s: &mut Matrix, g_oriented: &Matrix, ws: &mut Workspace) {
     let (dim, r) = s.shape();
     let ncols = g_oriented.cols();

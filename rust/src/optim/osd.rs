@@ -3,9 +3,11 @@
 //! avoiding SVD entirely.
 //!
 //! Oja's rule: S ← orth(S + η_pca·(I − SSᵀ)·G·GᵀS). We fold the
-//! normalization into a periodic QR pass (every `reorth_every` steps) plus a
-//! column-norm rescale each step, which matches the reference description's
-//! cost profile while staying numerically stable in fp32. Like the other
+//! normalization into a periodic QR pass (every `reorth_every` steps; the
+//! WY-blocked `reorthonormalize_in_place`, whose trailing updates are GEMMs
+//! at rank ≥ the panel width) plus a column-norm rescale each step, which
+//! matches the reference description's cost profile while staying
+//! numerically stable in fp32. Like the other
 //! per-iteration refresher (LDAdam), the whole step runs out of the
 //! optimizer-owned workspace: the Oja temporaries, the Gᵀ view, the QR
 //! scratch, and the projection buffers are all leased.

@@ -87,8 +87,10 @@ impl Projector {
     }
 
     /// Refresh with a fresh random orthonormal basis, in place (GoLore's
-    /// late-phase refresh); QR scratch leased from `ws`. Bit-identical to
-    /// [`Projector::init_random_orthonormal`] at the same RNG state.
+    /// late-phase refresh); QR scratch leased from `ws`, and the
+    /// orthonormalization runs through the WY-blocked `thin_qr_into`.
+    /// Bit-identical to [`Projector::init_random_orthonormal`] at the same
+    /// RNG state (both route through the same kernel at the same block size).
     pub fn refresh_random_orthonormal_into(&mut self, rng: &mut Rng, ws: &mut Workspace) {
         let (dim, r) = self.s.shape();
         let mut raw = ws.take_dirty(dim, r);

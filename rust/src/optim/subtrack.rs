@@ -219,7 +219,8 @@ pub struct SubTrack {
     /// Accumulated stage breakdown across all subspace updates (Appendix D).
     pub breakdown: UpdateBreakdown,
     /// Re-orthonormalize the basis after this many geodesic updates (fp drift
-    /// guard; analytically S stays orthonormal because u ⊥ span(S)).
+    /// guard; analytically S stays orthonormal because u ⊥ span(S)). The
+    /// pass is the WY-blocked `reorthonormalize_in_place`.
     pub reorth_every: usize,
     /// Power-iteration sweeps for the rank-1 approximation.
     pub power_iters: usize,

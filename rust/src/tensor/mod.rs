@@ -44,20 +44,23 @@
 //!   runs on the [`pool`] — `available_parallelism() − 1` long-lived
 //!   workers spawned on first use (replacing PR-1's per-call
 //!   `thread::scope` forks). [`gemm::matmul_acc`] splits C's rows into
-//!   blocks, [`qr::thin_qr`] fans its trailing-matrix reflector update out
-//!   per column, the [`svd`] Jacobi sweep runs round-robin rounds of
-//!   disjoint column pairs, and the power-iteration matvecs split by
-//!   output block. In every case one task's output depends only on its
-//!   index and is produced by the identical sequential kernel, so results
-//!   are **bit-identical for any worker count** (gated by
-//!   `rust/tests/subspace_props.rs`). The same plan gates everything:
-//!   `gemm::set_gemm_threads` / the `GEMM_THREADS` env var force a count,
-//!   auto mode threads only above [`gemm::PAR_FLOPS`] (GEMM) /
-//!   [`gemm::PAR_KERNEL_FLOPS`] (pool-dispatched QR/SVD/matvec), and the
-//!   data-parallel trainer shards run on the same pool with nested kernel
-//!   fan-out opted out (`gemm::run_single_threaded`; nested [`pool::run`]
-//!   executes inline regardless) — so DP workers and kernels can never
-//!   oversubscribe the machine.
+//!   blocks, [`qr::thin_qr`] factors WY panels and pushes its trailing
+//!   update and Q formation through those same GEMM kernels (per-column
+//!   reflector fan inside panels and for narrow inputs), the [`svd`] Jacobi
+//!   sweep runs round-robin rounds of disjoint column pairs, and the
+//!   power-iteration matvecs split by output block. In every case one
+//!   task's output depends only on its index and is produced by the
+//!   identical sequential kernel, so results are **bit-identical for any
+//!   worker count** (gated by `rust/tests/subspace_props.rs`; the QR block
+//!   size itself — `GEMM_QR_BLOCK` / [`qr::set_qr_block`] — changes the fp
+//!   accumulation order and is *not* bit-transparent). The same plan gates
+//!   everything: `gemm::set_gemm_threads` / the `GEMM_THREADS` env var
+//!   force a count, auto mode threads only above [`gemm::PAR_FLOPS`]
+//!   (GEMM) / [`gemm::PAR_KERNEL_FLOPS`] (pool-dispatched QR/SVD/matvec),
+//!   and the data-parallel trainer shards run on the same pool with nested
+//!   kernel fan-out opted out (`gemm::run_single_threaded`; nested
+//!   [`pool::run`] executes inline regardless) — so DP workers and kernels
+//!   can never oversubscribe the machine.
 //!
 //! * **Allocation-free refresh paths.** The every-k-steps subspace
 //!   machinery has `_into` workspace-backed forms mirroring the GEMM ones:

@@ -1,25 +1,105 @@
-//! Householder QR decomposition and least squares.
+//! Householder QR decomposition and least squares, WY-blocked.
 //!
 //! Thin QR (m×n, m ≥ n): A = Q·R with Q m×n orthonormal columns, R n×n upper
 //! triangular. Used to (re-)orthonormalize subspace bases and to solve the
 //! general least-squares problem; the SubTrack++ hot path avoids it because
 //! its basis S is already orthonormal (then argmin_A ‖SA−G‖ = SᵀG).
 //!
-//! # Threading and workspaces
+//! # Blocked (compact WY) scheme
 //!
-//! The trailing-matrix update `H·W[k.., k..]` — the O(mn²) bulk of the
-//! factorization — is parallelized across *columns* on the persistent
-//! [`pool`]: each column's reflection is one sequential f64 dot plus a
-//! scaled subtraction, computed entirely by whichever worker claims it, so
-//! results are **bit-identical for any worker count** (the same contract as
-//! `gemm::matmul_acc`). [`thin_qr_into`] leases its working copy and the
-//! packed Householder vectors from a caller [`Workspace`], making the
-//! subspace-refresh paths allocation-free after warm-up.
+//! The factorization proceeds in panels of `nb` columns. Within a panel the
+//! classic per-column Householder kernel runs unchanged (each reflector's
+//! trailing update restricted to the panel). The panel's `nb` reflectors are
+//! then accumulated into the compact WY representation
+//!
+//! ```text
+//! H_{k0}·H_{k0+1}⋯H_{k1−1} = I − V·T·Vᵀ
+//! ```
+//!
+//! with V m×nb lower-trapezoidal (column j holds the unit-norm v_{k0+j},
+//! zeros above row k0+j) and T nb×nb upper triangular (τ = 2 on the diagonal
+//! for live reflectors, 0 for degenerate ones; LAPACK `dlarft`-style
+//! recurrence). The trailing matrix — the O(mn²) bulk of the work — is then
+//! updated wholesale as three GEMMs, C ← C − V·Tᵀ·(VᵀC), and the backward
+//! Q-formation pass applies I − V·T·Vᵀ per panel the same way. This turns
+//! the memory-bound rank-1 reflector fan into the compute-bound
+//! register-blocked [`gemm`] kernels (`matmul_tn_into` / `matmul_into` /
+//! `matmul_acc`) — the compute-over-bandwidth trade the ROADMAP's "blocked
+//! Householder (QR3)" item called for.
+//!
+//! # Block-size heuristic
+//!
+//! [`thin_qr_into`] uses [`qr_block`]: the `GEMM_QR_BLOCK` env var (read
+//! once) or [`set_qr_block`] force a panel width; otherwise
+//! [`DEFAULT_QR_BLOCK`] (= 8, sized for the repo's refresh ranks r ≤ 32).
+//! Inputs with n < nb — and a forced block of 1 — fall back to the pure
+//! per-column kernel, which is also what each panel runs internally, so the
+//! narrow-matrix paths are byte-for-byte the pre-WY algorithm.
+//! [`thin_qr_into_blocked`] exposes the explicit-`nb` entry point for
+//! benches (`examples/gemmbench.rs` block-size sweep) and the boundary
+//! property tests in `rust/tests/subspace_props.rs`.
+//!
+//! # Threading, determinism, workspaces
+//!
+//! Panel factorization fans single columns over the persistent [`pool`]
+//! (one column = one worker = the identical sequential kernel), and the
+//! block GEMMs thread by disjoint output-row blocks, so results are
+//! **bit-identical for any worker count at a fixed block size** — the same
+//! contract as `gemm::matmul_acc`. Different block sizes reorder the
+//! floating-point accumulation and agree only to fp tolerance (tested).
+//! [`thin_qr_into`] leases the working copy, the packed Householder
+//! vectors, and every V/T/W panel buffer from a caller [`Workspace`]: panel
+//! shapes recur across refreshes, so the subspace-refresh paths stay
+//! allocation-free after their first occurrence (`rust/tests/zero_alloc.rs`).
 
 use super::gemm;
 use super::matrix::Matrix;
 use super::pool::{self, SendPtr};
 use super::workspace::Workspace;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Default WY panel width: wide enough that the trailing update's GEMMs beat
+/// the per-column fan at the repo's refresh shapes (m a few hundred,
+/// n = rank ≤ 32), narrow enough that a rank-8 refresh is a single panel.
+pub const DEFAULT_QR_BLOCK: usize = 8;
+
+/// 0 = default, otherwise a forced panel width. `usize::MAX` is the "unset"
+/// sentinel: the first read seeds the value from the `GEMM_QR_BLOCK`
+/// environment variable (the CI matrix runs a `GEMM_QR_BLOCK=4` leg so the
+/// panel-boundary paths execute under both worker counts).
+static QR_BLOCK: AtomicUsize = AtomicUsize::new(usize::MAX);
+
+/// Force the WY panel width (0 restores the `GEMM_QR_BLOCK` env default, or
+/// [`DEFAULT_QR_BLOCK`] when the variable is unset; 1 forces the pure
+/// per-column kernel). Block size changes the fp accumulation order, so —
+/// unlike the worker count — it is *not* bit-transparent.
+pub fn set_qr_block(nb: usize) {
+    QR_BLOCK.store(if nb == 0 { usize::MAX } else { nb }, Ordering::Relaxed);
+}
+
+/// The panel width [`thin_qr_into`] will use: explicit [`set_qr_block`]
+/// value, else the `GEMM_QR_BLOCK` env var (parsed once), else
+/// [`DEFAULT_QR_BLOCK`].
+pub fn qr_block() -> usize {
+    let mut cur = QR_BLOCK.load(Ordering::Relaxed);
+    if cur == usize::MAX {
+        let from_env = std::env::var("GEMM_QR_BLOCK")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .unwrap_or(0);
+        // Only replace the sentinel so a concurrent `set_qr_block` wins.
+        let _ =
+            QR_BLOCK.compare_exchange(usize::MAX, from_env, Ordering::Relaxed, Ordering::Relaxed);
+        cur = QR_BLOCK.load(Ordering::Relaxed);
+    }
+    // 0 (env unset or explicit "0") means "use the default"; the sentinel can
+    // reappear if `set_qr_block(0)` raced the exchange above.
+    if cur == 0 || cur == usize::MAX {
+        DEFAULT_QR_BLOCK
+    } else {
+        cur
+    }
+}
 
 /// Thin QR via Householder reflections. Returns (Q m×n, R n×n). Requires m ≥ n.
 pub fn thin_qr(a: &Matrix) -> (Matrix, Matrix) {
@@ -31,9 +111,23 @@ pub fn thin_qr(a: &Matrix) -> (Matrix, Matrix) {
 }
 
 /// Allocation-free [`thin_qr`]: writes Q (m×n) and R (n×n) into
-/// caller-provided buffers, leasing the m×n working copy and the packed
-/// Householder vectors from `ws`. Outputs are fully overwritten.
+/// caller-provided buffers, leasing the m×n working copy, the packed
+/// Householder vectors, and the WY panel buffers from `ws`. Outputs are
+/// fully overwritten. Panel width from [`qr_block`].
 pub fn thin_qr_into(a: &Matrix, q: &mut Matrix, r: &mut Matrix, ws: &mut Workspace) {
+    thin_qr_into_blocked(a, q, r, ws, qr_block());
+}
+
+/// [`thin_qr_into`] at an explicit WY panel width `nb` (bench/test entry
+/// point). `nb ≤ 1` — or n < `nb` — selects the pure per-column kernel.
+/// At any fixed `nb` the result is bit-identical for any worker count.
+pub fn thin_qr_into_blocked(
+    a: &Matrix,
+    q: &mut Matrix,
+    r: &mut Matrix,
+    ws: &mut Workspace,
+    nb: usize,
+) {
     let (m, n) = a.shape();
     assert!(m >= n, "thin_qr requires m >= n, got {m}x{n}");
     assert_eq!(q.shape(), (m, n), "thin_qr Q output shape");
@@ -45,29 +139,13 @@ pub fn thin_qr_into(a: &Matrix, q: &mut Matrix, r: &mut Matrix, ws: &mut Workspa
     // k·m − k(k−1)/2. Every entry is written below (the degenerate branches
     // store explicit zeros), so a dirty lease is safe.
     let mut vs = ws.take_vec_dirty(packed_len(m, n));
-    for k in 0..n {
-        let v = &mut vs[packed_off(m, k)..packed_off(m, k + 1)];
-        // Gather column k, rows k..m.
-        for (idx, i) in (k..m).enumerate() {
-            v[idx] = w.get(i, k);
+    let blocked = nb >= 2 && n >= nb;
+    if blocked {
+        factor_blocked(&mut w, &mut vs, nb, ws);
+    } else {
+        for k in 0..n {
+            householder_column(&mut w, &mut vs, k, n);
         }
-        let norm_x = (v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>()).sqrt() as f32;
-        if norm_x > 0.0 {
-            let alpha = if v[0] >= 0.0 { -norm_x } else { norm_x };
-            v[0] -= alpha;
-            let vnorm =
-                (v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>()).sqrt() as f32;
-            if vnorm > 1e-30 {
-                for x in v.iter_mut() {
-                    *x /= vnorm;
-                }
-                // Apply H = I − 2vvᵀ to W[k.., k..] (threaded per column).
-                reflect_block(&mut w, k, v, k, n);
-            } else {
-                v.fill(0.0);
-            }
-        }
-        // norm_x == 0 ⇒ the gathered column was all zeros ⇒ v already zero.
     }
     // Extract R (n×n upper triangular).
     r.data_mut().fill(0.0);
@@ -81,15 +159,185 @@ pub fn thin_qr_into(a: &Matrix, q: &mut Matrix, r: &mut Matrix, ws: &mut Workspa
     for j in 0..n {
         q.set(j, j, 1.0);
     }
-    for k in (0..n).rev() {
-        let v = &vs[packed_off(m, k)..packed_off(m, k + 1)];
-        if v.iter().all(|&x| x == 0.0) {
-            continue;
+    if blocked {
+        form_q_blocked(q, &vs, nb, ws);
+    } else {
+        for k in (0..n).rev() {
+            let v = &vs[packed_off(m, k)..packed_off(m, k + 1)];
+            if v.iter().all(|&x| x == 0.0) {
+                continue;
+            }
+            reflect_block(q, k, v, 0, n);
         }
-        reflect_block(q, k, v, 0, n);
     }
     ws.give_vec(vs);
     ws.give(w);
+}
+
+/// Factor column k of `w`: gather the column below the diagonal, build the
+/// unit-norm Householder vector v_k into the packed buffer, and apply
+/// H = I − 2vvᵀ to columns [k, jhi) (the full trailing matrix in the
+/// per-column scheme, the current panel in the blocked one). Degenerate
+/// columns store an explicit zero vector (H = I).
+fn householder_column(w: &mut Matrix, vs: &mut [f32], k: usize, jhi: usize) {
+    let (m, _) = w.shape();
+    let v = &mut vs[packed_off(m, k)..packed_off(m, k + 1)];
+    // Gather column k, rows k..m.
+    for (idx, i) in (k..m).enumerate() {
+        v[idx] = w.get(i, k);
+    }
+    let norm_x = (v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>()).sqrt() as f32;
+    if norm_x > 0.0 {
+        let alpha = if v[0] >= 0.0 { -norm_x } else { norm_x };
+        v[0] -= alpha;
+        let vnorm = (v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>()).sqrt() as f32;
+        if vnorm > 1e-30 {
+            for x in v.iter_mut() {
+                *x /= vnorm;
+            }
+            // Apply H = I − 2vvᵀ to W[k.., k..jhi) (threaded per column).
+            reflect_block(w, k, v, k, jhi);
+        } else {
+            v.fill(0.0);
+        }
+    }
+    // norm_x == 0 ⇒ the gathered column was all zeros ⇒ v already zero.
+}
+
+/// Blocked forward pass: factor panels of `nb` columns with the per-column
+/// kernel, then update the trailing matrix through the compact WY form,
+/// C ← C − V·Tᵀ·(VᵀC). (Reflectors apply in increasing k, so the combined
+/// operator is (H_{k0}⋯H_{k1−1})ᵀ = I − V·Tᵀ·Vᵀ.) Every panel buffer is
+/// leased from `ws`; the trailing block is staged through a contiguous copy
+/// so the threaded GEMM kernels apply unchanged.
+fn factor_blocked(w: &mut Matrix, vs: &mut [f32], nb: usize, ws: &mut Workspace) {
+    let (m, n) = w.shape();
+    let mut k0 = 0;
+    while k0 < n {
+        let k1 = (k0 + nb).min(n);
+        let bs = k1 - k0;
+        for k in k0..k1 {
+            householder_column(w, vs, k, k1);
+        }
+        if k1 < n {
+            let mut v = ws.take_dirty(m, bs);
+            build_panel_v(vs, m, k0, bs, &mut v);
+            let mut t = ws.take_dirty(bs, bs);
+            build_panel_t(&v, k0, &mut t, ws);
+            let tc = n - k1;
+            let mut c = ws.take_dirty(m, tc);
+            copy_cols(w, k1, k1 + tc, &mut c);
+            let mut w1 = ws.take_dirty(bs, tc);
+            gemm::matmul_tn_into(&mut w1, &v, &c, ws); // VᵀC
+            let mut w2 = ws.take_dirty(bs, tc);
+            gemm::matmul_tn_into(&mut w2, &t, &w1, ws); // Tᵀ(VᵀC)
+            gemm::matmul_acc(&mut c, &v, &w2, -1.0); // C −= V·Tᵀ·VᵀC
+            copy_cols_back(&c, w, k1, k1 + tc);
+            ws.give(w2);
+            ws.give(w1);
+            ws.give(c);
+            ws.give(t);
+            ws.give(v);
+        }
+        k0 = k1;
+    }
+}
+
+/// Blocked backward pass (Q formation): apply I − V·T·Vᵀ panel by panel in
+/// reverse order, Q ← Q − V·(T·(VᵀQ)). Q is contiguous, so no staging copy
+/// is needed; V and T are rebuilt from the packed vectors (O(m·nb²), small
+/// next to the GEMMs).
+fn form_q_blocked(q: &mut Matrix, vs: &[f32], nb: usize, ws: &mut Workspace) {
+    let (m, n) = q.shape();
+    let n_panels = n.div_ceil(nb);
+    for p in (0..n_panels).rev() {
+        let k0 = p * nb;
+        let k1 = (k0 + nb).min(n);
+        let bs = k1 - k0;
+        let mut v = ws.take_dirty(m, bs);
+        build_panel_v(vs, m, k0, bs, &mut v);
+        let mut t = ws.take_dirty(bs, bs);
+        build_panel_t(&v, k0, &mut t, ws);
+        let mut w1 = ws.take_dirty(bs, n);
+        gemm::matmul_tn_into(&mut w1, &v, q, ws); // VᵀQ
+        let mut w2 = ws.take_dirty(bs, n);
+        gemm::matmul_into(&mut w2, &t, &w1); // T(VᵀQ)
+        gemm::matmul_acc(q, &v, &w2, -1.0); // Q −= V·T·VᵀQ
+        ws.give(w2);
+        ws.give(w1);
+        ws.give(t);
+        ws.give(v);
+    }
+}
+
+/// Materialize the panel's dense V (m×bs): column j holds v_{k0+j} in rows
+/// k0+j.., zeros above. Degenerate reflectors contribute a zero column.
+fn build_panel_v(vs: &[f32], m: usize, k0: usize, bs: usize, v: &mut Matrix) {
+    debug_assert_eq!(v.shape(), (m, bs));
+    let vd = v.data_mut();
+    vd.fill(0.0);
+    for j in 0..bs {
+        let k = k0 + j;
+        let col = &vs[packed_off(m, k)..packed_off(m, k + 1)];
+        for (idx, &x) in col.iter().enumerate() {
+            vd[(k + idx) * bs + j] = x;
+        }
+    }
+}
+
+/// Accumulate the panel's upper-triangular T (bs×bs): τ_j = 2 for live
+/// unit-norm reflectors (0 for degenerate ones), and
+/// T[0..j, j] = −τ_j · T[0..j, 0..j] · (V[:,0..j]ᵀ v_j) — the `dlarft`
+/// forward-columnwise recurrence. Sequential f64 accumulation: the fixed
+/// order keeps the blocked kernel bit-identical across worker counts.
+fn build_panel_t(v: &Matrix, k0: usize, t: &mut Matrix, ws: &mut Workspace) {
+    let (_, bs) = v.shape();
+    debug_assert_eq!(t.shape(), (bs, bs));
+    t.data_mut().fill(0.0);
+    let mut z = ws.take_vec_dirty(bs);
+    for j in 0..bs {
+        // A live reflector has v[0] = x₀ − α ≠ 0 at row k0+j; degenerate
+        // ones were stored as all zeros.
+        let tau: f32 = if v.get(k0 + j, j) != 0.0 { 2.0 } else { 0.0 };
+        if j > 0 && tau != 0.0 {
+            for (i, zi) in z.iter_mut().enumerate().take(j) {
+                *zi = v.col_dot(i, j) as f32;
+            }
+            for i in 0..j {
+                let mut acc = 0.0f64;
+                for l in i..j {
+                    acc += t.get(i, l) as f64 * z[l] as f64;
+                }
+                t.set(i, j, (-(tau as f64) * acc) as f32);
+            }
+        }
+        t.set(j, j, tau);
+    }
+    ws.give_vec(z);
+}
+
+/// Copy columns [jlo, jhi) of `w` into the contiguous `out` (m×(jhi−jlo)).
+fn copy_cols(w: &Matrix, jlo: usize, jhi: usize, out: &mut Matrix) {
+    let (m, n) = w.shape();
+    let tc = jhi - jlo;
+    debug_assert_eq!(out.shape(), (m, tc));
+    let wd = w.data();
+    let od = out.data_mut();
+    for i in 0..m {
+        od[i * tc..(i + 1) * tc].copy_from_slice(&wd[i * n + jlo..i * n + jhi]);
+    }
+}
+
+/// Write the contiguous `src` (m×(jhi−jlo)) back into columns [jlo, jhi).
+fn copy_cols_back(src: &Matrix, w: &mut Matrix, jlo: usize, jhi: usize) {
+    let (m, n) = w.shape();
+    let tc = jhi - jlo;
+    debug_assert_eq!(src.shape(), (m, tc));
+    let sd = src.data();
+    let wd = w.data_mut();
+    for i in 0..m {
+        wd[i * n + jlo..i * n + jhi].copy_from_slice(&sd[i * tc..(i + 1) * tc]);
+    }
 }
 
 /// Total packed length of the n Householder vectors: Σ_{k<n} (m−k).
@@ -162,7 +410,8 @@ pub fn reorthonormalize(a: &Matrix) -> Matrix {
 }
 
 /// Allocation-free [`reorthonormalize`]: replaces `s` with the sign-fixed Q
-/// of its thin QR, leasing all scratch from `ws`.
+/// of its thin QR (WY-blocked for rank ≥ [`qr_block`]), leasing all scratch
+/// from `ws`.
 pub fn reorthonormalize_in_place(s: &mut Matrix, ws: &mut Workspace) {
     let (m, n) = s.shape();
     let mut q = ws.take_dirty(m, n);
@@ -182,7 +431,8 @@ pub fn reorthonormalize_in_place(s: &mut Matrix, ws: &mut Workspace) {
 }
 
 /// Solve the least squares problem min_X ‖A·X − B‖_F for A m×n (m ≥ n,
-/// full column rank), B m×p. Returns X n×p. Householder QR + back substitution.
+/// full column rank), B m×p. Returns X n×p. Householder QR (WY-blocked via
+/// [`thin_qr`]) + back substitution.
 pub fn lstsq(a: &Matrix, b: &Matrix) -> Matrix {
     let (m, n) = a.shape();
     let (mb, p) = b.shape();
@@ -292,9 +542,78 @@ mod tests {
     }
 
     #[test]
+    fn blocked_variant_reuses_workspace_in_steady_state() {
+        // The WY panel buffers (V, T, staged trailing block, W₁/W₂) must all
+        // come back to the pool: repeated blocked factorizations of the same
+        // shape add no misses after the first.
+        let mut rng = Rng::new(13);
+        let mut ws = Workspace::new();
+        let a = Matrix::randn(40, 14, 1.0, &mut rng);
+        let mut q = ws.take_dirty(40, 14);
+        let mut r = ws.take_dirty(14, 14);
+        thin_qr_into_blocked(&a, &mut q, &mut r, &mut ws, 4);
+        let misses = ws.misses();
+        for _ in 0..3 {
+            thin_qr_into_blocked(&a, &mut q, &mut r, &mut ws, 4);
+        }
+        assert_eq!(ws.misses(), misses, "steady-state blocked thin_qr allocated");
+        ws.give(q);
+        ws.give(r);
+    }
+
+    #[test]
+    fn blocked_matches_per_column_within_fp_tolerance() {
+        // Block sizes reorder the fp accumulation, so agreement is to
+        // tolerance, not bitwise — but the factorization invariants hold at
+        // every nb, including panel-boundary shapes (n not a multiple of nb).
+        let mut rng = Rng::new(14);
+        let mut ws = Workspace::new();
+        for (m, n) in [(30, 9), (48, 16), (25, 7)] {
+            let a = Matrix::randn(m, n, 1.0, &mut rng);
+            let mut q1 = ws.take_dirty(m, n);
+            let mut r1 = ws.take_dirty(n, n);
+            thin_qr_into_blocked(&a, &mut q1, &mut r1, &mut ws, 1);
+            for nb in [2usize, 3, 4, 8] {
+                let mut qb = ws.take_dirty(m, n);
+                let mut rb = ws.take_dirty(n, n);
+                thin_qr_into_blocked(&a, &mut qb, &mut rb, &mut ws, nb);
+                proptest::close(qb.data(), q1.data(), 1e-4, 1e-3)
+                    .unwrap_or_else(|e| panic!("Q diverged ({m}x{n}, nb={nb}): {e}"));
+                proptest::close(rb.data(), r1.data(), 1e-4, 1e-3)
+                    .unwrap_or_else(|e| panic!("R diverged ({m}x{n}, nb={nb}): {e}"));
+                ws.give(qb);
+                ws.give(rb);
+            }
+            ws.give(q1);
+            ws.give(r1);
+        }
+    }
+
+    #[test]
+    fn blocked_falls_back_to_per_column_for_narrow_inputs() {
+        // n < nb must take the identical per-column path, bit for bit.
+        let mut rng = Rng::new(15);
+        let mut ws = Workspace::new();
+        let a = Matrix::randn(20, 5, 1.0, &mut rng);
+        let mut q1 = ws.take_dirty(20, 5);
+        let mut r1 = ws.take_dirty(5, 5);
+        thin_qr_into_blocked(&a, &mut q1, &mut r1, &mut ws, 1);
+        let mut q8 = ws.take_dirty(20, 5);
+        let mut r8 = ws.take_dirty(5, 5);
+        thin_qr_into_blocked(&a, &mut q8, &mut r8, &mut ws, 8);
+        assert_eq!(q1.data(), q8.data(), "narrow fallback changed Q");
+        assert_eq!(r1.data(), r8.data(), "narrow fallback changed R");
+        ws.give(q1);
+        ws.give(r1);
+        ws.give(q8);
+        ws.give(r8);
+    }
+
+    #[test]
     fn rank_deficient_columns_are_handled() {
         // A duplicate column makes one Householder step degenerate; the
-        // factorization must still reconstruct A.
+        // factorization must still reconstruct A — through the per-column
+        // kernel and through blocked panels containing the dead reflector.
         let mut rng = Rng::new(12);
         let mut a = Matrix::randn(12, 4, 1.0, &mut rng);
         for i in 0..12 {
@@ -303,6 +622,17 @@ mod tests {
         }
         let (q, r) = thin_qr(&a);
         proptest::close(gemm::matmul(&q, &r).data(), a.data(), 1e-4, 1e-3).unwrap();
+        let mut ws = Workspace::new();
+        for nb in [2usize, 4] {
+            let mut qb = ws.take_dirty(12, 4);
+            let mut rb = ws.take_dirty(4, 4);
+            thin_qr_into_blocked(&a, &mut qb, &mut rb, &mut ws, nb);
+            let back = gemm::matmul(&qb, &rb);
+            proptest::close(back.data(), a.data(), 1e-4, 1e-3)
+                .unwrap_or_else(|e| panic!("nb={nb}: {e}"));
+            ws.give(qb);
+            ws.give(rb);
+        }
     }
 
     #[test]

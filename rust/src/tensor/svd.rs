@@ -365,7 +365,9 @@ pub fn randomized_range(a: &Matrix, r: usize, rng: &mut Rng) -> Matrix {
 
 /// Allocation-free [`randomized_range`]: writes the m×r orthonormal range
 /// basis into `q`, leasing the Gaussian test matrix, the sample matrix, and
-/// the QR scratch from `ws`.
+/// the QR scratch from `ws`. The orthonormalization runs through the
+/// WY-blocked [`qr::thin_qr_into`] for r ≥ the QR panel width, so the
+/// sample's trailing updates are GEMMs.
 pub fn randomized_range_into(a: &Matrix, q: &mut Matrix, rng: &mut Rng, ws: &mut Workspace) {
     let (m, n) = a.shape();
     let r = q.cols();

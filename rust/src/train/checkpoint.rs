@@ -65,6 +65,19 @@ pub fn load(path: impl AsRef<Path>, params: &mut [Param]) -> std::io::Result<usi
         ));
     }
     for (entry, p) in listed.iter().zip(params.iter()) {
+        // Names must match positionally: a reordered but shape-compatible
+        // param vector would otherwise load silently into the wrong weights.
+        let name = entry.get("name").and_then(|v| v.as_str());
+        if name != Some(p.name.as_str()) {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!(
+                    "param name mismatch: manifest has {}, model expects {}",
+                    name.unwrap_or("<missing>"),
+                    p.name
+                ),
+            ));
+        }
         let rows = entry.get("rows").and_then(|v| v.as_f64()).unwrap_or(-1.0) as usize;
         let cols = entry.get("cols").and_then(|v| v.as_f64()).unwrap_or(-1.0) as usize;
         if (rows, cols) != p.value.shape() {
@@ -115,6 +128,38 @@ mod tests {
         for (a, b) in fresh.params.iter().zip(&model.params) {
             assert_eq!(a.value.data(), b.value.data(), "{}", a.name);
         }
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn name_mismatch_rejected() {
+        use crate::tensor::Matrix;
+        let mut rng = crate::util::rng::Rng::new(9);
+        let params = vec![
+            Param::matrix("layer0.wq", Matrix::randn(4, 4, 1.0, &mut rng)),
+            Param::matrix("layer0.wk", Matrix::randn(4, 4, 1.0, &mut rng)),
+        ];
+        let dir = std::env::temp_dir().join("subtrack_ckpt_test_names");
+        let path = dir.join("ckpt");
+        save(&path, &params, 7).unwrap();
+        // Same shapes, swapped names: loading would silently put wq's weights
+        // into wk — must be rejected on the manifest names.
+        let mut swapped = vec![
+            Param::matrix("layer0.wk", Matrix::zeros(4, 4)),
+            Param::matrix("layer0.wq", Matrix::zeros(4, 4)),
+        ];
+        let err = load(&path, &mut swapped).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("name mismatch"), "{err}");
+        // The matching order still loads.
+        let mut ok = vec![
+            Param::matrix("layer0.wq", Matrix::zeros(4, 4)),
+            Param::matrix("layer0.wk", Matrix::zeros(4, 4)),
+        ];
+        let step = load(&path, &mut ok).unwrap();
+        assert_eq!(step, 7);
+        assert_eq!(ok[0].value.data(), params[0].value.data());
+        assert_eq!(ok[1].value.data(), params[1].value.data());
         let _ = std::fs::remove_dir_all(dir);
     }
 

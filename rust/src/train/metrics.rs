@@ -76,6 +76,10 @@ impl Default for MetricsLog {
 pub struct TrainReport {
     pub method: String,
     pub model: String,
+    /// Training steps actually executed. `steps.len()` is only the *logged*
+    /// step count (every `log_every`-th step) — checkpointing and resume
+    /// logic must use this field, not the curve length.
+    pub total_steps: usize,
     pub steps: Vec<StepRecord>,
     pub evals: Vec<(usize, f32)>,
     pub final_eval_loss: f32,
@@ -115,6 +119,7 @@ impl TrainReport {
             ("param_count", Json::Num(self.param_count as f64)),
             ("optimizer_state_params", Json::Num(self.optimizer_state_params as f64)),
             ("subspace_updates", Json::Num(self.subspace_updates as f64)),
+            ("total_steps", Json::Num(self.total_steps as f64)),
             ("n_steps", Json::Num(self.steps.len() as f64)),
         ])
     }
@@ -165,6 +170,7 @@ mod tests {
         let report = TrainReport {
             method: "test".into(),
             model: "nano".into(),
+            total_steps: 2,
             steps: vec![
                 StepRecord { step: 0, loss: 3.0, lr: 1e-3, elapsed: 0.1 },
                 StepRecord { step: 1, loss: 2.5, lr: 1e-3, elapsed: 0.2 },

@@ -97,6 +97,12 @@ impl TrainConfig {
         tc.grad_clip = cfg.float("train.grad_clip", tc.grad_clip as f64) as f32;
         tc.seed = cfg.int("train.seed", tc.seed as i64) as u64;
         tc.workers = cfg.int("train.workers", 1) as usize;
+        // Evaluation/logging cadence (preset values as defaults). eval_every
+        // may be 0 (= mid-run eval disabled); eval_batches and log_every are
+        // divisors in the loop, so clamp them to ≥ 1.
+        tc.eval_every = cfg.int("train.eval_every", tc.eval_every as i64) as usize;
+        tc.eval_batches = (cfg.int("train.eval_batches", tc.eval_batches as i64) as usize).max(1);
+        tc.log_every = (cfg.int("train.log_every", tc.log_every as i64) as usize).max(1);
         tc.hp.rank = cfg.int("optim.rank", tc.hp.rank as i64) as usize;
         tc.hp.interval = cfg.int("optim.interval", tc.hp.interval as i64) as usize;
         tc.hp.scale = cfg.float("optim.scale", tc.hp.scale as f64) as f32;
@@ -222,6 +228,7 @@ impl Trainer {
         Ok(TrainReport {
             method: self.opt.name(),
             model: self.cfg.model.name.clone(),
+            total_steps: self.cfg.steps,
             steps: self.metrics.steps.clone(),
             evals: self.metrics.evals.clone(),
             final_eval_loss: final_eval,
@@ -320,6 +327,44 @@ seed = 7
         let mut tr = Trainer::new(tc);
         let report = tr.run().unwrap();
         assert_eq!(report.method, "GaLore");
+    }
+
+    #[test]
+    fn config_file_roundtrips_eval_and_log_cadence() {
+        let text = r#"
+[model]
+preset = "nano"
+
+[train]
+steps = 12
+eval_every = 6
+eval_batches = 2
+log_every = 3
+"#;
+        let cfg = Config::parse(text).unwrap();
+        let tc = TrainConfig::from_config(&cfg);
+        assert_eq!(tc.eval_every, 6);
+        assert_eq!(tc.eval_batches, 2);
+        assert_eq!(tc.log_every, 3);
+        // Absent keys keep the preset defaults.
+        let plain = Config::parse("[model]\npreset = \"nano\"\n[train]\nsteps = 40\n").unwrap();
+        let td = TrainConfig::from_config(&plain);
+        let want = TrainConfig::preset("nano", "subtrack++", 40);
+        assert_eq!(td.eval_every, want.eval_every);
+        assert_eq!(td.eval_batches, want.eval_batches);
+        assert_eq!(td.log_every, want.log_every);
+    }
+
+    #[test]
+    fn report_total_steps_is_true_step_count_under_sparse_logging() {
+        let mut cfg = quick_cfg("full-rank");
+        cfg.steps = 10;
+        cfg.log_every = 3;
+        let report = Trainer::new(cfg).run().unwrap();
+        // Logged curve: steps 0, 3, 6, 9 — but the checkpointed step count
+        // must be the number of steps actually run.
+        assert_eq!(report.steps.len(), 4);
+        assert_eq!(report.total_steps, 10);
     }
 
     #[test]

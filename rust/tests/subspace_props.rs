@@ -14,7 +14,7 @@
 //!    maintains an orthonormal basis, via `Optimizer::projector_defect`.
 
 use subtrack::optim::{self, HyperParams, Optimizer, Param};
-use subtrack::tensor::{gemm, qr, svd, Matrix};
+use subtrack::tensor::{gemm, qr, svd, Matrix, Workspace};
 use subtrack::util::proptest;
 use subtrack::util::rng::Rng;
 
@@ -146,6 +146,85 @@ fn truncated_rank_never_exceeds_and_captures_dominant_energy() {
     );
 }
 
+#[test]
+fn blocked_qr_boundary_properties() {
+    // The WY-blocked kernel must satisfy every QR invariant — and agree with
+    // the per-column kernel to fp tolerance — at the awkward panel shapes:
+    // n not a multiple of nb, n == nb (single panel, no trailing update),
+    // n < nb (per-column fallback), and panels holding a dead reflector.
+    let mut ws = Workspace::new();
+    proptest::check(
+        1004,
+        30,
+        |rng| {
+            let n = 1 + rng.below(18);
+            let m = n + rng.below(30);
+            let nb = 2 + rng.below(9);
+            let mut a = Matrix::randn(m, n, 1.0, rng);
+            let degenerate = n >= 3 && rng.below(3) == 0;
+            if degenerate {
+                // Duplicate a column: one panel factors a degenerate
+                // (rank-deficient) reflector.
+                for i in 0..m {
+                    let v = a.get(i, 0);
+                    a.set(i, 2, v);
+                }
+            }
+            (a, nb, degenerate)
+        },
+        |(a, nb, degenerate)| {
+            let (m, n) = a.shape();
+            let mut ws_local = Workspace::new();
+            let mut q = ws_local.take_dirty(m, n);
+            let mut r = ws_local.take_dirty(n, n);
+            qr::thin_qr_into_blocked(a, &mut q, &mut r, &mut ws_local, *nb);
+            let defect = qr::orthonormality_defect(&q);
+            if defect > 1e-3 {
+                return Err(format!("QᵀQ defect {defect} (nb={nb})"));
+            }
+            for i in 0..n {
+                for j in 0..i {
+                    if r.get(i, j) != 0.0 {
+                        return Err(format!("R[{i},{j}] below diagonal (nb={nb})"));
+                    }
+                }
+            }
+            let back = gemm::matmul(&q, &r);
+            let err = back.sub(a).fro_norm() / a.fro_norm().max(1e-12);
+            if err > 1e-3 {
+                return Err(format!("‖QR−A‖/‖A‖ = {err} (nb={nb})"));
+            }
+            // Agreement with the per-column kernel, to fp tolerance. Skipped
+            // for rank-deficient inputs: a degenerate pivot's direction is fp
+            // noise, so the two accumulation orders legitimately produce
+            // different (equally valid) null-space columns there — those
+            // cases are covered by the invariants above.
+            if !degenerate {
+                let mut q1 = ws_local.take_dirty(m, n);
+                let mut r1 = ws_local.take_dirty(n, n);
+                qr::thin_qr_into_blocked(a, &mut q1, &mut r1, &mut ws_local, 1);
+                proptest::close(q.data(), q1.data(), 5e-4, 5e-3)
+                    .map_err(|e| format!("Q vs per-column (nb={nb}): {e}"))?;
+                proptest::close(r.data(), r1.data(), 5e-4, 5e-3)
+                    .map_err(|e| format!("R vs per-column (nb={nb}): {e}"))?;
+            }
+            Ok(())
+        },
+    );
+    // Steady-state workspace behavior at a boundary shape: a second pass of
+    // the same (shape, nb) pair adds no misses.
+    let mut rng = Rng::new(1005);
+    let a = Matrix::randn(50, 11, 1.0, &mut rng);
+    let mut q = ws.take_dirty(50, 11);
+    let mut r = ws.take_dirty(11, 11);
+    qr::thin_qr_into_blocked(&a, &mut q, &mut r, &mut ws, 4);
+    let misses = ws.misses();
+    qr::thin_qr_into_blocked(&a, &mut q, &mut r, &mut ws, 4);
+    assert_eq!(ws.misses(), misses, "repeat blocked QR allocated");
+    ws.give(q);
+    ws.give(r);
+}
+
 // ---------------------------------------------------------------- layer 2
 
 /// Serializes every test that mutates the process-global worker-count knob:
@@ -188,6 +267,56 @@ fn refresh_kernels_bit_identical_across_worker_counts() {
     assert_eq!(base.0.data(), single.0.data(), "Q diverged under DP opt-out");
     assert_eq!(base.2.data(), single.2.data(), "U diverged under DP opt-out");
     assert_eq!(base.4, single.4, "σ diverged under DP opt-out");
+    gemm::set_gemm_threads(0);
+}
+
+#[test]
+fn blocked_qr_bit_identical_across_worker_counts() {
+    // At any *fixed* block size the WY kernel's fan-out (panel reflector
+    // columns + GEMM row blocks) must be bit-identical for 1/2/8 workers —
+    // the same contract the per-column kernel carries. Covers a full-panel
+    // shape, a ragged boundary (n % nb ≠ 0), and a single-panel shape.
+    let _guard = THREAD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    let mut rng = Rng::new(2003);
+    for (m, n, nb) in [(96, 24, 8), (80, 13, 4), (64, 8, 8)] {
+        let a = Matrix::randn(m, n, 1.0, &mut rng);
+        let mut ws = Workspace::new();
+        gemm::set_gemm_threads(1);
+        let mut q1 = ws.take_dirty(m, n);
+        let mut r1 = ws.take_dirty(n, n);
+        qr::thin_qr_into_blocked(&a, &mut q1, &mut r1, &mut ws, nb);
+        for workers in [2usize, 8] {
+            gemm::set_gemm_threads(workers);
+            let mut qw = ws.take_dirty(m, n);
+            let mut rw = ws.take_dirty(n, n);
+            qr::thin_qr_into_blocked(&a, &mut qw, &mut rw, &mut ws, nb);
+            assert_eq!(
+                q1.data(),
+                qw.data(),
+                "blocked Q diverged ({m}x{n}, nb={nb}, {workers} workers)"
+            );
+            assert_eq!(
+                r1.data(),
+                rw.data(),
+                "blocked R diverged ({m}x{n}, nb={nb}, {workers} workers)"
+            );
+            ws.give(qw);
+            ws.give(rw);
+        }
+        // The data-parallel opt-out path too.
+        gemm::set_gemm_threads(8);
+        let (qs, rs) = gemm::run_single_threaded(|| {
+            let mut ws2 = Workspace::new();
+            let mut q = ws2.take_dirty(m, n);
+            let mut r = ws2.take_dirty(n, n);
+            qr::thin_qr_into_blocked(&a, &mut q, &mut r, &mut ws2, nb);
+            (q, r)
+        });
+        assert_eq!(q1.data(), qs.data(), "blocked Q diverged under DP opt-out");
+        assert_eq!(r1.data(), rs.data(), "blocked R diverged under DP opt-out");
+        ws.give(q1);
+        ws.give(r1);
+    }
     gemm::set_gemm_threads(0);
 }
 
