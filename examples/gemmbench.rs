@@ -11,7 +11,7 @@
 
 use std::collections::BTreeMap;
 use subtrack::optim::subtrack::grassmannian_step_ws;
-use subtrack::tensor::{gemm, qr, svd, Matrix, Workspace};
+use subtrack::tensor::{gemm, pool, qr, svd, Matrix, Workspace};
 use subtrack::util::json::{merge_into_file, Json};
 use subtrack::util::rng::Rng;
 
@@ -177,11 +177,63 @@ fn main() {
         gemm::set_gemm_threads(0);
     }
 
+    // ---- scheduler sweep (counter-vs-deque dispatch, chunk sizing) ----
+    // Raw pool dispatch of 4096 trivial tasks and of a skewed-cost task set
+    // under both schedulers: Counter is the pre-deque shared-counter
+    // baseline, Steal the per-participant deques with half-stealing. At
+    // 1 worker both inline (the no-scheduler floor); at the full
+    // participant budget the gap is pure claim/hand-off contention. The
+    // chunk sweep times the 256³ GEMM at forced row-chunk sizes against the
+    // L2-target auto sizing.
+    println!("\nscheduler sweep ({} participants):", pool::max_participants());
+    let mut sched = BTreeMap::new();
+    for (mlabel, mode) in [("counter", pool::Sched::Counter), ("steal", pool::Sched::Steal)] {
+        for (wlabel, w) in [("1w", 1usize), ("auto", pool::max_participants())] {
+            let secs = time_op(budget, || {
+                pool::run_mode(w, 4096, mode, &|i| {
+                    std::hint::black_box(i);
+                });
+            });
+            println!("dispatch4096 {mlabel:<8} [{wlabel:<4}]: {:8.3} ms", secs * 1e3);
+            sched.insert(format!("dispatch4096_{mlabel}_{wlabel}"), Json::Num(secs * 1e3));
+            // Skewed cost: every 16th task does ~64× the work — the
+            // rebalancing case the deques exist for.
+            let secs = time_op(budget, || {
+                pool::run_mode(w, 512, mode, &|i| {
+                    let reps = if i % 16 == 0 { 4096u64 } else { 64 };
+                    let mut acc = 0u64;
+                    for r in 0..reps {
+                        acc = acc.wrapping_mul(6364136223846793005).wrapping_add(r);
+                    }
+                    std::hint::black_box(acc);
+                });
+            });
+            println!("skewed512    {mlabel:<8} [{wlabel:<4}]: {:8.3} ms", secs * 1e3);
+            sched.insert(format!("skewed512_{mlabel}_{wlabel}"), Json::Num(secs * 1e3));
+        }
+    }
+    let sa = Matrix::randn(256, 256, 1.0, &mut rng);
+    let sb = Matrix::randn(256, 256, 1.0, &mut rng);
+    let mut sc = ws.take(256, 256);
+    for chunk in [4usize, 16, 64, 0] {
+        gemm::set_gemm_chunk(chunk);
+        let secs = time_op(budget, || {
+            gemm::matmul_into(&mut sc, &sa, &sb);
+            std::hint::black_box(&sc);
+        });
+        let label = if chunk == 0 { "auto".to_string() } else { chunk.to_string() };
+        println!("matmul256 chunk={label:<4}: {:8.3} ms", secs * 1e3);
+        sched.insert(format!("matmul256_chunk_{label}"), Json::Num(secs * 1e3));
+    }
+    gemm::set_gemm_chunk(0);
+    ws.give(sc);
+
     let record = Json::obj(vec![
         ("threads", Json::Num(auto_threads as f64)),
         ("workspace_misses", Json::Num(ws.misses() as f64)),
         ("cases", Json::Obj(cases)),
         ("refresh_ms", Json::Obj(refresh)),
+        ("sched_ms", Json::Obj(sched)),
     ]);
     merge_into_file(&out_path, "gemm", record).expect("write BENCH_gemm.json");
     println!("\n[data] gemm record -> {out_path} ({auto_threads} threads auto)");

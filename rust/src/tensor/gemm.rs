@@ -11,16 +11,27 @@
 //!   (typically leased from a [`Workspace`]) so steady-state training steps
 //!   perform no heap allocation. The transpose variants borrow their Aᵀ/Bᵀ
 //!   scratch from the workspace too.
-//! * **Row-block threading**: `matmul_acc` splits C's rows across the
-//!   persistent [`pool`] workers (no external deps, no per-call forks).
-//!   Each row of C is computed by exactly one worker with the identical
-//!   single-thread kernel, so results are **bit-identical** for any worker
-//!   count. Auto mode threads only above [`PAR_FLOPS`] and degrades to the
-//!   single-core path when `available_parallelism() == 1`;
-//!   `set_gemm_threads` (or the `GEMM_THREADS` env var, read once) forces a
-//!   count (used by the DP worker plumbing in `train::parallel`, CI, and
-//!   tests). The same plan gates the threaded QR/SVD/matvec kernels, so one
-//!   knob budgets every level of parallelism.
+//! * **Row-block threading with adaptive chunking**: `matmul_acc` splits
+//!   C's rows into chunks dispatched on the persistent [`pool`]'s
+//!   work-stealing scheduler (no external deps, no per-call forks). Chunk
+//!   sizes come from `chunk_units`: an L2-aware bytes-per-task target
+//!   ([`CHUNK_TARGET_BYTES`]) divided by the bytes one row streams, capped
+//!   so every participant gets at least one chunk — large-k products get
+//!   fine chunks the stealer can rebalance, small ones stay one-chunk-per-
+//!   worker. The `GEMM_CHUNK` env var / [`set_gemm_chunk`] force a chunk
+//!   size (CI runs a 4-row leg so ragged chunks and the steal path are
+//!   exercised), mirroring `GEMM_THREADS`/`GEMM_QR_BLOCK`. Each row of C is
+//!   computed by exactly one task with the identical single-thread kernel,
+//!   so results are **bit-identical** for any worker count at a fixed chunk
+//!   size (different chunk sizes are documented to agree only to fp
+//!   tolerance, though the row-block kernels do not currently reassociate
+//!   across chunk boundaries). Auto mode threads only above [`PAR_FLOPS`]
+//!   and degrades to the single-core path when
+//!   `available_parallelism() == 1`; `set_gemm_threads` (or the
+//!   `GEMM_THREADS` env var, read once) forces a count (used by the DP
+//!   worker plumbing in `train::parallel`, CI, and tests). The same plan
+//!   gates the threaded QR/SVD/matvec kernels, so one knob budgets every
+//!   level of parallelism.
 
 use super::matrix::Matrix;
 use super::pool::{self, SendPtr};
@@ -46,31 +57,55 @@ pub const PAR_FLOPS: usize = 1 << 21;
 /// sequential.
 pub const PAR_KERNEL_FLOPS: usize = 1 << 17;
 
+/// Bytes of streamed data one pool task should own in auto chunking mode —
+/// sized to keep a chunk's A/C rows (or matvec rows, reflector columns,
+/// Jacobi pair columns) resident in a per-core L2 slice while still cutting
+/// large kernels into several chunks per worker so the steal scheduler has
+/// slack to rebalance uneven costs.
+pub const CHUNK_TARGET_BYTES: usize = 128 << 10;
+
 /// 0 = auto (size-gated `available_parallelism`), otherwise a forced count.
 /// `usize::MAX` is the "unset" sentinel: the first read seeds the value from
 /// the `GEMM_THREADS` environment variable (CI exercises both kernel paths
 /// by running the suite under `GEMM_THREADS=1` and `GEMM_THREADS=8`).
 static GEMM_THREADS: AtomicUsize = AtomicUsize::new(usize::MAX);
 
-/// The forced worker count: explicit [`set_gemm_threads`] value, else the
-/// `GEMM_THREADS` env var (parsed once), else 0 (auto).
-fn forced_threads() -> usize {
-    let cur = GEMM_THREADS.load(Ordering::Relaxed);
+/// 0 = auto (L2-target chunking), otherwise a forced chunk size in unit
+/// tasks (GEMM/matvec rows, matvec_t/reflector columns, Jacobi pairs).
+/// `usize::MAX` is the "unset" sentinel: the first read seeds the value
+/// from the `GEMM_CHUNK` environment variable (the CI matrix runs a
+/// `GEMM_CHUNK=4` leg so small, ragged chunks exercise the steal path).
+static GEMM_CHUNK: AtomicUsize = AtomicUsize::new(usize::MAX);
+
+/// Shared resolution for the `usize::MAX`-sentinel env knobs
+/// (`GEMM_THREADS`, `GEMM_CHUNK`, `GEMM_QR_BLOCK`): an explicit setter
+/// value wins; the sentinel re-resolves from `var` (parsed on first read
+/// after each reset), so `set_*(0)` restores the env default rather than
+/// erasing a CI-wide setting. May return the sentinel itself when a
+/// concurrent `set_*(0)` races the exchange — callers treat it as "unset".
+pub(crate) fn env_knob(cell: &AtomicUsize, var: &str) -> usize {
+    let cur = cell.load(Ordering::Relaxed);
     if cur != usize::MAX {
         return cur;
     }
-    let from_env = std::env::var("GEMM_THREADS")
+    let from_env = std::env::var(var)
         .ok()
         .and_then(|v| v.trim().parse::<usize>().ok())
         .unwrap_or(0);
-    // Only replace the sentinel so a concurrent `set_gemm_threads` wins.
-    let _ = GEMM_THREADS.compare_exchange(
-        usize::MAX,
-        from_env,
-        Ordering::Relaxed,
-        Ordering::Relaxed,
-    );
-    GEMM_THREADS.load(Ordering::Relaxed)
+    // Only replace the sentinel so a concurrent setter wins.
+    let _ = cell.compare_exchange(usize::MAX, from_env, Ordering::Relaxed, Ordering::Relaxed);
+    cell.load(Ordering::Relaxed)
+}
+
+/// The forced worker count: explicit [`set_gemm_threads`] value, else the
+/// `GEMM_THREADS` env var (parsed once), else 0 (auto).
+fn forced_threads() -> usize {
+    let n = env_knob(&GEMM_THREADS, "GEMM_THREADS");
+    if n == usize::MAX {
+        0
+    } else {
+        n
+    }
 }
 
 thread_local! {
@@ -79,6 +114,15 @@ thread_local! {
     static FORCE_SINGLE: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
 }
 
+/// Serializes lib tests that depend on the process-global knob *values*
+/// (asserting what `chunk_units` returns, or needing a forced chunk to hold
+/// for a whole measured run): the harness runs this crate's tests
+/// concurrently, and while the knobs are result-transparent, knob-value
+/// assertions are not. (The integration binaries have their own
+/// `THREAD_KNOB` for the same reason.)
+#[cfg(test)]
+pub(crate) static TEST_KNOB_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
 /// Force the GEMM worker count (0 restores the `GEMM_THREADS` env default,
 /// or auto when the variable is unset). Threading is bit-exact, so this only
 /// affects speed, never results.
@@ -86,6 +130,47 @@ pub fn set_gemm_threads(n: usize) {
     // Storing the sentinel makes the next read re-resolve the env var, so a
     // test that restores "auto" does not erase a CI-wide GEMM_THREADS=N.
     GEMM_THREADS.store(if n == 0 { usize::MAX } else { n }, Ordering::Relaxed);
+}
+
+/// The forced chunk size: explicit [`set_gemm_chunk`] value, else the
+/// `GEMM_CHUNK` env var (parsed once), else 0 (auto).
+fn forced_chunk() -> usize {
+    let n = env_knob(&GEMM_CHUNK, "GEMM_CHUNK");
+    if n == usize::MAX {
+        0
+    } else {
+        n
+    }
+}
+
+/// Force the per-task chunk size for every chunk-dispatched kernel (0
+/// restores the `GEMM_CHUNK` env default, or the L2-target auto sizing when
+/// the variable is unset). At a fixed chunk size results are bit-identical
+/// for any worker count; *different* chunk sizes are only promised to agree
+/// to fp tolerance (the documented contract, shared with `GEMM_QR_BLOCK` —
+/// today's row/column/pair kernels do not reassociate across chunk
+/// boundaries, but the promise leaves room for ones that do).
+pub fn set_gemm_chunk(n: usize) {
+    // Storing the sentinel makes the next read re-resolve the env var, so a
+    // test that restores "auto" does not erase a CI-wide GEMM_CHUNK=N.
+    GEMM_CHUNK.store(if n == 0 { usize::MAX } else { n }, Ordering::Relaxed);
+}
+
+/// Chunk size (in unit tasks) for a kernel that will dispatch
+/// `total` units across `threads` workers, where one unit streams
+/// `bytes_per_unit` bytes: the forced `GEMM_CHUNK` if set, else
+/// [`CHUNK_TARGET_BYTES`]` / bytes_per_unit`, capped so every worker still
+/// receives at least one chunk (and floored at one unit). Chunking is a
+/// partitioning decision only — every unit runs the identical sequential
+/// kernel whichever chunk carries it.
+pub(crate) fn chunk_units(total: usize, bytes_per_unit: usize, threads: usize) -> usize {
+    let forced = forced_chunk();
+    if forced > 0 {
+        return forced.clamp(1, total.max(1));
+    }
+    let per_worker = total.div_ceil(threads.max(1)).max(1);
+    let target = (CHUNK_TARGET_BYTES / bytes_per_unit.max(1)).max(1);
+    target.min(per_worker)
 }
 
 /// Run `f` with GEMM threading disabled on *this* thread (results are
@@ -182,11 +267,13 @@ pub fn matmul_acc(c: &mut Matrix, a: &Matrix, b: &Matrix, alpha: f32) {
         matmul_acc_rows(cd, ad, bd, m, k, n, alpha);
         return;
     }
-    let rows_per = m.div_ceil(threads);
+    // One row of the chunk streams a k-float A row and an n-float C row
+    // (B is shared and stays hot across rows).
+    let rows_per = chunk_units(m, 4 * (k + n), threads);
     let n_chunks = m.div_ceil(rows_per);
     // Disjoint row-block writes into C, one chunk per pool task. Every row
     // is computed by the identical scalar kernel whatever the chunking, so
-    // any worker count gives bit-identical results.
+    // any worker count gives bit-identical results at a fixed chunk size.
     let c_base = SendPtr::new(cd.as_mut_ptr());
     pool::run(threads, n_chunks, &|t| {
         let row0 = t * rows_per;
@@ -425,7 +512,8 @@ pub fn matvec_into(y: &mut [f32], a: &Matrix, x: &[f32]) {
         matvec_rows(y, ad, x, k, 0);
         return;
     }
-    let rows_per = m.div_ceil(threads);
+    // One output row streams a k-float A row.
+    let rows_per = chunk_units(m, 4 * k, threads);
     let n_chunks = m.div_ceil(rows_per);
     let y_base = SendPtr::new(y.as_mut_ptr());
     pool::run(threads, n_chunks, &|t| {
@@ -475,7 +563,8 @@ pub fn matvec_t_into(y: &mut [f32], a: &Matrix, x: &[f32]) {
         }
         return;
     }
-    let cols_per = k.div_ceil(threads);
+    // One output column strides down an m-element column of A.
+    let cols_per = chunk_units(k, 4 * m, threads);
     let n_chunks = k.div_ceil(cols_per);
     let y_base = SendPtr::new(y.as_mut_ptr());
     pool::run(threads, n_chunks, &|t| {
@@ -609,6 +698,61 @@ mod tests {
             );
         }
         set_gemm_threads(0);
+    }
+
+    #[test]
+    fn forced_chunk_sizes_reproduce_the_product() {
+        // Ragged chunk boundaries (m=101 with chunks 1/4/7/64) must cover
+        // every row exactly once; the row kernel does not reassociate
+        // across chunks, so agreement here is exact.
+        let _knob = TEST_KNOB_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let mut rng = Rng::new(78);
+        let a = Matrix::randn(101, 40, 1.0, &mut rng);
+        let b = Matrix::randn(40, 33, 1.0, &mut rng);
+        set_gemm_threads(4);
+        set_gemm_chunk(0);
+        let base = matmul(&a, &b);
+        for chunk in [1usize, 4, 7, 64, 1000] {
+            set_gemm_chunk(chunk);
+            let got = matmul(&a, &b);
+            assert_eq!(base.data(), got.data(), "chunk={chunk} diverged");
+            // matvec paths share the chunk knob.
+            let x: Vec<f32> = (0..40).map(|i| i as f32 * 0.5 - 3.0).collect();
+            let xt: Vec<f32> = (0..101).map(|i| 1.0 - i as f32 * 0.25).collect();
+            let y = matvec(&a, &x);
+            let yt = matvec_t(&a, &xt);
+            set_gemm_chunk(0);
+            assert_eq!(y, matvec(&a, &x), "matvec chunk={chunk} diverged");
+            assert_eq!(yt, matvec_t(&a, &xt), "matvec_t chunk={chunk} diverged");
+        }
+        set_gemm_chunk(0);
+        set_gemm_threads(0);
+
+        // ---- auto sizing (same test fn: both halves mutate the global
+        // chunk knob, and concurrent tests must never observe each other's
+        // forced values in these assertions) ----
+        // `set_gemm_chunk(0)` restores the GEMM_CHUNK *env* default by
+        // design, so the auto-mode assertions only hold when CI is not
+        // forcing a chunk.
+        let env_forced = std::env::var("GEMM_CHUNK")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .unwrap_or(0);
+        if env_forced == 0 {
+            // Fat rows: the L2 target splits each worker's share into
+            // several chunks (steal slack).
+            let fat = chunk_units(1024, 4 * 8192, 4);
+            assert!(fat >= 1 && fat < 1024usize.div_ceil(4), "fat-row chunk {fat}");
+            // Skinny rows: capped at one chunk per worker, never more.
+            let skinny = chunk_units(64, 4 * 8, 4);
+            assert_eq!(skinny, 16, "skinny rows should give one chunk per worker");
+        }
+        // Forced override wins (over auto and env alike) and is clamped to
+        // the task count.
+        set_gemm_chunk(4);
+        assert_eq!(chunk_units(1024, 4 * 8192, 4), 4);
+        assert_eq!(chunk_units(2, 4, 4), 2, "forced chunk clamps to total");
+        set_gemm_chunk(0);
     }
 
     #[test]

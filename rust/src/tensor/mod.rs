@@ -40,27 +40,34 @@
 //!   `loss_and_grad` wrappers build a fresh cache per call for exactly this
 //!   reason — finite-difference tests poke weights directly).
 //!
-//! * **Threading: one persistent pool, one budget.** All kernel fan-out
-//!   runs on the [`pool`] — `available_parallelism() − 1` long-lived
-//!   workers spawned on first use (replacing PR-1's per-call
-//!   `thread::scope` forks). [`gemm::matmul_acc`] splits C's rows into
-//!   blocks, [`qr::thin_qr`] factors WY panels and pushes its trailing
-//!   update and Q formation through those same GEMM kernels (per-column
-//!   reflector fan inside panels and for narrow inputs), the [`svd`] Jacobi
-//!   sweep runs round-robin rounds of disjoint column pairs, and the
-//!   power-iteration matvecs split by output block. In every case one
+//! * **Threading: one persistent pool, one budget, work stealing.** All
+//!   kernel fan-out runs on the [`pool`] — `available_parallelism() − 1`
+//!   long-lived workers spawned on first use (replacing PR-1's per-call
+//!   `thread::scope` forks). The pool schedules through per-participant
+//!   range deques with half-stealing (no shared claim counter, no global
+//!   job queue; see the [`pool`] module docs for what may reorder and what
+//!   cannot). [`gemm::matmul_acc`] splits C's rows into chunks sized by an
+//!   L2-aware bytes-per-task target (`gemm::chunk_units`; `GEMM_CHUNK` /
+//!   [`gemm::set_gemm_chunk`] force a size), [`qr::thin_qr`] factors WY
+//!   panels and pushes its trailing update and Q formation through those
+//!   same GEMM kernels (chunked reflector-column fan inside panels and for
+//!   narrow inputs), the [`svd`] Jacobi sweep runs round-robin rounds of
+//!   disjoint column pairs grouped into adaptively sized tasks, and the
+//!   power-iteration matvecs split by output chunk. In every case one unit
 //!   task's output depends only on its index and is produced by the
 //!   identical sequential kernel, so results are **bit-identical for any
-//!   worker count** (gated by `rust/tests/subspace_props.rs`; the QR block
-//!   size itself — `GEMM_QR_BLOCK` / [`qr::set_qr_block`] — changes the fp
-//!   accumulation order and is *not* bit-transparent). The same plan gates
-//!   everything: `gemm::set_gemm_threads` / the `GEMM_THREADS` env var
-//!   force a count, auto mode threads only above [`gemm::PAR_FLOPS`]
-//!   (GEMM) / [`gemm::PAR_KERNEL_FLOPS`] (pool-dispatched QR/SVD/matvec),
-//!   and the data-parallel trainer shards run on the same pool with nested
-//!   kernel fan-out opted out (`gemm::run_single_threaded`; nested
-//!   [`pool::run`] executes inline regardless) — so DP workers and kernels
-//!   can never oversubscribe the machine.
+//!   worker count at fixed chunk/block settings** (gated by
+//!   `rust/tests/subspace_props.rs`; the QR block size — `GEMM_QR_BLOCK` /
+//!   [`qr::set_qr_block`] — changes the fp accumulation order and is *not*
+//!   bit-transparent, and differing `GEMM_CHUNK` values promise only fp
+//!   tolerance). The same plan gates everything: `gemm::set_gemm_threads` /
+//!   the `GEMM_THREADS` env var force a count, auto mode threads only above
+//!   [`gemm::PAR_FLOPS`] (GEMM) / [`gemm::PAR_KERNEL_FLOPS`]
+//!   (pool-dispatched QR/SVD/matvec), and the data-parallel trainer shards
+//!   run on the same pool with nested kernel fan-out opted out
+//!   (`gemm::run_single_threaded`; nested [`pool::run`] executes inline
+//!   regardless) — so DP workers and kernels can never oversubscribe the
+//!   machine.
 //!
 //! * **Allocation-free refresh paths.** The every-k-steps subspace
 //!   machinery has `_into` workspace-backed forms mirroring the GEMM ones:

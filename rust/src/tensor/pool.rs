@@ -1,24 +1,59 @@
-//! Persistent worker pool shared by every threaded kernel.
+//! Persistent worker pool with a work-stealing scheduler.
 //!
-//! PR-1's `matmul_acc` forked `std::thread::scope` workers per call; at
-//! refresh-path shapes (a few hundred rows) the fork/join overhead is
-//! comparable to the kernel itself. This pool spawns
-//! `available_parallelism() − 1` long-lived workers once, on first use, and
-//! every threaded kernel (GEMM row blocks, QR reflector columns, Jacobi
-//! rotation pairs, matvec blocks) and the data-parallel trainer shards draw
-//! from the same budget through [`run`].
+//! PR-2 replaced per-call `thread::scope` forks with long-lived workers, but
+//! handed tasks out through one shared atomic counter and queued job copies
+//! through one mutex-guarded `VecDeque` — at high core counts every GEMM row
+//! block, QR panel column, and Jacobi pair claim serialized on the same
+//! cache line. This revision replaces that scheduler with per-participant
+//! **range deques** and Chase–Lev-style half-stealing:
 //!
-//! # Execution model
+//! * [`run`]`(workers, n_tasks, f)` pre-splits `0..n_tasks` into one
+//!   contiguous index range per participant (the calling thread plus up to
+//!   `workers − 1` pool workers). Each participant claims tasks from the
+//!   *front* of its own range — a private cache line, uncontended in the
+//!   common case — and when its range is empty it **steals the back half**
+//!   of a victim's remaining range and installs it as its own. Stealing
+//!   repeats until every range is empty, so uneven task costs rebalance
+//!   without any shared claim counter.
+//! * Jobs are announced on a fixed board of slots, each with its **own**
+//!   lock; workers claim participant *seats* (one atomic CAS per job, not
+//!   per task) and then never touch shared scheduler state again until they
+//!   exit. There is no global job queue, and the pool-wide condvar exists
+//!   only to sleep/wake idle workers.
+//! * Job state (the range slots, seat/exit counters, completion condvar) is
+//!   **leased from a pre-sized free list**, so a warm [`run`] submission
+//!   performs no heap allocation: deques are fixed-capacity (one range slot
+//!   per possible participant, sized at pool init) and job-state misses are
+//!   capped at first use — the same contract the [`Workspace`] leases carry,
+//!   gated by [`job_state_misses`] in `rust/tests/zero_alloc.rs`.
 //!
-//! [`run`]`(workers, n_tasks, f)` executes `f(0)`, …, `f(n_tasks − 1)`
-//! exactly once each, distributed over at most `workers` participants (the
-//! calling thread plus pool workers). Task indices are handed out through a
-//! shared atomic counter, so *which* thread runs a task is scheduling-
-//! dependent — kernels must therefore make each task's output depend only on
-//! its index, which is exactly the bit-identical-per-row/column contract the
-//! GEMM kernel established. The caller blocks until every task has finished,
-//! so closures may borrow stack data (the borrow is lifetime-erased
-//! internally and provably outlives the run).
+//! [`Workspace`]: super::workspace::Workspace
+//!
+//! # Execution model: what reorders, what cannot
+//!
+//! [`run`] executes `f(0)`, …, `f(n_tasks − 1)` **exactly once each** and
+//! blocks until all of them finished (so closures may borrow stack data; the
+//! borrow is lifetime-erased internally and provably outlives the run).
+//! Stealing makes *placement and order* scheduling-dependent: which thread
+//! runs a task, and in what sequence, varies run to run. What cannot vary is
+//! the *result*: a task is claimed by exactly one participant and runs the
+//! same sequential kernel wherever it lands, so kernels that make each
+//! task's output depend only on its index (the bit-identical-per-row/column
+//! contract every threaded kernel in this crate follows) produce
+//! bit-identical results for any worker count, any chunk size, and any
+//! steal schedule. Tasks must not synchronize with each other — a task that
+//! blocks on another task's side effect can deadlock, because sibling tasks
+//! may be queued behind it on the same participant.
+//!
+//! # Isolation between jobs
+//!
+//! Each job's tasks live only in that job's range slots: a caller drains and
+//! steals exclusively within its own job, and finishing touches only its own
+//! announce slot (O(1) — the old scheduler's leftover-copy reclaim scanned
+//! the global queue under its lock). A caller therefore **never blocks on an
+//! unrelated busy worker**: with every pool worker pinned by some long job,
+//! a new caller simply drains its whole task set itself and returns
+//! (`rust/tests/pool_sched.rs` regression-tests this starvation bound).
 //!
 //! # Nesting and the shared budget
 //!
@@ -26,11 +61,19 @@
 //! [`run`] calls execute inline on that worker ([`on_worker`] guards this).
 //! Combined with `gemm::run_single_threaded` (the data-parallel workers'
 //! opt-out) this makes oversubscription impossible: one level of the stack
-//! owns the cores at a time. Concurrent top-level callers simply queue; the
-//! job counter still guarantees exactly-once execution of every task.
+//! owns the cores at a time. Concurrent top-level callers each announce
+//! their own job and share the worker set through seat claims.
+//!
+//! # Scheduler modes
+//!
+//! [`run_mode`] exposes the scheduler choice: [`Sched::Steal`] (the default
+//! behind [`run`]) and [`Sched::Counter`], which dispatches through a single
+//! shared counter over the same seat/announce machinery. Counter mode exists
+//! as the contention baseline for `examples/gemmbench.rs` (`gemm.sched_ms`
+//! counter-vs-deque sweep) and as a cross-check oracle in the stress suite —
+//! both modes execute every task exactly once with identical results.
 
-use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// A raw mutable pointer that may be shared across pool tasks.
@@ -58,28 +101,98 @@ impl<T> SendPtr<T> {
     }
 }
 
-/// One unit of fan-out: a lifetime-erased task function plus the shared
-/// completion state. Cloned once per participating worker.
-#[derive(Clone)]
-struct Job {
-    /// Erased borrow of the caller's closure. Valid for the whole job:
-    /// the caller blocks in [`run`] until `remaining` hits zero.
-    f: &'static (dyn Fn(usize) + Sync),
-    shared: Arc<JobShared>,
+/// Task-dispatch strategy for [`run_mode`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Sched {
+    /// Per-participant range deques with half-stealing (the default).
+    Steal,
+    /// One shared claim counter (the pre-deque scheduler, kept as the
+    /// contention baseline for benches and as a test oracle).
+    Counter,
 }
 
-struct JobShared {
-    /// Next task index to claim.
-    next: AtomicUsize,
+/// Lifetime-erased borrow of a caller's task closure. Stored as a raw fat
+/// pointer so stale copies (a worker that looked at a job too late to claim
+/// a seat) are never *dereferenced* — only participants that won a seat call
+/// it, and the caller blocks until every such participant exited.
+#[derive(Clone, Copy)]
+struct TaskFn(*const (dyn Fn(usize) + Sync));
+
+unsafe impl Send for TaskFn {}
+unsafe impl Sync for TaskFn {}
+
+/// Per-run parameters, written by the caller before the job is announced
+/// and read by each worker after it wins a seat (both under the mutex, so
+/// publication is ordered).
+struct Header {
+    f: Option<TaskFn>,
+    mode: Sched,
+    n_participants: usize,
     n_tasks: usize,
-    /// Worker copies of the job still running (the caller's own
-    /// participation is not counted — it knows when it finished).
-    remaining: AtomicUsize,
-    /// Set when a worker-side task panicked; re-raised on the caller.
-    panicked: std::sync::atomic::AtomicBool,
+}
+
+/// Reusable per-job scheduler state, leased from the pool's free list.
+///
+/// `ranges[pid]` is participant `pid`'s deque: a `(lo, hi)` index range
+/// claimed from the front by its owner and halved from the back by thieves.
+/// Each slot has its own lock; a claim or steal holds exactly one lock at a
+/// time (a stolen half is carried lock-free and installed into the thief's
+/// own empty slot), so there is no lock-order cycle.
+struct JobState {
+    header: Mutex<Header>,
+    /// One range slot per possible participant (`max_participants`), fixed
+    /// at construction so warm runs never grow it.
+    ranges: Vec<Mutex<(usize, usize)>>,
+    /// Shared claim counter for [`Sched::Counter`] mode.
+    counter: AtomicUsize,
+    /// Unclaimed worker seats. A worker joins by CAS-decrementing this;
+    /// the claimed value doubles as its participant index (1..=extra).
+    /// The caller closes the job by swapping in 0.
+    seats: AtomicUsize,
+    /// Participants (seat winners) that have finished and released their
+    /// borrow of the task closure.
+    exited: AtomicUsize,
+    /// Set when a participant's task panicked; re-raised on the caller.
+    panicked: AtomicBool,
     done_lock: Mutex<()>,
     done_cv: Condvar,
 }
+
+fn new_state(max_p: usize) -> Arc<JobState> {
+    Arc::new(JobState {
+        header: Mutex::new(Header {
+            f: None,
+            mode: Sched::Steal,
+            n_participants: 0,
+            n_tasks: 0,
+        }),
+        ranges: (0..max_p).map(|_| Mutex::new((0usize, 0usize))).collect(),
+        counter: AtomicUsize::new(0),
+        seats: AtomicUsize::new(0),
+        exited: AtomicUsize::new(0),
+        panicked: AtomicBool::new(false),
+        done_lock: Mutex::new(()),
+        done_cv: Condvar::new(),
+    })
+}
+
+/// One entry of the announce board. `occupied` is the cheap scan filter;
+/// the Arc hand-off goes through the slot's own small mutex (there is no
+/// board-wide lock).
+struct AnnounceSlot {
+    occupied: AtomicBool,
+    job: Mutex<Option<Arc<JobState>>>,
+}
+
+/// Announce-board capacity: bounds *concurrent top-level* jobs only (nested
+/// runs execute inline and DP shards run on the pool itself). If ever
+/// exceeded, the caller degrades to draining its tasks inline — correct,
+/// just unassisted.
+const ANNOUNCE_SLOTS: usize = 64;
+
+/// Job states pre-built at pool init, so the common one-caller-at-a-time
+/// pattern never allocates even on its first run.
+const PREALLOC_STATES: usize = 2;
 
 /// Lock that tolerates poisoning: a panic inside a pool task must never
 /// cascade into a secondary panic (or abort) on the synchronization path.
@@ -87,75 +200,116 @@ fn relock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|e| e.into_inner())
 }
 
-impl JobShared {
-    /// Claim-and-run loop shared by workers and the caller.
-    fn drain(&self, f: &(dyn Fn(usize) + Sync)) {
-        loop {
-            let i = self.next.fetch_add(1, Ordering::Relaxed);
-            if i >= self.n_tasks {
-                return;
-            }
-            f(i);
-        }
-    }
-
-    fn signal_done(&self) {
-        let _guard = relock(&self.done_lock);
-        if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
-            self.done_cv.notify_all();
-        }
-    }
-
-    /// Block until every worker copy of the job finished. MUST run before
-    /// the caller's borrow of `f` ends — including on unwind — because
-    /// workers hold a lifetime-erased reference to it.
-    fn wait(&self) {
-        let mut guard = relock(&self.done_lock);
-        while self.remaining.load(Ordering::Acquire) > 0 {
-            guard = self.done_cv.wait(guard).unwrap_or_else(|e| e.into_inner());
-        }
-    }
-}
-
-/// Drop guard: waits for outstanding workers even when the caller's own
-/// task panics, so the erased closure borrow can never dangle.
-struct WaitOnDrop<'a>(&'a JobShared);
-
-impl Drop for WaitOnDrop<'_> {
-    fn drop(&mut self) {
-        self.0.wait();
-    }
-}
-
-/// The pool: a shared job queue the long-lived workers block on.
 struct Pool {
-    queue: Mutex<VecDeque<Job>>,
+    slots: Vec<AnnounceSlot>,
+    /// Leasable job states; pre-sized so warm runs pop/push without
+    /// allocating.
+    free_states: Mutex<Vec<Arc<JobState>>>,
+    /// Fresh job-state allocations after init (the zero-alloc gate's proxy,
+    /// mirroring `Workspace::misses`).
+    state_misses: AtomicUsize,
+    /// Total unclaimed seats across announced jobs; the only thing idle
+    /// workers sleep on.
+    claimable: AtomicUsize,
+    sleep_lock: Mutex<()>,
     cv: Condvar,
     n_workers: usize,
 }
 
 impl Pool {
+    fn lease_state(&self) -> Arc<JobState> {
+        if let Some(s) = relock(&self.free_states).pop() {
+            return s;
+        }
+        self.state_misses.fetch_add(1, Ordering::Relaxed);
+        new_state(self.n_workers + 1)
+    }
+
+    fn release_state(&self, s: Arc<JobState>) {
+        relock(&self.free_states).push(s);
+    }
+
+    /// Claim a free announce slot and publish the job into it. Returns the
+    /// slot index, or `None` when the board is full.
+    fn publish(&self, state: &Arc<JobState>) -> Option<usize> {
+        for (i, slot) in self.slots.iter().enumerate() {
+            if slot
+                .occupied
+                .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                *relock(&slot.job) = Some(Arc::clone(state));
+                return Some(i);
+            }
+        }
+        None
+    }
+
     fn worker_main(pool: Arc<Pool>) {
         ON_WORKER.with(|w| w.set(true));
         loop {
-            let job = {
-                let mut q = relock(&pool.queue);
-                loop {
-                    if let Some(job) = q.pop_front() {
-                        break job;
-                    }
-                    q = pool.cv.wait(q).unwrap_or_else(|e| e.into_inner());
+            let mut participated = false;
+            for slot in &pool.slots {
+                if !slot.occupied.load(Ordering::Acquire) {
+                    continue;
                 }
-            };
-            // A panicking task must not kill the worker or strand the
-            // caller: record it, signal completion, re-raise caller-side.
-            let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                job.shared.drain(job.f);
-            }));
-            if res.is_err() {
-                job.shared.panicked.store(true, Ordering::Release);
+                let Some(state) = relock(&slot.job).clone() else {
+                    continue;
+                };
+                // Claim a seat: the decremented-from value is this worker's
+                // participant index (extra..1 map to pids extra..1).
+                let mut s = state.seats.load(Ordering::Acquire);
+                let pid = loop {
+                    if s == 0 {
+                        break 0;
+                    }
+                    match state.seats.compare_exchange_weak(
+                        s,
+                        s - 1,
+                        Ordering::AcqRel,
+                        Ordering::Acquire,
+                    ) {
+                        Ok(_) => break s,
+                        Err(cur) => s = cur,
+                    }
+                };
+                if pid == 0 {
+                    continue; // all seats gone; look at other jobs
+                }
+                pool.claimable.fetch_sub(1, Ordering::AcqRel);
+                let (f, mode, p, n_tasks) = {
+                    let h = relock(&state.header);
+                    let f = h.f.expect("announced job without a task fn");
+                    (f, h.mode, h.n_participants, h.n_tasks)
+                };
+                // A panicking task must not kill the worker or strand the
+                // caller: record it, do the exit protocol, re-raise
+                // caller-side.
+                let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    // SAFETY: the seat claim succeeded before the caller
+                    // closed the job, so the caller is blocked in
+                    // `Finish::finish` until this participant's exit below —
+                    // the closure borrow outlives every use here.
+                    participate(&state, pid, unsafe { &*f.0 }, mode, p, n_tasks);
+                }));
+                if res.is_err() {
+                    state.panicked.store(true, Ordering::Release);
+                }
+                {
+                    let _g = relock(&state.done_lock);
+                    state.exited.fetch_add(1, Ordering::AcqRel);
+                    state.done_cv.notify_all();
+                }
+                participated = true;
+                break;
             }
-            job.shared.signal_done();
+            if participated {
+                continue;
+            }
+            let mut g = relock(&pool.sleep_lock);
+            while pool.claimable.load(Ordering::Acquire) == 0 {
+                g = pool.cv.wait(g).unwrap_or_else(|e| e.into_inner());
+            }
         }
     }
 }
@@ -171,8 +325,22 @@ fn pool() -> &'static Arc<Pool> {
     POOL.get_or_init(|| {
         let n_workers =
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).saturating_sub(1);
+        let max_p = n_workers + 1;
+        let mut free = Vec::with_capacity(ANNOUNCE_SLOTS);
+        for _ in 0..PREALLOC_STATES {
+            free.push(new_state(max_p));
+        }
         let pool = Arc::new(Pool {
-            queue: Mutex::new(VecDeque::new()),
+            slots: (0..ANNOUNCE_SLOTS)
+                .map(|_| AnnounceSlot {
+                    occupied: AtomicBool::new(false),
+                    job: Mutex::new(None),
+                })
+                .collect(),
+            free_states: Mutex::new(free),
+            state_misses: AtomicUsize::new(0),
+            claimable: AtomicUsize::new(0),
+            sleep_lock: Mutex::new(()),
             cv: Condvar::new(),
             n_workers,
         });
@@ -198,11 +366,134 @@ pub fn max_participants() -> usize {
     pool().n_workers + 1
 }
 
+/// Fresh job-state allocations since pool init: the observable proxy for
+/// the warm-`run`-does-not-allocate contract (deques and job slots are
+/// pre-sized; misses are capped at first use of each concurrency level),
+/// mirroring `Workspace::misses` for workspace leases.
+pub fn job_state_misses() -> usize {
+    pool().state_misses.load(Ordering::Relaxed)
+}
+
+/// Claim the front task of a participant's own range.
+#[inline]
+fn claim_front(range: &Mutex<(usize, usize)>) -> Option<usize> {
+    let mut r = relock(range);
+    if r.0 < r.1 {
+        let i = r.0;
+        r.0 += 1;
+        Some(i)
+    } else {
+        None
+    }
+}
+
+/// The claim-and-run loop shared by the caller (pid 0) and seat-winning
+/// workers. In steal mode: drain the front of the own range; when empty,
+/// split off the back half of the first non-empty victim range (round-robin
+/// scan from the next pid) and install it as the own range. Exits when every
+/// range is empty — remaining in-flight tasks belong to participants that
+/// will exit after finishing them.
+fn participate(
+    state: &JobState,
+    pid: usize,
+    f: &(dyn Fn(usize) + Sync),
+    mode: Sched,
+    p: usize,
+    n_tasks: usize,
+) {
+    match mode {
+        Sched::Counter => loop {
+            let i = state.counter.fetch_add(1, Ordering::Relaxed);
+            if i >= n_tasks {
+                return;
+            }
+            f(i);
+        },
+        Sched::Steal => loop {
+            while let Some(i) = claim_front(&state.ranges[pid]) {
+                f(i);
+            }
+            let mut stolen = None;
+            for off in 1..p {
+                let victim = (pid + off) % p;
+                let mut r = relock(&state.ranges[victim]);
+                let len = r.1 - r.0;
+                if len > 0 {
+                    let take = len.div_ceil(2);
+                    stolen = Some((r.1 - take, r.1));
+                    r.1 -= take;
+                    break;
+                }
+            }
+            match stolen {
+                Some(range) => {
+                    // Own range is empty (only its owner refills it), so the
+                    // carried half can be installed wholesale.
+                    *relock(&state.ranges[pid]) = range;
+                }
+                None => return,
+            }
+        },
+    }
+}
+
+/// Close-and-wait guard for the caller: stops new seat claims, retires the
+/// announce slot (O(1) — no queue scan), and blocks until every seat winner
+/// exited. Runs on unwind too, so the lifetime-erased closure borrow can
+/// never dangle even when the caller's own task panics.
+struct Finish<'a> {
+    pool: &'a Pool,
+    state: &'a JobState,
+    slot_idx: usize,
+    extra: usize,
+    done: bool,
+}
+
+impl Finish<'_> {
+    fn finish(&mut self) {
+        if self.done {
+            return;
+        }
+        self.done = true;
+        // Close the job: no worker can win a seat after this swap.
+        let unclaimed = self.state.seats.swap(0, Ordering::AcqRel);
+        if unclaimed > 0 {
+            self.pool.claimable.fetch_sub(unclaimed, Ordering::AcqRel);
+        }
+        // Retire the announce slot. Order matters: clear the job while the
+        // slot is still marked occupied so no concurrent publisher can have
+        // claimed it, then free the slot.
+        let slot = &self.pool.slots[self.slot_idx];
+        *relock(&slot.job) = None;
+        slot.occupied.store(false, Ordering::Release);
+        // Wait for every participant that did win a seat.
+        let claimed = self.extra - unclaimed;
+        let mut g = relock(&self.state.done_lock);
+        while self.state.exited.load(Ordering::Acquire) < claimed {
+            g = self.state.done_cv.wait(g).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+impl Drop for Finish<'_> {
+    fn drop(&mut self) {
+        self.finish();
+    }
+}
+
 /// Execute `f(0..n_tasks)` with up to `workers` participants (calling thread
-/// included). Falls back to a plain sequential loop when the fan-out cannot
-/// help (one task, one worker, already on a pool worker, or no pool workers
-/// exist). Blocks until every task completed.
+/// included) on the work-stealing scheduler. Falls back to a plain
+/// sequential loop when the fan-out cannot help (one task, one worker,
+/// already on a pool worker, or no pool workers exist). Blocks until every
+/// task completed.
 pub fn run(workers: usize, n_tasks: usize, f: &(dyn Fn(usize) + Sync)) {
+    run_mode(workers, n_tasks, Sched::Steal, f);
+}
+
+/// [`run`] with an explicit [`Sched`] mode (bench/test entry point — the
+/// two modes are behaviorally identical, differing only in claim
+/// contention).
+pub fn run_mode(workers: usize, n_tasks: usize, mode: Sched, f: &(dyn Fn(usize) + Sync)) {
     if n_tasks == 0 {
         return;
     }
@@ -221,52 +512,61 @@ pub fn run(workers: usize, n_tasks: usize, f: &(dyn Fn(usize) + Sync)) {
         }
         return;
     }
-    let shared = Arc::new(JobShared {
-        next: AtomicUsize::new(0),
-        n_tasks,
-        remaining: AtomicUsize::new(extra),
-        panicked: std::sync::atomic::AtomicBool::new(false),
-        done_lock: Mutex::new(()),
-        done_cv: Condvar::new(),
-    });
-    // Erase the borrow's lifetime: sound because this function does not
-    // return (or unwind — see `WaitOnDrop`) until `remaining == 0`, i.e.
-    // until no worker holds `f` anymore.
-    let f_static: &'static (dyn Fn(usize) + Sync) = unsafe {
-        std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f)
-    };
-    {
-        let mut q = relock(&pool.queue);
-        for _ in 0..extra {
-            q.push_back(Job { f: f_static, shared: Arc::clone(&shared) });
-        }
+    let p = extra + 1;
+    let state = pool.lease_state();
+    // Reset per-run fields. Exclusive access: the state came off the free
+    // list, and prior users only drop stale Arc clones without touching
+    // fields.
+    state.panicked.store(false, Ordering::Relaxed);
+    state.exited.store(0, Ordering::Relaxed);
+    state.counter.store(0, Ordering::Relaxed);
+    let per = n_tasks.div_ceil(p);
+    for pid in 0..p {
+        let lo = (pid * per).min(n_tasks);
+        let hi = (lo + per).min(n_tasks);
+        *relock(&state.ranges[pid]) = (lo, hi);
     }
+    {
+        let mut h = relock(&state.header);
+        h.f = Some(TaskFn(f as *const (dyn Fn(usize) + Sync)));
+        h.mode = mode;
+        h.n_participants = p;
+        h.n_tasks = n_tasks;
+    }
+    let Some(slot_idx) = pool.publish(&state) else {
+        // Announce board full (pathological concurrent-caller count):
+        // degrade to draining inline. `seats` was never opened, so a stale
+        // Arc holder cannot join this dead job.
+        pool.release_state(state);
+        for i in 0..n_tasks {
+            f(i);
+        }
+        return;
+    };
+    // Open the seats LAST, after the claimable budget is funded: a worker
+    // can reach this state through a stale Arc from an earlier run (not
+    // just through the announce slot), and every successful seat claim
+    // debits `claimable` — a claim before the credit would underflow it.
+    // The Release store also publishes the header/range writes above to
+    // stale-route claimers (their CAS acquires it).
+    pool.claimable.fetch_add(extra, Ordering::AcqRel);
+    state.seats.store(extra, Ordering::Release);
+    // Lock round-trip before notifying so a worker between its claimable
+    // check and its wait cannot miss the wake-up.
+    drop(relock(&pool.sleep_lock));
     if extra == 1 {
         pool.cv.notify_one();
     } else {
         pool.cv.notify_all();
     }
-    {
-        // The caller participates too — it is one of the `workers` budget —
-        // and waits for the workers even if its own task panics.
-        let _wait = WaitOnDrop(&shared);
-        shared.drain(f);
-        // Reclaim job copies no worker has popped yet: every task is claimed
-        // by now, so a late pop would be a no-op — but waiting for a *busy*
-        // worker (occupied with an unrelated long job) to pop-and-discard it
-        // would stall this caller behind work it has no part in.
-        let mut q = relock(&pool.queue);
-        q.retain(|job| {
-            let mine = Arc::ptr_eq(&job.shared, &shared);
-            if mine {
-                // No worker will signal for this copy; account for it here
-                // (the caller is the one about to wait, so no notify needed).
-                shared.remaining.fetch_sub(1, Ordering::AcqRel);
-            }
-            !mine
-        });
-    }
-    if shared.panicked.load(Ordering::Acquire) {
+    let mut fin = Finish { pool: &**pool, state: &*state, slot_idx, extra, done: false };
+    // The caller participates too — it is one of the `workers` budget.
+    participate(&state, 0, f, mode, p, n_tasks);
+    fin.finish();
+    let panicked = state.panicked.load(Ordering::Acquire);
+    drop(fin);
+    pool.release_state(state);
+    if panicked {
         panic!("worker-pool task panicked (see stderr for the original panic)");
     }
 }
@@ -280,17 +580,20 @@ mod tests {
     fn every_task_runs_exactly_once() {
         for n_tasks in [0usize, 1, 2, 7, 64, 1000] {
             for workers in [1usize, 2, 8] {
-                let counts: Vec<AtomicU32> =
-                    (0..n_tasks).map(|_| AtomicU32::new(0)).collect();
-                run(workers, n_tasks, &|i| {
-                    counts[i].fetch_add(1, Ordering::Relaxed);
-                });
-                for (i, c) in counts.iter().enumerate() {
-                    assert_eq!(
-                        c.load(Ordering::Relaxed),
-                        1,
-                        "task {i} ran wrong count (tasks={n_tasks} workers={workers})"
-                    );
+                for mode in [Sched::Steal, Sched::Counter] {
+                    let counts: Vec<AtomicU32> =
+                        (0..n_tasks).map(|_| AtomicU32::new(0)).collect();
+                    run_mode(workers, n_tasks, mode, &|i| {
+                        counts[i].fetch_add(1, Ordering::Relaxed);
+                    });
+                    for (i, c) in counts.iter().enumerate() {
+                        assert_eq!(
+                            c.load(Ordering::Relaxed),
+                            1,
+                            "task {i} ran wrong count \
+                             (tasks={n_tasks} workers={workers} mode={mode:?})"
+                        );
+                    }
                 }
             }
         }
@@ -333,5 +636,60 @@ mod tests {
                 });
             }
         });
+    }
+
+    #[test]
+    fn uneven_task_costs_rebalance_through_stealing() {
+        // Front-loaded cost: the caller's own range holds all the slow
+        // tasks, so completion within the test timeout requires either the
+        // caller's own drain or steals — both must preserve exactly-once.
+        let n = 200usize;
+        let counts: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+        run(8, n, &|i| {
+            if i < 8 {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            counts[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, c) in counts.iter().enumerate() {
+            assert_eq!(c.load(Ordering::Relaxed), 1, "task {i}");
+        }
+    }
+
+    #[test]
+    fn scheduler_modes_agree() {
+        for n in [5usize, 63, 257] {
+            let run_with = |mode: Sched| {
+                let acc: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+                run_mode(8, n, mode, &|i| {
+                    acc[i].fetch_add(i as u32 + 1, Ordering::Relaxed);
+                });
+                acc.iter().map(|a| a.load(Ordering::Relaxed)).collect::<Vec<_>>()
+            };
+            assert_eq!(run_with(Sched::Steal), run_with(Sched::Counter), "n={n}");
+        }
+    }
+
+    #[test]
+    fn warm_runs_reuse_job_state() {
+        // Single-caller pattern: after a couple of warm-up runs the free
+        // list serves every lease. Loop-until-stable because sibling tests
+        // in this binary may lease states concurrently.
+        let mut prev = usize::MAX;
+        let mut stable = false;
+        for _ in 0..10 {
+            for _ in 0..4 {
+                run(8, 64, &|i| {
+                    std::hint::black_box(i);
+                });
+            }
+            let now = job_state_misses();
+            if now == prev {
+                stable = true;
+                break;
+            }
+            prev = now;
+        }
+        assert!(stable, "warm runs kept allocating job state");
     }
 }

@@ -41,12 +41,14 @@
 //!
 //! # Threading, determinism, workspaces
 //!
-//! Panel factorization fans single columns over the persistent [`pool`]
-//! (one column = one worker = the identical sequential kernel), and the
-//! block GEMMs thread by disjoint output-row blocks, so results are
-//! **bit-identical for any worker count at a fixed block size** — the same
-//! contract as `gemm::matmul_acc`. Different block sizes reorder the
-//! floating-point accumulation and agree only to fp tolerance (tested).
+//! Panel factorization fans column chunks over the persistent [`pool`]'s
+//! work-stealing scheduler (chunk size from `gemm::chunk_units`, the
+//! `GEMM_CHUNK` override applies; one column = one task's unit = the
+//! identical sequential kernel), and the block GEMMs thread by disjoint
+//! output-row chunks, so results are **bit-identical for any worker count
+//! at a fixed block and chunk size** — the same contract as
+//! `gemm::matmul_acc`. Different block sizes reorder the floating-point
+//! accumulation and agree only to fp tolerance (tested).
 //! [`thin_qr_into`] leases the working copy, the packed Householder
 //! vectors, and every V/T/W panel buffer from a caller [`Workspace`]: panel
 //! shapes recur across refreshes, so the subspace-refresh paths stay
@@ -81,19 +83,9 @@ pub fn set_qr_block(nb: usize) {
 /// value, else the `GEMM_QR_BLOCK` env var (parsed once), else
 /// [`DEFAULT_QR_BLOCK`].
 pub fn qr_block() -> usize {
-    let mut cur = QR_BLOCK.load(Ordering::Relaxed);
-    if cur == usize::MAX {
-        let from_env = std::env::var("GEMM_QR_BLOCK")
-            .ok()
-            .and_then(|v| v.trim().parse::<usize>().ok())
-            .unwrap_or(0);
-        // Only replace the sentinel so a concurrent `set_qr_block` wins.
-        let _ =
-            QR_BLOCK.compare_exchange(usize::MAX, from_env, Ordering::Relaxed, Ordering::Relaxed);
-        cur = QR_BLOCK.load(Ordering::Relaxed);
-    }
-    // 0 (env unset or explicit "0") means "use the default"; the sentinel can
-    // reappear if `set_qr_block(0)` raced the exchange above.
+    let cur = gemm::env_knob(&QR_BLOCK, "GEMM_QR_BLOCK");
+    // 0 (env unset or explicit "0") means "use the default"; the sentinel
+    // can reappear if `set_qr_block(0)` raced the resolve.
     if cur == 0 || cur == usize::MAX {
         DEFAULT_QR_BLOCK
     } else {
@@ -351,9 +343,12 @@ fn packed_off(m: usize, k: usize) -> usize {
 }
 
 /// Apply the reflector H = I − 2vvᵀ (acting on rows k..rows) to columns
-/// [jlo, jhi) of `w`, fanning column blocks out over the worker pool. Each
-/// column is processed start-to-finish by one worker with the identical
-/// sequential kernel, so any worker count is bit-identical.
+/// [jlo, jhi) of `w`, fanning column chunks out over the worker pool's
+/// steal scheduler. Chunk size from [`gemm::chunk_units`] (the `GEMM_CHUNK`
+/// override applies): one column streams `rows − k` strided elements twice.
+/// Each column is processed start-to-finish by one task with the identical
+/// sequential kernel, so any worker count is bit-identical at a fixed
+/// chunk size (and the column kernel does not reassociate across chunks).
 fn reflect_block(w: &mut Matrix, k: usize, v: &[f32], jlo: usize, jhi: usize) {
     let (rows, ncols) = w.shape();
     debug_assert_eq!(v.len(), rows - k);
@@ -368,7 +363,7 @@ fn reflect_block(w: &mut Matrix, k: usize, v: &[f32], jlo: usize, jhi: usize) {
         reflect_cols(base, ncols, k, v, jlo, jhi);
         return;
     }
-    let per = cols.div_ceil(threads);
+    let per = gemm::chunk_units(cols, 8 * (rows - k), threads);
     let chunks = cols.div_ceil(per);
     pool::run(threads, chunks, &|t| {
         let lo = jlo + t * per;

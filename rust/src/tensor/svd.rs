@@ -13,9 +13,12 @@
 //! The Jacobi sweep is organized as a **round-robin tournament**: each round
 //! is a fixed, worker-count-independent set of disjoint column pairs, and a
 //! pair's rotation touches only its own two columns of W and V. Pairs of a
-//! round therefore fan out over the persistent [`pool`] with no races and
-//! **bit-identical results for any worker count** (each pair's arithmetic is
-//! the same sequential kernel wherever it runs). The power iteration is
+//! round therefore fan out over the persistent [`pool`]'s steal scheduler
+//! with no races and **bit-identical results for any worker count** (each
+//! pair's arithmetic is the same sequential kernel wherever it runs). The
+//! round is carved into tasks of several pairs each, sized from n and the
+//! worker count through the shared L2 chunk target (`gemm::chunk_units`,
+//! `GEMM_CHUNK` override) rather than one-pair-per-task. The power iteration is
 //! blocked the same way through the threaded `gemm::matvec_into` /
 //! `matvec_t_into` kernels. [`truncated_basis_into`],
 //! [`power_iteration_top1_ws`] and [`randomized_range_into`] lease every
@@ -121,21 +124,35 @@ fn jacobi_sweeps(w: &mut Matrix, v: &mut Matrix) {
     // ~2m per dot ×3, ~4(m+n) per rotation pair applied to W and V.
     let flops = (6 * m + 4 * (m + n)).saturating_mul(pairs);
     let threads = gemm::plan_kernel_threads(flops, pairs);
+    // Round sizing adapts to the problem instead of one-pair-per-task: a
+    // pair's rotation streams two m-column strides of W and two n-column
+    // strides of V, so group pairs into chunks from the shared L2 target
+    // (`GEMM_CHUNK` override applies). Grouping is a partitioning decision
+    // only — the pairs of a round stay disjoint and each runs the identical
+    // sequential kernel, so chunk size and worker count are bit-transparent
+    // here.
+    let pairs_per_task = gemm::chunk_units(pairs, 8 * (m + n), threads);
+    let tasks_per_round = pairs.div_ceil(pairs_per_task);
     for _sweep in 0..max_sweeps {
         let mut off = 0.0f64;
         for round in 0..np - 1 {
             let obase = SendPtr::new(offs.as_mut_ptr());
-            pool::run(threads, pairs, &|i| {
-                let (a, b) = round_robin_pair(np, round, i);
-                let contribution = if a >= n || b >= n {
-                    0.0 // bye pair (odd n)
-                } else {
-                    let (p, q) = if a < b { (a, b) } else { (b, a) };
-                    // SAFETY: pairs of one round are disjoint, and a pair
-                    // touches only columns p and q of w/v and slot i of offs.
-                    unsafe { jacobi_pair(wbase, m, vbase, n, p, q, eps) }
-                };
-                unsafe { *obase.get().add(i) = contribution };
+            pool::run(threads, tasks_per_round, &|t| {
+                let lo = t * pairs_per_task;
+                let hi = (lo + pairs_per_task).min(pairs);
+                for i in lo..hi {
+                    let (a, b) = round_robin_pair(np, round, i);
+                    let contribution = if a >= n || b >= n {
+                        0.0 // bye pair (odd n)
+                    } else {
+                        let (p, q) = if a < b { (a, b) } else { (b, a) };
+                        // SAFETY: pairs of one round are disjoint, and a
+                        // pair touches only columns p and q of w/v and
+                        // slot i of offs.
+                        unsafe { jacobi_pair(wbase, m, vbase, n, p, q, eps) }
+                    };
+                    unsafe { *obase.get().add(i) = contribution };
+                }
             });
             for &o in offs.iter() {
                 off += o;

@@ -321,6 +321,87 @@ fn blocked_qr_bit_identical_across_worker_counts() {
 }
 
 #[test]
+fn kernels_bit_identical_across_worker_counts_at_fixed_chunk() {
+    // The steal scheduler reorders task *placement*, never results: at a
+    // fixed GEMM_CHUNK every kernel family (GEMM, QR, SVD, matvec, power
+    // iteration) must be bit-identical across 1/2/8 workers — the same
+    // matrix PR 3 established for a fixed QR block size. Chunk 4 is small
+    // enough that the test shapes produce many ragged chunks and real
+    // steals.
+    let _guard = THREAD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    let mut rng = Rng::new(2004);
+    let a = Matrix::randn(96, 24, 1.0, &mut rng);
+    let b = Matrix::randn(24, 31, 1.0, &mut rng);
+    let x: Vec<f32> = (0..24).map(|i| i as f32 * 0.5 - 6.0).collect();
+    let xt: Vec<f32> = (0..96).map(|i| 1.0 - i as f32 * 0.125).collect();
+    gemm::set_gemm_chunk(4);
+    gemm::set_gemm_threads(1);
+    let base = refresh_outputs(&a);
+    let base_mm = gemm::matmul(&a, &b);
+    let base_mv = gemm::matvec(&a, &x);
+    let base_mvt = gemm::matvec_t(&a, &xt);
+    for workers in [2usize, 8] {
+        gemm::set_gemm_threads(workers);
+        let got = refresh_outputs(&a);
+        assert_eq!(base.0.data(), got.0.data(), "Q diverged (chunk 4, {workers} workers)");
+        assert_eq!(base.1.data(), got.1.data(), "R diverged (chunk 4, {workers} workers)");
+        assert_eq!(base.2.data(), got.2.data(), "U diverged (chunk 4, {workers} workers)");
+        assert_eq!(base.3.data(), got.3.data(), "V diverged (chunk 4, {workers} workers)");
+        assert_eq!(base.4, got.4, "σ diverged (chunk 4, {workers} workers)");
+        assert_eq!(base.5, got.5, "power-u diverged (chunk 4, {workers} workers)");
+        assert_eq!(base.6, got.6, "power-v diverged (chunk 4, {workers} workers)");
+        assert_eq!(
+            base_mm.data(),
+            gemm::matmul(&a, &b).data(),
+            "matmul diverged (chunk 4, {workers} workers)"
+        );
+        assert_eq!(base_mv, gemm::matvec(&a, &x), "matvec diverged (chunk 4, {workers} workers)");
+        assert_eq!(
+            base_mvt,
+            gemm::matvec_t(&a, &xt),
+            "matvec_t diverged (chunk 4, {workers} workers)"
+        );
+    }
+    gemm::set_gemm_chunk(0);
+    gemm::set_gemm_threads(0);
+}
+
+#[test]
+fn chunk_sizes_agree_to_fp_tolerance() {
+    // Unlike the worker count, the chunk size is only *promised* to agree
+    // to fp tolerance across values (the contract `GEMM_QR_BLOCK`
+    // established for panel widths — today's row/column/pair kernels do not
+    // reassociate across chunk boundaries, but the promise leaves room for
+    // ones that do). Exercise ragged boundaries at several chunk sizes
+    // under full fan-out.
+    let _guard = THREAD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    let mut rng = Rng::new(2005);
+    let a = Matrix::randn(77, 19, 1.0, &mut rng);
+    let b = Matrix::randn(19, 23, 1.0, &mut rng);
+    gemm::set_gemm_threads(8);
+    gemm::set_gemm_chunk(1);
+    let mm1 = gemm::matmul(&a, &b);
+    let (q1, r1) = qr::thin_qr(&a);
+    let s1 = svd::thin_svd(&a);
+    for chunk in [3usize, 16, 64] {
+        gemm::set_gemm_chunk(chunk);
+        let mm = gemm::matmul(&a, &b);
+        proptest::close(mm.data(), mm1.data(), 1e-5, 1e-5)
+            .unwrap_or_else(|e| panic!("matmul chunk {chunk} vs 1: {e}"));
+        let (q, r) = qr::thin_qr(&a);
+        proptest::close(q.data(), q1.data(), 1e-5, 1e-4)
+            .unwrap_or_else(|e| panic!("Q chunk {chunk} vs 1: {e}"));
+        proptest::close(r.data(), r1.data(), 1e-5, 1e-4)
+            .unwrap_or_else(|e| panic!("R chunk {chunk} vs 1: {e}"));
+        let s = svd::thin_svd(&a);
+        proptest::close(&s.s, &s1.s, 1e-5, 1e-4)
+            .unwrap_or_else(|e| panic!("σ chunk {chunk} vs 1: {e}"));
+    }
+    gemm::set_gemm_chunk(0);
+    gemm::set_gemm_threads(0);
+}
+
+#[test]
 fn threaded_gemm_matches_across_worker_counts_property() {
     // Extends PR-1's fixed-shape check with random shapes: any worker count
     // must reproduce the single-thread product bitwise.

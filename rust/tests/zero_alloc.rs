@@ -12,6 +12,11 @@
 //! paths: driving past an every-k-steps refresh (interval 4, 9 steps),
 //! misses may occur only on step 1 and on the *first* refresh step — the
 //! second refresh must be served entirely from the pool.
+//!
+//! The scheduler gate extends it to the worker pool itself: a warm
+//! `pool::run` submission leases pre-sized job state (range deques, seat
+//! counters) and must not allocate, with `pool::job_state_misses()` as the
+//! proxy counter.
 
 use subtrack::model::{Batch, Llama, ModelConfig, StepState};
 use subtrack::optim::{self, Adam, AdamCfg, HyperParams, Optimizer};
@@ -176,6 +181,35 @@ fn wy_blocked_reorth_boundary_allocates_only_on_first_pass() {
             i + 1
         );
     }
+}
+
+#[test]
+fn warm_pool_run_submissions_do_not_allocate_job_state() {
+    // The scheduler side of the zero-allocation contract: a warm
+    // `pool::run` leases its job state (range deques, seat/exit counters)
+    // from a free list that is pre-sized at pool init, so submissions stop
+    // allocating once every concurrency level in use has run once — the
+    // same capped-miss shape the workspace gates assert, with
+    // `pool::job_state_misses()` as the observable proxy. Loop-until-stable
+    // because sibling tests in this binary drive the pool concurrently and
+    // may legitimately deepen the free list mid-measurement.
+    use subtrack::tensor::pool;
+    let mut prev = usize::MAX;
+    let mut stable = false;
+    for _ in 0..12 {
+        for _ in 0..6 {
+            pool::run(pool::max_participants(), 256, &|i| {
+                std::hint::black_box(i);
+            });
+        }
+        let now = pool::job_state_misses();
+        if now == prev {
+            stable = true;
+            break;
+        }
+        prev = now;
+    }
+    assert!(stable, "warm pool::run submissions kept allocating job state");
 }
 
 #[test]
