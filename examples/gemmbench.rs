@@ -10,8 +10,9 @@
 //! ```
 
 use std::collections::BTreeMap;
+use subtrack::model::{Batch, Llama, ModelConfig, StepState};
 use subtrack::optim::subtrack::grassmannian_step_ws;
-use subtrack::tensor::{gemm, pool, qr, svd, Matrix, Workspace};
+use subtrack::tensor::{gemm, ops, pool, qr, svd, Matrix, Workspace};
 use subtrack::util::json::{merge_into_file, Json};
 use subtrack::util::rng::Rng;
 
@@ -177,6 +178,114 @@ fn main() {
         gemm::set_gemm_threads(0);
     }
 
+    // ---- attention kernels + head fan-out (gemm.attn_ms) ----
+    // Two layers: (a) the per-head kernel pipeline — fused triangular
+    // scores/causal-softmax/apply against the historical three-pass
+    // scale→mask→softmax with dense GEMMs (the FLOP/traffic halving); (b)
+    // the model-level attention fwd/bwd at 1 worker vs the auto plan across
+    // a seq-len sweep — the per-(batch, head) pool fan-out win. The model
+    // timings are full forward / forward+backward passes (attention-
+    // dominated as T grows).
+    println!("\nattention kernels (d=64) + head fan-out:");
+    let mut attn = BTreeMap::new();
+    let d = 64usize;
+    for t in [64usize, 128, 256] {
+        let q = Matrix::randn(t, d, 1.0, &mut rng);
+        let k = Matrix::randn(t, d, 1.0, &mut rng);
+        let v = Matrix::randn(t, d, 1.0, &mut rng);
+        let scale = 1.0 / (d as f32).sqrt();
+        let mut scores = ws.take(t, t);
+        let mut out = ws.take(t, d);
+        // Both legs pinned to one thread: the triangular kernels are
+        // sequential by design (the model threads a level up, per head),
+        // while the dense GEMMs of the three-pass leg would clear the
+        // PAR_FLOPS gate at these shapes — letting them fan out would
+        // measure threading, not the FLOP/traffic halving this section
+        // records.
+        let fused_fwd = time_op(budget, || {
+            gemm::run_single_threaded(|| {
+                gemm::attn_scores_into(&mut scores, &q, &k, 1.0, &mut ws);
+                ops::causal_softmax_rows(&mut scores, scale);
+                gemm::attn_apply_into(&mut out, &scores, &v);
+            });
+            std::hint::black_box(&out);
+        });
+        // Keep the fused probabilities for the backward timing below.
+        let p_fused = scores.clone();
+        let threepass_fwd = time_op(budget, || {
+            gemm::run_single_threaded(|| {
+                gemm::matmul_nt_into(&mut scores, &q, &k, &mut ws);
+                scores.scale_mut(scale);
+                for i in 0..t {
+                    for j in (i + 1)..t {
+                        scores.set(i, j, f32::NEG_INFINITY);
+                    }
+                }
+                ops::softmax_rows(&mut scores);
+                gemm::matmul_into(&mut out, &scores, &v);
+            });
+            std::hint::black_box(&out);
+        });
+        let dout = Matrix::randn(t, d, 1.0, &mut rng);
+        let mut dvs = ws.take(t, d);
+        let mut dqs = ws.take(t, d);
+        let mut dks = ws.take(t, d);
+        let mut dp = ws.take(t, t);
+        let fused_bwd = time_op(budget, || {
+            gemm::run_single_threaded(|| {
+                gemm::attn_apply_tn_into(&mut dvs, &p_fused, &dout);
+                gemm::attn_scores_into(&mut dp, &dout, &v, 1.0, &mut ws);
+                ops::causal_softmax_grad(&p_fused, &mut dp, scale);
+                gemm::attn_apply_into(&mut dqs, &dp, &k);
+                gemm::attn_apply_tn_into(&mut dks, &dp, &q);
+            });
+            std::hint::black_box((&dvs, &dqs, &dks));
+        });
+        for (kernel, secs) in [
+            ("fused_fwd", fused_fwd),
+            ("threepass_fwd", threepass_fwd),
+            ("fused_bwd", fused_bwd),
+        ] {
+            println!("{kernel:<16} T={t:<4}: {:8.3} ms", secs * 1e3);
+            attn.insert(format!("{kernel}_T{t}"), Json::Num(secs * 1e3));
+        }
+        ws.give(scores);
+        ws.give(out);
+        ws.give(dvs);
+        ws.give(dqs);
+        ws.give(dks);
+        ws.give(dp);
+    }
+    // Model-level head fan-out: tiny-family config, seq-len sweep, 1 worker
+    // vs the auto plan.
+    for t in [32usize, 64, 128] {
+        let mut cfg = ModelConfig::preset("tiny");
+        cfg.seq_len = t;
+        let model = Llama::new(cfg.clone(), 3);
+        let b = 4usize;
+        let mut brng = Rng::new(4);
+        let inputs: Vec<u32> = (0..b * t).map(|_| brng.below(cfg.vocab) as u32).collect();
+        let targets: Vec<u32> = (0..b * t).map(|_| brng.below(cfg.vocab) as u32).collect();
+        let batch = Batch { inputs: inputs.clone(), targets, b, t };
+        for (label, forced) in [("1t", 1usize), ("auto", 0usize)] {
+            gemm::set_gemm_threads(forced);
+            let mut state = StepState::new();
+            let mut grads = model.zero_grads();
+            let fwd = time_op(budget, || {
+                let cache = model.forward_hidden_ws(&inputs, b, t, &mut state);
+                cache.recycle(&mut state.ws);
+            });
+            let fwdbwd = time_op(budget, || {
+                std::hint::black_box(model.loss_and_grad_into(&batch, &mut grads, &mut state));
+            });
+            gemm::set_gemm_threads(0);
+            println!("model_fwd  T={t:<4} [{label:<4}]: {:8.3} ms", fwd * 1e3);
+            println!("model_step T={t:<4} [{label:<4}]: {:8.3} ms", fwdbwd * 1e3);
+            attn.insert(format!("model_fwd_T{t}_{label}"), Json::Num(fwd * 1e3));
+            attn.insert(format!("model_fwdbwd_T{t}_{label}"), Json::Num(fwdbwd * 1e3));
+        }
+    }
+
     // ---- scheduler sweep (counter-vs-deque dispatch, chunk sizing) ----
     // Raw pool dispatch of 4096 trivial tasks and of a skewed-cost task set
     // under both schedulers: Counter is the pre-deque shared-counter
@@ -233,6 +342,7 @@ fn main() {
         ("workspace_misses", Json::Num(ws.misses() as f64)),
         ("cases", Json::Obj(cases)),
         ("refresh_ms", Json::Obj(refresh)),
+        ("attn_ms", Json::Obj(attn)),
         ("sched_ms", Json::Obj(sched)),
     ]);
     merge_into_file(&out_path, "gemm", record).expect("write BENCH_gemm.json");

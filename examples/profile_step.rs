@@ -13,6 +13,7 @@
 use std::time::Instant;
 use subtrack::model::{Batch, Llama, ModelConfig, StepState};
 use subtrack::optim::{Adam, AdamCfg, Optimizer};
+use subtrack::tensor::gemm;
 use subtrack::util::json::{merge_section_into_file, Json};
 use subtrack::util::rng::Rng;
 
@@ -39,6 +40,26 @@ fn main() {
     }
     let forward_ms = t0.elapsed().as_secs_f64() / n as f64 * 1e3;
     println!("forward_hidden: {forward_ms:.1} ms");
+
+    // Forward + step at a forced single worker: the gap to the auto numbers
+    // below is the pool win (GEMM row chunks + the per-(batch, head)
+    // attention fan-out). Complements the T sweep gemmbench records under
+    // gemm.attn_ms.
+    gemm::set_gemm_threads(1);
+    let t0 = Instant::now();
+    for _ in 0..n {
+        let cache = model.forward_hidden_ws(&inputs, b, t, &mut state);
+        cache.recycle(&mut state.ws);
+    }
+    let forward_1t_ms = t0.elapsed().as_secs_f64() / n as f64 * 1e3;
+    let t0 = Instant::now();
+    for _ in 0..n {
+        std::hint::black_box(model.loss_and_grad_into(&batch, &mut grads, &mut state));
+    }
+    let grad_1t_ms = t0.elapsed().as_secs_f64() / n as f64 * 1e3;
+    gemm::set_gemm_threads(0);
+    println!("forward_hidden [1t]: {forward_1t_ms:.1} ms");
+    println!("loss_and_grad  [1t]: {grad_1t_ms:.1} ms");
 
     let t0 = Instant::now();
     for _ in 0..n {
@@ -79,8 +100,10 @@ fn main() {
         preset.as_str(),
         Json::obj(vec![
             ("forward_ms", Json::Num(forward_ms)),
+            ("forward_1t_ms", Json::Num(forward_1t_ms)),
             ("loss_ms", Json::Num(loss_ms)),
             ("loss_and_grad_ms", Json::Num(grad_ms)),
+            ("loss_and_grad_1t_ms", Json::Num(grad_1t_ms)),
             ("step_ms", Json::Num(step_secs * 1e3)),
             ("steps_per_sec", Json::Num(steps_per_sec)),
             ("steady_state_ws_misses", Json::Num(state.ws.misses() as f64)),

@@ -14,22 +14,43 @@
 //!
 //! The `_ws` entry points ([`Llama::forward_hidden_ws`],
 //! [`Llama::backward_hidden_ws`], [`Llama::loss_and_grad_into`]) thread a
-//! persistent [`StepState`] — a [`Workspace`] buffer pool plus a
-//! [`TransposeCache`] of `Wᵀ` per weight — through the whole pass. Every
-//! intermediate (activations, attention probabilities, gradients of
-//! activations, RoPE tables) is leased from the pool and returned before the
-//! step ends, so steady-state steps allocate no matrix buffers (only the
-//! small Vec-of-pointer containers holding them are rebuilt per step); the
+//! persistent [`StepState`] — a [`Workspace`] buffer pool, a
+//! [`TransposeCache`] of `Wᵀ` per weight, and a [`WorkspaceBank`] of
+//! per-task attention scratch — through the whole pass. Every intermediate
+//! (activations, attention probabilities, gradients of activations, RoPE
+//! tables) is leased from the pool and returned before the step ends, so
+//! steady-state steps allocate no matrix buffers (only the small
+//! Vec-of-pointer containers holding them are rebuilt per step); the
 //! transpose cache makes the `x·Wᵀ` linears pay their O(h²) transpose once
 //! per weight *update* instead of once per call. The historical allocating
 //! API ([`Llama::loss`], [`Llama::loss_and_grad`], …) now wraps the `_ws`
 //! path with a throwaway state, which keeps direct weight pokes (e.g.
 //! finite-difference tests) safe: a fresh transpose cache can never be
 //! stale.
+//!
+//! # Head-parallel attention
+//!
+//! The per-(batch, head) attention work — forward and backward — is fanned
+//! out on the persistent worker pool: each `(bi, hi)` pair is one pool task
+//! that slices its own Q/K/V head views, runs the fused triangular
+//! causal-softmax pipeline ([`gemm::attn_scores_into`] →
+//! [`ops::causal_softmax_rows`] → [`gemm::attn_apply_into`], never touching
+//! the masked upper triangle), and writes disjoint column bands of
+//! `attn_cat` / `dqkv`. Task scratch is leased per task from the
+//! [`StepState`]'s pre-sized [`WorkspaceBank`], and the kernels inside a
+//! task are purely sequential (the same single-budget pattern the
+//! data-parallel shards use), so losses and gradients are **bit-identical
+//! across 1/2/8 workers** at fixed chunk settings
+//! (`rust/tests/attn_parallel.rs`). The three QKV projections run as one
+//! `(B·T)×h · h×3h` GEMM against the cached fused `[Wqᵀ|Wkᵀ|Wvᵀ]` (and
+//! gate/up as `x·[Wgᵀ|Wuᵀ]`), with the matching stacked operands fusing the
+//! backward `dn1`/`dn2` accumulations — fewer, larger GEMMs that clear the
+//! threading gate where per-weight products did not.
 
 use super::config::ModelConfig;
 use crate::optim::{Param, TransposeCache};
-use crate::tensor::{gemm, ops, Matrix, Workspace};
+use crate::tensor::pool::{self, SendPtr};
+use crate::tensor::{gemm, ops, Matrix, Workspace, WorkspaceBank};
 use crate::util::rng::Rng;
 
 /// A training batch of token ids. `inputs[b*t + i]` is position i of sequence
@@ -58,6 +79,12 @@ impl Batch {
 pub struct StepState {
     pub ws: Workspace,
     pub tcache: TransposeCache,
+    /// Per-task scratch for the head-parallel attention fan-out: concurrent
+    /// pool tasks lease whole workspaces from this bank (see the leasing
+    /// rules in `tensor::workspace`). Pre-sized on the first step; recycled
+    /// across steps so the zero-allocation contract extends to the fan-out
+    /// (gated by `rust/tests/zero_alloc.rs`).
+    pub heads: WorkspaceBank,
 }
 
 impl StepState {
@@ -104,6 +131,20 @@ impl LayerIdx {
 
 const RMS_EPS: f32 = 1e-5;
 
+/// Fused-operand slot layout in the [`TransposeCache`]'s multi-param table:
+/// four slots per layer, offset by `layer · FUSED_SLOTS_PER_LAYER`. The
+/// slot ↔ parameter-set mapping is fixed for the cache's lifetime (the
+/// cache keys fused entries on source *versions*, not identities).
+const FUSED_SLOTS_PER_LAYER: usize = 4;
+/// `[Wqᵀ | Wkᵀ | Wvᵀ]` — the h×3h fused QKV projection operand.
+const FUSED_QKV_T: usize = 0;
+/// `[Wq; Wk; Wv]` — the 3h×h stack the fused `dn1` accumulation multiplies.
+const FUSED_QKV_STACK: usize = 1;
+/// `[Wgᵀ | Wuᵀ]` — the h×2f fused SwiGLU gate/up projection operand.
+const FUSED_GU_T: usize = 2;
+/// `[Wg; Wu]` — the 2f×h stack the fused `dn2` accumulation multiplies.
+const FUSED_GU_STACK: usize = 3;
+
 /// The model: a parameter vector in a fixed layout plus the config.
 pub struct Llama {
     pub cfg: ModelConfig,
@@ -120,11 +161,13 @@ struct LayerCache {
     n1: Matrix,
     /// Inverse RMS of x_in rows.
     inv_rms1: Vec<f32>,
-    /// Post-RoPE Q and K; V.
-    q: Matrix,
-    k: Matrix,
-    v: Matrix,
-    /// Softmax attention probabilities, one T×T matrix per (batch, head).
+    /// Fused post-RoPE projections, (B·T)×3h: columns [0, h) hold Q,
+    /// [h, 2h) hold K, [2h, 3h) hold V.
+    qkv: Matrix,
+    /// Causal attention probabilities, one T×T matrix per (batch, head).
+    /// Only the lower triangle is meaningful: the fused causal softmax
+    /// never writes the masked half (it holds stale workspace data), and
+    /// the backward kernels never read it.
     probs: Vec<Matrix>,
     /// Concatenated head outputs (input of Wo).
     attn_cat: Matrix,
@@ -133,9 +176,9 @@ struct LayerCache {
     /// RMSNorm #2 output.
     n2: Matrix,
     inv_rms2: Vec<f32>,
-    /// Pre-activation gate (z1 = n2·Wgᵀ) and up (z3 = n2·Wuᵀ).
-    z_gate: Matrix,
-    z_up: Matrix,
+    /// Fused SwiGLU pre-activations, (B·T)×2f: columns [0, f) hold the gate
+    /// (z1 = n2·Wgᵀ), [f, 2f) the up projection (z3 = n2·Wuᵀ).
+    z_gu: Matrix,
     /// silu(z1) ⊙ z3 (input of Wdown).
     h: Matrix,
 }
@@ -145,9 +188,7 @@ impl LayerCache {
         ws.give(self.x_in);
         ws.give(self.n1);
         ws.give_vec(self.inv_rms1);
-        ws.give(self.q);
-        ws.give(self.k);
-        ws.give(self.v);
+        ws.give(self.qkv);
         for p in self.probs {
             ws.give(p);
         }
@@ -155,8 +196,7 @@ impl LayerCache {
         ws.give(self.x_mid);
         ws.give(self.n2);
         ws.give_vec(self.inv_rms2);
-        ws.give(self.z_gate);
-        ws.give(self.z_up);
+        ws.give(self.z_gu);
         ws.give(self.h);
     }
 }
@@ -297,68 +337,105 @@ impl Llama {
         let cfg = &self.cfg;
         let n_heads = cfg.heads;
         let d = cfg.head_dim();
+        let h = cfg.hidden;
         let bt = b * t;
-        let StepState { ws, tcache } = state;
+        let slot = l * FUSED_SLOTS_PER_LAYER;
+        let StepState { ws, tcache, heads } = state;
 
         // ---- attention block ----
-        let mut n1 = ws.take_dirty(bt, cfg.hidden);
+        let mut n1 = ws.take_dirty(bt, h);
         let mut inv_rms1 = ws.take_vec_dirty(bt);
         rmsnorm_forward_into(&x_in, &self.params[idx.attn_norm()].value, &mut n1, &mut inv_rms1);
-        // x·Wᵀ through the cached transpose: no per-call O(h²) transpose.
-        let mut q = ws.take_dirty(bt, cfg.hidden);
-        gemm::matmul_into(&mut q, &n1, tcache.get(idx.wq(), &self.params[idx.wq()]));
-        let mut k = ws.take_dirty(bt, cfg.hidden);
-        gemm::matmul_into(&mut k, &n1, tcache.get(idx.wk(), &self.params[idx.wk()]));
-        let mut v = ws.take_dirty(bt, cfg.hidden);
-        gemm::matmul_into(&mut v, &n1, tcache.get(idx.wv(), &self.params[idx.wv()]));
-        rope_apply_ws(&mut q, t, n_heads, d, cfg.rope_theta, false, ws);
-        rope_apply_ws(&mut k, t, n_heads, d, cfg.rope_theta, false, ws);
+        // Fused QKV projection: one (B·T)×h · h×3h GEMM against the cached
+        // [Wqᵀ|Wkᵀ|Wvᵀ] — large enough to clear the GEMM threading gate
+        // where three separate h×h products were not.
+        let mut qkv = ws.take_dirty(bt, 3 * h);
+        let qkv_t = tcache.get_fused_transpose(
+            slot + FUSED_QKV_T,
+            &[&self.params[idx.wq()], &self.params[idx.wk()], &self.params[idx.wv()]],
+        );
+        gemm::matmul_into(&mut qkv, &n1, qkv_t);
+        // RoPE on the Q and K column bands of the fused buffer.
+        rope_apply_ws(&mut qkv, t, n_heads, d, cfg.rope_theta, false, 0, ws);
+        rope_apply_ws(&mut qkv, t, n_heads, d, cfg.rope_theta, false, h, ws);
 
-        // Per (batch, head) causal attention.
-        let mut attn_cat = ws.take_dirty(bt, cfg.hidden);
-        let mut probs = Vec::with_capacity(b * n_heads);
+        // Per-(batch, head) causal attention, one pool task per pair. Each
+        // task leases its scratch from the pre-sized bank, runs the fused
+        // triangular pipeline sequentially, and writes a disjoint column
+        // band of attn_cat plus its own probs entry — so results are
+        // bit-identical for any worker count.
+        let mut attn_cat = ws.take_dirty(bt, h);
+        let mut probs: Vec<Matrix> = (0..b * n_heads).map(|_| ws.take_dirty(t, t)).collect();
         let scale = 1.0 / (d as f32).sqrt();
-        let mut qs = ws.take_dirty(t, d);
-        let mut ks = ws.take_dirty(t, d);
-        let mut vs = ws.take_dirty(t, d);
-        let mut out = ws.take_dirty(t, d);
-        for bi in 0..b {
-            for hi in 0..n_heads {
-                slice_head_into(&q, &mut qs, bi, hi, t, d);
-                slice_head_into(&k, &mut ks, bi, hi, t, d);
-                slice_head_into(&v, &mut vs, bi, hi, t, d);
-                let mut scores = ws.take_dirty(t, t);
-                gemm::matmul_nt_into(&mut scores, &qs, &ks, ws);
-                scores.scale_mut(scale);
-                causal_mask(&mut scores);
-                ops::softmax_rows(&mut scores);
-                gemm::matmul_into(&mut out, &scores, &vs); // T×D
-                write_head(&mut attn_cat, &out, bi, hi, t, d);
-                probs.push(scores);
-            }
+        let workers = attn_plan(b, n_heads, t, d);
+        heads.ensure(workers, &head_scratch_sizes(t, d));
+        {
+            let qkv_ref = &qkv;
+            let heads_ref = &*heads;
+            let cat_base = SendPtr::new(attn_cat.data_mut().as_mut_ptr());
+            let probs_base = SendPtr::new(probs.as_mut_ptr());
+            pool::run(workers, b * n_heads, &|ti| {
+                // Kernel-level threading opted out inside the task (the DP
+                // shards' single-budget pattern): the fan-out owns the
+                // cores; the triangular kernels are sequential by design.
+                gemm::run_single_threaded(|| {
+                    let (bi, hi) = (ti / n_heads, ti % n_heads);
+                    let mut tws = heads_ref.lease();
+                    let mut qs = tws.take_dirty(t, d);
+                    let mut ks = tws.take_dirty(t, d);
+                    let mut vs = tws.take_dirty(t, d);
+                    let mut out = tws.take_dirty(t, d);
+                    slice_head_into(qkv_ref, &mut qs, bi, t, hi * d, d);
+                    slice_head_into(qkv_ref, &mut ks, bi, t, h + hi * d, d);
+                    slice_head_into(qkv_ref, &mut vs, bi, t, 2 * h + hi * d, d);
+                    // SAFETY: task ti exclusively owns probs[ti].
+                    let scores = unsafe { &mut *probs_base.get().add(ti) };
+                    gemm::attn_scores_into(scores, &qs, &ks, 1.0, &mut tws);
+                    ops::causal_softmax_rows(scores, scale);
+                    gemm::attn_apply_into(&mut out, scores, &vs); // T×D
+                    // SAFETY: each (bi, hi) task owns a disjoint (row,
+                    // column band) region of attn_cat.
+                    unsafe { write_head_raw(cat_base, h, &out, bi, t, hi * d, d) };
+                    tws.give(qs);
+                    tws.give(ks);
+                    tws.give(vs);
+                    tws.give(out);
+                    heads_ref.release(tws);
+                });
+            });
         }
-        ws.give(qs);
-        ws.give(ks);
-        ws.give(vs);
-        ws.give(out);
-        let mut attn_out = ws.take_dirty(bt, cfg.hidden);
+        let mut attn_out = ws.take_dirty(bt, h);
         gemm::matmul_into(&mut attn_out, &attn_cat, tcache.get(idx.wo(), &self.params[idx.wo()]));
         // Residual, folded in place: x_mid = x_in + attn_out.
         attn_out.axpy(1.0, &x_in);
         let x_mid = attn_out;
 
         // ---- MLP block (SwiGLU) ----
-        let mut n2 = ws.take_dirty(bt, cfg.hidden);
+        let mut n2 = ws.take_dirty(bt, h);
         let mut inv_rms2 = ws.take_vec_dirty(bt);
         rmsnorm_forward_into(&x_mid, &self.params[idx.mlp_norm()].value, &mut n2, &mut inv_rms2);
         let f = cfg.intermediate;
-        let mut z_gate = ws.take_dirty(bt, f);
-        gemm::matmul_into(&mut z_gate, &n2, tcache.get(idx.w_gate(), &self.params[idx.w_gate()]));
-        let mut z_up = ws.take_dirty(bt, f);
-        gemm::matmul_into(&mut z_up, &n2, tcache.get(idx.w_up(), &self.params[idx.w_up()]));
+        // Fused gate/up projection: one (B·T)×h · h×2f GEMM.
+        let mut z_gu = ws.take_dirty(bt, 2 * f);
+        let gu_t = tcache.get_fused_transpose(
+            slot + FUSED_GU_T,
+            &[&self.params[idx.w_gate()], &self.params[idx.w_up()]],
+        );
+        gemm::matmul_into(&mut z_gu, &n2, gu_t);
         let mut h_act = ws.take_dirty(bt, f);
-        z_gate.zip_into(&z_up, &mut h_act, |g, u| silu(g) * u);
-        let mut mlp_out = ws.take_dirty(bt, cfg.hidden);
+        {
+            // h = silu(z1) ⊙ z3, reading each fused row's gate|up halves.
+            let zd = z_gu.data();
+            let hd = h_act.data_mut();
+            for r in 0..bt {
+                let (gate, up) = zd[r * 2 * f..(r + 1) * 2 * f].split_at(f);
+                let hrow = &mut hd[r * f..(r + 1) * f];
+                for ((hv, &g), &u) in hrow.iter_mut().zip(gate).zip(up) {
+                    *hv = silu(g) * u;
+                }
+            }
+        }
+        let mut mlp_out = ws.take_dirty(bt, h);
         let wd_t = tcache.get(idx.w_down(), &self.params[idx.w_down()]);
         gemm::matmul_into(&mut mlp_out, &h_act, wd_t);
         mlp_out.axpy(1.0, &x_mid);
@@ -370,24 +447,37 @@ impl Llama {
                 x_in,
                 n1,
                 inv_rms1,
-                q,
-                k,
-                v,
+                qkv,
                 probs,
                 attn_cat,
                 x_mid,
                 n2,
                 inv_rms2,
-                z_gate,
-                z_up,
+                z_gu,
                 h: h_act,
             },
         )
     }
 
-    /// Language-model logits for the final hidden states (allocating).
+    /// Language-model logits for the final hidden states. Allocating
+    /// wrapper around [`logits_ws`] (fresh state per call, so direct weight
+    /// pokes stay safe).
+    ///
+    /// [`logits_ws`]: Llama::logits_ws
     pub fn logits(&self, hidden: &Matrix) -> Matrix {
-        gemm::matmul_nt(hidden, &self.params[self.head_idx()].value)
+        self.logits_ws(hidden, &mut StepState::new())
+    }
+
+    /// Workspace-backed logits: the output buffer is leased from `state.ws`
+    /// (return it with `give` when done) and the LM head's transpose comes
+    /// from the cache — the historical `matmul_nt` path re-transposed the
+    /// full vocab×h head matrix on every eval call.
+    pub fn logits_ws(&self, hidden: &Matrix, state: &mut StepState) -> Matrix {
+        let head = self.head_idx();
+        let StepState { ws, tcache, .. } = state;
+        let mut out = ws.take_dirty(hidden.rows(), self.cfg.vocab);
+        gemm::matmul_into(&mut out, hidden, tcache.get(head, &self.params[head]));
+        out
     }
 
     /// Full LM forward: mean cross-entropy of next-token prediction.
@@ -403,7 +493,7 @@ impl Llama {
         let cache = self.forward_hidden_ws(&batch.inputs, batch.b, batch.t, state);
         let bt = batch.b * batch.t;
         let head = self.head_idx();
-        let StepState { ws, tcache } = state;
+        let StepState { ws, tcache, .. } = state;
         let mut logits = ws.take_dirty(bt, self.cfg.vocab);
         gemm::matmul_into(&mut logits, &cache.hidden, tcache.get(head, &self.params[head]));
         let loss = cross_entropy_loss(&logits, &batch.targets);
@@ -440,7 +530,7 @@ impl Llama {
         let bt = batch.b * batch.t;
         let head = self.head_idx();
         let (loss, dhidden) = {
-            let StepState { ws, tcache } = state;
+            let StepState { ws, tcache, .. } = state;
             let mut logits = ws.take_dirty(bt, self.cfg.vocab);
             gemm::matmul_into(&mut logits, &cache.hidden, tcache.get(head, &self.params[head]));
             let mut dlogits = ws.take_dirty(bt, self.cfg.vocab);
@@ -487,10 +577,9 @@ impl Llama {
         state: &mut StepState,
     ) {
         let Cache { mut layers, x_final, inv_rms_final, hidden, b, t } = cache;
-        let ws = &mut state.ws;
         // Final RMSNorm backward.
         let fin = self.final_norm_idx();
-        let mut dx = ws.take_dirty(b * t, self.cfg.hidden);
+        let mut dx = state.ws.take_dirty(b * t, self.cfg.hidden);
         rmsnorm_backward_acc(
             &x_final,
             &inv_rms_final,
@@ -499,14 +588,14 @@ impl Llama {
             &mut dx,
             &mut grads[fin],
         );
-        ws.give(dhidden);
-        ws.give(x_final);
-        ws.give_vec(inv_rms_final);
-        ws.give(hidden);
+        state.ws.give(dhidden);
+        state.ws.give(x_final);
+        state.ws.give_vec(inv_rms_final);
+        state.ws.give(hidden);
 
         for l in (0..self.cfg.layers).rev() {
             let lc = layers.pop().expect("one cache per layer");
-            dx = self.layer_backward(l, lc, dx, b, t, grads, ws);
+            dx = self.layer_backward(l, lc, dx, b, t, grads, state);
         }
 
         // Embedding scatter-add.
@@ -517,7 +606,7 @@ impl Llama {
                 *e += g;
             }
         }
-        ws.give(dx);
+        state.ws.give(dx);
     }
 
     #[allow(clippy::too_many_arguments)] // mirrors the math: one arg per tensor in the chain rule
@@ -529,51 +618,59 @@ impl Llama {
         b: usize,
         t: usize,
         grads: &mut [Matrix],
-        ws: &mut Workspace,
+        state: &mut StepState,
     ) -> Matrix {
         let idx = self.layer_idx(l);
         let cfg = &self.cfg;
         let n_heads = cfg.heads;
         let d = cfg.head_dim();
+        let h = cfg.hidden;
         let bt = b * t;
         let f = cfg.intermediate;
+        let slot = l * FUSED_SLOTS_PER_LAYER;
+        let StepState { ws, tcache, heads } = state;
 
         // ---- MLP block backward ----
         // x_out = x_mid + h·Wdᵀ
         let mut dh = ws.take_dirty(bt, f);
         gemm::matmul_into(&mut dh, &dx_out, &self.params[idx.w_down()].value); // (BT)×F
         gemm::matmul_tn_acc(&mut grads[idx.w_down()], &dx_out, &lc.h, 1.0, ws);
-        // h = silu(z1) ⊙ z3
-        let mut dz_gate = ws.take_dirty(bt, f);
+        // h = silu(z1) ⊙ z3, differentiated into the fused [dz_gate | dz_up]
+        // layout so the weight-grad and dn2 GEMMs below fuse too.
+        let mut dz_gu = ws.take_dirty(bt, 2 * f);
         {
             let dhd = dh.data();
-            let zg = lc.z_gate.data();
-            let zu = lc.z_up.data();
-            let o = dz_gate.data_mut();
-            for i in 0..o.len() {
-                o[i] = dhd[i] * silu_grad(zg[i]) * zu[i];
-            }
-        }
-        let mut dz_up = ws.take_dirty(bt, f);
-        {
-            let dhd = dh.data();
-            let zg = lc.z_gate.data();
-            let o = dz_up.data_mut();
-            for i in 0..o.len() {
-                o[i] = dhd[i] * silu(zg[i]);
+            let zd = lc.z_gu.data();
+            let od = dz_gu.data_mut();
+            for r in 0..bt {
+                let (zg, zu) = zd[r * 2 * f..(r + 1) * 2 * f].split_at(f);
+                let (og, ou) = od[r * 2 * f..(r + 1) * 2 * f].split_at_mut(f);
+                let dhrow = &dhd[r * f..(r + 1) * f];
+                for j in 0..f {
+                    og[j] = dhrow[j] * silu_grad(zg[j]) * zu[j];
+                    ou[j] = dhrow[j] * silu(zg[j]);
+                }
             }
         }
         ws.give(dh);
-        // z1 = n2·Wgᵀ ; z3 = n2·Wuᵀ
-        gemm::matmul_tn_acc(&mut grads[idx.w_gate()], &dz_gate, &lc.n2, 1.0, ws);
-        gemm::matmul_tn_acc(&mut grads[idx.w_up()], &dz_up, &lc.n2, 1.0, ws);
-        let mut dn2 = ws.take(bt, cfg.hidden); // zeroed: accumulated into
-        gemm::matmul_acc(&mut dn2, &dz_gate, &self.params[idx.w_gate()].value, 1.0);
-        gemm::matmul_acc(&mut dn2, &dz_up, &self.params[idx.w_up()].value, 1.0);
-        ws.give(dz_gate);
-        ws.give(dz_up);
+        // Fused gate/up weight grads: one (2F)×h Aᵀ·B whose row blocks are
+        // the per-weight gradients (contiguous in the row-major buffer).
+        let mut dw_gu = ws.take_dirty(2 * f, h);
+        gemm::matmul_tn_into(&mut dw_gu, &dz_gu, &lc.n2, ws);
+        acc_rows(&mut grads[idx.w_gate()], &dw_gu.data()[..f * h]);
+        acc_rows(&mut grads[idx.w_up()], &dw_gu.data()[f * h..]);
+        ws.give(dw_gu);
+        // Fused dn2 = dz_gu · [Wg; Wu] — one GEMM instead of two
+        // accumulations, against the cached stack.
+        let gu_stack = tcache.get_fused_stack(
+            slot + FUSED_GU_STACK,
+            &[&self.params[idx.w_gate()], &self.params[idx.w_up()]],
+        );
+        let mut dn2 = ws.take_dirty(bt, h);
+        gemm::matmul_into(&mut dn2, &dz_gu, gu_stack);
+        ws.give(dz_gu);
         // RMSNorm #2
-        let mut dx_mid_norm = ws.take_dirty(bt, cfg.hidden);
+        let mut dx_mid_norm = ws.take_dirty(bt, h);
         rmsnorm_backward_acc(
             &lc.x_mid,
             &lc.inv_rms2,
@@ -590,77 +687,92 @@ impl Llama {
 
         // ---- attention block backward ----
         // attn_out = attn_cat·Woᵀ ; x_mid = x_in + attn_out
-        let mut dattn_cat = ws.take_dirty(bt, cfg.hidden);
+        let mut dattn_cat = ws.take_dirty(bt, h);
         gemm::matmul_into(&mut dattn_cat, &dx_mid, &self.params[idx.wo()].value);
         gemm::matmul_tn_acc(&mut grads[idx.wo()], &dx_mid, &lc.attn_cat, 1.0, ws);
 
+        // Head-parallel backward: one pool task per (batch, head), writing
+        // disjoint column bands of the fused dqkv. Every kernel inside a
+        // task is prefix-aware — the masked upper triangle of the cached
+        // probs (stale workspace data) is never read.
         let scale = 1.0 / (d as f32).sqrt();
-        let mut dq = ws.take_dirty(bt, cfg.hidden);
-        let mut dk = ws.take_dirty(bt, cfg.hidden);
-        let mut dv = ws.take_dirty(bt, cfg.hidden);
-        let mut dout = ws.take_dirty(t, d);
-        let mut vs = ws.take_dirty(t, d);
-        let mut qs = ws.take_dirty(t, d);
-        let mut ks = ws.take_dirty(t, d);
-        let mut dvs = ws.take_dirty(t, d);
-        let mut dqs = ws.take_dirty(t, d);
-        let mut dks = ws.take_dirty(t, d);
-        let mut dp = ws.take_dirty(t, t);
-        let mut ds = ws.take_dirty(t, t);
-        for bi in 0..b {
-            for hi in 0..n_heads {
-                let p = &lc.probs[bi * n_heads + hi]; // T×T
-                slice_head_into(&dattn_cat, &mut dout, bi, hi, t, d); // T×D
-                slice_head_into(&lc.v, &mut vs, bi, hi, t, d);
-                slice_head_into(&lc.q, &mut qs, bi, hi, t, d);
-                slice_head_into(&lc.k, &mut ks, bi, hi, t, d);
-                // out = P·V
-                gemm::matmul_tn_into(&mut dvs, p, &dout, ws); // T×D
-                gemm::matmul_nt_into(&mut dp, &dout, &vs, ws); // T×T
-                // softmax backward: dS = P ⊙ (dP − rowsum(dP⊙P))
-                for i in 0..t {
-                    let dot: f32 =
-                        dp.row(i).iter().zip(p.row(i)).map(|(&a, &b)| a * b).sum();
-                    for j in 0..t {
-                        ds.set(i, j, p.get(i, j) * (dp.get(i, j) - dot));
+        let mut dqkv = ws.take_dirty(bt, 3 * h);
+        let workers = attn_plan(b, n_heads, t, d);
+        heads.ensure(workers, &head_scratch_sizes(t, d));
+        {
+            let qkv_ref = &lc.qkv;
+            let dcat_ref = &dattn_cat;
+            let probs_ref = &lc.probs;
+            let heads_ref = &*heads;
+            let dqkv_base = SendPtr::new(dqkv.data_mut().as_mut_ptr());
+            pool::run(workers, b * n_heads, &|ti| {
+                // Same single-budget opt-out as the forward fan-out.
+                gemm::run_single_threaded(|| {
+                    let (bi, hi) = (ti / n_heads, ti % n_heads);
+                    let p = &probs_ref[ti]; // T×T, lower triangle live
+                    let mut tws = heads_ref.lease();
+                    let mut dout = tws.take_dirty(t, d);
+                    let mut qs = tws.take_dirty(t, d);
+                    let mut ks = tws.take_dirty(t, d);
+                    let mut vs = tws.take_dirty(t, d);
+                    let mut dvs = tws.take_dirty(t, d);
+                    let mut dqs = tws.take_dirty(t, d);
+                    let mut dks = tws.take_dirty(t, d);
+                    let mut dp = tws.take_dirty(t, t);
+                    slice_head_into(dcat_ref, &mut dout, bi, t, hi * d, d); // T×D
+                    slice_head_into(qkv_ref, &mut qs, bi, t, hi * d, d);
+                    slice_head_into(qkv_ref, &mut ks, bi, t, h + hi * d, d);
+                    slice_head_into(qkv_ref, &mut vs, bi, t, 2 * h + hi * d, d);
+                    // out = P·V ⇒ dV = Pᵀ·dOut, dP = dOut·Vᵀ (prefix only).
+                    gemm::attn_apply_tn_into(&mut dvs, p, &dout); // T×D
+                    gemm::attn_scores_into(&mut dp, &dout, &vs, 1.0, &mut tws); // T×T
+                    // Fused softmax backward, in place: dp becomes the
+                    // scaled dS.
+                    ops::causal_softmax_grad(p, &mut dp, scale);
+                    // scores = Q·Kᵀ ⇒ dQ = dS·K, dK = dSᵀ·Q.
+                    gemm::attn_apply_into(&mut dqs, &dp, &ks);
+                    gemm::attn_apply_tn_into(&mut dks, &dp, &qs);
+                    // SAFETY: each (bi, hi) task owns disjoint (row, column
+                    // band) regions of dqkv.
+                    unsafe {
+                        write_head_raw(dqkv_base, 3 * h, &dqs, bi, t, hi * d, d);
+                        write_head_raw(dqkv_base, 3 * h, &dks, bi, t, h + hi * d, d);
+                        write_head_raw(dqkv_base, 3 * h, &dvs, bi, t, 2 * h + hi * d, d);
                     }
-                }
-                ds.scale_mut(scale);
-                // scores = Q·Kᵀ
-                gemm::matmul_into(&mut dqs, &ds, &ks);
-                gemm::matmul_tn_into(&mut dks, &ds, &qs, ws);
-                write_head(&mut dq, &dqs, bi, hi, t, d);
-                write_head(&mut dk, &dks, bi, hi, t, d);
-                write_head(&mut dv, &dvs, bi, hi, t, d);
-            }
+                    tws.give(dout);
+                    tws.give(qs);
+                    tws.give(ks);
+                    tws.give(vs);
+                    tws.give(dvs);
+                    tws.give(dqs);
+                    tws.give(dks);
+                    tws.give(dp);
+                    heads_ref.release(tws);
+                });
+            });
         }
-        ws.give(dout);
-        ws.give(vs);
-        ws.give(qs);
-        ws.give(ks);
-        ws.give(dvs);
-        ws.give(dqs);
-        ws.give(dks);
-        ws.give(dp);
-        ws.give(ds);
         ws.give(dattn_cat);
-        // RoPE backward = inverse rotation.
-        rope_apply_ws(&mut dq, t, n_heads, d, cfg.rope_theta, true, ws);
-        rope_apply_ws(&mut dk, t, n_heads, d, cfg.rope_theta, true, ws);
+        // RoPE backward = inverse rotation on the Q and K bands.
+        rope_apply_ws(&mut dqkv, t, n_heads, d, cfg.rope_theta, true, 0, ws);
+        rope_apply_ws(&mut dqkv, t, n_heads, d, cfg.rope_theta, true, h, ws);
 
-        // q = n1·Wqᵀ etc.
-        gemm::matmul_tn_acc(&mut grads[idx.wq()], &dq, &lc.n1, 1.0, ws);
-        gemm::matmul_tn_acc(&mut grads[idx.wk()], &dk, &lc.n1, 1.0, ws);
-        gemm::matmul_tn_acc(&mut grads[idx.wv()], &dv, &lc.n1, 1.0, ws);
-        let mut dn1 = ws.take(bt, cfg.hidden); // zeroed: accumulated into
-        gemm::matmul_acc(&mut dn1, &dq, &self.params[idx.wq()].value, 1.0);
-        gemm::matmul_acc(&mut dn1, &dk, &self.params[idx.wk()].value, 1.0);
-        gemm::matmul_acc(&mut dn1, &dv, &self.params[idx.wv()].value, 1.0);
-        ws.give(dq);
-        ws.give(dk);
-        ws.give(dv);
+        // Fused QKV weight grads (one (3h)×h Aᵀ·B, row blocks added into
+        // the per-weight buffers) and fused dn1 = dqkv · [Wq; Wk; Wv].
+        let mut dw_qkv = ws.take_dirty(3 * h, h);
+        gemm::matmul_tn_into(&mut dw_qkv, &dqkv, &lc.n1, ws);
+        acc_rows(&mut grads[idx.wq()], &dw_qkv.data()[..h * h]);
+        acc_rows(&mut grads[idx.wk()], &dw_qkv.data()[h * h..2 * h * h]);
+        acc_rows(&mut grads[idx.wv()], &dw_qkv.data()[2 * h * h..]);
+        ws.give(dw_qkv);
+        let qkv_stack = tcache.get_fused_stack(
+            slot + FUSED_QKV_STACK,
+            &[&self.params[idx.wq()], &self.params[idx.wk()], &self.params[idx.wv()]],
+        );
+        let mut dn1 = ws.take_dirty(bt, h);
+        gemm::matmul_into(&mut dn1, &dqkv, qkv_stack);
+        ws.give(dqkv);
         // RMSNorm #1
-        let mut dx_in_norm = ws.take_dirty(bt, cfg.hidden);
+        let mut dx_in_norm = ws.take_dirty(bt, h);
         rmsnorm_backward_acc(
             &lc.x_in,
             &lc.inv_rms1,
@@ -776,10 +888,12 @@ fn rmsnorm_backward_acc(
 
 /// Apply (or invert, for backward) rotary position embeddings in place.
 /// Layout: row index = b·T + pos; within a row, head h occupies columns
-/// [h·d, (h+1)·d) and RoPE rotates pairs (2i, 2i+1).
+/// [col0 + h·d, col0 + (h+1)·d) and RoPE rotates pairs (2i, 2i+1). `col0`
+/// selects a column band of a wider fused matrix (the Q or K band of the
+/// fused `qkv` buffer).
 #[cfg(test)]
 fn rope_apply(x: &mut Matrix, t: usize, n_heads: usize, d: usize, theta: f32, inverse: bool) {
-    rope_apply_ws(x, t, n_heads, d, theta, inverse, &mut Workspace::new());
+    rope_apply_ws(x, t, n_heads, d, theta, inverse, 0, &mut Workspace::new());
 }
 
 /// The (cos, sin) table is position×(d/2) and identical across heads,
@@ -787,6 +901,7 @@ fn rope_apply(x: &mut Matrix, t: usize, n_heads: usize, d: usize, theta: f32, in
 /// `sin_cos` per element) removes ~5% of the forward pass (perf log in
 /// EXPERIMENTS.md §Perf). The table buffer (cos/sin interleaved) is leased
 /// from the workspace so steady-state steps never allocate it.
+#[allow(clippy::too_many_arguments)] // one arg per layout dimension
 fn rope_apply_ws(
     x: &mut Matrix,
     t: usize,
@@ -794,6 +909,7 @@ fn rope_apply_ws(
     d: usize,
     theta: f32,
     inverse: bool,
+    col0: usize,
     ws: &mut Workspace,
 ) {
     let half = d / 2;
@@ -817,7 +933,7 @@ fn rope_apply_ws(
         let trow = &table[2 * pos * half..2 * (pos + 1) * half];
         let xr = x.row_mut(row);
         for h in 0..n_heads {
-            let base = h * d;
+            let base = col0 + h * d;
             for i in 0..half {
                 let cos = trow[2 * i];
                 let sin = trow[2 * i + 1];
@@ -831,31 +947,75 @@ fn rope_apply_ws(
     ws.give_vec(table);
 }
 
-/// Copy the T×D block for (batch, head) out of a (B·T)×H matrix into an
-/// existing T×D buffer.
-fn slice_head_into(x: &Matrix, out: &mut Matrix, b: usize, h: usize, t: usize, d: usize) {
+/// Copy the T×D block at column band [col0, col0+d) of batch `b` out of a
+/// (B·T)×W matrix into an existing T×D buffer.
+fn slice_head_into(x: &Matrix, out: &mut Matrix, b: usize, t: usize, col0: usize, d: usize) {
     debug_assert_eq!(out.shape(), (t, d));
     for i in 0..t {
-        let src = &x.row(b * t + i)[h * d..(h + 1) * d];
+        let src = &x.row(b * t + i)[col0..col0 + d];
         out.row_mut(i).copy_from_slice(src);
     }
 }
 
-/// Write a T×D head block back into a (B·T)×H matrix.
-fn write_head(x: &mut Matrix, block: &Matrix, b: usize, h: usize, t: usize, d: usize) {
+/// Write a T×D head block into the column band [col0, col0+d) of rows
+/// b·T..(b+1)·T behind `base` — the raw buffer of a (B·T)×`w` row-major
+/// matrix shared across the fan-out's tasks.
+///
+/// # Safety
+///
+/// `base` must point at a live (B·T)×`w` buffer that outlives the call,
+/// with `(b+1)·t` within its rows and `col0 + d ≤ w`. Concurrent callers
+/// must write disjoint (row range × column band) regions — the
+/// per-(batch, head) fan-out guarantees this because every task owns a
+/// unique (b, col0) pair.
+unsafe fn write_head_raw(
+    base: SendPtr<f32>,
+    w: usize,
+    block: &Matrix,
+    b: usize,
+    t: usize,
+    col0: usize,
+    d: usize,
+) {
     for i in 0..t {
-        let dst = &mut x.row_mut(b * t + i)[h * d..(h + 1) * d];
+        let dst = std::slice::from_raw_parts_mut(base.get().add((b * t + i) * w + col0), d);
         dst.copy_from_slice(block.row(i));
     }
 }
 
-/// Upper-triangular −∞ mask (strictly future positions).
-fn causal_mask(scores: &mut Matrix) {
-    let t = scores.rows();
-    for i in 0..t {
-        for j in (i + 1)..t {
-            scores.set(i, j, f32::NEG_INFINITY);
-        }
+/// `grad += block`, where `block` is the matching contiguous row block of a
+/// fused gradient buffer (row-major, so rows [r0, r1) of a fused (ΣR)×C
+/// product are exactly one weight's R×C gradient).
+fn acc_rows(grad: &mut Matrix, block: &[f32]) {
+    debug_assert_eq!(grad.len(), block.len(), "fused grad block size");
+    for (g, &v) in grad.data_mut().iter_mut().zip(block) {
+        *g += v;
+    }
+}
+
+/// Worker plan for the per-(batch, head) attention fan-out, shared by the
+/// forward and backward passes (so the scratch bank is sized once per
+/// step). Routed through `gemm::plan_kernel_threads`: the `GEMM_THREADS`
+/// forcing, the `PAR_KERNEL_FLOPS` auto gate, the DP-shard opt-out
+/// (`gemm::run_single_threaded`) and the on-worker inline rule all apply —
+/// one knob budgets every level of parallelism.
+fn attn_plan(b: usize, n_heads: usize, t: usize, d: usize) -> usize {
+    let tasks = b * n_heads;
+    let flops = tasks.saturating_mul(t).saturating_mul(t).saturating_mul(d);
+    gemm::plan_kernel_threads(flops, tasks)
+}
+
+/// Per-task scratch sizes for the attention fan-out, as (elements, count)
+/// reservations for `WorkspaceBank::ensure`: the union of the forward peak
+/// (4 T×D views + the score kernel's internal Bᵀ lease) and the backward
+/// peak (7 T×D + the dP kernel's Bᵀ lease + one T×T). When d == t the two
+/// bucket sizes coincide and must merge into one reservation, or
+/// steady-state leases could still miss.
+fn head_scratch_sizes(t: usize, d: usize) -> [(usize, usize); 2] {
+    if d == t {
+        [(t * d, 9), (0, 0)]
+    } else {
+        [(t * d, 8), (t * t, 1)]
     }
 }
 

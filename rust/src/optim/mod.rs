@@ -109,11 +109,60 @@ impl Param {
 /// transpose from every layer of every step. Entries rebuild in place (the
 /// old buffer is reused when the shape matches), so steady-state steps with
 /// unchanged or optimizer-updated weights never allocate here after warmup.
+///
+/// # Fused multi-parameter entries
+///
+/// Beyond the per-param table, the cache keeps **fused** entries that
+/// concatenate several parameters into one operand so the model can issue
+/// one large GEMM instead of several small ones (QKV as `x·[Wqᵀ|Wkᵀ|Wvᵀ]`,
+/// SwiGLU gate/up as `x·[Wgᵀ|Wuᵀ]`, and the stacked `[Wq;Wk;Wv]` /
+/// `[Wg;Wu]` the backward `dn1`/`dn2` accumulations multiply against).
+/// Fused entries live in their own slot table
+/// ([`get_fused_transpose`] / [`get_fused_stack`]) and are keyed on **all**
+/// source versions: a rebuild happens iff any source parameter's version
+/// moved (or the shape changed), so per-param optimizer updates invalidate
+/// exactly the fused operands that contain them. Invalidation contract for
+/// callers: a slot's (kind, parameter set) mapping must stay fixed for the
+/// cache's lifetime — slots are not keyed on parameter identity, only on
+/// their versions.
+///
+/// [`get_fused_transpose`]: TransposeCache::get_fused_transpose
+/// [`get_fused_stack`]: TransposeCache::get_fused_stack
 #[derive(Default)]
 pub struct TransposeCache {
     entries: Vec<Option<(u64, Matrix)>>,
+    /// Fused multi-param entries, indexed by caller-owned slot ids.
+    fused: Vec<Option<FusedEntry>>,
     /// Number of transpose recomputations performed (diagnostics/tests).
     recomputes: usize,
+}
+
+/// One fused entry: the concatenated operand plus the source versions it
+/// was built from (parallel to the caller's param list for its slot).
+struct FusedEntry {
+    versions: Vec<u64>,
+    mat: Matrix,
+}
+
+/// Write `w`ᵀ into the column block starting at `col_off` of `out`
+/// (blocked like [`Matrix::transpose_into`]; every element of the block is
+/// written).
+fn transpose_into_cols(w: &Matrix, out: &mut Matrix, col_off: usize) {
+    const B: usize = 32;
+    let (r, c) = w.shape();
+    debug_assert!(out.rows() == c && col_off + r <= out.cols());
+    let oc = out.cols();
+    let wd = w.data();
+    let od = out.data_mut();
+    for ib in (0..r).step_by(B) {
+        for jb in (0..c).step_by(B) {
+            for i in ib..(ib + B).min(r) {
+                for j in jb..(jb + B).min(c) {
+                    od[j * oc + col_off + i] = wd[i * c + j];
+                }
+            }
+        }
+    }
 }
 
 impl TransposeCache {
@@ -147,10 +196,96 @@ impl TransposeCache {
         }
     }
 
+    /// The cached horizontal concatenation `[W₀ᵀ | W₁ᵀ | …]` of several
+    /// parameters' transposes (all sources share their column count — the
+    /// fused linear's input dimension), recomputing iff any source version
+    /// changed since the last call for this `slot`. See the type docs for
+    /// the slot contract.
+    pub fn get_fused_transpose(&mut self, slot: usize, params: &[&Param]) -> &Matrix {
+        let c = params.first().map_or(0, |p| p.value.cols());
+        let total: usize = params.iter().map(|p| p.value.rows()).sum();
+        let want = (c, total);
+        if !self.fused_fresh(slot, params, want) {
+            self.recomputes += 1;
+            let (mut buf, mut versions) = self.take_fused_slot(slot, want);
+            versions.clear();
+            versions.extend(params.iter().map(|p| p.version()));
+            let mut off = 0usize;
+            for p in params {
+                debug_assert_eq!(p.value.cols(), c, "fused transpose: mismatched input dims");
+                transpose_into_cols(&p.value, &mut buf, off);
+                off += p.value.rows();
+            }
+            self.fused[slot] = Some(FusedEntry { versions, mat: buf });
+        }
+        match &self.fused[slot] {
+            Some(e) => &e.mat,
+            None => unreachable!("entry populated above"),
+        }
+    }
+
+    /// The cached vertical stack `[W₀; W₁; …]` of several parameters' raw
+    /// values (all sources share their column count), recomputing iff any
+    /// source version changed. Same slot contract as
+    /// [`get_fused_transpose`] — and a slot must never be shared between
+    /// the two kinds.
+    ///
+    /// [`get_fused_transpose`]: TransposeCache::get_fused_transpose
+    pub fn get_fused_stack(&mut self, slot: usize, params: &[&Param]) -> &Matrix {
+        let c = params.first().map_or(0, |p| p.value.cols());
+        let total: usize = params.iter().map(|p| p.value.rows()).sum();
+        let want = (total, c);
+        if !self.fused_fresh(slot, params, want) {
+            self.recomputes += 1;
+            let (mut buf, mut versions) = self.take_fused_slot(slot, want);
+            versions.clear();
+            versions.extend(params.iter().map(|p| p.version()));
+            let mut off = 0usize;
+            for p in params {
+                debug_assert_eq!(p.value.cols(), c, "fused stack: mismatched widths");
+                let n = p.value.len();
+                buf.data_mut()[off..off + n].copy_from_slice(p.value.data());
+                off += n;
+            }
+            self.fused[slot] = Some(FusedEntry { versions, mat: buf });
+        }
+        match &self.fused[slot] {
+            Some(e) => &e.mat,
+            None => unreachable!("entry populated above"),
+        }
+    }
+
+    /// Whether a fused slot can be served as-is: right shape, same source
+    /// count, no source version moved.
+    fn fused_fresh(&self, slot: usize, params: &[&Param], want: (usize, usize)) -> bool {
+        match self.fused.get(slot).and_then(|e| e.as_ref()) {
+            Some(e) => {
+                e.mat.shape() == want
+                    && e.versions.len() == params.len()
+                    && e.versions.iter().zip(params).all(|(&v, p)| v == p.version())
+            }
+            None => false,
+        }
+    }
+
+    /// Take the slot's buffer for an in-place rebuild (reused when the
+    /// shape matches, so steady-state weight updates never allocate here).
+    fn take_fused_slot(&mut self, slot: usize, want: (usize, usize)) -> (Matrix, Vec<u64>) {
+        if self.fused.len() <= slot {
+            self.fused.resize_with(slot + 1, || None);
+        }
+        match self.fused[slot].take() {
+            Some(e) if e.mat.shape() == want => (e.mat, e.versions),
+            Some(e) => (Matrix::zeros(want.0, want.1), e.versions),
+            None => (Matrix::zeros(want.0, want.1), Vec::new()),
+        }
+    }
+
     /// Drop every cached transpose (use after wholesale parameter
     /// replacement, e.g. checkpoint load into a live trainer).
     pub fn clear(&mut self) {
         self.entries.clear();
+        self.fused.clear();
     }
 
     pub fn recomputes(&self) -> usize {
@@ -345,6 +480,63 @@ mod tests {
     #[should_panic(expected = "unknown optimizer")]
     fn factory_rejects_unknown() {
         let _ = by_name("sgd-9000", HyperParams::default());
+    }
+
+    #[test]
+    fn fused_transpose_concatenates_and_invalidates_per_source() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(6);
+        // Three "weights" sharing the input dim (cols = 4), ragged rows.
+        let mut wq = Param::matrix("wq", Matrix::randn(3, 4, 1.0, &mut rng));
+        let wk = Param::matrix("wk", Matrix::randn(2, 4, 1.0, &mut rng));
+        let wv = Param::matrix("wv", Matrix::randn(5, 4, 1.0, &mut rng));
+        let mut tc = TransposeCache::new();
+        let fused = tc.get_fused_transpose(0, &[&wq, &wk, &wv]).clone();
+        assert_eq!(fused.shape(), (4, 10));
+        // Manual [Wqᵀ | Wkᵀ | Wvᵀ].
+        for (off, w) in [(0usize, &wq), (3, &wk), (5, &wv)] {
+            let t = w.value.t();
+            for i in 0..4 {
+                for j in 0..w.value.rows() {
+                    assert_eq!(fused.get(i, off + j), t.get(i, j), "block at {off}");
+                }
+            }
+        }
+        // Warm reads serve the cache.
+        let _ = tc.get_fused_transpose(0, &[&wq, &wk, &wv]);
+        assert_eq!(tc.recomputes(), 1);
+        // One source write invalidates the fused entry.
+        wq.axpy_update(-0.1, &Matrix::full(3, 4, 1.0));
+        let fused2 = tc.get_fused_transpose(0, &[&wq, &wk, &wv]).clone();
+        assert_eq!(tc.recomputes(), 2);
+        assert_ne!(fused.data(), fused2.data());
+        assert_eq!(fused2.get(0, 0), wq.value.get(0, 0));
+        // Untouched blocks are rebuilt identically.
+        assert_eq!(fused.get(0, 3), fused2.get(0, 3));
+    }
+
+    #[test]
+    fn fused_stack_concatenates_rows_and_tracks_versions() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(7);
+        let wg = Param::matrix("wg", Matrix::randn(3, 4, 1.0, &mut rng));
+        let mut wu = Param::matrix("wu", Matrix::randn(2, 4, 1.0, &mut rng));
+        let mut tc = TransposeCache::new();
+        let stack = tc.get_fused_stack(1, &[&wg, &wu]).clone();
+        assert_eq!(stack.shape(), (5, 4));
+        assert_eq!(&stack.data()[..12], wg.value.data());
+        assert_eq!(&stack.data()[12..], wu.value.data());
+        let _ = tc.get_fused_stack(1, &[&wg, &wu]);
+        assert_eq!(tc.recomputes(), 1);
+        wu.decay(0.5);
+        let stack2 = tc.get_fused_stack(1, &[&wg, &wu]).clone();
+        assert_eq!(tc.recomputes(), 2);
+        assert_eq!(&stack2.data()[12..], wu.value.data());
+        // Fused slots coexist with per-param entries and clear() drops both.
+        let _ = tc.get(0, &wg);
+        tc.clear();
+        let _ = tc.get_fused_stack(1, &[&wg, &wu]);
+        assert_eq!(tc.recomputes(), 4, "clear must drop fused entries too");
     }
 
     #[test]

@@ -492,6 +492,157 @@ pub fn matmul_nt_into(c: &mut Matrix, a: &Matrix, b: &Matrix, ws: &mut Workspace
     }
 }
 
+// ----------------------------------------------------------------------
+// triangular attention kernels
+// ----------------------------------------------------------------------
+//
+// Causal attention only ever consumes the lower triangle of its T×T score
+// matrix: row i attends to positions j ≤ i. The three kernels below exploit
+// that — scores are computed, soft-maxed (`ops::causal_softmax_rows`) and
+// applied over each row's live prefix only, roughly halving the FLOPs and
+// memory traffic of the dense mask-then-multiply pipeline. Shared contract:
+// the strict upper triangle of the score/probability matrix is **never read
+// or written**, so it may hold stale garbage from a dirty workspace lease.
+// All three are deliberately sequential: the model fans attention out as one
+// pool task per (batch, head), so the parallelism lives a level up and each
+// task's output stays bit-identical for any worker count.
+
+/// Lower-triangular scores `C[i, j] = alpha · (A row i · B row j)` for
+/// `j ≤ i` only. Bᵀ is leased from `ws` so the inner loops stream
+/// contiguous rows (the `matmul_nt_into` trick), but each C row computes
+/// just its live prefix.
+pub fn attn_scores_into(c: &mut Matrix, a: &Matrix, b: &Matrix, alpha: f32, ws: &mut Workspace) {
+    let (t, d) = a.shape();
+    assert_eq!(b.shape(), (t, d), "attn_scores operand shapes");
+    assert_eq!(c.shape(), (t, t), "attn_scores output shape");
+    if t == 0 {
+        return;
+    }
+    // Dirty lease: transpose_into writes every element.
+    let mut bt = ws.take_dirty(d, t);
+    b.transpose_into(&mut bt);
+    let ad = a.data();
+    let btd = bt.data();
+    let cd = c.data_mut();
+    for i in 0..t {
+        let arow = &ad[i * d..(i + 1) * d];
+        let crow = &mut cd[i * t..i * t + i + 1];
+        crow.fill(0.0);
+        let mut p = 0;
+        while p + 4 <= d {
+            let a0 = alpha * arow[p];
+            let a1 = alpha * arow[p + 1];
+            let a2 = alpha * arow[p + 2];
+            let a3 = alpha * arow[p + 3];
+            let b0 = &btd[p * t..p * t + i + 1];
+            let b1 = &btd[(p + 1) * t..(p + 1) * t + i + 1];
+            let b2 = &btd[(p + 2) * t..(p + 2) * t + i + 1];
+            let b3 = &btd[(p + 3) * t..(p + 3) * t + i + 1];
+            for ((((cv, &v0), &v1), &v2), &v3) in
+                crow.iter_mut().zip(b0).zip(b1).zip(b2).zip(b3)
+            {
+                *cv += a0 * v0 + a1 * v1 + a2 * v2 + a3 * v3;
+            }
+            p += 4;
+        }
+        while p < d {
+            let av = alpha * arow[p];
+            let brow = &btd[p * t..p * t + i + 1];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+            p += 1;
+        }
+    }
+    ws.give(bt);
+}
+
+/// Prefix-weighted apply `C[i, :] = Σ_{j ≤ i} P[i, j] · V[j, :]` — the
+/// `P·V` of causal attention, accumulated over each row's live prefix so
+/// the masked columns of P are never read. Also serves the backward pass's
+/// `dQ = dS·K` (dS is lower-triangular too).
+pub fn attn_apply_into(c: &mut Matrix, p: &Matrix, v: &Matrix) {
+    let (t, d) = v.shape();
+    assert_eq!(p.shape(), (t, t), "attn_apply P shape");
+    assert_eq!(c.shape(), (t, d), "attn_apply output shape");
+    let pd = p.data();
+    let vd = v.data();
+    let cd = c.data_mut();
+    for i in 0..t {
+        let prow = &pd[i * t..i * t + i + 1];
+        let crow = &mut cd[i * d..(i + 1) * d];
+        crow.fill(0.0);
+        let live = i + 1;
+        let mut j = 0;
+        while j + 4 <= live {
+            let x0 = prow[j];
+            let x1 = prow[j + 1];
+            let x2 = prow[j + 2];
+            let x3 = prow[j + 3];
+            let v0 = &vd[j * d..(j + 1) * d];
+            let v1 = &vd[(j + 1) * d..(j + 2) * d];
+            let v2 = &vd[(j + 2) * d..(j + 3) * d];
+            let v3 = &vd[(j + 3) * d..(j + 4) * d];
+            for ((((cv, &w0), &w1), &w2), &w3) in
+                crow.iter_mut().zip(v0).zip(v1).zip(v2).zip(v3)
+            {
+                *cv += x0 * w0 + x1 * w1 + x2 * w2 + x3 * w3;
+            }
+            j += 4;
+        }
+        while j < live {
+            let x = prow[j];
+            let vrow = &vd[j * d..(j + 1) * d];
+            for (cv, &wv) in crow.iter_mut().zip(vrow) {
+                *cv += x * wv;
+            }
+            j += 1;
+        }
+    }
+}
+
+/// Prefix-weighted transposed apply `C[j, :] = Σ_{i ≥ j} P[i, j] · X[i, :]`
+/// — the `Pᵀ·dOut` (dV) and `dSᵀ·Q` (dK) of the attention backward pass,
+/// accumulating down P's column j from the diagonal so the masked upper
+/// triangle is never read.
+pub fn attn_apply_tn_into(c: &mut Matrix, p: &Matrix, x: &Matrix) {
+    let (t, d) = x.shape();
+    assert_eq!(p.shape(), (t, t), "attn_apply_tn P shape");
+    assert_eq!(c.shape(), (t, d), "attn_apply_tn output shape");
+    let pd = p.data();
+    let xd = x.data();
+    let cd = c.data_mut();
+    for j in 0..t {
+        let crow = &mut cd[j * d..(j + 1) * d];
+        crow.fill(0.0);
+        let mut i = j;
+        while i + 4 <= t {
+            let x0 = pd[i * t + j];
+            let x1 = pd[(i + 1) * t + j];
+            let x2 = pd[(i + 2) * t + j];
+            let x3 = pd[(i + 3) * t + j];
+            let r0 = &xd[i * d..(i + 1) * d];
+            let r1 = &xd[(i + 1) * d..(i + 2) * d];
+            let r2 = &xd[(i + 2) * d..(i + 3) * d];
+            let r3 = &xd[(i + 3) * d..(i + 4) * d];
+            for ((((cv, &w0), &w1), &w2), &w3) in
+                crow.iter_mut().zip(r0).zip(r1).zip(r2).zip(r3)
+            {
+                *cv += x0 * w0 + x1 * w1 + x2 * w2 + x3 * w3;
+            }
+            i += 4;
+        }
+        while i < t {
+            let xv = pd[i * t + j];
+            let xrow = &xd[i * d..(i + 1) * d];
+            for (cv, &wv) in crow.iter_mut().zip(xrow) {
+                *cv += xv * wv;
+            }
+            i += 1;
+        }
+    }
+}
+
 /// y = A·x (matrix-vector).
 pub fn matvec(a: &Matrix, x: &[f32]) -> Vec<f32> {
     let mut y = vec![0.0f32; a.rows()];
@@ -843,6 +994,92 @@ mod tests {
         b.set(4, 0, f32::INFINITY);
         let c = matmul(&a, &b);
         assert!(c.get(0, 0).is_infinite());
+    }
+
+    #[test]
+    fn attn_kernels_match_naive_masked_reference() {
+        let mut rng = Rng::new(31);
+        let mut ws = Workspace::new();
+        for (t, d) in [(1usize, 4usize), (5, 3), (8, 8), (13, 6)] {
+            let a = Matrix::randn(t, d, 1.0, &mut rng);
+            let b = Matrix::randn(t, d, 1.0, &mut rng);
+            let v = Matrix::randn(t, d, 1.0, &mut rng);
+            let alpha = 0.5f32;
+            // scores: C[i,j] = alpha · a_i · b_j on the lower triangle.
+            let mut c = ws.take_dirty(t, t);
+            c.data_mut().fill(777.0); // sentinel for the upper triangle
+            attn_scores_into(&mut c, &a, &b, alpha, &mut ws);
+            for i in 0..t {
+                for j in 0..t {
+                    if j <= i {
+                        let want: f32 = a
+                            .row(i)
+                            .iter()
+                            .zip(b.row(j))
+                            .map(|(&x, &y)| x * y)
+                            .sum::<f32>()
+                            * alpha;
+                        assert!(
+                            (c.get(i, j) - want).abs() < 1e-4,
+                            "scores[{i},{j}] = {} want {want}",
+                            c.get(i, j)
+                        );
+                    } else {
+                        assert_eq!(c.get(i, j), 777.0, "upper triangle written at ({i},{j})");
+                    }
+                }
+            }
+            // Poison the upper triangle with NaN: the apply kernels must not
+            // read it.
+            for i in 0..t {
+                for j in (i + 1)..t {
+                    c.set(i, j, f32::NAN);
+                }
+            }
+            let mut out = ws.take_dirty(t, d);
+            attn_apply_into(&mut out, &c, &v);
+            for i in 0..t {
+                for col in 0..d {
+                    let want: f32 = (0..=i).map(|j| c.get(i, j) * v.get(j, col)).sum();
+                    let got = out.get(i, col);
+                    assert!(got.is_finite(), "apply read the masked triangle");
+                    assert!((got - want).abs() < 1e-4, "apply[{i},{col}] {got} vs {want}");
+                }
+            }
+            let mut out_tn = ws.take_dirty(t, d);
+            attn_apply_tn_into(&mut out_tn, &c, &v);
+            for j in 0..t {
+                for col in 0..d {
+                    let want: f32 = (j..t).map(|i| c.get(i, j) * v.get(i, col)).sum();
+                    let got = out_tn.get(j, col);
+                    assert!(got.is_finite(), "apply_tn read the masked triangle");
+                    assert!(
+                        (got - want).abs() < 1e-4,
+                        "apply_tn[{j},{col}] {got} vs {want}"
+                    );
+                }
+            }
+            ws.give(c);
+            ws.give(out);
+            ws.give(out_tn);
+        }
+    }
+
+    #[test]
+    fn attn_scores_scratch_recycles() {
+        // The Bᵀ lease inside attn_scores_into must come back to the pool.
+        let mut rng = Rng::new(32);
+        let mut ws = Workspace::new();
+        let a = Matrix::randn(12, 8, 1.0, &mut rng);
+        let b = Matrix::randn(12, 8, 1.0, &mut rng);
+        let mut c = ws.take_dirty(12, 12);
+        attn_scores_into(&mut c, &a, &b, 1.0, &mut ws);
+        let misses = ws.misses();
+        for _ in 0..3 {
+            attn_scores_into(&mut c, &a, &b, 1.0, &mut ws);
+        }
+        assert_eq!(ws.misses(), misses, "steady-state attn_scores allocated");
+        ws.give(c);
     }
 
     #[test]

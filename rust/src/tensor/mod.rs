@@ -26,7 +26,10 @@
 //!   touching the allocator (asserted by `rust/tests/zero_alloc.rs`). The
 //!   GEMM `_into`/`_acc` variants ([`gemm::matmul_into`],
 //!   [`gemm::matmul_tn_acc`], …) write into caller-provided buffers and
-//!   lease their Aᵀ/Bᵀ scratch from the same pool.
+//!   lease their Aᵀ/Bᵀ scratch from the same pool. Concurrent pool tasks
+//!   lease whole per-task workspaces from a pre-sized [`WorkspaceBank`]
+//!   (the head-parallel attention fan-out's scratch) — see the leasing
+//!   rules in [`workspace`].
 //!
 //! * **Transpose-cache invalidation.** The model's linears compute `x·Wᵀ`;
 //!   the `optim::TransposeCache` keeps one materialized `Wᵀ` per parameter
@@ -88,4 +91,4 @@ pub mod workspace;
 
 pub use matrix::Matrix;
 pub use svd::{power_iteration_top1, thin_svd, Svd};
-pub use workspace::Workspace;
+pub use workspace::{Workspace, WorkspaceBank};

@@ -1,60 +1,169 @@
 //! Miscellaneous tensor operations used by the model and optimizers:
-//! numerically-stable softmax, row-wise reductions, clipping.
+//! numerically-stable softmax (full-row and fused causal-prefix modes),
+//! row-wise reductions, pool-parallel gradient clipping.
 
+use super::gemm;
 use super::matrix::Matrix;
+use super::pool::{self, SendPtr};
+use std::borrow::{Borrow, BorrowMut};
 
-/// Row-wise numerically-stable softmax, in place.
-pub fn softmax_rows(m: &mut Matrix) {
-    let cols = m.cols();
-    for i in 0..m.rows() {
-        let row = m.row_mut(i);
-        let max = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
-        let mut sum = 0.0f32;
-        for v in row.iter_mut() {
-            *v = (*v - max).exp();
-            sum += *v;
+/// The shared softmax core: numerically-stable softmax over one row
+/// *segment*, applying `scale` to the raw values first (fused, so the
+/// caller needs no separate `scale_mut` pass).
+#[inline]
+fn softmax_segment(row: &mut [f32], scale: f32) {
+    let mut max = f32::NEG_INFINITY;
+    for v in row.iter_mut() {
+        *v *= scale;
+        if *v > max {
+            max = *v;
         }
-        let inv = 1.0 / sum;
-        for v in row.iter_mut() {
-            *v *= inv;
-        }
-        let _ = cols;
     }
+    let mut sum = 0.0f32;
+    for v in row.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in row.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// Row-wise numerically-stable softmax, in place — the fused kernel's
+/// full-row mode (every column of every row is live).
+pub fn softmax_rows(m: &mut Matrix) {
+    for i in 0..m.rows() {
+        softmax_segment(m.row_mut(i), 1.0);
+    }
+}
+
+/// Fused causal masked softmax over a T×T score matrix, in place: row `i` is
+/// soft-maxed over its live prefix `j ≤ i` only, with `scale` applied to the
+/// raw scores first. Replaces the three-pass `scale_mut` → mask-to-−∞ →
+/// full-row softmax pipeline with one pass that touches half the matrix.
+///
+/// Contract: the strict upper triangle (`j > i`) is **never read or
+/// written** — it may hold stale garbage from a dirty workspace lease, and
+/// it still will afterwards. Downstream consumers must be prefix-aware
+/// (see `gemm::attn_apply_into` / [`causal_softmax_grad`]).
+pub fn causal_softmax_rows(m: &mut Matrix, scale: f32) {
+    let t = m.rows();
+    debug_assert_eq!(m.cols(), t, "causal softmax needs a square score matrix");
+    for i in 0..t {
+        softmax_segment(&mut m.row_mut(i)[..=i], scale);
+    }
+}
+
+/// Fused backward of [`causal_softmax_rows`], in place in `dp`:
+/// `dS = scale · P ⊙ (dP − rowdot(dP, P))` over each row's live prefix,
+/// where the row dot also runs over the prefix only. Like the forward
+/// kernel, the strict upper triangle of `p` and `dp` is never read or
+/// written.
+pub fn causal_softmax_grad(p: &Matrix, dp: &mut Matrix, scale: f32) {
+    let t = p.rows();
+    debug_assert_eq!(p.cols(), t, "causal softmax grad needs square P");
+    debug_assert_eq!(dp.shape(), (t, t), "dP shape");
+    for i in 0..t {
+        let pr = &p.row(i)[..=i];
+        let dr = &mut dp.row_mut(i)[..=i];
+        let mut dot = 0.0f32;
+        for (d, &pv) in dr.iter().zip(pr.iter()) {
+            dot += *d * pv;
+        }
+        for (d, &pv) in dr.iter_mut().zip(pr.iter()) {
+            *d = pv * (*d - dot) * scale;
+        }
+    }
+}
+
+/// Elements per partial in the parallel squared-norm reduction. A fixed
+/// constant — deliberately *not* `gemm::chunk_units` — so the partial grid
+/// (and therefore the f64 combine order and the clipped result) is
+/// identical for any worker count and any `GEMM_CHUNK` setting.
+const NORM_CHUNK: usize = 1 << 15;
+
+thread_local! {
+    /// Reusable partials buffer for [`sum_squares`]: the clip path runs once
+    /// per training step per gradient matrix, so a per-call `Vec` would be a
+    /// steady-state heap allocation — against the grain of the
+    /// allocation-free step contract. Grows to the largest chunk count seen
+    /// and is reused thereafter.
+    static NORM_PARTIALS: std::cell::RefCell<Vec<f64>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
+/// Σx² of one buffer in f64: the buffer is cut into fixed [`NORM_CHUNK`]
+/// chunks, each reduced sequentially, and the partials are combined in
+/// chunk order. The chunk grid is the same whether the chunks run on the
+/// pool or inline, so the result is deterministic across 1/2/8 workers —
+/// and bit-identical to the sequential fallback.
+fn sum_squares(data: &[f32]) -> f64 {
+    let n = data.len();
+    if n == 0 {
+        return 0.0;
+    }
+    let seq = |lo: usize, hi: usize| {
+        data[lo..hi].iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>()
+    };
+    let n_chunks = n.div_ceil(NORM_CHUNK);
+    if n_chunks == 1 {
+        return seq(0, n);
+    }
+    let threads = gemm::plan_kernel_threads(2 * n, n_chunks);
+    NORM_PARTIALS.with(|cell| {
+        let mut partials = cell.borrow_mut();
+        partials.clear();
+        partials.resize(n_chunks, 0.0); // no realloc once warm
+        if threads <= 1 {
+            for (c, p) in partials.iter_mut().enumerate() {
+                *p = seq(c * NORM_CHUNK, ((c + 1) * NORM_CHUNK).min(n));
+            }
+        } else {
+            let base = SendPtr::new(partials.as_mut_ptr());
+            pool::run(threads, n_chunks, &|c| {
+                let lo = c * NORM_CHUNK;
+                // Each task owns partial slot c — disjoint writes.
+                unsafe { *base.get().add(c) = seq(lo, (lo + NORM_CHUNK).min(n)) };
+            });
+        }
+        partials.iter().sum()
+    })
+}
+
+/// The single clipping core behind both public entry points: joint L2 norm
+/// via the pool-parallel fixed-order reduction, proportional scale-down
+/// when over `max_norm`.
+fn clip_core<M: BorrowMut<Matrix>>(grads: &mut [M], max_norm: f32) -> f32 {
+    let total: f64 = grads
+        .iter()
+        .map(|g| {
+            let m: &Matrix = g.borrow();
+            sum_squares(m.data())
+        })
+        .sum();
+    let norm = total.sqrt() as f32;
+    if norm > max_norm && norm > 0.0 {
+        let scale = max_norm / norm;
+        for g in grads.iter_mut() {
+            let m: &mut Matrix = g.borrow_mut();
+            m.scale_mut(scale);
+        }
+    }
+    norm
 }
 
 /// Global gradient-norm clipping over a set of matrices: if the joint L2 norm
 /// exceeds `max_norm`, scale all of them down proportionally. Returns the
 /// pre-clip norm (the paper uses clipping 1.0 in every pre-training run).
 pub fn clip_global_norm(grads: &mut [&mut Matrix], max_norm: f32) -> f32 {
-    let total: f64 = grads
-        .iter()
-        .map(|g| g.data().iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>())
-        .sum();
-    let norm = total.sqrt() as f32;
-    if norm > max_norm && norm > 0.0 {
-        let scale = max_norm / norm;
-        for g in grads.iter_mut() {
-            g.scale_mut(scale);
-        }
-    }
-    norm
+    clip_core(grads, max_norm)
 }
 
 /// [`clip_global_norm`] over an owned gradient slice — the trainer's
 /// hot-path form, avoiding the per-step `Vec<&mut Matrix>` of references.
 pub fn clip_global_norm_slice(grads: &mut [Matrix], max_norm: f32) -> f32 {
-    let total: f64 = grads
-        .iter()
-        .map(|g| g.data().iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>())
-        .sum();
-    let norm = total.sqrt() as f32;
-    if norm > max_norm && norm > 0.0 {
-        let scale = max_norm / norm;
-        for g in grads.iter_mut() {
-            g.scale_mut(scale);
-        }
-    }
-    norm
+    clip_core(grads, max_norm)
 }
 
 /// Mean of a slice.
@@ -90,6 +199,177 @@ mod tests {
         assert!((m.get(1, 0) - 1.0 / 3.0).abs() < 1e-5);
         // Monotone in logits.
         assert!(m.get(0, 2) > m.get(0, 1) && m.get(0, 1) > m.get(0, 0));
+    }
+
+    /// Three-pass reference: scale, mask strictly-future entries to −∞,
+    /// full-row softmax — the pipeline the fused kernel replaces.
+    fn three_pass_reference(m: &Matrix, scale: f32) -> Matrix {
+        let t = m.rows();
+        let mut r = m.scale(scale);
+        for i in 0..t {
+            for j in (i + 1)..t {
+                r.set(i, j, f32::NEG_INFINITY);
+            }
+        }
+        softmax_rows(&mut r);
+        r
+    }
+
+    #[test]
+    fn causal_softmax_matches_three_pass_on_the_prefix() {
+        let mut rng = crate::util::rng::Rng::new(11);
+        for t in [1usize, 2, 5, 16] {
+            let raw = Matrix::randn(t, t, 2.0, &mut rng);
+            let want = three_pass_reference(&raw, 0.25);
+            let mut got = raw.clone();
+            causal_softmax_rows(&mut got, 0.25);
+            for i in 0..t {
+                for j in 0..=i {
+                    assert!(
+                        (want.get(i, j) - got.get(i, j)).abs() < 1e-6,
+                        "prefix mismatch at ({i},{j}): {} vs {}",
+                        want.get(i, j),
+                        got.get(i, j)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn causal_softmax_never_touches_the_upper_triangle() {
+        // Poison the strict upper triangle with NaN: the fused kernel must
+        // neither read it (outputs stay finite) nor write it (NaN survives).
+        let mut rng = crate::util::rng::Rng::new(12);
+        let t = 9;
+        let mut m = Matrix::randn(t, t, 1.0, &mut rng);
+        for i in 0..t {
+            for j in (i + 1)..t {
+                m.set(i, j, f32::NAN);
+            }
+        }
+        causal_softmax_rows(&mut m, 0.5);
+        for i in 0..t {
+            let mut sum = 0.0f32;
+            for j in 0..=i {
+                assert!(m.get(i, j).is_finite(), "NaN leaked into prefix ({i},{j})");
+                sum += m.get(i, j);
+            }
+            assert!((sum - 1.0).abs() < 1e-5, "row {i} prefix sums to {sum}");
+            for j in (i + 1)..t {
+                assert!(m.get(i, j).is_nan(), "upper triangle ({i},{j}) was written");
+            }
+        }
+        // The backward kernel carries the same contract.
+        let p = m.clone();
+        let mut dp = Matrix::randn(t, t, 1.0, &mut rng);
+        for i in 0..t {
+            for j in (i + 1)..t {
+                dp.set(i, j, f32::NAN);
+            }
+        }
+        causal_softmax_grad(&p, &mut dp, 0.5);
+        for i in 0..t {
+            for j in 0..=i {
+                assert!(dp.get(i, j).is_finite(), "grad NaN leaked at ({i},{j})");
+            }
+            for j in (i + 1)..t {
+                assert!(dp.get(i, j).is_nan(), "grad upper triangle written");
+            }
+        }
+    }
+
+    #[test]
+    fn causal_softmax_grad_matches_dense_reference() {
+        // Dense reference: dS = P ⊙ (dP − rowsum(dP⊙P)) · scale with the
+        // masked entries of P exactly zero (as the three-pass pipeline
+        // produced), so the full-row dot equals the prefix dot.
+        let mut rng = crate::util::rng::Rng::new(13);
+        let t = 7;
+        let scale = 0.125f32;
+        let raw = Matrix::randn(t, t, 1.0, &mut rng);
+        let p = three_pass_reference(&raw, scale);
+        let dp0 = Matrix::randn(t, t, 1.0, &mut rng);
+        // Dense reference over full rows.
+        let mut want = Matrix::zeros(t, t);
+        for i in 0..t {
+            let dot: f32 = dp0.row(i).iter().zip(p.row(i)).map(|(&a, &b)| a * b).sum();
+            for j in 0..t {
+                want.set(i, j, p.get(i, j) * (dp0.get(i, j) - dot) * scale);
+            }
+        }
+        let mut got = dp0.clone();
+        causal_softmax_grad(&p, &mut got, scale);
+        for i in 0..t {
+            for j in 0..=i {
+                assert!(
+                    (want.get(i, j) - got.get(i, j)).abs() < 1e-5,
+                    "dS mismatch at ({i},{j})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn softmax_full_row_mode_unchanged() {
+        // The full-row mode (softmax_rows) must behave exactly as the
+        // historical kernel: this is the "remaining non-attention callers"
+        // path of the fused core.
+        let mut m = Matrix::from_rows(&[&[0.5, -1.0, 2.0]]);
+        let mut want = m.clone();
+        // Historical implementation, inlined.
+        {
+            let row = want.row_mut(0);
+            let max = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            let mut sum = 0.0f32;
+            for v in row.iter_mut() {
+                *v = (*v - max).exp();
+                sum += *v;
+            }
+            let inv = 1.0 / sum;
+            for v in row.iter_mut() {
+                *v *= inv;
+            }
+        }
+        softmax_rows(&mut m);
+        assert_eq!(m.data(), want.data());
+    }
+
+    #[test]
+    fn parallel_clip_norm_bit_identical_across_worker_counts() {
+        // Large enough for several NORM_CHUNK partials; the fixed chunk grid
+        // makes the reduction identical for any worker count.
+        let _knob = crate::tensor::gemm::TEST_KNOB_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let mut rng = crate::util::rng::Rng::new(21);
+        let big = Matrix::randn(110, 1000, 1.0, &mut rng); // > 3 chunks
+        let small = Matrix::randn(3, 5, 1.0, &mut rng);
+        crate::tensor::gemm::set_gemm_threads(1);
+        let mut g1 = vec![big.clone(), small.clone()];
+        let n1 = clip_global_norm_slice(&mut g1, 1.0);
+        for workers in [2usize, 8] {
+            crate::tensor::gemm::set_gemm_threads(workers);
+            let mut gw = vec![big.clone(), small.clone()];
+            let nw = clip_global_norm_slice(&mut gw, 1.0);
+            assert_eq!(n1, nw, "clip norm diverged at {workers} workers");
+            assert_eq!(g1[0].data(), gw[0].data(), "clipped grad diverged");
+            assert_eq!(g1[1].data(), gw[1].data(), "clipped grad diverged");
+        }
+        crate::tensor::gemm::set_gemm_threads(0);
+        // Sanity: the chunked norm agrees with a plain f64 sweep to fp
+        // tolerance.
+        let dense: f64 = big
+            .data()
+            .iter()
+            .chain(small.data())
+            .map(|&x| (x as f64) * (x as f64))
+            .sum();
+        let want = dense.sqrt() as f32;
+        assert!(
+            (n1 - want).abs() / want < 1e-6,
+            "chunked norm {n1} vs dense {want}"
+        );
     }
 
     #[test]

@@ -64,6 +64,17 @@
 //! owns the cores at a time. Concurrent top-level callers each announce
 //! their own job and share the worker set through seat claims.
 //!
+//! # Task-local scratch
+//!
+//! Tasks that need scratch buffers cannot share the caller's single-owner
+//! [`Workspace`]; they lease a whole workspace per task from a pre-sized
+//! `WorkspaceBank` instead (the model's per-(batch, head) attention fan-out
+//! is the canonical user — see the leasing rules in
+//! [`super::workspace`]). Heavier kernels running *inside* a task should
+//! stay sequential: with one pool task per unit of work, the parallelism
+//! already lives at the fan-out level, and nested threading would only run
+//! inline anyway.
+//!
 //! # Scheduler modes
 //!
 //! [`run_mode`] exposes the scheduler choice: [`Sched::Steal`] (the default

@@ -14,9 +14,41 @@
 //! a miss — the next time that size is requested). Zero-length requests are
 //! served without touching the pool or the counters: `Vec::new()` does not
 //! allocate, so degenerate 0-dim shapes can never cause steady-state misses.
+//!
+//! # Per-task leasing: [`WorkspaceBank`]
+//!
+//! A `Workspace` is single-owner by design (`&mut` methods) — it cannot be
+//! shared by the concurrent tasks a `pool::run` fan-out spawns. The
+//! [`WorkspaceBank`] closes that gap: it holds a free list of whole
+//! `Workspace` instances behind a mutex, and each pool task **leases one
+//! workspace for the duration of the task** ([`WorkspaceBank::lease`] /
+//! [`WorkspaceBank::release`]), taking and giving its scratch buffers
+//! through the normal single-owner API. The leasing rules that keep the
+//! zero-allocation contract intact:
+//!
+//! * **Pre-size before fanning out.** [`WorkspaceBank::ensure`] tops the
+//!   bank up to N workspaces, each pre-stocked ([`Workspace::reserve`])
+//!   with the buffer sizes the tasks will take. N must be ≥ the fan-out's
+//!   participant count, so every concurrent lease is served from the free
+//!   list and every `take` inside a task is a pool hit. `ensure` is
+//!   idempotent: steady-state calls verify and do nothing.
+//! * **Return everything.** A task must `give` every buffer back to its
+//!   leased workspace and `release` the workspace before finishing;
+//!   otherwise the next step re-allocates (a miss, visible in
+//!   [`WorkspaceBank::misses`]).
+//! * **Scratch only.** Which workspace a lease returns is
+//!   scheduling-dependent, so leased buffers carry no data across tasks:
+//!   tasks must fully overwrite what they read (the `take_dirty` contract).
+//!   Results therefore stay bit-identical for any worker count.
+//!
+//! Misses are counted inside each member workspace; [`WorkspaceBank::misses`]
+//! sums them and is only meaningful *at rest* (between steps, when every
+//! lease has been released) — the gate in `rust/tests/zero_alloc.rs` reads
+//! it there.
 
 use super::matrix::Matrix;
 use std::collections::HashMap;
+use std::sync::Mutex;
 
 /// A pool of reusable `f32` buffers keyed by length.
 #[derive(Debug, Default)]
@@ -77,6 +109,22 @@ impl Workspace {
         }
     }
 
+    /// Top the pool up so at least `count` buffers of `len` are ready to be
+    /// taken without allocating. Fresh buffers count as misses (they are
+    /// warm-up allocations, same as a cold `take`); once the pool holds
+    /// `count` buffers this is a no-op, so steady-state calls are free.
+    pub fn reserve(&mut self, len: usize, count: usize) {
+        if len == 0 {
+            return;
+        }
+        let have = self.pools.get(&len).map_or(0, |p| p.len());
+        for _ in have..count {
+            self.misses += 1;
+            self.allocated += len;
+            self.pools.entry(len).or_default().push(vec![0.0; len]);
+        }
+    }
+
     /// Return a matrix's buffer to the pool.
     pub fn give(&mut self, m: Matrix) {
         self.give_vec(m.into_vec());
@@ -115,6 +163,79 @@ impl Workspace {
     /// Drop every pooled buffer (keeps counters).
     pub fn clear(&mut self) {
         self.pools.clear();
+    }
+}
+
+/// A bank of [`Workspace`]s leasable by concurrent pool tasks (see the
+/// module docs for the leasing rules). Owned next to the single-owner step
+/// workspace — e.g. `model::StepState` holds one for the per-(batch, head)
+/// attention scratch — and recycled across steps so the zero-allocation
+/// contract extends to fanned-out work.
+#[derive(Debug, Default)]
+pub struct WorkspaceBank {
+    free: Mutex<Vec<Workspace>>,
+}
+
+impl WorkspaceBank {
+    pub fn new() -> WorkspaceBank {
+        WorkspaceBank::default()
+    }
+
+    /// Pre-size the bank: grow the free list to `slots` workspaces and
+    /// stock each with `count` buffers of `len` elements per `(len, count)`
+    /// entry. Idempotent — a warm call verifies and allocates nothing.
+    /// Call *at rest* (before fanning out), with `slots` ≥ the planned
+    /// participant count, so concurrent leases never allocate.
+    pub fn ensure(&self, slots: usize, sizes: &[(usize, usize)]) {
+        let mut free = self.free.lock().unwrap_or_else(|e| e.into_inner());
+        while free.len() < slots {
+            free.push(Workspace::new());
+        }
+        for ws in free.iter_mut() {
+            for &(len, count) in sizes {
+                ws.reserve(len, count);
+            }
+        }
+    }
+
+    /// Lease one workspace for the duration of a task. Falls back to a
+    /// fresh (empty) workspace when the free list is dry — correct, but its
+    /// takes will allocate; [`ensure`] with a sufficient slot count prevents
+    /// that.
+    ///
+    /// [`ensure`]: WorkspaceBank::ensure
+    pub fn lease(&self) -> Workspace {
+        self.free
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .pop()
+            .unwrap_or_default()
+    }
+
+    /// Return a leased workspace to the free list.
+    pub fn release(&self, ws: Workspace) {
+        self.free.lock().unwrap_or_else(|e| e.into_inner()).push(ws);
+    }
+
+    /// Total misses across the banked workspaces. Only meaningful at rest
+    /// (every lease released) — the zero-alloc gate's per-head scratch
+    /// proxy.
+    pub fn misses(&self) -> usize {
+        self.free
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .iter()
+            .map(|ws| ws.misses())
+            .sum()
+    }
+
+    /// Workspaces currently at rest in the bank.
+    pub fn len(&self) -> usize {
+        self.free.lock().unwrap_or_else(|e| e.into_inner()).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
     }
 }
 
@@ -179,6 +300,64 @@ mod tests {
         let _ = ws.take(0, 0);
         assert_eq!((ws.hits(), ws.misses()), (0, 0));
         assert_eq!(ws.allocated_elems(), 0);
+    }
+
+    #[test]
+    fn reserve_tops_up_then_noops() {
+        let mut ws = Workspace::new();
+        ws.reserve(12, 3);
+        assert_eq!(ws.misses(), 3);
+        // Warm call: pool already holds 3 buffers of len 12.
+        ws.reserve(12, 3);
+        assert_eq!(ws.misses(), 3);
+        // All three takes are hits.
+        let a = ws.take_vec(12);
+        let b = ws.take_vec(12);
+        let c = ws.take_vec(12);
+        assert_eq!((ws.hits(), ws.misses()), (3, 3));
+        ws.give_vec(a);
+        ws.give_vec(b);
+        ws.give_vec(c);
+        // Partial pool tops up only the difference.
+        let d = ws.take_vec(12);
+        ws.reserve(12, 3);
+        assert_eq!(ws.misses(), 4);
+        ws.give_vec(d);
+        // Zero-length reservations never touch the pool.
+        ws.reserve(0, 8);
+        assert_eq!(ws.misses(), 4);
+    }
+
+    #[test]
+    fn bank_leases_are_prestocked_and_recycle() {
+        let bank = WorkspaceBank::new();
+        bank.ensure(2, &[(8, 2), (16, 1)]);
+        let warmup = bank.misses();
+        assert_eq!(warmup, 2 * 3, "2 slots × (2 + 1) reserved buffers");
+        assert_eq!(bank.len(), 2);
+        // A lease/take/give/release cycle adds no misses.
+        let mut ws = bank.lease();
+        let m = ws.take_dirty(2, 4);
+        let v = ws.take_vec_dirty(16);
+        ws.give(m);
+        ws.give_vec(v);
+        bank.release(ws);
+        assert_eq!(bank.misses(), warmup, "warm lease allocated");
+        // Warm ensure is a no-op.
+        bank.ensure(2, &[(8, 2), (16, 1)]);
+        assert_eq!(bank.misses(), warmup);
+        // Over-leasing past the free list still works (fresh workspace; its
+        // takes miss, and the bank absorbs it on release).
+        let a = bank.lease();
+        let b = bank.lease();
+        let mut c = bank.lease();
+        let m = c.take_dirty(1, 8);
+        c.give(m);
+        bank.release(a);
+        bank.release(b);
+        bank.release(c);
+        assert_eq!(bank.len(), 3);
+        assert_eq!(bank.misses(), warmup + 1);
     }
 
     #[test]

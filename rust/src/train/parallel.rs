@@ -7,7 +7,9 @@
 //! so the two levels of parallelism share one thread budget: while a shard
 //! runs, its thread opts out of nested kernel fan-out via
 //! [`gemm::run_single_threaded`] (the pool would run nested fan-out inline
-//! anyway). Under the work-stealing scheduler a shard is one pool task like
+//! anyway) — which also collapses the model's per-(batch, head) attention
+//! fan-out to its sequential path inside a shard, the same single-budget
+//! pattern. Under the work-stealing scheduler a shard is one pool task like
 //! any other: stealing may move a shard between participants before it
 //! starts, but each shard executes exactly once, writes only its own slot,
 //! and the reduction below walks the slots in fixed shard order — so the

@@ -1,0 +1,110 @@
+//! Determinism gates for the head-parallel attention fan-out.
+//!
+//! The model dispatches its per-(batch, head) attention work — forward and
+//! backward — as pool tasks. Placement is scheduling-dependent; results must
+//! not be: every task runs the identical sequential triangular kernels and
+//! writes disjoint output regions, so at fixed chunk settings the loss and
+//! every gradient must be **bit-identical across 1/2/8 workers**, matching
+//! the contract the GEMM/QR/SVD kernels established in
+//! `rust/tests/subspace_props.rs`. A second layer checks the DP-sharded
+//! trainer path: shards opt out of nested fan-out
+//! (`gemm::run_single_threaded`), so the kernel worker count must not leak
+//! into DP results either.
+
+use subtrack::model::{Batch, Llama, ModelConfig, StepState};
+use subtrack::tensor::gemm;
+use subtrack::train::parallel;
+use subtrack::util::rng::Rng;
+
+/// Serializes tests that mutate the process-global worker/chunk knobs (the
+/// harness runs this binary's tests concurrently; see the same guard in
+/// `subspace_props.rs`).
+static THREAD_KNOB: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn setup(preset: &str, b: usize, seed: u64) -> (Llama, Batch) {
+    let cfg = ModelConfig::preset(preset);
+    let model = Llama::new(cfg.clone(), seed);
+    let mut rng = Rng::new(seed ^ 0xa77);
+    let t = cfg.seq_len;
+    let inputs: Vec<u32> = (0..b * t).map(|_| rng.below(cfg.vocab) as u32).collect();
+    let targets: Vec<u32> = (0..b * t).map(|_| rng.below(cfg.vocab) as u32).collect();
+    (model, Batch { inputs, targets, b, t })
+}
+
+#[test]
+fn loss_and_grad_bit_identical_across_worker_counts() {
+    // tiny at b=4: 16 head tasks, large enough to clear the auto fan-out
+    // gate; chunk 4 forces ragged chunks and real steals in the surrounding
+    // GEMMs so the whole step (not just attention) is exercised.
+    let _guard = THREAD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    let (model, batch) = setup("tiny", 4, 91);
+    gemm::set_gemm_chunk(4);
+    gemm::set_gemm_threads(1);
+    let mut state1 = StepState::new();
+    let mut grads1 = model.zero_grads();
+    let loss1 = model.loss_and_grad_into(&batch, &mut grads1, &mut state1);
+    for workers in [2usize, 8] {
+        gemm::set_gemm_threads(workers);
+        let mut state = StepState::new();
+        let mut grads = model.zero_grads();
+        let loss = model.loss_and_grad_into(&batch, &mut grads, &mut state);
+        assert_eq!(loss1, loss, "loss diverged at {workers} workers");
+        for (pi, (a, b)) in grads1.iter().zip(&grads).enumerate() {
+            assert_eq!(
+                a.data(),
+                b.data(),
+                "grad of param {} ({}) diverged at {workers} workers",
+                pi,
+                model.params[pi].name
+            );
+        }
+        // A second step through the same (now warm) state must also agree:
+        // the recycled head-scratch bank carries no data across steps.
+        let loss_warm = model.loss_and_grad_into(&batch, &mut grads, &mut state);
+        assert_eq!(loss1, loss_warm, "warm-state loss diverged at {workers} workers");
+        for (a, b) in grads1.iter().zip(&grads) {
+            assert_eq!(a.data(), b.data(), "warm-state grad diverged at {workers} workers");
+        }
+    }
+    gemm::set_gemm_threads(0);
+    gemm::set_gemm_chunk(0);
+}
+
+#[test]
+fn eval_loss_bit_identical_across_worker_counts() {
+    let _guard = THREAD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    let (model, batch) = setup("tiny", 4, 92);
+    gemm::set_gemm_chunk(4);
+    gemm::set_gemm_threads(1);
+    let loss1 = model.loss_ws(&batch, &mut StepState::new());
+    for workers in [2usize, 8] {
+        gemm::set_gemm_threads(workers);
+        let loss = model.loss_ws(&batch, &mut StepState::new());
+        assert_eq!(loss1, loss, "eval loss diverged at {workers} workers");
+    }
+    gemm::set_gemm_threads(0);
+    gemm::set_gemm_chunk(0);
+}
+
+#[test]
+fn dp_sharded_trainer_bit_identical_across_kernel_worker_counts() {
+    // Fixed DP shard count (4); the kernel worker budget must not leak into
+    // the averaged gradient: inside a shard the attention fan-out runs its
+    // sequential path (run_single_threaded opt-out), and the shard
+    // reduction walks slots in fixed order.
+    let _guard = THREAD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    let (model, batch) = setup("nano", 4, 93);
+    gemm::set_gemm_chunk(2);
+    gemm::set_gemm_threads(1);
+    let (loss1, grads1) = parallel::data_parallel_loss_grad(&model, &batch, 4);
+    for workers in [2usize, 8] {
+        gemm::set_gemm_threads(workers);
+        let (loss, grads) = parallel::data_parallel_loss_grad(&model, &batch, 4);
+        assert_eq!(loss1, loss, "DP loss diverged at {workers} kernel workers");
+        for (a, b) in grads1.iter().zip(&grads) {
+            assert_eq!(a.data(), b.data(), "DP grad diverged at {workers} kernel workers");
+        }
+    }
+    gemm::set_gemm_threads(0);
+    gemm::set_gemm_chunk(0);
+}

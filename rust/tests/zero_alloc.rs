@@ -17,6 +17,11 @@
 //! `pool::run` submission leases pre-sized job state (range deques, seat
 //! counters) and must not allocate, with `pool::job_state_misses()` as the
 //! proxy counter.
+//!
+//! The head-scratch gate covers the per-(batch, head) attention fan-out:
+//! every pool task leases its Q/K/V/score scratch from the `StepState`'s
+//! pre-sized `WorkspaceBank`, so bank misses (the per-head analogue of
+//! workspace misses) may occur only on the warm-up step.
 
 use subtrack::model::{Batch, Llama, ModelConfig, StepState};
 use subtrack::optim::{self, Adam, AdamCfg, HyperParams, Optimizer};
@@ -181,6 +186,35 @@ fn wy_blocked_reorth_boundary_allocates_only_on_first_pass() {
             i + 1
         );
     }
+}
+
+#[test]
+fn per_head_attention_scratch_misses_only_on_warmup() {
+    // The head-parallel fan-out leases per-task scratch from the StepState's
+    // WorkspaceBank. The bank is pre-sized before the first fan-out, so its
+    // misses (read at rest, between steps) must be fixed after step 1 —
+    // forward populates the union of the forward/backward per-task shapes,
+    // and the backward fan-out of the same step must already be served.
+    let cfg = ModelConfig::preset("tiny");
+    let mut model = Llama::new(cfg.clone(), 5);
+    let batch = batch_for(&cfg, 4, 6);
+    let mut state = StepState::new();
+    let mut grads = model.zero_grads();
+    let mut opt = Adam::new(AdamCfg::default());
+    let mut per_step = Vec::new();
+    for _ in 0..4 {
+        let loss = model.loss_and_grad_into(&batch, &mut grads, &mut state);
+        assert!(loss.is_finite());
+        opt.step(1e-3, &mut model.params, &grads);
+        per_step.push(state.heads.misses());
+    }
+    assert!(per_step[0] > 0, "warm-up step must populate the head-scratch bank");
+    assert_eq!(per_step[0], per_step[1], "step 2 leased fresh head scratch: {per_step:?}");
+    assert_eq!(per_step[1], per_step[2], "step 3 leased fresh head scratch: {per_step:?}");
+    assert_eq!(per_step[2], per_step[3], "step 4 leased fresh head scratch: {per_step:?}");
+    // Eval (loss-only) steps share the same bank and add nothing either.
+    let _ = model.loss_ws(&batch, &mut state);
+    assert_eq!(state.heads.misses(), per_step[3], "eval leased fresh head scratch");
 }
 
 #[test]
