@@ -13,7 +13,8 @@
 use std::time::Instant;
 use subtrack::model::{Batch, Llama, ModelConfig, StepState};
 use subtrack::optim::{Adam, AdamCfg, Optimizer};
-use subtrack::tensor::gemm;
+use subtrack::tensor::{gemm, ops};
+use subtrack::train::{FaultPolicy, Sentinel, SentinelConfig};
 use subtrack::util::json::{merge_section_into_file, Json};
 use subtrack::util::rng::Rng;
 
@@ -96,6 +97,31 @@ fn main() {
         state.ws.misses(),
     );
 
+    // Fault-tolerance overhead: the per-step sentinel check (norm read +
+    // window fold) and a full rollback snapshot (param deep-copy + packed
+    // optimizer state), timed against the same model.
+    let mut sentinel = Sentinel::new(SentinelConfig {
+        policy: FaultPolicy::Rollback,
+        ..SentinelConfig::default()
+    });
+    let reps = 50usize;
+    let t0 = Instant::now();
+    for s in 0..reps {
+        let norm = ops::global_norm_slice(&grads);
+        std::hint::black_box(sentinel.check(s, 1.0, norm));
+    }
+    let sentinel_ms = t0.elapsed().as_secs_f64() / reps as f64 * 1e3;
+    let t0 = Instant::now();
+    let mut saved: Vec<subtrack::tensor::Matrix> = Vec::new();
+    for _ in 0..reps {
+        saved.clear();
+        saved.extend(model.params.iter().map(|p| p.value.clone()));
+        std::hint::black_box(opt.snapshot());
+    }
+    let snapshot_ms = t0.elapsed().as_secs_f64() / reps as f64 * 1e3;
+    println!("sentinel check (norm + window): {sentinel_ms:.3} ms");
+    println!("rollback snapshot (params + opt): {snapshot_ms:.3} ms");
+
     let record = Json::obj(vec![(
         preset.as_str(),
         Json::obj(vec![
@@ -107,6 +133,8 @@ fn main() {
             ("step_ms", Json::Num(step_secs * 1e3)),
             ("steps_per_sec", Json::Num(steps_per_sec)),
             ("steady_state_ws_misses", Json::Num(state.ws.misses() as f64)),
+            ("train.sentinel_ms", Json::Num(sentinel_ms)),
+            ("train.snapshot_ms", Json::Num(snapshot_ms)),
             ("batch", Json::Num(b as f64)),
             ("seq_len", Json::Num(t as f64)),
         ]),

@@ -2,7 +2,7 @@
 //! shared per-matrix moment machinery that every low-rank method reuses in
 //! its reduced space.
 
-use super::{HyperParams, Optimizer, Param};
+use super::{HyperParams, Optimizer, OptimizerSnapshot, Param, SnapshotReader};
 use crate::tensor::Matrix;
 
 /// Adam configuration.
@@ -159,6 +159,27 @@ impl Moments {
     pub fn params(&self) -> usize {
         self.m.len() + self.v.len()
     }
+
+    /// Pack m, v, t into a snapshot (see `Optimizer::snapshot`).
+    pub fn pack(&self, snap: &mut OptimizerSnapshot) {
+        snap.push_mat(&self.m);
+        snap.push_mat(&self.v);
+        snap.push_int(self.t as u64);
+    }
+
+    /// Rebuild moments from the stream produced by [`Moments::pack`].
+    pub fn unpack(r: &mut SnapshotReader) -> Moments {
+        let m = r.mat();
+        let v = r.mat();
+        Moments { m, v, t: r.int() as usize }
+    }
+
+    /// In-place [`Moments::unpack`] (no allocation when shapes match).
+    pub fn unpack_into(&mut self, r: &mut SnapshotReader) {
+        r.mat_into(&mut self.m);
+        r.mat_into(&mut self.v);
+        self.t = r.int() as usize;
+    }
 }
 
 /// Full-rank Adam(W). Optimizer state is 2·mn per matrix — the paper's
@@ -198,6 +219,28 @@ impl Optimizer for Adam {
 
     fn state_params(&self) -> usize {
         self.states.iter().map(|s| s.params()).sum()
+    }
+
+    // Pack order: state count, then each state's (m, v, t).
+    fn snapshot(&self) -> OptimizerSnapshot {
+        let mut snap = OptimizerSnapshot::new();
+        snap.push_int(self.states.len() as u64);
+        for st in &self.states {
+            st.pack(&mut snap);
+        }
+        snap
+    }
+
+    fn restore(&mut self, snap: &OptimizerSnapshot) {
+        let mut r = snap.reader();
+        let n = r.int() as usize;
+        if self.states.len() != n {
+            self.states = (0..n).map(|_| Moments::unpack(&mut r)).collect();
+        } else {
+            for st in &mut self.states {
+                st.unpack_into(&mut r);
+            }
+        }
     }
 
     fn name(&self) -> String {

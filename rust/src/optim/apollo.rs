@@ -14,7 +14,7 @@
 
 use super::adam::{AdamCfg, Moments};
 use super::projector::{Projector, Side};
-use super::{HyperParams, Optimizer, Param, ParamKind};
+use super::{HyperParams, Optimizer, OptimizerSnapshot, Param, ParamKind, SnapshotReader};
 use crate::tensor::{Matrix, Workspace};
 use crate::util::rng::Rng;
 
@@ -134,6 +134,57 @@ impl Optimizer for Apollo {
 
     fn workspace_misses(&self) -> usize {
         self.ws.misses()
+    }
+
+    // Pack order: step_no, n_subspace_updates, rng, matrix slots (presence +
+    // projector + moments), vector moment slots. APOLLO's sketch is not
+    // orthonormal, so there is no refresh guard (and no poison hook).
+    fn snapshot(&self) -> OptimizerSnapshot {
+        let mut snap = OptimizerSnapshot::new();
+        snap.push_int(self.step_no as u64);
+        snap.push_int(self.n_subspace_updates as u64);
+        snap.push_rng(&self.rng);
+        snap.push_int(self.mats.len() as u64);
+        for slot in &self.mats {
+            match slot {
+                Some(st) => {
+                    snap.push_int(1);
+                    st.proj.pack(&mut snap);
+                    st.moments.pack(&mut snap);
+                }
+                None => snap.push_int(0),
+            }
+        }
+        super::pack_moment_slots(&mut snap, &self.vecs);
+        snap
+    }
+
+    fn restore(&mut self, snap: &OptimizerSnapshot) {
+        let mut r = snap.reader();
+        self.step_no = r.int() as usize;
+        self.n_subspace_updates = r.int() as usize;
+        self.rng = r.rng();
+        let n_mats = r.int() as usize;
+        self.mats.resize_with(n_mats, || None);
+        for slot in &mut self.mats {
+            if r.int() == 1 {
+                match slot {
+                    Some(st) => {
+                        st.proj.unpack_into(&mut r);
+                        st.moments.unpack_into(&mut r);
+                    }
+                    None => {
+                        *slot = Some(MatState {
+                            proj: Projector::unpack(&mut r),
+                            moments: Moments::unpack(&mut r),
+                        });
+                    }
+                }
+            } else {
+                *slot = None;
+            }
+        }
+        super::unpack_moment_slots(&mut r, &mut self.vecs);
     }
 
     fn name(&self) -> String {

@@ -6,7 +6,7 @@
 //! parameter tuning and the worst evaluation loss (Table 1).
 
 use super::adam::{AdamCfg, Moments};
-use super::{HyperParams, Optimizer, Param};
+use super::{HyperParams, Optimizer, OptimizerSnapshot, Param};
 use crate::tensor::Matrix;
 use crate::util::rng::Rng;
 
@@ -89,6 +89,40 @@ impl Optimizer for BAdam {
 
     fn subspace_updates(&self) -> usize {
         self.n_switches
+    }
+
+    // Pack order: active, step_no, n_switches, rng, active-block moments
+    // (presence + payload).
+    fn snapshot(&self) -> OptimizerSnapshot {
+        let mut snap = OptimizerSnapshot::new();
+        snap.push_int(self.active as u64);
+        snap.push_int(self.step_no as u64);
+        snap.push_int(self.n_switches as u64);
+        snap.push_rng(&self.rng);
+        match &self.state {
+            Some(st) => {
+                snap.push_int(1);
+                st.pack(&mut snap);
+            }
+            None => snap.push_int(0),
+        }
+        snap
+    }
+
+    fn restore(&mut self, snap: &OptimizerSnapshot) {
+        let mut r = snap.reader();
+        self.active = r.int() as usize;
+        self.step_no = r.int() as usize;
+        self.n_switches = r.int() as usize;
+        self.rng = r.rng();
+        if r.int() == 1 {
+            match &mut self.state {
+                Some(st) => st.unpack_into(&mut r),
+                None => self.state = Some(Moments::unpack(&mut r)),
+            }
+        } else {
+            self.state = None;
+        }
     }
 
     fn name(&self) -> String {

@@ -9,8 +9,8 @@
 //! replaces the SVD subspace refresh with Grassmannian tracking.
 
 use super::adam::{AdamCfg, Moments};
-use super::projector::{Projector, Side};
-use super::{HyperParams, Optimizer, Param, ParamKind};
+use super::projector::{self, Projector, Side};
+use super::{HyperParams, Optimizer, OptimizerSnapshot, Param, ParamKind, SnapshotReader};
 use crate::tensor::{Matrix, Workspace};
 
 struct MatState {
@@ -27,6 +27,8 @@ pub struct Fira {
     vecs: Vec<Option<Moments>>,
     step_no: usize,
     n_subspace_updates: usize,
+    n_refresh_rejections: usize,
+    poison_refresh: bool,
     /// Accumulated SVD refresh wall-time (seconds).
     pub svd_seconds: f64,
     /// Per-step projection/recovery scratch (zero steady-state allocation).
@@ -42,6 +44,8 @@ impl Fira {
             vecs: Vec::new(),
             step_no: 0,
             n_subspace_updates: 0,
+            n_refresh_rejections: 0,
+            poison_refresh: false,
             svd_seconds: 0.0,
             ws: Workspace::new(),
         }
@@ -117,10 +121,36 @@ impl Optimizer for Fira {
                                 prev_lambda_norm: 0.0,
                             });
                         } else {
-                            // In-place refresh with workspace-leased scratch.
-                            let Fira { ws, mats, n_subspace_updates, .. } = &mut *self;
-                            mats[i].as_mut().unwrap().proj.refresh_svd_into(g, ws);
-                            *n_subspace_updates += 1;
+                            // In-place refresh with workspace-leased scratch,
+                            // behind the health guard: a degenerate (or
+                            // fault-injected) candidate basis is rejected and
+                            // the previous projector kept.
+                            let Fira {
+                                ws,
+                                mats,
+                                n_subspace_updates,
+                                n_refresh_rejections,
+                                poison_refresh,
+                                ..
+                            } = &mut *self;
+                            let st = mats[i].as_mut().unwrap();
+                            let (sr, sc) = st.proj.s.shape();
+                            let mut old_s = ws.take_dirty(sr, sc);
+                            old_s.copy_from(&st.proj.s);
+                            st.proj.refresh_svd_into(g, ws);
+                            if std::mem::take(poison_refresh) {
+                                projector::poison_basis(&mut st.proj.s);
+                            }
+                            if projector::basis_acceptable(
+                                &st.proj.s,
+                                projector::REFRESH_DEFECT_TOL,
+                            ) {
+                                *n_subspace_updates += 1;
+                            } else {
+                                st.proj.s.copy_from(&old_s);
+                                *n_refresh_rejections += 1;
+                            }
+                            ws.give(old_s);
                         }
                         self.svd_seconds += t0.elapsed().as_secs_f64();
                     }
@@ -195,6 +225,68 @@ impl Optimizer for Fira {
 
     fn projector_defect(&self) -> Option<f32> {
         Some(self.mats.iter().flatten().map(|s| s.proj.defect()).fold(0.0f32, f32::max))
+    }
+
+    fn poison_next_refresh(&mut self) {
+        self.poison_refresh = true;
+    }
+
+    fn refresh_rejections(&self) -> usize {
+        self.n_refresh_rejections
+    }
+
+    // Pack order: step_no, n_subspace_updates, n_refresh_rejections, matrix
+    // slots (presence + projector + moments + prev_lambda_norm), vector
+    // moment slots.
+    fn snapshot(&self) -> OptimizerSnapshot {
+        let mut snap = OptimizerSnapshot::new();
+        snap.push_int(self.step_no as u64);
+        snap.push_int(self.n_subspace_updates as u64);
+        snap.push_int(self.n_refresh_rejections as u64);
+        snap.push_int(self.mats.len() as u64);
+        for slot in &self.mats {
+            match slot {
+                Some(st) => {
+                    snap.push_int(1);
+                    st.proj.pack(&mut snap);
+                    st.moments.pack(&mut snap);
+                    snap.push_float(st.prev_lambda_norm as f64);
+                }
+                None => snap.push_int(0),
+            }
+        }
+        super::pack_moment_slots(&mut snap, &self.vecs);
+        snap
+    }
+
+    fn restore(&mut self, snap: &OptimizerSnapshot) {
+        let mut r = snap.reader();
+        self.step_no = r.int() as usize;
+        self.n_subspace_updates = r.int() as usize;
+        self.n_refresh_rejections = r.int() as usize;
+        let n_mats = r.int() as usize;
+        self.mats.resize_with(n_mats, || None);
+        for slot in &mut self.mats {
+            if r.int() == 1 {
+                match slot {
+                    Some(st) => {
+                        st.proj.unpack_into(&mut r);
+                        st.moments.unpack_into(&mut r);
+                        st.prev_lambda_norm = r.float() as f32;
+                    }
+                    None => {
+                        *slot = Some(MatState {
+                            proj: Projector::unpack(&mut r),
+                            moments: Moments::unpack(&mut r),
+                            prev_lambda_norm: r.float() as f32,
+                        });
+                    }
+                }
+            } else {
+                *slot = None;
+            }
+        }
+        super::unpack_moment_slots(&mut r, &mut self.vecs);
     }
 
     fn name(&self) -> String {

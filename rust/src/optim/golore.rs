@@ -4,8 +4,8 @@
 //! noise-dominated and SVD locks onto noise directions.
 
 use super::adam::{AdamCfg, Moments};
-use super::projector::Projector;
-use super::{HyperParams, Optimizer, Param, ParamKind};
+use super::projector::{self, Projector};
+use super::{HyperParams, Optimizer, OptimizerSnapshot, Param, ParamKind, SnapshotReader};
 use crate::tensor::{Matrix, Workspace};
 use crate::util::rng::Rng;
 
@@ -23,6 +23,8 @@ pub struct GoLore {
     step_no: usize,
     rng: Rng,
     n_subspace_updates: usize,
+    n_refresh_rejections: usize,
+    poison_refresh: bool,
     /// Switch from SVD to random projections after this many steps. The
     /// reference recipe switches in the last third of training; the trainer
     /// sets this from the configured total step budget.
@@ -42,6 +44,8 @@ impl GoLore {
             step_no: 0,
             rng: Rng::new(hp.seed ^ 0x601e),
             n_subspace_updates: 0,
+            n_refresh_rejections: 0,
+            poison_refresh: false,
             switch_after: 1000,
             ws: Workspace::new(),
         }
@@ -77,15 +81,39 @@ impl Optimizer for GoLore {
                         self.mats[i] =
                             Some(MatState { proj, moments: Moments::new(lm, ln) });
                     } else if refresh {
-                        // In-place refresh with workspace-leased scratch.
-                        let GoLore { ws, mats, rng, n_subspace_updates, .. } = &mut *self;
+                        // In-place refresh with workspace-leased scratch,
+                        // behind the health guard: a degenerate (or
+                        // fault-injected) candidate basis is rejected and the
+                        // previous projector kept until the next interval.
+                        let GoLore {
+                            ws,
+                            mats,
+                            rng,
+                            n_subspace_updates,
+                            n_refresh_rejections,
+                            poison_refresh,
+                            ..
+                        } = &mut *self;
                         let st = mats[i].as_mut().expect("initialized above");
+                        let (sr, sc) = st.proj.s.shape();
+                        let mut old_s = ws.take_dirty(sr, sc);
+                        old_s.copy_from(&st.proj.s);
                         if late_phase {
                             st.proj.refresh_random_orthonormal_into(rng, ws);
                         } else {
                             st.proj.refresh_svd_into(g, ws);
                         }
-                        *n_subspace_updates += 1;
+                        if std::mem::take(poison_refresh) {
+                            projector::poison_basis(&mut st.proj.s);
+                        }
+                        if projector::basis_acceptable(&st.proj.s, projector::REFRESH_DEFECT_TOL)
+                        {
+                            *n_subspace_updates += 1;
+                        } else {
+                            st.proj.s.copy_from(&old_s);
+                            *n_refresh_rejections += 1;
+                        }
+                        ws.give(old_s);
                     }
                     let adam = self.adam;
                     let scale = self.hp.scale;
@@ -142,6 +170,66 @@ impl Optimizer for GoLore {
 
     fn projector_defect(&self) -> Option<f32> {
         Some(self.mats.iter().flatten().map(|s| s.proj.defect()).fold(0.0f32, f32::max))
+    }
+
+    fn poison_next_refresh(&mut self) {
+        self.poison_refresh = true;
+    }
+
+    fn refresh_rejections(&self) -> usize {
+        self.n_refresh_rejections
+    }
+
+    // Pack order: step_no, n_subspace_updates, n_refresh_rejections, rng,
+    // matrix slots (presence + projector + moments), vector moment slots.
+    fn snapshot(&self) -> OptimizerSnapshot {
+        let mut snap = OptimizerSnapshot::new();
+        snap.push_int(self.step_no as u64);
+        snap.push_int(self.n_subspace_updates as u64);
+        snap.push_int(self.n_refresh_rejections as u64);
+        snap.push_rng(&self.rng);
+        snap.push_int(self.mats.len() as u64);
+        for slot in &self.mats {
+            match slot {
+                Some(st) => {
+                    snap.push_int(1);
+                    st.proj.pack(&mut snap);
+                    st.moments.pack(&mut snap);
+                }
+                None => snap.push_int(0),
+            }
+        }
+        super::pack_moment_slots(&mut snap, &self.vecs);
+        snap
+    }
+
+    fn restore(&mut self, snap: &OptimizerSnapshot) {
+        let mut r = snap.reader();
+        self.step_no = r.int() as usize;
+        self.n_subspace_updates = r.int() as usize;
+        self.n_refresh_rejections = r.int() as usize;
+        self.rng = r.rng();
+        let n_mats = r.int() as usize;
+        self.mats.resize_with(n_mats, || None);
+        for slot in &mut self.mats {
+            if r.int() == 1 {
+                match slot {
+                    Some(st) => {
+                        st.proj.unpack_into(&mut r);
+                        st.moments.unpack_into(&mut r);
+                    }
+                    None => {
+                        *slot = Some(MatState {
+                            proj: Projector::unpack(&mut r),
+                            moments: Moments::unpack(&mut r),
+                        });
+                    }
+                }
+            } else {
+                *slot = None;
+            }
+        }
+        super::unpack_moment_slots(&mut r, &mut self.vecs);
     }
 
     fn name(&self) -> String {

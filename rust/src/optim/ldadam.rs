@@ -20,7 +20,7 @@
 
 use super::adam::{AdamCfg, Moments};
 use super::projector::{self, Projector, Side};
-use super::{HyperParams, Optimizer, Param, ParamKind};
+use super::{HyperParams, Optimizer, OptimizerSnapshot, Param, ParamKind, SnapshotReader};
 use crate::tensor::{gemm, qr, Matrix, Workspace};
 
 struct MatState {
@@ -37,6 +37,8 @@ pub struct LdAdam {
     mats: Vec<Option<MatState>>,
     vecs: Vec<Option<Moments>>,
     n_subspace_updates: usize,
+    n_refresh_rejections: usize,
+    poison_refresh: bool,
     /// Per-step refresh + projection scratch (zero steady-state allocation).
     ws: Workspace,
 }
@@ -49,6 +51,8 @@ impl LdAdam {
             mats: Vec::new(),
             vecs: Vec::new(),
             n_subspace_updates: 0,
+            n_refresh_rejections: 0,
+            poison_refresh: false,
             ws: Workspace::new(),
         }
     }
@@ -102,7 +106,14 @@ impl Optimizer for LdAdam {
                     let adam = self.adam;
                     let lr_scaled = -lr * self.hp.scale;
                     // Disjoint borrows: scratch pool vs per-matrix state.
-                    let LdAdam { ws, mats, n_subspace_updates, .. } = &mut *self;
+                    let LdAdam {
+                        ws,
+                        mats,
+                        n_subspace_updates,
+                        n_refresh_rejections,
+                        poison_refresh,
+                        ..
+                    } = &mut *self;
                     let st = mats[i].as_mut().expect("initialized above");
 
                     // Error feedback: optimize the corrected gradient.
@@ -110,7 +121,10 @@ impl Optimizer for LdAdam {
                     g.zip_into(&st.err, &mut g_corr, |gv, ev| gv + ev);
 
                     // Projector refresh every iteration (warm-started power
-                    // sweep), moving the basis in place.
+                    // sweep), moving the basis in place. The old basis backs
+                    // the health guard: a degenerate (or fault-injected)
+                    // candidate is rejected, keeping the previous basis and
+                    // leaving the moments unrotated.
                     let (dim, r) = st.proj.s.shape();
                     let mut old_s = ws.take_dirty(dim, r);
                     old_s.copy_from(&st.proj.s);
@@ -123,21 +137,29 @@ impl Optimizer for LdAdam {
                             ws.give(gt);
                         }
                     }
-                    if st.moments.t > 0 {
-                        // Projection-aware rotation (Eqs. 8–9).
-                        let mut q = ws.take_dirty(r, r);
-                        gemm::matmul_tn_into(&mut q, &st.proj.s, &old_s, ws);
-                        projector::rotate_moments_into(
-                            &q,
-                            &mut st.moments,
-                            st.proj.side,
-                            adam.beta2,
-                            ws,
-                        );
-                        ws.give(q);
+                    if std::mem::take(poison_refresh) {
+                        projector::poison_basis(&mut st.proj.s);
+                    }
+                    if projector::basis_acceptable(&st.proj.s, projector::REFRESH_DEFECT_TOL) {
+                        if st.moments.t > 0 {
+                            // Projection-aware rotation (Eqs. 8–9).
+                            let mut q = ws.take_dirty(r, r);
+                            gemm::matmul_tn_into(&mut q, &st.proj.s, &old_s, ws);
+                            projector::rotate_moments_into(
+                                &q,
+                                &mut st.moments,
+                                st.proj.side,
+                                adam.beta2,
+                                ws,
+                            );
+                            ws.give(q);
+                        }
+                        *n_subspace_updates += 1;
+                    } else {
+                        st.proj.s.copy_from(&old_s);
+                        *n_refresh_rejections += 1;
                     }
                     ws.give(old_s);
-                    *n_subspace_updates += 1;
 
                     let (lm, ln) = st.proj.lowrank_shape(m, n);
                     let mut g_low = ws.take_dirty(lm, ln);
@@ -201,6 +223,65 @@ impl Optimizer for LdAdam {
 
     fn projector_defect(&self) -> Option<f32> {
         Some(self.mats.iter().flatten().map(|s| s.proj.defect()).fold(0.0f32, f32::max))
+    }
+
+    fn poison_next_refresh(&mut self) {
+        self.poison_refresh = true;
+    }
+
+    fn refresh_rejections(&self) -> usize {
+        self.n_refresh_rejections
+    }
+
+    // Pack order: n_subspace_updates, n_refresh_rejections, matrix slots
+    // (presence + projector + moments + error buffer), vector moment slots.
+    fn snapshot(&self) -> OptimizerSnapshot {
+        let mut snap = OptimizerSnapshot::new();
+        snap.push_int(self.n_subspace_updates as u64);
+        snap.push_int(self.n_refresh_rejections as u64);
+        snap.push_int(self.mats.len() as u64);
+        for slot in &self.mats {
+            match slot {
+                Some(st) => {
+                    snap.push_int(1);
+                    st.proj.pack(&mut snap);
+                    st.moments.pack(&mut snap);
+                    snap.push_mat(&st.err);
+                }
+                None => snap.push_int(0),
+            }
+        }
+        super::pack_moment_slots(&mut snap, &self.vecs);
+        snap
+    }
+
+    fn restore(&mut self, snap: &OptimizerSnapshot) {
+        let mut r = snap.reader();
+        self.n_subspace_updates = r.int() as usize;
+        self.n_refresh_rejections = r.int() as usize;
+        let n_mats = r.int() as usize;
+        self.mats.resize_with(n_mats, || None);
+        for slot in &mut self.mats {
+            if r.int() == 1 {
+                match slot {
+                    Some(st) => {
+                        st.proj.unpack_into(&mut r);
+                        st.moments.unpack_into(&mut r);
+                        r.mat_into(&mut st.err);
+                    }
+                    None => {
+                        *slot = Some(MatState {
+                            proj: Projector::unpack(&mut r),
+                            moments: Moments::unpack(&mut r),
+                            err: r.mat(),
+                        });
+                    }
+                }
+            } else {
+                *slot = None;
+            }
+        }
+        super::unpack_moment_slots(&mut r, &mut self.vecs);
     }
 
     fn name(&self) -> String {

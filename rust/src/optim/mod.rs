@@ -39,6 +39,7 @@ pub use osd::OnlineSubspaceDescent;
 pub use subtrack::{Components, SubTrack};
 
 use crate::tensor::Matrix;
+use crate::util::rng::Rng;
 
 /// Whether a parameter participates in low-rank projection.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -331,6 +332,148 @@ impl Default for HyperParams {
     }
 }
 
+/// A deep copy of an optimizer's mutable state (moments, projector bases,
+/// step counters, RNG streams), produced by [`Optimizer::snapshot`] and
+/// replayed by [`Optimizer::restore`].
+///
+/// The representation is a flat bag of typed streams rather than a
+/// per-optimizer struct: each optimizer packs its fields in a fixed,
+/// documented order and unpacks them in the same order through a
+/// [`SnapshotReader`] cursor. `Option` slots are encoded as a presence
+/// integer (0/1) followed by the slot's payload when present, so a snapshot
+/// taken before a slot was initialized restores it back to uninitialized.
+#[derive(Clone, Debug, Default)]
+pub struct OptimizerSnapshot {
+    mats: Vec<Matrix>,
+    ints: Vec<u64>,
+    floats: Vec<f64>,
+    rngs: Vec<Rng>,
+}
+
+impl OptimizerSnapshot {
+    pub fn new() -> OptimizerSnapshot {
+        OptimizerSnapshot::default()
+    }
+
+    pub fn push_mat(&mut self, m: &Matrix) {
+        self.mats.push(m.clone());
+    }
+
+    pub fn push_int(&mut self, v: u64) {
+        self.ints.push(v);
+    }
+
+    pub fn push_float(&mut self, v: f64) {
+        self.floats.push(v);
+    }
+
+    pub fn push_rng(&mut self, r: &Rng) {
+        self.rngs.push(r.clone());
+    }
+
+    /// A cursor for unpacking in push order.
+    pub fn reader(&self) -> SnapshotReader<'_> {
+        SnapshotReader { snap: self, mat: 0, int: 0, float: 0, rng: 0 }
+    }
+
+    /// Approximate heap size — used to account rollback snapshots in the
+    /// trainer's peak-memory bookkeeping.
+    pub fn bytes(&self) -> usize {
+        self.mats.iter().map(|m| m.len() * std::mem::size_of::<f32>()).sum::<usize>()
+            + self.ints.len() * std::mem::size_of::<u64>()
+            + self.floats.len() * std::mem::size_of::<f64>()
+            + self.rngs.len() * std::mem::size_of::<Rng>()
+    }
+}
+
+/// Read cursor over an [`OptimizerSnapshot`], consuming each typed stream
+/// in push order. Panics if an optimizer reads past what it packed — that
+/// is a pack/unpack ordering bug, not a runtime condition.
+pub struct SnapshotReader<'a> {
+    snap: &'a OptimizerSnapshot,
+    mat: usize,
+    int: usize,
+    float: usize,
+    rng: usize,
+}
+
+impl SnapshotReader<'_> {
+    fn next_mat(&mut self) -> &Matrix {
+        let m = self.snap.mats.get(self.mat).expect("snapshot: matrix stream exhausted");
+        self.mat += 1;
+        m
+    }
+
+    /// Copy the next matrix into `out` (in place when shapes match, so a
+    /// same-run restore does not allocate).
+    pub fn mat_into(&mut self, out: &mut Matrix) {
+        let src = self.next_mat();
+        if out.shape() == src.shape() {
+            out.copy_from(src);
+        } else {
+            *out = src.clone();
+        }
+    }
+
+    /// Clone the next matrix out of the snapshot.
+    pub fn mat(&mut self) -> Matrix {
+        self.next_mat().clone()
+    }
+
+    pub fn int(&mut self) -> u64 {
+        let v = *self.snap.ints.get(self.int).expect("snapshot: int stream exhausted");
+        self.int += 1;
+        v
+    }
+
+    pub fn float(&mut self) -> f64 {
+        let v = *self.snap.floats.get(self.float).expect("snapshot: float stream exhausted");
+        self.float += 1;
+        v
+    }
+
+    pub fn rng(&mut self) -> Rng {
+        let r = self.snap.rngs.get(self.rng).expect("snapshot: rng stream exhausted").clone();
+        self.rng += 1;
+        r
+    }
+}
+
+/// Pack a `Vec<Option<Moments>>` slot table (count, then per-slot presence
+/// flag + payload) — shared by the low-rank optimizers' vector-parameter
+/// snapshot streams.
+pub(crate) fn pack_moment_slots(snap: &mut OptimizerSnapshot, slots: &[Option<adam::Moments>]) {
+    snap.push_int(slots.len() as u64);
+    for slot in slots {
+        match slot {
+            Some(m) => {
+                snap.push_int(1);
+                m.pack(snap);
+            }
+            None => snap.push_int(0),
+        }
+    }
+}
+
+/// Inverse of [`pack_moment_slots`], restoring in place where shapes allow.
+pub(crate) fn unpack_moment_slots(
+    r: &mut SnapshotReader,
+    slots: &mut Vec<Option<adam::Moments>>,
+) {
+    let n = r.int() as usize;
+    slots.resize_with(n, || None);
+    for slot in slots.iter_mut() {
+        if r.int() == 1 {
+            match slot {
+                Some(m) => m.unpack_into(r),
+                None => *slot = Some(adam::Moments::unpack(r)),
+            }
+        } else {
+            *slot = None;
+        }
+    }
+}
+
 /// A full-parameter optimizer over a set of named parameters.
 ///
 /// `lr` is supplied per step so the trainer owns the schedule. `grads` is
@@ -369,6 +512,34 @@ pub trait Optimizer {
     /// every refresh mechanism on this staying small.
     fn projector_defect(&self) -> Option<f32> {
         None
+    }
+
+    /// Deep-copy every piece of mutable state into a snapshot the trainer
+    /// can later [`restore`] for anomaly rollback. Includes RNG streams and
+    /// step counters so a restored optimizer replays bit-identically.
+    ///
+    /// [`restore`]: Optimizer::restore
+    fn snapshot(&self) -> OptimizerSnapshot;
+
+    /// Rewind to a snapshot previously produced by [`snapshot`] on this
+    /// optimizer over the same parameter set. Restoring a snapshot from a
+    /// different optimizer or parameter set is a programming error and may
+    /// panic.
+    ///
+    /// [`snapshot`]: Optimizer::snapshot
+    fn restore(&mut self, snap: &OptimizerSnapshot);
+
+    /// Fault injection: make the next subspace refresh produce a
+    /// deliberately non-finite basis so the refresh guard's rejection path
+    /// can be exercised end to end. No-op for methods without a guarded
+    /// refresh (full-rank Adam, BAdam, APOLLO's Gaussian sketch).
+    fn poison_next_refresh(&mut self) {}
+
+    /// How many subspace refreshes the health guard rejected (kept the
+    /// previous basis because the candidate was non-finite or far from
+    /// orthonormal). Surfaced into `train::metrics`.
+    fn refresh_rejections(&self) -> usize {
+        0
     }
 
     /// Method name for logs and tables.
@@ -537,6 +708,64 @@ mod tests {
         tc.clear();
         let _ = tc.get_fused_stack(1, &[&wg, &wu]);
         assert_eq!(tc.recomputes(), 4, "clear must drop fused entries too");
+    }
+
+    #[test]
+    fn snapshot_restore_replays_bitexact() {
+        // Every optimizer must rewind to a snapshot and replay the exact
+        // same trajectory — the contract anomaly rollback depends on.
+        let names = [
+            "full-rank",
+            "galore",
+            "fira",
+            "ldadam",
+            "osd",
+            "badam",
+            "apollo",
+            "golore",
+            "subtrack++",
+            "subtrack-pure",
+        ];
+        for name in names {
+            let hp =
+                HyperParams { rank: 3, interval: 4, scale: 1.0, ..HyperParams::default() };
+            let prob = testutil::LstsqProblem::new(16, 6, 9, 123);
+            let mut opt = by_name(name, hp);
+            let mut params = vec![
+                Param::matrix("w", Matrix::zeros(6, 9)),
+                Param::vector("b", Matrix::zeros(1, 9)),
+            ];
+            let gb = Matrix::full(1, 9, 0.01);
+            let step = |opt: &mut Box<dyn Optimizer>, params: &mut Vec<Param>| {
+                let (_, gw) = prob.loss_grad(&params[0].value);
+                opt.step(0.05, params, &[gw, gb.clone()]);
+            };
+            // Warm up past init + at least one refresh interval.
+            for _ in 0..9 {
+                step(&mut opt, &mut params);
+            }
+            let snap = opt.snapshot();
+            let saved: Vec<Matrix> = params.iter().map(|p| p.value.clone()).collect();
+            let mut trace_a = Vec::new();
+            for _ in 0..6 {
+                step(&mut opt, &mut params);
+                trace_a.push(params[0].value.clone());
+            }
+            // Rewind optimizer + params, replay, and compare bit-for-bit.
+            opt.restore(&snap);
+            for (p, v) in params.iter_mut().zip(&saved) {
+                p.value.copy_from(v);
+                p.mark_dirty();
+            }
+            for (s, a) in trace_a.iter().enumerate() {
+                step(&mut opt, &mut params);
+                assert_eq!(
+                    params[0].value.data(),
+                    a.data(),
+                    "{name}: replay diverged at step {s}"
+                );
+            }
+        }
     }
 
     #[test]

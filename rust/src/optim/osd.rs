@@ -13,8 +13,8 @@
 //! scratch, and the projection buffers are all leased.
 
 use super::adam::{AdamCfg, Moments};
-use super::projector::{Projector, Side};
-use super::{HyperParams, Optimizer, Param, ParamKind};
+use super::projector::{self, Projector, Side};
+use super::{HyperParams, Optimizer, OptimizerSnapshot, Param, ParamKind, SnapshotReader};
 use crate::tensor::{gemm, qr, Matrix, Workspace};
 
 struct MatState {
@@ -30,6 +30,8 @@ pub struct OnlineSubspaceDescent {
     mats: Vec<Option<MatState>>,
     vecs: Vec<Option<Moments>>,
     n_subspace_updates: usize,
+    n_refresh_rejections: usize,
+    poison_refresh: bool,
     /// Oja step size for the projector update.
     pub pca_lr: f32,
     /// Full QR re-orthonormalization cadence.
@@ -46,6 +48,8 @@ impl OnlineSubspaceDescent {
             mats: Vec::new(),
             vecs: Vec::new(),
             n_subspace_updates: 0,
+            n_refresh_rejections: 0,
+            poison_refresh: false,
             pca_lr: 0.1,
             reorth_every: 10,
             ws: Workspace::new(),
@@ -115,9 +119,24 @@ impl Optimizer for OnlineSubspaceDescent {
                     let adam = self.adam;
                     let scale = self.hp.scale;
                     // Disjoint borrows: scratch pool vs per-matrix state.
-                    let OnlineSubspaceDescent { ws, mats, n_subspace_updates, .. } = &mut *self;
+                    let OnlineSubspaceDescent {
+                        ws,
+                        mats,
+                        n_subspace_updates,
+                        n_refresh_rejections,
+                        poison_refresh,
+                        ..
+                    } = &mut *self;
                     let st = mats[i].as_mut().expect("initialized above");
-                    // Online PCA projector update every step, in place.
+                    // Online PCA projector update every step, in place. A
+                    // workspace-leased copy of the old basis backs the health
+                    // guard; between reorthonormalizations the basis drifts
+                    // from orthonormal by design, so the guard here checks
+                    // finiteness only (a NaN gradient would otherwise poison
+                    // the basis permanently).
+                    let (sr, sc) = st.proj.s.shape();
+                    let mut old_s = ws.take_dirty(sr, sc);
+                    old_s.copy_from(&st.proj.s);
                     match st.proj.side {
                         Side::Left => oja_step_ws(&mut st.proj.s, g, pca_lr, ws),
                         Side::Right => {
@@ -131,7 +150,16 @@ impl Optimizer for OnlineSubspaceDescent {
                     if st.steps % reorth == 0 {
                         qr::reorthonormalize_in_place(&mut st.proj.s, ws);
                     }
-                    *n_subspace_updates += 1;
+                    if std::mem::take(poison_refresh) {
+                        projector::poison_basis(&mut st.proj.s);
+                    }
+                    if st.proj.s.data().iter().all(|x| x.is_finite()) {
+                        *n_subspace_updates += 1;
+                    } else {
+                        st.proj.s.copy_from(&old_s);
+                        *n_refresh_rejections += 1;
+                    }
+                    ws.give(old_s);
 
                     let (lm, ln) = st.proj.lowrank_shape(m, n);
                     let mut g_low = ws.take_dirty(lm, ln);
@@ -182,6 +210,65 @@ impl Optimizer for OnlineSubspaceDescent {
 
     fn projector_defect(&self) -> Option<f32> {
         Some(self.mats.iter().flatten().map(|s| s.proj.defect()).fold(0.0f32, f32::max))
+    }
+
+    fn poison_next_refresh(&mut self) {
+        self.poison_refresh = true;
+    }
+
+    fn refresh_rejections(&self) -> usize {
+        self.n_refresh_rejections
+    }
+
+    // Pack order: n_subspace_updates, n_refresh_rejections, matrix slots
+    // (presence + projector + moments + steps), vector moment slots.
+    fn snapshot(&self) -> OptimizerSnapshot {
+        let mut snap = OptimizerSnapshot::new();
+        snap.push_int(self.n_subspace_updates as u64);
+        snap.push_int(self.n_refresh_rejections as u64);
+        snap.push_int(self.mats.len() as u64);
+        for slot in &self.mats {
+            match slot {
+                Some(st) => {
+                    snap.push_int(1);
+                    st.proj.pack(&mut snap);
+                    st.moments.pack(&mut snap);
+                    snap.push_int(st.steps as u64);
+                }
+                None => snap.push_int(0),
+            }
+        }
+        super::pack_moment_slots(&mut snap, &self.vecs);
+        snap
+    }
+
+    fn restore(&mut self, snap: &OptimizerSnapshot) {
+        let mut r = snap.reader();
+        self.n_subspace_updates = r.int() as usize;
+        self.n_refresh_rejections = r.int() as usize;
+        let n_mats = r.int() as usize;
+        self.mats.resize_with(n_mats, || None);
+        for slot in &mut self.mats {
+            if r.int() == 1 {
+                match slot {
+                    Some(st) => {
+                        st.proj.unpack_into(&mut r);
+                        st.moments.unpack_into(&mut r);
+                        st.steps = r.int() as usize;
+                    }
+                    None => {
+                        *slot = Some(MatState {
+                            proj: Projector::unpack(&mut r),
+                            moments: Moments::unpack(&mut r),
+                            steps: r.int() as usize,
+                        });
+                    }
+                }
+            } else {
+                *slot = None;
+            }
+        }
+        super::unpack_moment_slots(&mut r, &mut self.vecs);
     }
 
     fn name(&self) -> String {

@@ -8,6 +8,7 @@
 //! optimizer state per matrix (Table 2).
 
 use super::adam::Moments;
+use super::{OptimizerSnapshot, SnapshotReader};
 use crate::tensor::{gemm, qr, svd, Matrix, Workspace};
 use crate::util::rng::Rng;
 
@@ -26,6 +27,48 @@ pub fn side_for(m: usize, n: usize) -> Side {
         Side::Left
     } else {
         Side::Right
+    }
+}
+
+impl Side {
+    /// Stable integer encoding for snapshots.
+    pub fn to_u64(self) -> u64 {
+        match self {
+            Side::Left => 0,
+            Side::Right => 1,
+        }
+    }
+
+    /// Inverse of [`Side::to_u64`]. Panics on unknown encodings.
+    pub fn from_u64(v: u64) -> Side {
+        match v {
+            0 => Side::Left,
+            1 => Side::Right,
+            other => panic!("invalid Side encoding: {other}"),
+        }
+    }
+}
+
+/// Maximum orthonormality defect a refreshed basis may carry before the
+/// refresh guard rejects it and keeps the previous projector (the sentinel
+/// tentpole's "refresh fallback"). Healthy QR/SVD refreshes sit around
+/// 1e-5; a defect past this bound means the factorization degenerated.
+pub const REFRESH_DEFECT_TOL: f32 = 1e-2;
+
+/// Whether a candidate orthonormal basis is safe to adopt: every entry
+/// finite and ‖SᵀS − I‖_max within `tol`.
+pub fn basis_acceptable(s: &Matrix, tol: f32) -> bool {
+    if !s.data().iter().all(|x| x.is_finite()) {
+        return false;
+    }
+    qr::orthonormality_defect(s) <= tol
+}
+
+/// Fault injection: overwrite a basis with NaNs so the refresh guard's
+/// rejection path can be exercised deterministically.
+pub fn poison_basis(s: &mut Matrix) {
+    for x in s.data_mut() {
+        *x = f32::NAN;
     }
 }
 
@@ -179,6 +222,24 @@ impl Projector {
 
     pub fn bytes(&self) -> usize {
         self.params() * std::mem::size_of::<f32>()
+    }
+
+    /// Pack `side` + basis into a snapshot (see `Optimizer::snapshot`).
+    pub fn pack(&self, snap: &mut OptimizerSnapshot) {
+        snap.push_int(self.side.to_u64());
+        snap.push_mat(&self.s);
+    }
+
+    /// Rebuild a projector from the stream produced by [`Projector::pack`].
+    pub fn unpack(r: &mut SnapshotReader) -> Projector {
+        let side = Side::from_u64(r.int());
+        Projector { s: r.mat(), side }
+    }
+
+    /// In-place [`Projector::unpack`] (no allocation when shapes match).
+    pub fn unpack_into(&mut self, r: &mut SnapshotReader) {
+        self.side = Side::from_u64(r.int());
+        r.mat_into(&mut self.s);
     }
 }
 

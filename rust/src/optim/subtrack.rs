@@ -18,7 +18,7 @@
 
 use super::adam::{AdamCfg, Moments};
 use super::projector::{self, Projector, Side};
-use super::{HyperParams, Optimizer, Param, ParamKind};
+use super::{HyperParams, Optimizer, OptimizerSnapshot, Param, ParamKind, SnapshotReader};
 use crate::tensor::{gemm, qr, svd, Matrix, Workspace};
 use crate::util::rng::Rng;
 use std::time::Instant;
@@ -216,6 +216,8 @@ pub struct SubTrack {
     step_no: usize,
     rng: Rng,
     n_subspace_updates: usize,
+    n_refresh_rejections: usize,
+    poison_refresh: bool,
     /// Accumulated stage breakdown across all subspace updates (Appendix D).
     pub breakdown: UpdateBreakdown,
     /// Re-orthonormalize the basis after this many geodesic updates (fp drift
@@ -240,6 +242,8 @@ impl SubTrack {
             step_no: 0,
             rng: Rng::new(hp.seed ^ 0x5b71c4),
             n_subspace_updates: 0,
+            n_refresh_rejections: 0,
+            poison_refresh: false,
             breakdown: UpdateBreakdown::default(),
             reorth_every: 64,
             power_iters: 8,
@@ -288,14 +292,25 @@ impl SubTrack {
         let reorth_every = self.reorth_every;
         let mut rng = self.rng.split();
         // Disjoint field borrows: scratch pool + per-matrix state + counters.
-        let SubTrack { ws, mats, breakdown, n_subspace_updates, .. } = self;
+        let SubTrack {
+            ws,
+            mats,
+            breakdown,
+            n_subspace_updates,
+            n_refresh_rejections,
+            poison_refresh,
+            ..
+        } = self;
         let st = mats[idx].as_mut().expect("initialized above");
 
         // ---- subspace update every k steps (not at step 0: S₀ is fresh) ----
         // The whole periodic path runs out of the optimizer workspace: the
         // basis moves in place, the previous basis / Gᵀ view / change-of-basis
         // matrix are leased, and the moment rotation writes back into the
-        // moment buffers — zero allocation after the first refresh.
+        // moment buffers — zero allocation after the first refresh. The
+        // leased old basis also backs the health guard: a degenerate (or
+        // fault-injected) geodesic step is rejected, keeping the previous
+        // basis and moments until the next interval.
         if is_update_step && st.moments.t > 0 {
             let (dim, r) = st.proj.s.shape();
             let mut old_s = ws.take_dirty(dim, r);
@@ -313,23 +328,37 @@ impl SubTrack {
                     bd
                 }
             };
-            st.updates += 1;
-            if st.updates % reorth_every == 0 {
-                qr::reorthonormalize_in_place(&mut st.proj.s, ws);
-            }
             breakdown.lstsq += bd.lstsq;
             breakdown.residual += bd.residual;
             breakdown.tangent += bd.tangent;
             breakdown.rank1 += bd.rank1;
             breakdown.geodesic += bd.geodesic;
-            *n_subspace_updates += 1;
+            if std::mem::take(poison_refresh) {
+                projector::poison_basis(&mut st.proj.s);
+            }
+            if projector::basis_acceptable(&st.proj.s, projector::REFRESH_DEFECT_TOL) {
+                st.updates += 1;
+                if st.updates % reorth_every == 0 {
+                    qr::reorthonormalize_in_place(&mut st.proj.s, ws);
+                }
+                *n_subspace_updates += 1;
 
-            if comps.projection_aware {
-                // Q = SₜᵀSₜ₋₁ (r×r); rotate moments (Eqs. 8–9).
-                let mut q = ws.take_dirty(r, r);
-                gemm::matmul_tn_into(&mut q, &st.proj.s, &old_s, ws);
-                projector::rotate_moments_into(&q, &mut st.moments, st.proj.side, adam.beta2, ws);
-                ws.give(q);
+                if comps.projection_aware {
+                    // Q = SₜᵀSₜ₋₁ (r×r); rotate moments (Eqs. 8–9).
+                    let mut q = ws.take_dirty(r, r);
+                    gemm::matmul_tn_into(&mut q, &st.proj.s, &old_s, ws);
+                    projector::rotate_moments_into(
+                        &q,
+                        &mut st.moments,
+                        st.proj.side,
+                        adam.beta2,
+                        ws,
+                    );
+                    ws.give(q);
+                }
+            } else {
+                st.proj.s.copy_from(&old_s);
+                *n_refresh_rejections += 1;
             }
             ws.give(old_s);
         }
@@ -479,6 +508,95 @@ impl Optimizer for SubTrack {
 
     fn projector_defect(&self) -> Option<f32> {
         Some(self.mats.iter().flatten().map(|s| s.proj.defect()).fold(0.0f32, f32::max))
+    }
+
+    fn poison_next_refresh(&mut self) {
+        self.poison_refresh = true;
+    }
+
+    fn refresh_rejections(&self) -> usize {
+        self.n_refresh_rejections
+    }
+
+    // Pack order: step_no, n_subspace_updates, n_refresh_rejections, rng
+    // (step_matrix splits it every step, so bit-exact replay requires it),
+    // matrix slots (presence + projector + moments + prev_lambda_norm +
+    // updates), vector slots (presence + moments). The timing breakdown is
+    // diagnostics-only and deliberately not rewound.
+    fn snapshot(&self) -> OptimizerSnapshot {
+        let mut snap = OptimizerSnapshot::new();
+        snap.push_int(self.step_no as u64);
+        snap.push_int(self.n_subspace_updates as u64);
+        snap.push_int(self.n_refresh_rejections as u64);
+        snap.push_rng(&self.rng);
+        snap.push_int(self.mats.len() as u64);
+        for slot in &self.mats {
+            match slot {
+                Some(st) => {
+                    snap.push_int(1);
+                    st.proj.pack(&mut snap);
+                    st.moments.pack(&mut snap);
+                    snap.push_float(st.prev_lambda_norm as f64);
+                    snap.push_int(st.updates as u64);
+                }
+                None => snap.push_int(0),
+            }
+        }
+        snap.push_int(self.vecs.len() as u64);
+        for slot in &self.vecs {
+            match slot {
+                Some(st) => {
+                    snap.push_int(1);
+                    st.moments.pack(&mut snap);
+                }
+                None => snap.push_int(0),
+            }
+        }
+        snap
+    }
+
+    fn restore(&mut self, snap: &OptimizerSnapshot) {
+        let mut r = snap.reader();
+        self.step_no = r.int() as usize;
+        self.n_subspace_updates = r.int() as usize;
+        self.n_refresh_rejections = r.int() as usize;
+        self.rng = r.rng();
+        let n_mats = r.int() as usize;
+        self.mats.resize_with(n_mats, || None);
+        for slot in &mut self.mats {
+            if r.int() == 1 {
+                match slot {
+                    Some(st) => {
+                        st.proj.unpack_into(&mut r);
+                        st.moments.unpack_into(&mut r);
+                        st.prev_lambda_norm = r.float() as f32;
+                        st.updates = r.int() as usize;
+                    }
+                    None => {
+                        *slot = Some(MatState {
+                            proj: Projector::unpack(&mut r),
+                            moments: Moments::unpack(&mut r),
+                            prev_lambda_norm: r.float() as f32,
+                            updates: r.int() as usize,
+                        });
+                    }
+                }
+            } else {
+                *slot = None;
+            }
+        }
+        let n_vecs = r.int() as usize;
+        self.vecs.resize_with(n_vecs, || None);
+        for slot in &mut self.vecs {
+            if r.int() == 1 {
+                match slot {
+                    Some(st) => st.moments.unpack_into(&mut r),
+                    None => *slot = Some(VecState { moments: Moments::unpack(&mut r) }),
+                }
+            } else {
+                *slot = None;
+            }
+        }
     }
 
     fn name(&self) -> String {

@@ -131,9 +131,20 @@ fn sum_squares(data: &[f32]) -> f64 {
     })
 }
 
+/// Joint L2 norm of a set of gradient matrices via the pool-parallel
+/// fixed-order reduction — the read-only half of [`clip_global_norm`], for
+/// callers (the numerical-health sentinel) that need the norm without
+/// clipping and without recomputing it.
+pub fn global_norm_slice(grads: &[Matrix]) -> f32 {
+    (grads.iter().map(|g| sum_squares(g.data())).sum::<f64>()).sqrt() as f32
+}
+
 /// The single clipping core behind both public entry points: joint L2 norm
 /// via the pool-parallel fixed-order reduction, proportional scale-down
-/// when over `max_norm`.
+/// when over `max_norm`. A non-finite norm short-circuits the scaling —
+/// multiplying by a NaN/inf-derived factor would turn *every* parameter's
+/// gradient non-finite in one step; instead the norm is returned as-is for
+/// the sentinel to act on.
 fn clip_core<M: BorrowMut<Matrix>>(grads: &mut [M], max_norm: f32) -> f32 {
     let total: f64 = grads
         .iter()
@@ -143,7 +154,7 @@ fn clip_core<M: BorrowMut<Matrix>>(grads: &mut [M], max_norm: f32) -> f32 {
         })
         .sum();
     let norm = total.sqrt() as f32;
-    if norm > max_norm && norm > 0.0 {
+    if norm.is_finite() && norm > max_norm && norm > 0.0 {
         let scale = max_norm / norm;
         for g in grads.iter_mut() {
             let m: &mut Matrix = g.borrow_mut();
@@ -403,6 +414,36 @@ mod tests {
         let pre = clip_global_norm(&mut [&mut a], 1.0);
         assert!((pre - 0.3).abs() < 1e-6);
         assert_eq!(a.get(0, 0), 0.3);
+    }
+
+    #[test]
+    fn clip_short_circuits_on_nonfinite_norm() {
+        // One NaN makes the global norm NaN; scaling by max_norm/NaN would
+        // poison every gradient. The clip must leave them untouched and
+        // report the non-finite norm for the sentinel.
+        let mut a = Matrix::from_rows(&[&[3.0, f32::NAN]]);
+        let mut b = Matrix::from_rows(&[&[7.0, 4.0]]);
+        let pre = clip_global_norm(&mut [&mut a, &mut b], 1.0);
+        assert!(pre.is_nan(), "pre-clip norm should be NaN, got {pre}");
+        assert_eq!(a.get(0, 0), 3.0);
+        assert_eq!(b.data(), &[7.0, 4.0]);
+        // Same for an overflowing (infinite) norm.
+        let mut c = Matrix::from_rows(&[&[f32::MAX, f32::MAX]]);
+        let pre = clip_global_norm(&mut [&mut c], 1.0);
+        assert!(pre.is_infinite(), "got {pre}");
+        assert_eq!(c.get(0, 0), f32::MAX);
+    }
+
+    #[test]
+    fn global_norm_matches_clip_norm() {
+        let mut rng = crate::util::rng::Rng::new(33);
+        let a = Matrix::randn(40, 50, 1.0, &mut rng);
+        let b = Matrix::randn(3, 5, 1.0, &mut rng);
+        let grads = vec![a, b];
+        let read_only = global_norm_slice(&grads);
+        let mut clipped = grads.clone();
+        let pre = clip_global_norm_slice(&mut clipped, f32::MAX);
+        assert_eq!(read_only, pre);
     }
 
     #[test]

@@ -1,22 +1,106 @@
-//! Checkpointing: parameters as a little-endian f32 binary blob plus a JSON
-//! manifest (shapes, names, step, config echo) for integrity checking.
+//! Crash-safe checkpointing: parameters as a little-endian f32 binary blob
+//! plus a JSON manifest (shapes, names, per-tensor CRC32s, step).
+//!
+//! Write protocol — each file goes to a `.tmp` sibling, is fsynced, then
+//! atomically renamed into place; the manifest is renamed *last* so it acts
+//! as the commit marker (a crash mid-save leaves at worst an orphaned `.tmp`
+//! and the previous checkpoint intact). `load` verifies the manifest, blob
+//! size, and every tensor's CRC before touching any parameter, and reports
+//! failures through [`CkptError`] so auto-resume can distinguish "nothing
+//! here" from "here but corrupt" and fall back to an older checkpoint.
 
 use crate::optim::{Param, ParamKind};
 use crate::util::json::Json;
 use std::io::{Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
-/// Save parameters to `<path>.bin` + `<path>.json`.
+/// Why a checkpoint could not be loaded.
+#[derive(Debug)]
+pub enum CkptError {
+    /// No checkpoint at this path (manifest absent — never committed).
+    Missing(PathBuf),
+    /// A checkpoint exists but fails integrity checks (truncated blob, CRC
+    /// mismatch, malformed or mismatched manifest).
+    Corrupt(String),
+    /// Underlying I/O failure other than "not found".
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for CkptError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CkptError::Missing(p) => write!(f, "checkpoint missing: {}", p.display()),
+            CkptError::Corrupt(why) => write!(f, "checkpoint corrupt: {why}"),
+            CkptError::Io(e) => write!(f, "checkpoint io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for CkptError {}
+
+impl From<std::io::Error> for CkptError {
+    fn from(e: std::io::Error) -> CkptError {
+        CkptError::Io(e)
+    }
+}
+
+fn corrupt(why: impl Into<String>) -> CkptError {
+    CkptError::Corrupt(why.into())
+}
+
+// IEEE 802.3 CRC32, table built at compile time (no external crates).
+const CRC32_TABLE: [u32; 256] = build_crc32_table();
+
+const fn build_crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+/// CRC32 (IEEE) of `data`.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = CRC32_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// Write `bytes` to `path` via tmp-file + fsync + atomic rename.
+fn write_atomic(path: &Path, bytes: &[u8]) -> std::io::Result<()> {
+    let tmp = path.with_extension(format!(
+        "{}.tmp",
+        path.extension().and_then(|e| e.to_str()).unwrap_or("dat")
+    ));
+    let mut f = std::fs::File::create(&tmp)?;
+    f.write_all(bytes)?;
+    f.sync_all()?;
+    drop(f);
+    std::fs::rename(&tmp, path)
+}
+
+/// Save parameters to `<path>.bin` + `<path>.json`, crash-safely.
 pub fn save(path: impl AsRef<Path>, params: &[Param], step: usize) -> std::io::Result<()> {
     let path = path.as_ref();
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
-    let mut bin = std::fs::File::create(path.with_extension("bin"))?;
+    let mut blob = Vec::with_capacity(params.iter().map(|p| p.numel() * 4).sum());
     let mut manifest_params = Vec::new();
     for p in params {
+        let start = blob.len();
         for &v in p.value.data() {
-            bin.write_all(&v.to_le_bytes())?;
+            blob.extend_from_slice(&v.to_le_bytes());
         }
         manifest_params.push(Json::obj(vec![
             ("name", Json::Str(p.name.clone())),
@@ -32,70 +116,99 @@ pub fn save(path: impl AsRef<Path>, params: &[Param], step: usize) -> std::io::R
                     .into(),
                 ),
             ),
+            ("crc32", Json::Num(crc32(&blob[start..]) as f64)),
         ]));
     }
     let manifest = Json::obj(vec![
         ("step", Json::Num(step as f64)),
+        ("blob_bytes", Json::Num(blob.len() as f64)),
         ("params", Json::Arr(manifest_params)),
     ]);
-    std::fs::write(path.with_extension("json"), manifest.to_string())
+    // Blob first, manifest last: the manifest's presence commits the save.
+    write_atomic(&path.with_extension("bin"), &blob)?;
+    write_atomic(&path.with_extension("json"), manifest.to_string().as_bytes())?;
+    // Persist the renames themselves (best effort — some filesystems refuse
+    // directory fsync; the data files are already synced).
+    if let Some(dir) = path.parent() {
+        if let Ok(d) = std::fs::File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(())
 }
 
-/// Load a checkpoint into an existing parameter vector (shapes must match).
-/// Returns the saved step.
-pub fn load(path: impl AsRef<Path>, params: &mut [Param]) -> std::io::Result<usize> {
+/// Load a checkpoint into an existing parameter vector (names and shapes
+/// must match positionally). All integrity checks — manifest, blob size,
+/// per-tensor CRCs — run before any parameter is written, so a corrupt
+/// checkpoint never leaves the model half-loaded. Returns the saved step.
+pub fn load(path: impl AsRef<Path>, params: &mut [Param]) -> Result<usize, CkptError> {
     let path = path.as_ref();
-    let manifest_text = std::fs::read_to_string(path.with_extension("json"))?;
-    let manifest = Json::parse(&manifest_text)
-        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))?;
+    let manifest_path = path.with_extension("json");
+    let manifest_text = match std::fs::read_to_string(&manifest_path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Err(CkptError::Missing(manifest_path))
+        }
+        Err(e) => return Err(CkptError::Io(e)),
+    };
+    let manifest =
+        Json::parse(&manifest_text).map_err(|e| corrupt(format!("manifest parse: {e}")))?;
     let step = manifest.get("step").and_then(|s| s.as_f64()).unwrap_or(0.0) as usize;
     let listed = match manifest.get("params") {
         Some(Json::Arr(xs)) => xs,
-        _ => {
-            return Err(std::io::Error::new(
-                std::io::ErrorKind::InvalidData,
-                "manifest missing params",
-            ))
-        }
+        _ => return Err(corrupt("manifest missing params")),
     };
     if listed.len() != params.len() {
-        return Err(std::io::Error::new(
-            std::io::ErrorKind::InvalidData,
-            format!("param count mismatch: {} vs {}", listed.len(), params.len()),
-        ));
+        return Err(corrupt(format!(
+            "param count mismatch: {} vs {}",
+            listed.len(),
+            params.len()
+        )));
     }
     for (entry, p) in listed.iter().zip(params.iter()) {
         // Names must match positionally: a reordered but shape-compatible
         // param vector would otherwise load silently into the wrong weights.
         let name = entry.get("name").and_then(|v| v.as_str());
         if name != Some(p.name.as_str()) {
-            return Err(std::io::Error::new(
-                std::io::ErrorKind::InvalidData,
-                format!(
-                    "param name mismatch: manifest has {}, model expects {}",
-                    name.unwrap_or("<missing>"),
-                    p.name
-                ),
-            ));
+            return Err(corrupt(format!(
+                "param name mismatch: manifest has {}, model expects {}",
+                name.unwrap_or("<missing>"),
+                p.name
+            )));
         }
         let rows = entry.get("rows").and_then(|v| v.as_f64()).unwrap_or(-1.0) as usize;
         let cols = entry.get("cols").and_then(|v| v.as_f64()).unwrap_or(-1.0) as usize;
         if (rows, cols) != p.value.shape() {
-            return Err(std::io::Error::new(
-                std::io::ErrorKind::InvalidData,
-                format!("shape mismatch for {}", p.name),
-            ));
+            return Err(corrupt(format!("shape mismatch for {}", p.name)));
         }
     }
-    let mut bin = std::fs::File::open(path.with_extension("bin"))?;
+    // The manifest committed, so the blob must exist and be intact — any
+    // defect from here on is corruption, not absence.
+    let mut bin = match std::fs::File::open(path.with_extension("bin")) {
+        Ok(f) => f,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Err(corrupt("blob missing beside committed manifest"))
+        }
+        Err(e) => return Err(CkptError::Io(e)),
+    };
     let mut buf = Vec::new();
     bin.read_to_end(&mut buf)?;
     let want: usize = params.iter().map(|p| p.numel() * 4).sum();
     if buf.len() != want {
-        return Err(std::io::Error::new(
-            std::io::ErrorKind::InvalidData,
-            format!("blob size {} != expected {}", buf.len(), want),
-        ));
+        return Err(corrupt(format!("blob size {} != expected {}", buf.len(), want)));
+    }
+    let mut off = 0usize;
+    for (entry, p) in listed.iter().zip(params.iter()) {
+        let n = p.numel() * 4;
+        let stored = entry.get("crc32").and_then(|v| v.as_f64()).map(|v| v as u32);
+        let actual = crc32(&buf[off..off + n]);
+        if stored != Some(actual) {
+            return Err(corrupt(format!(
+                "crc mismatch for {}: manifest {:?}, blob {:#010x}",
+                p.name, stored, actual
+            )));
+        }
+        off += n;
     }
     let mut off = 0usize;
     for p in params.iter_mut() {
@@ -109,15 +222,82 @@ pub fn load(path: impl AsRef<Path>, params: &mut [Param]) -> std::io::Result<usi
     Ok(step)
 }
 
+/// Base path (no extension) of the checkpoint for `step` inside `dir`.
+pub fn rotation_path(dir: &Path, step: usize) -> PathBuf {
+    dir.join(format!("ckpt-{step:08}"))
+}
+
+/// All committed checkpoints in `dir`, newest first, as `(step, base path)`.
+pub fn list_checkpoints(dir: &Path) -> Vec<(usize, PathBuf)> {
+    let mut out = Vec::new();
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return out;
+    };
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let Some(step) = name
+            .strip_prefix("ckpt-")
+            .and_then(|s| s.strip_suffix(".json"))
+            .and_then(|s| s.parse::<usize>().ok())
+        else {
+            continue;
+        };
+        out.push((step, dir.join(format!("ckpt-{step:08}"))));
+    }
+    out.sort_by(|a, b| b.0.cmp(&a.0));
+    out
+}
+
+/// Save under a step-numbered name and prune everything beyond the `keep`
+/// newest (keep == 0 disables pruning). Returns the base path written.
+pub fn save_rotating(
+    dir: &Path,
+    params: &[Param],
+    step: usize,
+    keep: usize,
+) -> std::io::Result<PathBuf> {
+    let base = rotation_path(dir, step);
+    save(&base, params, step)?;
+    if keep > 0 {
+        for (_, old) in list_checkpoints(dir).into_iter().skip(keep) {
+            // Manifest first so a half-pruned checkpoint reads as Missing,
+            // not Corrupt.
+            let _ = std::fs::remove_file(old.with_extension("json"));
+            let _ = std::fs::remove_file(old.with_extension("bin"));
+        }
+    }
+    Ok(base)
+}
+
+/// Load the newest checkpoint in `dir` that passes every integrity check,
+/// falling back to older ones past any that are corrupt or missing.
+/// Returns `(step, base path)` of the checkpoint loaded, or `None` if no
+/// valid checkpoint exists.
+pub fn resume_newest(dir: &Path, params: &mut [Param]) -> Option<(usize, PathBuf)> {
+    for (step, base) in list_checkpoints(dir) {
+        match load(&base, params) {
+            Ok(loaded) => return Some((loaded.max(step), base)),
+            Err(CkptError::Missing(_) | CkptError::Corrupt(_)) => continue,
+            Err(CkptError::Io(_)) => continue,
+        }
+    }
+    None
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::model::{Llama, ModelConfig};
 
+    fn temp_dir(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("subtrack_ckpt_{tag}_{}", std::process::id()))
+    }
+
     #[test]
     fn roundtrip() {
         let model = Llama::new(ModelConfig::preset("nano"), 5);
-        let dir = std::env::temp_dir().join("subtrack_ckpt_test");
+        let dir = temp_dir("roundtrip");
         let path = dir.join("ckpt");
         save(&path, &model.params, 123).unwrap();
         let mut fresh = Llama::new(ModelConfig::preset("nano"), 999);
@@ -139,7 +319,7 @@ mod tests {
             Param::matrix("layer0.wq", Matrix::randn(4, 4, 1.0, &mut rng)),
             Param::matrix("layer0.wk", Matrix::randn(4, 4, 1.0, &mut rng)),
         ];
-        let dir = std::env::temp_dir().join("subtrack_ckpt_test_names");
+        let dir = temp_dir("names");
         let path = dir.join("ckpt");
         save(&path, &params, 7).unwrap();
         // Same shapes, swapped names: loading would silently put wq's weights
@@ -149,7 +329,7 @@ mod tests {
             Param::matrix("layer0.wq", Matrix::zeros(4, 4)),
         ];
         let err = load(&path, &mut swapped).unwrap_err();
-        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        assert!(matches!(err, CkptError::Corrupt(_)), "{err:?}");
         assert!(err.to_string().contains("name mismatch"), "{err}");
         // The matching order still loads.
         let mut ok = vec![
@@ -166,12 +346,93 @@ mod tests {
     #[test]
     fn shape_mismatch_rejected() {
         let model = Llama::new(ModelConfig::preset("nano"), 6);
-        let dir = std::env::temp_dir().join("subtrack_ckpt_test2");
+        let dir = temp_dir("shape");
         let path = dir.join("ckpt");
         save(&path, &model.params, 1).unwrap();
         let mut other = Llama::new(ModelConfig::preset("tiny"), 6);
         let err = load(&path, &mut other.params);
         assert!(err.is_err());
         let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn missing_is_distinguished_from_corrupt() {
+        let mut model = Llama::new(ModelConfig::preset("nano"), 6);
+        let dir = temp_dir("missing");
+        let err = load(dir.join("nope"), &mut model.params).unwrap_err();
+        assert!(matches!(err, CkptError::Missing(_)), "{err:?}");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn crc_catches_bit_flip() {
+        let model = Llama::new(ModelConfig::preset("nano"), 5);
+        let dir = temp_dir("bitflip");
+        let path = dir.join("ckpt");
+        save(&path, &model.params, 9).unwrap();
+        crate::train::faults::flip_bit(&path.with_extension("bin")).unwrap();
+        let mut fresh = Llama::new(ModelConfig::preset("nano"), 999);
+        let before: Vec<f32> = fresh.params[0].value.data().to_vec();
+        let err = load(&path, &mut fresh.params).unwrap_err();
+        assert!(matches!(err, CkptError::Corrupt(_)), "{err:?}");
+        assert!(err.to_string().contains("crc mismatch"), "{err}");
+        // Rejected before any write: params untouched.
+        assert_eq!(fresh.params[0].value.data(), &before[..]);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn truncated_blob_rejected() {
+        let model = Llama::new(ModelConfig::preset("nano"), 5);
+        let dir = temp_dir("trunc");
+        let path = dir.join("ckpt");
+        save(&path, &model.params, 9).unwrap();
+        crate::train::faults::truncate_file(&path.with_extension("bin")).unwrap();
+        let mut fresh = Llama::new(ModelConfig::preset("nano"), 999);
+        let err = load(&path, &mut fresh.params).unwrap_err();
+        assert!(matches!(err, CkptError::Corrupt(_)), "{err:?}");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn rotation_prunes_and_resume_falls_back_past_corruption() {
+        let model = Llama::new(ModelConfig::preset("nano"), 5);
+        let dir = temp_dir("rotate");
+        for step in [10, 20, 30, 40] {
+            save_rotating(&dir, &model.params, step, 3).unwrap();
+        }
+        let listed = list_checkpoints(&dir);
+        let steps: Vec<usize> = listed.iter().map(|(s, _)| *s).collect();
+        assert_eq!(steps, vec![40, 30, 20], "oldest pruned, newest first");
+        // Corrupt the newest two; resume must land on step 20.
+        crate::train::faults::flip_bit(&rotation_path(&dir, 40).with_extension("bin")).unwrap();
+        std::fs::remove_file(rotation_path(&dir, 30).with_extension("bin")).unwrap();
+        let mut fresh = Llama::new(ModelConfig::preset("nano"), 999);
+        let (step, _) = resume_newest(&dir, &mut fresh.params).unwrap();
+        assert_eq!(step, 20);
+        assert_eq!(fresh.params[0].value.data(), model.params[0].value.data());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn interrupted_rename_leaves_previous_checkpoint_valid() {
+        let model = Llama::new(ModelConfig::preset("nano"), 5);
+        let dir = temp_dir("interrupted");
+        save_rotating(&dir, &model.params, 10, 0).unwrap();
+        // Simulate a crash between blob write and manifest rename for step
+        // 20: blob + manifest tmp exist, committed manifest does not.
+        let base20 = rotation_path(&dir, 20);
+        std::fs::write(base20.with_extension("bin"), [0u8; 16]).unwrap();
+        std::fs::write(base20.with_extension("json.tmp"), b"{").unwrap();
+        let mut fresh = Llama::new(ModelConfig::preset("nano"), 999);
+        let (step, _) = resume_newest(&dir, &mut fresh.params).unwrap();
+        assert_eq!(step, 10, "uncommitted step-20 save must be invisible");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // The classic IEEE test vector.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
     }
 }

@@ -1,0 +1,148 @@
+//! Deterministic fault injection for exercising the fault-tolerance runtime.
+//!
+//! A fault is a `(kind, step)` pair parsed from the `PALLAS_FAULT` environment
+//! variable (or the `train.fault.inject` config key) as `kind@step`, e.g.
+//! `nan_grad@7`. Injection keys on the trainer's step counter *after* gradient
+//! reduction, so a fault fires identically for any worker count or DP shard
+//! layout. When no fault is configured the trainer carries a `None` and pays a
+//! single branch per step.
+
+use std::fs::OpenOptions;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::Path;
+
+/// What to break. Each kind corrupts a different layer of the runtime.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Overwrite the reduced gradients with NaNs before clipping.
+    NanGrad,
+    /// Poison the optimizer's next subspace-refresh basis with NaNs.
+    RefreshPoison,
+    /// Truncate the newest checkpoint blob after it is committed
+    /// (simulates a kill -9 mid-write on a non-atomic writer).
+    CkptTruncate,
+    /// Flip one bit in the newest checkpoint blob after it is committed.
+    CkptBitflip,
+    /// Panic one pool worker mid-job at the given step.
+    WorkerPanic,
+}
+
+impl FaultKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FaultKind::NanGrad => "nan_grad",
+            FaultKind::RefreshPoison => "refresh_poison",
+            FaultKind::CkptTruncate => "ckpt_truncate",
+            FaultKind::CkptBitflip => "ckpt_bitflip",
+            FaultKind::WorkerPanic => "worker_panic",
+        }
+    }
+}
+
+/// A single scheduled fault.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultInjection {
+    pub kind: FaultKind,
+    pub step: usize,
+}
+
+impl FaultInjection {
+    /// Parse a `kind@step` spec. Returns `None` on anything malformed so a
+    /// typo'd env var fails loudly at the call site rather than silently
+    /// running a clean experiment labelled as faulted.
+    pub fn parse(spec: &str) -> Option<FaultInjection> {
+        let (kind, step) = spec.trim().split_once('@')?;
+        let kind = match kind {
+            "nan_grad" => FaultKind::NanGrad,
+            "refresh_poison" => FaultKind::RefreshPoison,
+            "ckpt_truncate" => FaultKind::CkptTruncate,
+            "ckpt_bitflip" => FaultKind::CkptBitflip,
+            "worker_panic" => FaultKind::WorkerPanic,
+            _ => return None,
+        };
+        Some(FaultInjection { kind, step: step.parse().ok()? })
+    }
+
+    /// Read the `PALLAS_FAULT` env knob. Panics on a malformed spec —
+    /// misconfigured CI legs should fail, not pass vacuously.
+    pub fn from_env() -> Option<FaultInjection> {
+        let spec = std::env::var("PALLAS_FAULT").ok()?;
+        if spec.is_empty() {
+            return None;
+        }
+        match Self::parse(&spec) {
+            Some(f) => Some(f),
+            None => panic!("PALLAS_FAULT: bad spec {spec:?} (want kind@step, e.g. nan_grad@7)"),
+        }
+    }
+
+    pub fn fires_at(&self, step: usize) -> bool {
+        self.step == step
+    }
+}
+
+/// Truncate `path` to half its length, as a crash mid-write would.
+pub fn truncate_file(path: &Path) -> std::io::Result<()> {
+    let f = OpenOptions::new().write(true).open(path)?;
+    let len = f.metadata()?.len();
+    f.set_len(len / 2)
+}
+
+/// Flip one bit in the middle byte of `path`.
+pub fn flip_bit(path: &Path) -> std::io::Result<()> {
+    let mut f = OpenOptions::new().read(true).write(true).open(path)?;
+    let len = f.metadata()?.len();
+    if len == 0 {
+        return Ok(());
+    }
+    let pos = len / 2;
+    let mut byte = [0u8; 1];
+    f.seek(SeekFrom::Start(pos))?;
+    f.read_exact(&mut byte)?;
+    byte[0] ^= 0x10;
+    f.seek(SeekFrom::Start(pos))?;
+    f.write_all(&byte)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_kind() {
+        for (spec, kind, step) in [
+            ("nan_grad@7", FaultKind::NanGrad, 7),
+            ("refresh_poison@8", FaultKind::RefreshPoison, 8),
+            ("ckpt_truncate@3", FaultKind::CkptTruncate, 3),
+            ("ckpt_bitflip@0", FaultKind::CkptBitflip, 0),
+            ("worker_panic@12", FaultKind::WorkerPanic, 12),
+        ] {
+            let f = FaultInjection::parse(spec).expect(spec);
+            assert_eq!(f, FaultInjection { kind, step });
+            assert_eq!(format!("{}@{}", f.kind.as_str(), f.step), spec);
+            assert!(f.fires_at(step));
+            assert!(!f.fires_at(step + 1));
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for spec in ["", "nan_grad", "nan_grad@", "nan_grad@x", "@7", "frobnicate@7"] {
+            assert!(FaultInjection::parse(spec).is_none(), "{spec:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn file_corruption_helpers() {
+        let dir = std::env::temp_dir().join(format!("subtrack_faults_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("blob.bin");
+        std::fs::write(&p, vec![0u8; 64]).unwrap();
+        truncate_file(&p).unwrap();
+        assert_eq!(std::fs::metadata(&p).unwrap().len(), 32);
+        flip_bit(&p).unwrap();
+        let data = std::fs::read(&p).unwrap();
+        assert_eq!(data.iter().filter(|&&b| b != 0).count(), 1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -89,6 +89,14 @@ pub struct TrainReport {
     pub param_count: usize,
     pub optimizer_state_params: usize,
     pub subspace_updates: usize,
+    /// Steps dropped by the sentinel under `policy = "skip"`.
+    pub sentinel_skips: usize,
+    /// Anomalies handled under `policy = "rollback"` (snapshot restore, or
+    /// a plain drop when no snapshot exists yet).
+    pub sentinel_rollbacks: usize,
+    /// Subspace refreshes discarded for yielding a non-finite or
+    /// non-orthonormal basis (the previous projector was kept).
+    pub refresh_rejections: usize,
 }
 
 impl TrainReport {
@@ -119,6 +127,9 @@ impl TrainReport {
             ("param_count", Json::Num(self.param_count as f64)),
             ("optimizer_state_params", Json::Num(self.optimizer_state_params as f64)),
             ("subspace_updates", Json::Num(self.subspace_updates as f64)),
+            ("sentinel_skips", Json::Num(self.sentinel_skips as f64)),
+            ("sentinel_rollbacks", Json::Num(self.sentinel_rollbacks as f64)),
+            ("refresh_rejections", Json::Num(self.refresh_rejections as f64)),
             ("total_steps", Json::Num(self.total_steps as f64)),
             ("n_steps", Json::Num(self.steps.len() as f64)),
         ])
@@ -183,6 +194,9 @@ mod tests {
             param_count: 5,
             optimizer_state_params: 10,
             subspace_updates: 1,
+            sentinel_skips: 0,
+            sentinel_rollbacks: 0,
+            refresh_rejections: 0,
         };
         let csv = report.curve_csv().to_string();
         assert_eq!(csv.lines().count(), 3);

@@ -1,13 +1,17 @@
 //! The training coordinator: configuration, LR schedules, the trainer loop
-//! (with native and PJRT engines), metrics, checkpointing and the
-//! data-parallel worker simulation.
+//! (with native and PJRT engines), metrics, checkpointing, fault injection,
+//! the numerical-health sentinel and the data-parallel worker simulation.
 
 pub mod checkpoint;
+pub mod faults;
 pub mod metrics;
 pub mod parallel;
 pub mod schedule;
+pub mod sentinel;
 pub mod trainer;
 
+pub use faults::{FaultInjection, FaultKind};
 pub use metrics::{MetricsLog, TrainReport};
 pub use schedule::LrSchedule;
+pub use sentinel::{FaultPolicy, Sentinel, SentinelConfig, Verdict};
 pub use trainer::{Trainer, TrainConfig};

@@ -1,0 +1,260 @@
+//! Numerical-health sentinel: per-step anomaly detection + response policy.
+//!
+//! Each training step the sentinel inspects the loss and the *pre-clip*
+//! global gradient norm (both already bit-identical across worker counts and
+//! DP shards, so verdicts are too). A step is anomalous when either value is
+//! non-finite, or when the loss spikes above `spike_factor` times the rolling
+//! mean of the last `spike_window` healthy losses. The configured policy maps
+//! an anomaly to a verdict the trainer acts on:
+//!
+//! - `skip`: drop the step (parameters and optimizer state untouched).
+//! - `rollback`: restore parameters + full optimizer state from the last
+//!   in-memory snapshot (taken every `snapshot_every` steps).
+//! - `abort`: stop training with a diagnostic dump.
+//!
+//! With `policy = "off"` (the default) `check` is a single branch — no window
+//! bookkeeping, no event log.
+
+use std::collections::VecDeque;
+
+/// Response policy for anomalous steps ([`train.fault`] `policy` key).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultPolicy {
+    Off,
+    Skip,
+    Rollback,
+    Abort,
+}
+
+impl FaultPolicy {
+    pub fn parse(s: &str) -> Option<FaultPolicy> {
+        match s {
+            "off" => Some(FaultPolicy::Off),
+            "skip" => Some(FaultPolicy::Skip),
+            "rollback" => Some(FaultPolicy::Rollback),
+            "abort" => Some(FaultPolicy::Abort),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FaultPolicy::Off => "off",
+            FaultPolicy::Skip => "skip",
+            FaultPolicy::Rollback => "rollback",
+            FaultPolicy::Abort => "abort",
+        }
+    }
+}
+
+/// Sentinel tuning knobs (see `[train.fault]` in ROADMAP.md).
+#[derive(Clone, Copy, Debug)]
+pub struct SentinelConfig {
+    pub policy: FaultPolicy,
+    /// Steps between in-memory last-good snapshots (rollback granularity).
+    pub snapshot_every: usize,
+    /// Healthy losses folded into the rolling spike baseline.
+    pub spike_window: usize,
+    /// Loss > factor × rolling mean ⇒ spike. Non-positive disables the
+    /// spike detector (finiteness checks still apply).
+    pub spike_factor: f32,
+}
+
+impl Default for SentinelConfig {
+    fn default() -> SentinelConfig {
+        SentinelConfig {
+            policy: FaultPolicy::Off,
+            snapshot_every: 25,
+            spike_window: 16,
+            spike_factor: 10.0,
+        }
+    }
+}
+
+/// What the trainer should do with the step just computed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Verdict {
+    Healthy,
+    Skip,
+    Rollback,
+    Abort,
+}
+
+/// One anomalous step, kept for the abort dump and determinism tests.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SentinelEvent {
+    pub step: usize,
+    pub loss: f32,
+    pub grad_norm: f32,
+    pub verdict: Verdict,
+}
+
+/// Rolling-window health monitor. One per trainer.
+pub struct Sentinel {
+    cfg: SentinelConfig,
+    window: VecDeque<f32>,
+    events: Vec<SentinelEvent>,
+    n_skips: usize,
+    n_rollbacks: usize,
+}
+
+impl Sentinel {
+    pub fn new(cfg: SentinelConfig) -> Sentinel {
+        Sentinel { cfg, window: VecDeque::new(), events: Vec::new(), n_skips: 0, n_rollbacks: 0 }
+    }
+
+    fn anomalous(&self, loss: f32, grad_norm: f32) -> bool {
+        if !loss.is_finite() || !grad_norm.is_finite() {
+            return true;
+        }
+        if self.cfg.spike_factor > 0.0
+            && self.cfg.spike_window > 0
+            && self.window.len() >= self.cfg.spike_window
+        {
+            let mean = self.window.iter().map(|&l| l as f64).sum::<f64>()
+                / self.window.len() as f64;
+            return (loss as f64) > self.cfg.spike_factor as f64 * mean.max(1e-6);
+        }
+        false
+    }
+
+    /// Classify one step. Healthy losses feed the spike baseline; anomalies
+    /// are logged and counted. After a rollback verdict the window is cleared
+    /// so the replayed steps rebuild a fresh baseline instead of being judged
+    /// against the pre-anomaly one.
+    pub fn check(&mut self, step: usize, loss: f32, grad_norm: f32) -> Verdict {
+        if self.cfg.policy == FaultPolicy::Off {
+            return Verdict::Healthy;
+        }
+        if !self.anomalous(loss, grad_norm) {
+            if self.window.len() == self.cfg.spike_window.max(1) {
+                self.window.pop_front();
+            }
+            self.window.push_back(loss);
+            return Verdict::Healthy;
+        }
+        let verdict = match self.cfg.policy {
+            FaultPolicy::Off => unreachable!("handled above"),
+            FaultPolicy::Skip => Verdict::Skip,
+            FaultPolicy::Rollback => Verdict::Rollback,
+            FaultPolicy::Abort => Verdict::Abort,
+        };
+        match verdict {
+            Verdict::Skip => self.n_skips += 1,
+            Verdict::Rollback => {
+                self.n_rollbacks += 1;
+                self.window.clear();
+            }
+            _ => {}
+        }
+        self.events.push(SentinelEvent { step, loss, grad_norm, verdict });
+        verdict
+    }
+
+    pub fn config(&self) -> &SentinelConfig {
+        &self.cfg
+    }
+
+    pub fn skips(&self) -> usize {
+        self.n_skips
+    }
+
+    pub fn rollbacks(&self) -> usize {
+        self.n_rollbacks
+    }
+
+    pub fn events(&self) -> &[SentinelEvent] {
+        &self.events
+    }
+
+    /// Diagnostic dump for `policy = "abort"` and post-mortems.
+    pub fn dump(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "sentinel: policy={} skips={} rollbacks={} events={}\n",
+            self.cfg.policy.as_str(),
+            self.n_skips,
+            self.n_rollbacks,
+            self.events.len()
+        ));
+        for e in &self.events {
+            out.push_str(&format!(
+                "  step {:>6}  loss {:>12.6}  grad_norm {:>12.6}  -> {:?}\n",
+                e.step, e.loss, e.grad_norm, e.verdict
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(policy: FaultPolicy) -> SentinelConfig {
+        SentinelConfig { policy, snapshot_every: 5, spike_window: 4, spike_factor: 10.0 }
+    }
+
+    #[test]
+    fn off_policy_is_always_healthy() {
+        let mut s = Sentinel::new(cfg(FaultPolicy::Off));
+        assert_eq!(s.check(0, f32::NAN, f32::INFINITY), Verdict::Healthy);
+        assert!(s.events().is_empty());
+    }
+
+    #[test]
+    fn nonfinite_loss_or_norm_triggers_policy() {
+        let mut s = Sentinel::new(cfg(FaultPolicy::Skip));
+        assert_eq!(s.check(0, 1.0, 1.0), Verdict::Healthy);
+        assert_eq!(s.check(1, f32::NAN, 1.0), Verdict::Skip);
+        assert_eq!(s.check(2, 1.0, f32::INFINITY), Verdict::Skip);
+        assert_eq!(s.skips(), 2);
+        assert_eq!(s.events().len(), 2);
+    }
+
+    #[test]
+    fn spike_detector_needs_full_window() {
+        let mut s = Sentinel::new(cfg(FaultPolicy::Rollback));
+        // Window not yet full: a big loss is not judged.
+        assert_eq!(s.check(0, 100.0, 1.0), Verdict::Healthy);
+        for step in 1..=4 {
+            assert_eq!(s.check(step, 1.0, 1.0), Verdict::Healthy);
+        }
+        // Window full of ~1.0 losses; 10× mean trips the detector.
+        assert_eq!(s.check(5, 50.0, 1.0), Verdict::Rollback);
+        assert_eq!(s.rollbacks(), 1);
+        // Window cleared on rollback: the same loss is healthy again.
+        assert_eq!(s.check(6, 50.0, 1.0), Verdict::Healthy);
+    }
+
+    #[test]
+    fn healthy_losses_roll_the_window() {
+        let mut s = Sentinel::new(cfg(FaultPolicy::Skip));
+        for step in 0..8 {
+            assert_eq!(s.check(step, 1.0 + step as f32 * 0.01, 1.0), Verdict::Healthy);
+        }
+        // Baseline tracks recent losses, not all-time: a loss 10× the very
+        // first value but < 10× the recent mean is fine.
+        assert_eq!(s.check(8, 9.0, 1.0), Verdict::Healthy);
+        assert_eq!(s.check(9, 12.0, 1.0), Verdict::Skip);
+    }
+
+    #[test]
+    fn abort_dump_names_the_offending_step() {
+        let mut s = Sentinel::new(cfg(FaultPolicy::Abort));
+        assert_eq!(s.check(7, f32::NAN, 1.0), Verdict::Abort);
+        let dump = s.dump();
+        assert!(dump.contains("policy=abort"), "{dump}");
+        assert!(dump.contains("step      7"), "{dump}");
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in
+            [FaultPolicy::Off, FaultPolicy::Skip, FaultPolicy::Rollback, FaultPolicy::Abort]
+        {
+            assert_eq!(FaultPolicy::parse(p.as_str()), Some(p));
+        }
+        assert_eq!(FaultPolicy::parse("retry"), None);
+    }
+}

@@ -11,12 +11,16 @@
 
 use crate::data::{Corpus, CorpusKind};
 use crate::model::{Batch, Llama, ModelConfig, StepState};
-use crate::optim::{self, HyperParams, Optimizer};
-use crate::tensor::ops;
+use crate::optim::{self, HyperParams, Optimizer, OptimizerSnapshot};
+use crate::tensor::{ops, pool, Matrix};
+use crate::train::checkpoint;
+use crate::train::faults::{FaultInjection, FaultKind};
 use crate::train::metrics::{MetricsLog, TrainReport};
 use crate::train::parallel;
 use crate::train::schedule::LrSchedule;
+use crate::train::sentinel::{FaultPolicy, Sentinel, SentinelConfig, Verdict};
 use crate::util::config::Config;
+use std::path::PathBuf;
 
 /// Which gradient engine backs the trainer.
 pub enum EngineSel {
@@ -45,6 +49,16 @@ pub struct TrainConfig {
     pub corpus_len: usize,
     /// Log every N steps (loss curve resolution).
     pub log_every: usize,
+    /// Numerical-health sentinel policy + knobs (`[train.fault]`).
+    pub sentinel: SentinelConfig,
+    /// Scheduled fault injection (`PALLAS_FAULT` env / `train.fault.inject`).
+    pub fault: Option<FaultInjection>,
+    /// Crash-safe checkpoint directory ("" = checkpointing disabled).
+    pub checkpoint_dir: String,
+    /// Save a rotating checkpoint every N steps (0 = disabled).
+    pub checkpoint_every: usize,
+    /// Rotation depth: keep the newest K checkpoints (0 = keep all).
+    pub checkpoint_keep: usize,
 }
 
 impl TrainConfig {
@@ -78,6 +92,11 @@ impl TrainConfig {
             corpus_kind: CorpusKind::Markov,
             corpus_len: 200_000,
             log_every: 1,
+            sentinel: SentinelConfig::default(),
+            fault: None,
+            checkpoint_dir: String::new(),
+            checkpoint_every: 0,
+            checkpoint_keep: 3,
         }
     }
 
@@ -113,6 +132,33 @@ impl TrainConfig {
             "hierarchical" => CorpusKind::Hierarchical,
             _ => CorpusKind::Markov,
         };
+        // [train.fault]: sentinel policy + knobs, plus scheduled injection.
+        let policy = cfg.str("train.fault.policy", tc.sentinel.policy.as_str());
+        tc.sentinel.policy = FaultPolicy::parse(&policy)
+            .unwrap_or_else(|| panic!("train.fault.policy: unknown policy {policy:?}"));
+        tc.sentinel.snapshot_every =
+            (cfg.int("train.fault.snapshot_every", tc.sentinel.snapshot_every as i64) as usize)
+                .max(1);
+        tc.sentinel.spike_window =
+            cfg.int("train.fault.spike_window", tc.sentinel.spike_window as i64) as usize;
+        tc.sentinel.spike_factor =
+            cfg.float("train.fault.spike_factor", tc.sentinel.spike_factor as f64) as f32;
+        let inject = cfg.str("train.fault.inject", "");
+        if !inject.is_empty() {
+            tc.fault = Some(FaultInjection::parse(&inject).unwrap_or_else(|| {
+                panic!("train.fault.inject: bad spec {inject:?} (want kind@step)")
+            }));
+        }
+        // The env knob wins over the config file (CI fault legs).
+        if let Some(f) = FaultInjection::from_env() {
+            tc.fault = Some(f);
+        }
+        // [train.checkpoint]: crash-safe rotating checkpoints + auto-resume.
+        tc.checkpoint_dir = cfg.str("train.checkpoint.dir", &tc.checkpoint_dir);
+        tc.checkpoint_every =
+            cfg.int("train.checkpoint.every", tc.checkpoint_every as i64) as usize;
+        tc.checkpoint_keep =
+            cfg.int("train.checkpoint.keep", tc.checkpoint_keep as i64) as usize;
         tc
     }
 }
@@ -128,6 +174,8 @@ pub struct Trainer {
     /// Persistent step-loop state (workspace + transpose cache): the native
     /// engine's forward/backward allocates no buffers after the first step.
     pub state: StepState,
+    /// Numerical-health monitor (no-op when `cfg.sentinel.policy` is off).
+    pub sentinel: Sentinel,
 }
 
 impl Trainer {
@@ -138,6 +186,7 @@ impl Trainer {
         let opt = optim::by_name(&cfg.method, hp);
         let corpus =
             Corpus::generate(cfg.corpus_kind, cfg.model.vocab, cfg.corpus_len, cfg.seed ^ 0xd474);
+        let sentinel = Sentinel::new(cfg.sentinel);
         Trainer {
             cfg,
             model,
@@ -146,6 +195,7 @@ impl Trainer {
             engine: EngineSel::Native,
             metrics: MetricsLog::new(),
             state: StepState::new(),
+            sentinel,
         }
     }
 
@@ -203,21 +253,157 @@ impl Trainer {
 
     /// Run the full training loop; returns the report consumed by the
     /// table/figure harnesses.
+    ///
+    /// Fault-tolerance wiring (all inert at the preset defaults):
+    /// - If `checkpoint_dir` is set, training first auto-resumes from the
+    ///   newest checkpoint there that passes integrity checks, then saves a
+    ///   rotating crash-safe checkpoint every `checkpoint_every` steps.
+    /// - Each step the sentinel inspects the loss and pre-clip gradient
+    ///   norm *before* the optimizer applies the update, so an anomalous
+    ///   step can be dropped (`skip`), rewound to the last in-memory
+    ///   snapshot (`rollback`), or turned into an error (`abort`) without
+    ///   ever corrupting optimizer state.
+    /// - A configured [`FaultInjection`] fires deterministically by step
+    ///   number after gradient reduction, so faulted runs are reproducible
+    ///   for any worker count.
+    ///
+    /// Rollback rewinds parameters and the full optimizer state but *not*
+    /// the corpus sampler: replayed steps see fresh batches, which is the
+    /// behavior a real run recovering from a bad region wants.
     pub fn run(&mut self) -> anyhow::Result<TrainReport> {
         let schedule = LrSchedule::new(self.cfg.lr, self.cfg.warmup_steps, self.cfg.steps);
         let (b, t) = (self.cfg.batch_size, self.cfg.model.seq_len);
         // Gradient buffers persist across steps (zero-allocation hot path).
         let mut grads = self.model.zero_grads();
-        for step in 0..self.cfg.steps {
+        let policy = self.cfg.sentinel.policy;
+        let ckpt_dir = (!self.cfg.checkpoint_dir.is_empty())
+            .then(|| PathBuf::from(&self.cfg.checkpoint_dir));
+        let mut start_step = 0usize;
+        if let Some(dir) = &ckpt_dir {
+            if let Some((step, base)) = checkpoint::resume_newest(dir, &mut self.model.params) {
+                start_step = step;
+                eprintln!("trainer: resumed step {} from {}", step, base.display());
+            }
+        }
+        // Last-good (params, optimizer state) pair for rollback, refreshed
+        // every `snapshot_every` healthy steps.
+        let mut snapshot: Option<(Vec<Matrix>, OptimizerSnapshot)> = None;
+        let mut ckpt_fault_pending = matches!(
+            self.cfg.fault,
+            Some(FaultInjection { kind: FaultKind::CkptTruncate | FaultKind::CkptBitflip, .. })
+        );
+        for step in start_step..self.cfg.steps {
+            if let Some(f) = self.cfg.fault {
+                if f.kind == FaultKind::WorkerPanic && f.fires_at(step) {
+                    // One pool task panics mid-job; the pool must re-raise
+                    // here and keep serving — training continues below.
+                    let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        pool::run(2, 4, &|i| {
+                            if i == 3 {
+                                panic!("injected worker panic (step {step})");
+                            }
+                        });
+                    }));
+                }
+            }
             let batch = self.corpus.sample_batch(b, t);
             let loss = self.compute_loss_grad(&batch, &mut grads)?;
-            if self.cfg.grad_clip > 0.0 {
-                ops::clip_global_norm_slice(&mut grads, self.cfg.grad_clip);
+            if let Some(f) = self.cfg.fault {
+                if f.fires_at(step) {
+                    match f.kind {
+                        FaultKind::NanGrad => {
+                            for g in grads.iter_mut() {
+                                g.data_mut().fill(f32::NAN);
+                            }
+                        }
+                        FaultKind::RefreshPoison => self.opt.poison_next_refresh(),
+                        _ => {}
+                    }
+                }
             }
-            let lr = schedule.at(step);
-            self.opt.step(lr, &mut self.model.params, &grads);
-            if step % self.cfg.log_every == 0 {
-                self.metrics.record_step(step, loss, lr, self.opt.state_bytes());
+            // Clipping surfaces the pre-clip norm; with clipping off the
+            // sentinel still needs it (skipped entirely when the sentinel
+            // is off — the norm reduction is not free).
+            let grad_norm = if self.cfg.grad_clip > 0.0 {
+                ops::clip_global_norm_slice(&mut grads, self.cfg.grad_clip)
+            } else if policy != FaultPolicy::Off {
+                ops::global_norm_slice(&grads)
+            } else {
+                0.0
+            };
+            match self.sentinel.check(step, loss, grad_norm) {
+                Verdict::Healthy => {
+                    let lr = schedule.at(step);
+                    self.opt.step(lr, &mut self.model.params, &grads);
+                    if step % self.cfg.log_every == 0 {
+                        self.metrics.record_step(step, loss, lr, self.opt.state_bytes());
+                    }
+                    if policy == FaultPolicy::Rollback
+                        && step % self.cfg.sentinel.snapshot_every == 0
+                    {
+                        match &mut snapshot {
+                            Some((params, snap)) => {
+                                for (dst, p) in params.iter_mut().zip(&self.model.params) {
+                                    dst.copy_from(&p.value);
+                                }
+                                *snap = self.opt.snapshot();
+                            }
+                            None => {
+                                let params: Vec<Matrix> = self
+                                    .model
+                                    .params
+                                    .iter()
+                                    .map(|p| p.value.clone())
+                                    .collect();
+                                snapshot = Some((params, self.opt.snapshot()));
+                            }
+                        }
+                    }
+                }
+                Verdict::Skip => {} // drop the step; state untouched
+                Verdict::Rollback => {
+                    if let Some((params, snap)) = &snapshot {
+                        for (p, saved) in self.model.params.iter_mut().zip(params) {
+                            p.value.copy_from(saved);
+                            p.mark_dirty();
+                        }
+                        self.opt.restore(snap);
+                    }
+                    // No snapshot yet: the drop alone is the recovery.
+                }
+                Verdict::Abort => {
+                    eprint!("{}", self.sentinel.dump());
+                    anyhow::bail!(
+                        "sentinel abort at step {step}: loss={loss} grad_norm={grad_norm}"
+                    );
+                }
+            }
+            if let Some(dir) = &ckpt_dir {
+                if self.cfg.checkpoint_every > 0 && (step + 1) % self.cfg.checkpoint_every == 0 {
+                    let base = checkpoint::save_rotating(
+                        dir,
+                        &self.model.params,
+                        step + 1,
+                        self.cfg.checkpoint_keep,
+                    )?;
+                    if ckpt_fault_pending {
+                        let f = self.cfg.fault.expect("pending implies configured");
+                        if step + 1 >= f.step {
+                            match f.kind {
+                                FaultKind::CkptTruncate => {
+                                    crate::train::faults::truncate_file(
+                                        &base.with_extension("bin"),
+                                    )?;
+                                }
+                                FaultKind::CkptBitflip => {
+                                    crate::train::faults::flip_bit(&base.with_extension("bin"))?;
+                                }
+                                _ => unreachable!("pending is set only for ckpt faults"),
+                            }
+                            ckpt_fault_pending = false;
+                        }
+                    }
+                }
             }
             if self.cfg.eval_every > 0 && (step + 1) % self.cfg.eval_every == 0 {
                 let ev = self.eval_loss()?;
@@ -238,6 +424,9 @@ impl Trainer {
             param_count: self.model.param_count(),
             optimizer_state_params: self.opt.state_params(),
             subspace_updates: self.opt.subspace_updates(),
+            sentinel_skips: self.sentinel.skips(),
+            sentinel_rollbacks: self.sentinel.rollbacks(),
+            refresh_rejections: self.opt.refresh_rejections(),
         })
     }
 }
@@ -353,6 +542,50 @@ log_every = 3
         assert_eq!(td.eval_every, want.eval_every);
         assert_eq!(td.eval_batches, want.eval_batches);
         assert_eq!(td.log_every, want.log_every);
+    }
+
+    #[test]
+    fn config_file_roundtrips_fault_and_checkpoint_keys() {
+        let text = r#"
+[model]
+preset = "nano"
+
+[train]
+steps = 8
+
+[train.fault]
+policy = "rollback"
+snapshot_every = 4
+spike_window = 8
+spike_factor = 5.0
+inject = "nan_grad@3"
+
+[train.checkpoint]
+dir = "/tmp/subtrack_cfg_ckpt"
+every = 4
+keep = 2
+"#;
+        let cfg = Config::parse(text).unwrap();
+        let tc = TrainConfig::from_config(&cfg);
+        assert_eq!(tc.sentinel.policy, FaultPolicy::Rollback);
+        assert_eq!(tc.sentinel.snapshot_every, 4);
+        assert_eq!(tc.sentinel.spike_window, 8);
+        assert_eq!(tc.sentinel.spike_factor, 5.0);
+        // The env knob outranks the config key; only assert the config
+        // value when no CI fault leg is active.
+        if std::env::var("PALLAS_FAULT").is_err() {
+            assert_eq!(tc.fault, Some(FaultInjection { kind: FaultKind::NanGrad, step: 3 }));
+        }
+        assert_eq!(tc.checkpoint_dir, "/tmp/subtrack_cfg_ckpt");
+        assert_eq!(tc.checkpoint_every, 4);
+        assert_eq!(tc.checkpoint_keep, 2);
+        // Absent sections keep the inert defaults: preset runs are
+        // byte-for-byte the pre-sentinel trainer.
+        let plain = Config::parse("[model]\npreset = \"nano\"\n").unwrap();
+        let td = TrainConfig::from_config(&plain);
+        assert_eq!(td.sentinel.policy, FaultPolicy::Off);
+        assert!(td.checkpoint_dir.is_empty());
+        assert_eq!(td.checkpoint_every, 0);
     }
 
     #[test]
