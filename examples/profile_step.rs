@@ -97,6 +97,32 @@ fn main() {
         state.ws.misses(),
     );
 
+    // Data-parallel step with ZeRO-partitioned optimizer state (2 shards):
+    // shard gradients reduce through the persistent DpContext, then each
+    // shard updates only its own partition. Also records the per-shard vs
+    // replicated state footprint (the paper's memory axis).
+    let state_bytes_replicated = opt.state_bytes();
+    let dp_shards = 2usize;
+    let mut dp = subtrack::train::parallel::DpContext::new(dp_shards);
+    let mut sharded =
+        subtrack::optim::sharded_by_name("full-rank", Default::default(), dp_shards);
+    let _ = dp.loss_grad_into(&model, &batch, &mut grads);
+    sharded.step(1e-4, &mut model.params, &grads);
+    let t0 = Instant::now();
+    for _ in 0..steps {
+        let _ = dp.loss_grad_into(&model, &batch, &mut grads);
+        sharded.step(1e-4, &mut model.params, &grads);
+    }
+    let dp_step_secs = t0.elapsed().as_secs_f64() / steps as f64;
+    println!(
+        "full step (dp={dp_shards}, sharded adam): {:.1} ms  \
+         (state/shard {} B vs replicated {} B)",
+        dp_step_secs * 1e3,
+        sharded.state_bytes(),
+        state_bytes_replicated,
+    );
+    let dp_state_bytes = sharded.state_bytes();
+
     // Fault-tolerance overhead: the per-step sentinel check (norm read +
     // window fold) and a full rollback snapshot (param deep-copy + packed
     // optimizer state), timed against the same model.
@@ -132,6 +158,9 @@ fn main() {
             ("loss_and_grad_1t_ms", Json::Num(grad_1t_ms)),
             ("step_ms", Json::Num(step_secs * 1e3)),
             ("steps_per_sec", Json::Num(steps_per_sec)),
+            ("dp2.step_ms", Json::Num(dp_step_secs * 1e3)),
+            ("dp2.state_bytes_per_shard", Json::Num(dp_state_bytes as f64)),
+            ("dp2.state_bytes_replicated", Json::Num(state_bytes_replicated as f64)),
             ("steady_state_ws_misses", Json::Num(state.ws.misses() as f64)),
             ("train.sentinel_ms", Json::Num(sentinel_ms)),
             ("train.snapshot_ms", Json::Num(snapshot_ms)),

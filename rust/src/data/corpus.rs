@@ -26,6 +26,11 @@ pub struct Corpus {
     pub vocab: usize,
     tokens: Vec<u32>,
     rng: Rng,
+    /// Sampler RNG draws consumed so far (one per sampled sequence) —
+    /// checkpointed so a resumed run can [`fast_forward`](Corpus::fast_forward)
+    /// to the exact stream position and see the same batches the
+    /// uninterrupted run would have.
+    draws: u64,
 }
 
 impl Corpus {
@@ -36,7 +41,7 @@ impl Corpus {
             CorpusKind::Markov => markov_tokens(vocab, len, &mut rng),
             CorpusKind::Hierarchical => hierarchical_tokens(vocab, len, &mut rng),
         };
-        Corpus { vocab, tokens, rng: Rng::new(seed ^ 0xbb) }
+        Corpus { vocab, tokens, rng: Rng::new(seed ^ 0xbb), draws: 0 }
     }
 
     pub fn len(&self) -> usize {
@@ -64,20 +69,49 @@ impl Corpus {
                 targets.push(self.tokens[start + i + 1]);
             }
         }
+        self.draws += b as u64;
         Batch { inputs, targets, b, t }
     }
 
+    /// Sampler RNG draws consumed so far (one per sampled sequence).
+    pub fn sampler_draws(&self) -> u64 {
+        self.draws
+    }
+
+    /// Advance the sampler stream to `draws` total draws without
+    /// materializing batches — the resume path's way of landing on the
+    /// exact RNG position the checkpointed run had reached, so subsequent
+    /// [`sample_batch`](Corpus::sample_batch) calls return the same batches
+    /// the uninterrupted run would have.
+    pub fn fast_forward(&mut self, draws: u64) {
+        assert!(draws >= self.draws, "cannot rewind the sampler ({} -> {draws})", self.draws);
+        // `below` consumes exactly one raw output per draw.
+        for _ in self.draws..draws {
+            let _ = self.rng.next_u64();
+        }
+        self.draws = draws;
+    }
+
     /// A deterministic evaluation batch (fixed windows from the tail, which
-    /// the random sampler rarely touches).
+    /// the random sampler rarely touches). For corpora too small to supply
+    /// `b` disjoint windows the batch degrades gracefully — fewer sequences,
+    /// wrapping indices — instead of panicking.
     pub fn eval_batch(&self, b: usize, t: usize) -> Batch {
+        assert!(!self.tokens.is_empty(), "eval_batch on an empty corpus");
+        let len = self.tokens.len();
+        // How many disjoint (t+1)-token windows the corpus can supply; keep
+        // at least one and never more than requested.
+        let cap = len.saturating_sub(1) / (t + 1);
+        let b = b.min(cap.max(1));
         let mut inputs = Vec::with_capacity(b * t);
         let mut targets = Vec::with_capacity(b * t);
-        let tail = self.tokens.len().saturating_sub(b * (t + 1) + 1);
+        let tail = len.saturating_sub(b * (t + 1) + 1);
         for bi in 0..b {
             let start = tail + bi * (t + 1);
             for i in 0..t {
-                inputs.push(self.tokens[start + i]);
-                targets.push(self.tokens[start + i + 1]);
+                // Modulo is the identity whenever the corpus fits b windows.
+                inputs.push(self.tokens[(start + i) % len]);
+                targets.push(self.tokens[(start + i + 1) % len]);
             }
         }
         Batch { inputs, targets, b, t }
@@ -221,5 +255,39 @@ mod tests {
         let b1 = c.eval_batch(2, 8);
         let b2 = c.eval_batch(2, 8);
         assert_eq!(b1.inputs, b2.inputs);
+    }
+
+    #[test]
+    fn eval_batch_degrades_on_tiny_corpus() {
+        // 40 tokens can fit 4 windows of t+1 = 9: b clamps from 8 to 4.
+        let c = Corpus::generate(CorpusKind::Markov, 32, 40, 11);
+        let batch = c.eval_batch(8, 8);
+        assert_eq!(batch.b, 4);
+        assert_eq!(batch.inputs.len(), 4 * 8);
+        // Smaller than a single window: still returns one (wrapped) sequence.
+        let c = Corpus::generate(CorpusKind::Markov, 32, 5, 11);
+        let batch = c.eval_batch(2, 8);
+        assert_eq!(batch.b, 1);
+        assert_eq!(batch.inputs.len(), 8);
+        assert!(batch.inputs.iter().all(|&tok| (tok as usize) < 32));
+    }
+
+    #[test]
+    fn fast_forward_matches_sequential_sampling() {
+        // Run A samples 7 batches then 3 more; run B fast-forwards to A's
+        // draw count and must produce the same final 3 batches bit-for-bit.
+        let mut a = Corpus::generate(CorpusKind::Markov, 64, 10_000, 12);
+        for _ in 0..7 {
+            let _ = a.sample_batch(4, 16);
+        }
+        let mut b = Corpus::generate(CorpusKind::Markov, 64, 10_000, 12);
+        b.fast_forward(a.sampler_draws());
+        assert_eq!(a.sampler_draws(), b.sampler_draws());
+        for _ in 0..3 {
+            let ba = a.sample_batch(4, 16);
+            let bb = b.sample_batch(4, 16);
+            assert_eq!(ba.inputs, bb.inputs);
+            assert_eq!(ba.targets, bb.targets);
+        }
     }
 }

@@ -21,6 +21,10 @@ use crate::util::rng::Rng;
 struct MatState {
     proj: Projector,
     moments: Moments,
+    /// Sketch re-draw stream, keyed on the parameter name so draws are
+    /// independent of slot order / shard membership (see
+    /// [`super::param_stream_rng`]).
+    rng: Rng,
 }
 
 /// APOLLO optimizer.
@@ -30,7 +34,6 @@ pub struct Apollo {
     mats: Vec<Option<MatState>>,
     vecs: Vec<Option<Moments>>,
     step_no: usize,
-    rng: Rng,
     n_subspace_updates: usize,
     /// Per-step projection/scaling scratch (zero steady-state allocation;
     /// the periodic projector re-draw writes into the existing basis).
@@ -45,7 +48,6 @@ impl Apollo {
             mats: Vec::new(),
             vecs: Vec::new(),
             step_no: 0,
-            rng: Rng::new(hp.seed ^ 0xa901_10),
             n_subspace_updates: 0,
             ws: Workspace::new(),
         }
@@ -72,14 +74,16 @@ impl Optimizer for Apollo {
                     let needs_init = self.mats[i].is_none();
                     if needs_init {
                         // Cheap random projection — no SVD anywhere.
-                        let proj = Projector::init_random(m, n, self.hp.rank, &mut self.rng);
+                        let mut rng =
+                            super::param_stream_rng(self.hp.seed, 0xa901_10, &params[i].name);
+                        let proj = Projector::init_random(m, n, self.hp.rank, &mut rng);
                         let (lm, ln) = proj.lowrank_shape(m, n);
                         self.mats[i] =
-                            Some(MatState { proj, moments: Moments::new(lm, ln) });
+                            Some(MatState { proj, moments: Moments::new(lm, ln), rng });
                     } else if refresh {
                         // Re-draw the sketch into the existing basis buffer.
                         let st = self.mats[i].as_mut().expect("initialized above");
-                        st.proj.refresh_random_into(&mut self.rng);
+                        st.proj.refresh_random_into(&mut st.rng);
                         self.n_subspace_updates += 1;
                     }
                     let adam = self.adam;
@@ -136,14 +140,14 @@ impl Optimizer for Apollo {
         self.ws.misses()
     }
 
-    // Pack order: step_no, n_subspace_updates, rng, matrix slots (presence +
-    // projector + moments), vector moment slots. APOLLO's sketch is not
-    // orthonormal, so there is no refresh guard (and no poison hook).
+    // Pack order: step_no, n_subspace_updates, matrix slots (presence +
+    // projector + moments + the slot's name-keyed rng), vector moment slots.
+    // APOLLO's sketch is not orthonormal, so there is no refresh guard (and
+    // no poison hook).
     fn snapshot(&self) -> OptimizerSnapshot {
         let mut snap = OptimizerSnapshot::new();
         snap.push_int(self.step_no as u64);
         snap.push_int(self.n_subspace_updates as u64);
-        snap.push_rng(&self.rng);
         snap.push_int(self.mats.len() as u64);
         for slot in &self.mats {
             match slot {
@@ -151,6 +155,7 @@ impl Optimizer for Apollo {
                     snap.push_int(1);
                     st.proj.pack(&mut snap);
                     st.moments.pack(&mut snap);
+                    snap.push_rng(&st.rng);
                 }
                 None => snap.push_int(0),
             }
@@ -163,7 +168,6 @@ impl Optimizer for Apollo {
         let mut r = snap.reader();
         self.step_no = r.int() as usize;
         self.n_subspace_updates = r.int() as usize;
-        self.rng = r.rng();
         let n_mats = r.int() as usize;
         self.mats.resize_with(n_mats, || None);
         for slot in &mut self.mats {
@@ -172,11 +176,13 @@ impl Optimizer for Apollo {
                     Some(st) => {
                         st.proj.unpack_into(&mut r);
                         st.moments.unpack_into(&mut r);
+                        st.rng = r.rng();
                     }
                     None => {
                         *slot = Some(MatState {
                             proj: Projector::unpack(&mut r),
                             moments: Moments::unpack(&mut r),
+                            rng: r.rng(),
                         });
                     }
                 }

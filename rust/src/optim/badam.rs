@@ -91,6 +91,12 @@ impl Optimizer for BAdam {
         self.n_switches
     }
 
+    // BAdam rotates a single *global* active block with a global RNG; its
+    // state cannot be split by parameter index without changing the method.
+    fn partitionable(&self) -> bool {
+        false
+    }
+
     // Pack order: active, step_no, n_switches, rng, active-block moments
     // (presence + payload).
     fn snapshot(&self) -> OptimizerSnapshot {

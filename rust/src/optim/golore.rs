@@ -12,6 +12,10 @@ use crate::util::rng::Rng;
 struct MatState {
     proj: Projector,
     moments: Moments,
+    /// Late-phase random-projector stream, keyed on the parameter name so
+    /// draws are independent of slot order / shard membership (see
+    /// [`super::param_stream_rng`]).
+    rng: Rng,
 }
 
 /// GoLore optimizer.
@@ -21,7 +25,6 @@ pub struct GoLore {
     mats: Vec<Option<MatState>>,
     vecs: Vec<Option<Moments>>,
     step_no: usize,
-    rng: Rng,
     n_subspace_updates: usize,
     n_refresh_rejections: usize,
     poison_refresh: bool,
@@ -42,7 +45,6 @@ impl GoLore {
             mats: Vec::new(),
             vecs: Vec::new(),
             step_no: 0,
-            rng: Rng::new(hp.seed ^ 0x601e),
             n_subspace_updates: 0,
             n_refresh_rejections: 0,
             poison_refresh: false,
@@ -72,14 +74,16 @@ impl Optimizer for GoLore {
                     let (m, n) = g.shape();
                     let needs_init = self.mats[i].is_none();
                     if needs_init {
+                        let mut rng =
+                            super::param_stream_rng(self.hp.seed, 0x601e, &params[i].name);
                         let proj = if late_phase {
-                            Projector::init_random_orthonormal(m, n, self.hp.rank, &mut self.rng)
+                            Projector::init_random_orthonormal(m, n, self.hp.rank, &mut rng)
                         } else {
                             Projector::init_svd(g, self.hp.rank)
                         };
                         let (lm, ln) = proj.lowrank_shape(m, n);
                         self.mats[i] =
-                            Some(MatState { proj, moments: Moments::new(lm, ln) });
+                            Some(MatState { proj, moments: Moments::new(lm, ln), rng });
                     } else if refresh {
                         // In-place refresh with workspace-leased scratch,
                         // behind the health guard: a degenerate (or
@@ -88,7 +92,6 @@ impl Optimizer for GoLore {
                         let GoLore {
                             ws,
                             mats,
-                            rng,
                             n_subspace_updates,
                             n_refresh_rejections,
                             poison_refresh,
@@ -99,7 +102,7 @@ impl Optimizer for GoLore {
                         let mut old_s = ws.take_dirty(sr, sc);
                         old_s.copy_from(&st.proj.s);
                         if late_phase {
-                            st.proj.refresh_random_orthonormal_into(rng, ws);
+                            st.proj.refresh_random_orthonormal_into(&mut st.rng, ws);
                         } else {
                             st.proj.refresh_svd_into(g, ws);
                         }
@@ -180,14 +183,14 @@ impl Optimizer for GoLore {
         self.n_refresh_rejections
     }
 
-    // Pack order: step_no, n_subspace_updates, n_refresh_rejections, rng,
-    // matrix slots (presence + projector + moments), vector moment slots.
+    // Pack order: step_no, n_subspace_updates, n_refresh_rejections, matrix
+    // slots (presence + projector + moments + the slot's name-keyed rng),
+    // vector moment slots.
     fn snapshot(&self) -> OptimizerSnapshot {
         let mut snap = OptimizerSnapshot::new();
         snap.push_int(self.step_no as u64);
         snap.push_int(self.n_subspace_updates as u64);
         snap.push_int(self.n_refresh_rejections as u64);
-        snap.push_rng(&self.rng);
         snap.push_int(self.mats.len() as u64);
         for slot in &self.mats {
             match slot {
@@ -195,6 +198,7 @@ impl Optimizer for GoLore {
                     snap.push_int(1);
                     st.proj.pack(&mut snap);
                     st.moments.pack(&mut snap);
+                    snap.push_rng(&st.rng);
                 }
                 None => snap.push_int(0),
             }
@@ -208,7 +212,6 @@ impl Optimizer for GoLore {
         self.step_no = r.int() as usize;
         self.n_subspace_updates = r.int() as usize;
         self.n_refresh_rejections = r.int() as usize;
-        self.rng = r.rng();
         let n_mats = r.int() as usize;
         self.mats.resize_with(n_mats, || None);
         for slot in &mut self.mats {
@@ -217,11 +220,13 @@ impl Optimizer for GoLore {
                     Some(st) => {
                         st.proj.unpack_into(&mut r);
                         st.moments.unpack_into(&mut r);
+                        st.rng = r.rng();
                     }
                     None => {
                         *slot = Some(MatState {
                             proj: Projector::unpack(&mut r),
                             moments: Moments::unpack(&mut r),
+                            rng: r.rng(),
                         });
                     }
                 }

@@ -26,6 +26,7 @@ pub mod golore;
 pub mod ldadam;
 pub mod osd;
 pub mod projector;
+pub mod sharded;
 pub mod subtrack;
 
 pub use adam::{Adam, AdamCfg};
@@ -36,10 +37,34 @@ pub use galore::GaLore;
 pub use golore::GoLore;
 pub use ldadam::LdAdam;
 pub use osd::OnlineSubspaceDescent;
+pub use sharded::ShardedOptimizer;
 pub use subtrack::{Components, SubTrack};
 
 use crate::tensor::Matrix;
 use crate::util::rng::Rng;
+
+/// A deterministic RNG stream keyed on a parameter's *name* (FNV-1a hash)
+/// rather than its slot index or draw order.
+///
+/// The stochastic optimizers (SubTrack's power-iteration init, GoLore's and
+/// APOLLO's random projectors) used to draw from one instance-level stream
+/// in parameter order, which made the stream a parameter drew depend on
+/// *which other parameters the same instance had already touched*. Under
+/// ZeRO-style state partitioning each shard's instance sees only its own
+/// parameter slice, so order-dependent streams would diverge from the
+/// single-shard run. Keying the stream on (seed, method tag, param name)
+/// makes every parameter's randomness a pure function of its identity —
+/// identical for any shard count or partition boundary. Parameter names are
+/// unique within a model by construction (`model::llama` asserts nothing,
+/// but the name list is a fixed schema).
+pub fn param_stream_rng(seed: u64, method_tag: u64, name: &str) -> Rng {
+    let mut h = 0xcbf2_9ce4_8422_2325u64; // FNV-1a offset basis
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3); // FNV prime
+    }
+    Rng::new(seed ^ method_tag ^ h)
+}
 
 /// Whether a parameter participates in low-rank projection.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -384,6 +409,106 @@ impl OptimizerSnapshot {
             + self.floats.len() * std::mem::size_of::<f64>()
             + self.rngs.len() * std::mem::size_of::<Rng>()
     }
+
+    /// Serialize to a little-endian byte stream so checkpoints can persist
+    /// full optimizer state alongside the parameter blob.
+    ///
+    /// Layout: four u64 stream counts (mats, ints, floats, rngs), then each
+    /// matrix as u32 rows + u32 cols + row-major f32 data, then the ints
+    /// (u64), floats (f64 bit patterns), and RNGs (6 u64 state words each,
+    /// see [`Rng::state_words`]).
+    pub fn encode(&self) -> Vec<u8> {
+        let mat_bytes: usize = self.mats.iter().map(|m| 8 + m.len() * 4).sum();
+        let mut out =
+            Vec::with_capacity(32 + mat_bytes + self.ints.len() * 8 + self.floats.len() * 8);
+        for count in [self.mats.len(), self.ints.len(), self.floats.len(), self.rngs.len()] {
+            out.extend_from_slice(&(count as u64).to_le_bytes());
+        }
+        for m in &self.mats {
+            out.extend_from_slice(&(m.rows() as u32).to_le_bytes());
+            out.extend_from_slice(&(m.cols() as u32).to_le_bytes());
+            for &v in m.data() {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        for &v in &self.ints {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        for &v in &self.floats {
+            out.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        for r in &self.rngs {
+            for w in r.state_words() {
+                out.extend_from_slice(&w.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    /// Inverse of [`encode`](OptimizerSnapshot::encode). Returns an error
+    /// string (not a panic) on truncated or malformed input so checkpoint
+    /// loading can classify it as corruption and fall back.
+    pub fn decode(bytes: &[u8]) -> Result<OptimizerSnapshot, String> {
+        struct Cursor<'a> {
+            buf: &'a [u8],
+            off: usize,
+        }
+        impl Cursor<'_> {
+            fn take<const N: usize>(&mut self) -> Result<[u8; N], String> {
+                let end = self.off.checked_add(N).ok_or("offset overflow")?;
+                let chunk = self.buf.get(self.off..end).ok_or("truncated snapshot")?;
+                self.off = end;
+                Ok(chunk.try_into().expect("length checked"))
+            }
+            fn u64(&mut self) -> Result<u64, String> {
+                Ok(u64::from_le_bytes(self.take::<8>()?))
+            }
+            fn u32(&mut self) -> Result<u32, String> {
+                Ok(u32::from_le_bytes(self.take::<4>()?))
+            }
+            fn f32(&mut self) -> Result<f32, String> {
+                Ok(f32::from_le_bytes(self.take::<4>()?))
+            }
+        }
+        let mut c = Cursor { buf: bytes, off: 0 };
+        let n_mats = c.u64()? as usize;
+        let n_ints = c.u64()? as usize;
+        let n_floats = c.u64()? as usize;
+        let n_rngs = c.u64()? as usize;
+        let mut snap = OptimizerSnapshot::new();
+        for _ in 0..n_mats {
+            let rows = c.u32()? as usize;
+            let cols = c.u32()? as usize;
+            let numel = rows.checked_mul(cols).ok_or("matrix shape overflow")?;
+            if numel.checked_mul(4).ok_or("matrix size overflow")?
+                > bytes.len().saturating_sub(c.off)
+            {
+                return Err("truncated snapshot matrix".into());
+            }
+            let mut m = Matrix::zeros(rows, cols);
+            for v in m.data_mut() {
+                *v = c.f32()?;
+            }
+            snap.mats.push(m);
+        }
+        for _ in 0..n_ints {
+            snap.ints.push(c.u64()?);
+        }
+        for _ in 0..n_floats {
+            snap.floats.push(f64::from_bits(c.u64()?));
+        }
+        for _ in 0..n_rngs {
+            let mut w = [0u64; 6];
+            for wi in &mut w {
+                *wi = c.u64()?;
+            }
+            snap.rngs.push(Rng::from_state_words(w));
+        }
+        if c.off != bytes.len() {
+            return Err(format!("trailing bytes in snapshot: {} past end", bytes.len() - c.off));
+        }
+        Ok(snap)
+    }
 }
 
 /// Read cursor over an [`OptimizerSnapshot`], consuming each typed stream
@@ -477,10 +602,38 @@ pub(crate) fn unpack_moment_slots(
 /// A full-parameter optimizer over a set of named parameters.
 ///
 /// `lr` is supplied per step so the trainer owns the schedule. `grads` is
-/// parallel to `params`.
-pub trait Optimizer {
+/// parallel to `params`. Optimizers are `Send` so [`ShardedOptimizer`] can
+/// drive per-shard instances from pool worker threads.
+pub trait Optimizer: Send {
     /// Apply one update step in place.
     fn step(&mut self, lr: f32, params: &mut [Param], grads: &[Matrix]);
+
+    /// Apply one update step to a contiguous *partition* of the parameter
+    /// list (ZeRO-1 semantics: this instance owns only these tensors' state
+    /// and never sees the rest). `partition`/`grads` are the owned
+    /// sub-slices, parallel to each other.
+    ///
+    /// The default delegates to [`step`](Optimizer::step): every per-tensor
+    /// method (Adam moments, low-rank projector state keyed by slot) treats
+    /// its parameter list as the whole world, so a partition behaves exactly
+    /// like a small full run provided the method's cross-parameter coupling
+    /// is nil and its randomness is keyed per parameter (see
+    /// [`param_stream_rng`]). Methods with *global* state spanning all
+    /// parameters (BAdam's single active block) must instead report
+    /// [`partitionable`](Optimizer::partitionable) `= false`.
+    fn step_partition(&mut self, lr: f32, partition: &mut [Param], grads: &[Matrix]) {
+        self.step(lr, partition, grads)
+    }
+
+    /// Whether this method's state can be partitioned across DP shards via
+    /// [`step_partition`] without changing the algorithm. `false` for
+    /// methods whose update couples all parameters globally (BAdam's block
+    /// switch draws one active block over the full list).
+    ///
+    /// [`step_partition`]: Optimizer::step_partition
+    fn partitionable(&self) -> bool {
+        true
+    }
 
     /// Bytes of optimizer state currently held (moments + projectors +
     /// auxiliary buffers). Used for the paper's Table 8 accounting.
@@ -569,6 +722,16 @@ pub fn by_name(name: &str, hp: HyperParams) -> Box<dyn Optimizer> {
         "subtrack-rs" => Box::new(SubTrack::new(hp, Components::rs_only())),
         other => panic!("unknown optimizer: {other}"),
     }
+}
+
+/// Construct an optimizer whose state is partitioned across `shards`
+/// ZeRO-1 shards (falls back to the plain optimizer when `shards <= 1` or
+/// the method is not [`partitionable`](Optimizer::partitionable)).
+pub fn sharded_by_name(name: &str, hp: HyperParams, shards: usize) -> Box<dyn Optimizer> {
+    if shards <= 1 {
+        return by_name(name, hp);
+    }
+    Box::new(ShardedOptimizer::new(name, hp, shards))
 }
 
 /// The method names exercised across the paper's pre-training tables.

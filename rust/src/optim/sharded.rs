@@ -1,0 +1,419 @@
+//! ZeRO-1 style optimizer state partitioning across data-parallel shards.
+//!
+//! [`ShardedOptimizer`] wraps `k` independent instances of a base method,
+//! each owning a *contiguous range of parameter indices* balanced by element
+//! count. A step hands every shard its parameter/gradient sub-slices on the
+//! work-stealing pool; each inner instance runs
+//! [`Optimizer::step_partition`] and therefore holds Adam moments, projector
+//! factors, and per-method extras **only for its own range** — the in-process
+//! analogue of ZeRO-1's "each rank keeps 1/k of optimizer state". Because
+//! shards update disjoint parameter sub-slices in place, the "all-gather" of
+//! updated parameter slices is the shared address space itself.
+//!
+//! Correctness relies on two properties of the per-method code:
+//!
+//! 1. **No cross-parameter coupling.** Every partitionable method keeps its
+//!    state strictly per-tensor (moments/projector keyed by slot), so a
+//!    partition behaves exactly like a small full run. Methods with global
+//!    state (BAdam's single active block) report
+//!    [`Optimizer::partitionable`] `= false` and fall back to one inner
+//!    instance over the full range.
+//! 2. **Identity-keyed randomness.** Stochastic draws are keyed on the
+//!    parameter *name* ([`super::param_stream_rng`]), not the instance's
+//!    draw order, so trajectories are bit-identical for any shard count.
+//!
+//! The equivalence tests at the bottom pin both properties for every method
+//! in [`super::PRETRAIN_METHODS`] plus the stochastic extras.
+
+use super::{by_name, HyperParams, Optimizer, OptimizerSnapshot, Param};
+use crate::tensor::{gemm, pool, Matrix};
+use std::sync::Mutex;
+
+/// One shard's slice of work for a partitioned step (see [`ShardedOptimizer`]).
+struct ShardTask<'a> {
+    opt: &'a mut Box<dyn Optimizer>,
+    params: &'a mut [Param],
+    grads: &'a [Matrix],
+}
+
+/// An optimizer whose state is partitioned across `k` contiguous
+/// parameter-index ranges (ZeRO-1 semantics, one inner instance per shard).
+pub struct ShardedOptimizer {
+    inner: Vec<Box<dyn Optimizer>>,
+    /// Half-open param-index ranges, parallel to `inner`. Computed (and
+    /// frozen) on the first step, when the parameter list is first seen.
+    bounds: Vec<(usize, usize)>,
+}
+
+impl ShardedOptimizer {
+    /// `shards` partitions of method `name`. Methods that are not
+    /// [`partitionable`](Optimizer::partitionable) collapse to a single
+    /// inner instance over the full range (replicated-state fallback).
+    pub fn new(name: &str, hp: HyperParams, shards: usize) -> ShardedOptimizer {
+        let probe = by_name(name, hp);
+        let k = if probe.partitionable() { shards.max(1) } else { 1 };
+        let mut inner = vec![probe];
+        while inner.len() < k {
+            inner.push(by_name(name, hp));
+        }
+        ShardedOptimizer { inner, bounds: Vec::new() }
+    }
+
+    /// Number of state shards (1 when the method fell back to replication).
+    pub fn shards(&self) -> usize {
+        self.inner.len()
+    }
+
+    /// Contiguous ranges balanced by cumulative element count: shard `s`
+    /// ends at the first index whose cumulative numel reaches
+    /// `total·(s+1)/k`. Deterministic in the parameter list alone, so every
+    /// step (and every resume) recomputes identical bounds.
+    fn compute_bounds(params: &[Param], k: usize) -> Vec<(usize, usize)> {
+        let total: u128 = params.iter().map(|p| p.numel() as u128).sum();
+        let mut bounds = Vec::with_capacity(k);
+        let mut start = 0usize;
+        let mut acc: u128 = 0;
+        for s in 0..k {
+            let mut end = start;
+            if s == k - 1 {
+                end = params.len();
+            } else {
+                let target = total * (s as u128 + 1) / k as u128;
+                while end < params.len() && acc < target {
+                    acc += params[end].numel() as u128;
+                    end += 1;
+                }
+            }
+            bounds.push((start, end));
+            start = end;
+        }
+        bounds
+    }
+
+    fn ensure_bounds(&mut self, params: &[Param]) {
+        let stale = match self.bounds.last() {
+            Some(&(_, end)) => end != params.len(),
+            None => true,
+        };
+        if stale {
+            self.bounds = Self::compute_bounds(params, self.inner.len());
+        }
+    }
+}
+
+impl Optimizer for ShardedOptimizer {
+    fn step(&mut self, lr: f32, params: &mut [Param], grads: &[Matrix]) {
+        assert_eq!(params.len(), grads.len());
+        if self.inner.len() == 1 {
+            return self.inner[0].step(lr, params, grads);
+        }
+        self.ensure_bounds(params);
+        // Carve disjoint &mut sub-slices (params) and shared sub-slices
+        // (grads) per shard, pairing each with its inner instance. The
+        // Mutex<Option<..>> wrapper is only move-out-of-shared-closure
+        // plumbing for the pool's `Fn(usize)` interface — each slot is
+        // locked exactly once, by the worker that claims its index.
+        let mut tasks: Vec<Mutex<Option<ShardTask>>> = Vec::with_capacity(self.inner.len());
+        {
+            let mut rest = &mut params[..];
+            let mut cut = 0usize;
+            for (opt, &(s, e)) in self.inner.iter_mut().zip(&self.bounds) {
+                let (head, tail) = rest.split_at_mut(e - cut);
+                debug_assert_eq!(cut, s);
+                rest = tail;
+                cut = e;
+                tasks.push(Mutex::new(Some(ShardTask { opt, params: head, grads: &grads[s..e] })));
+            }
+        }
+        let n = tasks.len();
+        pool::run(n, n, &|i| {
+            let task = tasks[i].lock().unwrap().take();
+            if let Some(t) = task {
+                if t.params.is_empty() {
+                    return;
+                }
+                // Each shard occupies one core; nested GEMM fan-out would
+                // oversubscribe (results are bit-identical either way).
+                gemm::run_single_threaded(|| t.opt.step_partition(lr, t.params, t.grads));
+            }
+        });
+    }
+
+    /// Per-shard figure (the largest shard), *not* the replicated sum — this
+    /// is the number a ZeRO-1 rank actually holds, and what the paper's
+    /// memory tables should report under partitioning.
+    fn state_bytes(&self) -> usize {
+        self.inner.iter().map(|o| o.state_bytes()).max().unwrap_or(0)
+    }
+
+    /// Per-shard figure, like [`state_bytes`](ShardedOptimizer::state_bytes).
+    fn state_params(&self) -> usize {
+        self.inner.iter().map(|o| o.state_params()).max().unwrap_or(0)
+    }
+
+    fn subspace_updates(&self) -> usize {
+        self.inner.iter().map(|o| o.subspace_updates()).sum()
+    }
+
+    fn workspace_misses(&self) -> usize {
+        self.inner.iter().map(|o| o.workspace_misses()).sum()
+    }
+
+    fn projector_defect(&self) -> Option<f32> {
+        self.inner.iter().filter_map(|o| o.projector_defect()).reduce(f32::max)
+    }
+
+    fn poison_next_refresh(&mut self) {
+        for o in &mut self.inner {
+            o.poison_next_refresh();
+        }
+    }
+
+    fn refresh_rejections(&self) -> usize {
+        self.inner.iter().map(|o| o.refresh_rejections()).sum()
+    }
+
+    // Pack order: shard count, then per shard its four stream lengths
+    // (mats, ints, floats, rngs) followed by the shard's streams spliced
+    // into this snapshot's streams. Restore slices them back apart, so the
+    // wrapper round-trips through the same flat format (and the same
+    // encode/decode byte layer) as any plain optimizer.
+    fn snapshot(&self) -> OptimizerSnapshot {
+        let mut snap = OptimizerSnapshot::new();
+        snap.push_int(self.inner.len() as u64);
+        for o in &self.inner {
+            let sub = o.snapshot();
+            snap.push_int(sub.mats.len() as u64);
+            snap.push_int(sub.ints.len() as u64);
+            snap.push_int(sub.floats.len() as u64);
+            snap.push_int(sub.rngs.len() as u64);
+            snap.mats.extend(sub.mats);
+            snap.ints.extend(sub.ints);
+            snap.floats.extend(sub.floats);
+            snap.rngs.extend(sub.rngs);
+        }
+        snap
+    }
+
+    fn restore(&mut self, snap: &OptimizerSnapshot) {
+        let mut r = snap.reader();
+        let k = r.int() as usize;
+        assert_eq!(k, self.inner.len(), "sharded snapshot: shard count mismatch");
+        for o in &mut self.inner {
+            let n_mats = r.int() as usize;
+            let n_ints = r.int() as usize;
+            let n_floats = r.int() as usize;
+            let n_rngs = r.int() as usize;
+            let mut sub = OptimizerSnapshot::new();
+            for _ in 0..n_mats {
+                sub.mats.push(r.mat());
+            }
+            for _ in 0..n_ints {
+                sub.ints.push(r.int());
+            }
+            for _ in 0..n_floats {
+                sub.floats.push(r.float());
+            }
+            for _ in 0..n_rngs {
+                sub.rngs.push(r.rng());
+            }
+            o.restore(&sub);
+        }
+    }
+
+    fn name(&self) -> String {
+        self.inner[0].name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::testutil::LstsqProblem;
+    use crate::optim::PRETRAIN_METHODS;
+
+    fn test_hp() -> HyperParams {
+        HyperParams { rank: 3, interval: 4, scale: 1.0, seed: 7, ..HyperParams::default() }
+    }
+
+    /// Eight parameters of mixed shapes/kinds — enough to split 2 or 4 ways
+    /// with matrices and vectors on both sides of every boundary.
+    fn make_params(tag: &str) -> Vec<Param> {
+        let mut out = Vec::new();
+        for i in 0..4 {
+            out.push(Param::matrix(&format!("{tag}.w{i}"), Matrix::zeros(12, 16)));
+            out.push(Param::vector(&format!("{tag}.b{i}"), Matrix::zeros(1, 16)));
+        }
+        out
+    }
+
+    /// Deterministic dense pseudo-gradients that evolve with the params so
+    /// projector refreshes see non-stationary signal.
+    fn grads_for(prob: &LstsqProblem, params: &[Param], step: usize) -> Vec<Matrix> {
+        params
+            .iter()
+            .map(|p| {
+                if p.value.rows() > 1 {
+                    let (_, g) = prob.loss_grad(&p.value);
+                    g
+                } else {
+                    Matrix::full(1, p.value.cols(), 0.01 + step as f32 * 1e-3)
+                }
+            })
+            .collect()
+    }
+
+    fn run_traj(name: &str, shards: usize, steps: usize) -> (Vec<Param>, Box<dyn Optimizer>) {
+        let prob = LstsqProblem::new(16, 12, 16, 321);
+        let mut params = make_params("m");
+        let mut opt: Box<dyn Optimizer> = if shards <= 1 {
+            by_name(name, test_hp())
+        } else {
+            Box::new(ShardedOptimizer::new(name, test_hp(), shards))
+        };
+        for s in 0..steps {
+            let grads = grads_for(&prob, &params, s);
+            opt.step(0.05, &mut params, &grads);
+        }
+        (params, opt)
+    }
+
+    #[test]
+    fn bounds_are_contiguous_balanced_and_cover() {
+        let params = make_params("m");
+        for k in [1, 2, 3, 4, 7] {
+            let bounds = ShardedOptimizer::compute_bounds(&params, k);
+            assert_eq!(bounds.len(), k);
+            assert_eq!(bounds[0].0, 0);
+            assert_eq!(bounds[k - 1].1, params.len());
+            for w in bounds.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "ranges must tile");
+            }
+            let total: usize = params.iter().map(|p| p.numel()).sum();
+            for &(s, e) in &bounds {
+                let share: usize = params[s..e].iter().map(|p| p.numel()).sum();
+                // Balanced to within one (largest) tensor.
+                assert!(share <= total / k + 12 * 16, "share={share} total={total} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_trajectories_bit_identical_for_all_methods() {
+        // The acceptance gate: every pre-training method (plus the
+        // stochastic extras) must produce the same parameters under
+        // 1, 2, and 4 state shards. Bit-identical, not approximately —
+        // shards change *which instance* runs the math, never the math.
+        let mut methods: Vec<&str> = PRETRAIN_METHODS.to_vec();
+        methods.extend(["apollo", "golore", "subtrack-pure"]);
+        for name in methods {
+            let (base, _) = run_traj(name, 1, 9);
+            for shards in [2usize, 4] {
+                let (got, _) = run_traj(name, shards, 9);
+                for (b, g) in base.iter().zip(&got) {
+                    assert_eq!(
+                        b.value.data(),
+                        g.value.data(),
+                        "{name}: {} diverged at {shards} shards",
+                        b.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn state_is_partitioned_not_replicated() {
+        for name in ["full-rank", "galore", "subtrack++"] {
+            let (_, single) = run_traj(name, 1, 5);
+            let (_, sharded) = run_traj(name, 4, 5);
+            let (total_p, shard_p) = (single.state_params(), sharded.state_params());
+            let (total_b, shard_b) = (single.state_bytes(), sharded.state_bytes());
+            assert!(shard_p > 0, "{name}: no state accounted");
+            // Largest of 4 balanced shards: ≈ 1/4, never more than ~1/2.
+            assert!(
+                shard_p * 2 < total_p,
+                "{name}: per-shard params {shard_p} not < half of {total_p}"
+            );
+            assert!(
+                shard_b * 2 < total_b,
+                "{name}: per-shard bytes {shard_b} not < half of {total_b}"
+            );
+        }
+    }
+
+    #[test]
+    fn unpartitionable_method_falls_back_to_single_shard() {
+        let opt = ShardedOptimizer::new("badam", test_hp(), 4);
+        assert_eq!(opt.shards(), 1, "BAdam must collapse to replicated fallback");
+        // And the fallback still matches the plain optimizer bit-for-bit.
+        let (base, _) = run_traj("badam", 1, 6);
+        let (got, _) = run_traj("badam", 4, 6);
+        for (b, g) in base.iter().zip(&got) {
+            assert_eq!(b.value.data(), g.value.data(), "badam fallback diverged");
+        }
+    }
+
+    #[test]
+    fn sharded_snapshot_restore_replays_bitexact() {
+        for name in ["full-rank", "subtrack++", "golore", "apollo"] {
+            let prob = LstsqProblem::new(16, 12, 16, 321);
+            let mut params = make_params("m");
+            let mut opt = ShardedOptimizer::new(name, test_hp(), 3);
+            for s in 0..5 {
+                let grads = grads_for(&prob, &params, s);
+                opt.step(0.05, &mut params, &grads);
+            }
+            let snap = opt.snapshot();
+            let saved: Vec<Matrix> = params.iter().map(|p| p.value.clone()).collect();
+            let mut trace = Vec::new();
+            for s in 5..9 {
+                let grads = grads_for(&prob, &params, s);
+                opt.step(0.05, &mut params, &grads);
+                trace.push(params.iter().map(|p| p.value.clone()).collect::<Vec<_>>());
+            }
+            opt.restore(&snap);
+            for (p, v) in params.iter_mut().zip(&saved) {
+                p.value.copy_from(v);
+                p.mark_dirty();
+            }
+            for (i, want) in trace.iter().enumerate() {
+                let grads = grads_for(&prob, &params, 5 + i);
+                opt.step(0.05, &mut params, &grads);
+                for (p, w) in params.iter().zip(want) {
+                    assert_eq!(p.value.data(), w.data(), "{name}: replay diverged at {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_snapshot_survives_encode_decode() {
+        let prob = LstsqProblem::new(16, 12, 16, 321);
+        let mut params = make_params("m");
+        let mut opt = ShardedOptimizer::new("subtrack++", test_hp(), 2);
+        for s in 0..5 {
+            let grads = grads_for(&prob, &params, s);
+            opt.step(0.05, &mut params, &grads);
+        }
+        let snap = opt.snapshot();
+        let decoded = OptimizerSnapshot::decode(&snap.encode()).expect("roundtrip");
+        // Restoring from the decoded copy must continue identically to
+        // restoring from the original.
+        let mut a = ShardedOptimizer::new("subtrack++", test_hp(), 2);
+        let mut b = ShardedOptimizer::new("subtrack++", test_hp(), 2);
+        a.restore(&snap);
+        b.restore(&decoded);
+        let mut pa = params.iter().map(|p| p.clone()).collect::<Vec<_>>();
+        let mut pb = params.iter().map(|p| p.clone()).collect::<Vec<_>>();
+        for s in 0..4 {
+            let ga = grads_for(&prob, &pa, s);
+            let gb = grads_for(&prob, &pb, s);
+            a.step(0.05, &mut pa, &ga);
+            b.step(0.05, &mut pb, &gb);
+        }
+        for (x, y) in pa.iter().zip(&pb) {
+            assert_eq!(x.value.data(), y.value.data(), "decoded snapshot diverged");
+        }
+    }
+}

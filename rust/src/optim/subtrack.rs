@@ -199,6 +199,11 @@ struct MatState {
     prev_lambda_norm: f32,
     /// Count of geodesic updates applied (drives re-orthonormalization guard).
     updates: usize,
+    /// Power-iteration stream, keyed on the parameter *name* so the draws a
+    /// matrix sees are independent of which other parameters this instance
+    /// owns — the property ZeRO-style state partitioning relies on (see
+    /// [`super::param_stream_rng`]).
+    rng: Rng,
 }
 
 /// Full-rank Adam state for 1-D params.
@@ -214,7 +219,6 @@ pub struct SubTrack {
     mats: Vec<Option<MatState>>,
     vecs: Vec<Option<VecState>>,
     step_no: usize,
-    rng: Rng,
     n_subspace_updates: usize,
     n_refresh_rejections: usize,
     poison_refresh: bool,
@@ -240,7 +244,6 @@ impl SubTrack {
             mats: Vec::new(),
             vecs: Vec::new(),
             step_no: 0,
-            rng: Rng::new(hp.seed ^ 0x5b71c4),
             n_subspace_updates: 0,
             n_refresh_rejections: 0,
             poison_refresh: false,
@@ -281,6 +284,7 @@ impl SubTrack {
                 moments: Moments::new(lm, ln),
                 prev_lambda_norm: 0.0,
                 updates: 0,
+                rng: super::param_stream_rng(self.hp.seed, 0x5b71c4, &param.name),
             });
         }
 
@@ -290,7 +294,6 @@ impl SubTrack {
         let zeta = self.hp.zeta;
         let power_iters = self.power_iters;
         let reorth_every = self.reorth_every;
-        let mut rng = self.rng.split();
         // Disjoint field borrows: scratch pool + per-matrix state + counters.
         let SubTrack {
             ws,
@@ -317,13 +320,19 @@ impl SubTrack {
             old_s.copy_from(&st.proj.s);
             let bd = match st.proj.side {
                 Side::Left => {
-                    grassmannian_step_ws(&mut st.proj.s, g, eta, power_iters, &mut rng, ws)
+                    grassmannian_step_ws(&mut st.proj.s, g, eta, power_iters, &mut st.rng, ws)
                 }
                 Side::Right => {
                     let mut gt = ws.take_dirty(n, m);
                     g.transpose_into(&mut gt);
-                    let bd =
-                        grassmannian_step_ws(&mut st.proj.s, &gt, eta, power_iters, &mut rng, ws);
+                    let bd = grassmannian_step_ws(
+                        &mut st.proj.s,
+                        &gt,
+                        eta,
+                        power_iters,
+                        &mut st.rng,
+                        ws,
+                    );
                     ws.give(gt);
                     bd
                 }
@@ -518,17 +527,16 @@ impl Optimizer for SubTrack {
         self.n_refresh_rejections
     }
 
-    // Pack order: step_no, n_subspace_updates, n_refresh_rejections, rng
-    // (step_matrix splits it every step, so bit-exact replay requires it),
-    // matrix slots (presence + projector + moments + prev_lambda_norm +
-    // updates), vector slots (presence + moments). The timing breakdown is
+    // Pack order: step_no, n_subspace_updates, n_refresh_rejections, matrix
+    // slots (presence + projector + moments + prev_lambda_norm + updates +
+    // the slot's name-keyed power-iteration rng — bit-exact replay requires
+    // it), vector slots (presence + moments). The timing breakdown is
     // diagnostics-only and deliberately not rewound.
     fn snapshot(&self) -> OptimizerSnapshot {
         let mut snap = OptimizerSnapshot::new();
         snap.push_int(self.step_no as u64);
         snap.push_int(self.n_subspace_updates as u64);
         snap.push_int(self.n_refresh_rejections as u64);
-        snap.push_rng(&self.rng);
         snap.push_int(self.mats.len() as u64);
         for slot in &self.mats {
             match slot {
@@ -538,6 +546,7 @@ impl Optimizer for SubTrack {
                     st.moments.pack(&mut snap);
                     snap.push_float(st.prev_lambda_norm as f64);
                     snap.push_int(st.updates as u64);
+                    snap.push_rng(&st.rng);
                 }
                 None => snap.push_int(0),
             }
@@ -560,7 +569,6 @@ impl Optimizer for SubTrack {
         self.step_no = r.int() as usize;
         self.n_subspace_updates = r.int() as usize;
         self.n_refresh_rejections = r.int() as usize;
-        self.rng = r.rng();
         let n_mats = r.int() as usize;
         self.mats.resize_with(n_mats, || None);
         for slot in &mut self.mats {
@@ -571,6 +579,7 @@ impl Optimizer for SubTrack {
                         st.moments.unpack_into(&mut r);
                         st.prev_lambda_norm = r.float() as f32;
                         st.updates = r.int() as usize;
+                        st.rng = r.rng();
                     }
                     None => {
                         *slot = Some(MatState {
@@ -578,6 +587,7 @@ impl Optimizer for SubTrack {
                             moments: Moments::unpack(&mut r),
                             prev_lambda_norm: r.float() as f32,
                             updates: r.int() as usize,
+                            rng: r.rng(),
                         });
                     }
                 }

@@ -8,11 +8,35 @@
 //! size, and every tensor's CRC before touching any parameter, and reports
 //! failures through [`CkptError`] so auto-resume can distinguish "nothing
 //! here" from "here but corrupt" and fall back to an older checkpoint.
+//!
+//! # Format 2: full training state
+//!
+//! A resumable run is more than its parameters: format 2 appends the
+//! serialized [`OptimizerSnapshot`] (Adam moments, projector bases, RNG
+//! streams, step counters) plus the corpus sampler position and accumulated
+//! wall-clock to the same blob, CRC'd as its own region and described by
+//! `format`/`state_bytes`/`state_crc32`/`sampler_draws`/`elapsed_secs`
+//! manifest keys. [`save_full`]/[`load_full`]/[`resume_newest_full`] write
+//! and read it; the params-only [`save`]/[`load`] remain as format 1 (and
+//! `load` reads the parameter region of either format), so a format-1
+//! checkpoint resumes with `state = None` rather than failing.
 
-use crate::optim::{Param, ParamKind};
+use crate::optim::{OptimizerSnapshot, Param, ParamKind};
 use crate::util::json::Json;
 use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
+
+/// The non-parameter training state a format-2 checkpoint carries.
+pub struct TrainState {
+    /// Full optimizer state (see [`crate::optim::Optimizer::snapshot`]).
+    pub opt: OptimizerSnapshot,
+    /// Corpus sampler draws consumed so far (see
+    /// [`crate::data::Corpus::sampler_draws`]); resume fast-forwards the
+    /// sampler here so the data stream continues where it left off.
+    pub sampler_draws: u64,
+    /// Wall-clock seconds the run had accumulated at save time.
+    pub elapsed_secs: f64,
+}
 
 /// Why a checkpoint could not be loaded.
 #[derive(Debug)]
@@ -89,9 +113,28 @@ fn write_atomic(path: &Path, bytes: &[u8]) -> std::io::Result<()> {
     std::fs::rename(&tmp, path)
 }
 
-/// Save parameters to `<path>.bin` + `<path>.json`, crash-safely.
+/// Save parameters to `<path>.bin` + `<path>.json`, crash-safely (format 1:
+/// no optimizer/sampler state — prefer [`save_full`] for resumable runs).
 pub fn save(path: impl AsRef<Path>, params: &[Param], step: usize) -> std::io::Result<()> {
-    let path = path.as_ref();
+    save_impl(path.as_ref(), params, step, None)
+}
+
+/// Save parameters *plus* full training state (format 2), crash-safely.
+pub fn save_full(
+    path: impl AsRef<Path>,
+    params: &[Param],
+    step: usize,
+    state: &TrainState,
+) -> std::io::Result<()> {
+    save_impl(path.as_ref(), params, step, Some(state))
+}
+
+fn save_impl(
+    path: &Path,
+    params: &[Param],
+    step: usize,
+    state: Option<&TrainState>,
+) -> std::io::Result<()> {
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
@@ -119,11 +162,27 @@ pub fn save(path: impl AsRef<Path>, params: &[Param], step: usize) -> std::io::R
             ("crc32", Json::Num(crc32(&blob[start..]) as f64)),
         ]));
     }
-    let manifest = Json::obj(vec![
+    let mut manifest_fields = vec![
         ("step", Json::Num(step as f64)),
-        ("blob_bytes", Json::Num(blob.len() as f64)),
         ("params", Json::Arr(manifest_params)),
-    ]);
+    ];
+    if let Some(st) = state {
+        // Append the state region after the parameter region, CRC'd as a
+        // unit (it has internal structure of its own; per-tensor CRCs add
+        // nothing for fall-back granularity — a corrupt state region fails
+        // the whole checkpoint either way).
+        let state_bytes = st.opt.encode();
+        manifest_fields.push(("format", Json::Num(2.0)));
+        manifest_fields.push(("state_bytes", Json::Num(state_bytes.len() as f64)));
+        manifest_fields.push(("state_crc32", Json::Num(crc32(&state_bytes) as f64)));
+        manifest_fields.push(("sampler_draws", Json::Num(st.sampler_draws as f64)));
+        manifest_fields.push(("elapsed_secs", Json::Num(st.elapsed_secs)));
+        blob.extend_from_slice(&state_bytes);
+    } else {
+        manifest_fields.push(("format", Json::Num(1.0)));
+    }
+    manifest_fields.insert(1, ("blob_bytes", Json::Num(blob.len() as f64)));
+    let manifest = Json::obj(manifest_fields);
     // Blob first, manifest last: the manifest's presence commits the save.
     write_atomic(&path.with_extension("bin"), &blob)?;
     write_atomic(&path.with_extension("json"), manifest.to_string().as_bytes())?;
@@ -137,12 +196,31 @@ pub fn save(path: impl AsRef<Path>, params: &[Param], step: usize) -> std::io::R
     Ok(())
 }
 
-/// Load a checkpoint into an existing parameter vector (names and shapes
-/// must match positionally). All integrity checks — manifest, blob size,
+/// Load a checkpoint's parameters into an existing parameter vector (names
+/// and shapes must match positionally), ignoring any format-2 state region.
+/// All integrity checks for the parameter portion — manifest, blob size,
 /// per-tensor CRCs — run before any parameter is written, so a corrupt
 /// checkpoint never leaves the model half-loaded. Returns the saved step.
 pub fn load(path: impl AsRef<Path>, params: &mut [Param]) -> Result<usize, CkptError> {
-    let path = path.as_ref();
+    load_impl(path.as_ref(), params, false).map(|(step, _)| step)
+}
+
+/// [`load`], plus the format-2 training state when present (`None` for a
+/// format-1 checkpoint). A present-but-corrupt state region fails the whole
+/// load — a resumed run must never silently continue with fresh optimizer
+/// state when the checkpoint promised otherwise.
+pub fn load_full(
+    path: impl AsRef<Path>,
+    params: &mut [Param],
+) -> Result<(usize, Option<TrainState>), CkptError> {
+    load_impl(path.as_ref(), params, true)
+}
+
+fn load_impl(
+    path: &Path,
+    params: &mut [Param],
+    want_state: bool,
+) -> Result<(usize, Option<TrainState>), CkptError> {
     let manifest_path = path.with_extension("json");
     let manifest_text = match std::fs::read_to_string(&manifest_path) {
         Ok(t) => t,
@@ -193,7 +271,9 @@ pub fn load(path: impl AsRef<Path>, params: &mut [Param]) -> Result<usize, CkptE
     };
     let mut buf = Vec::new();
     bin.read_to_end(&mut buf)?;
-    let want: usize = params.iter().map(|p| p.numel() * 4).sum();
+    let state_bytes =
+        manifest.get("state_bytes").and_then(|v| v.as_f64()).unwrap_or(0.0) as usize;
+    let want: usize = params.iter().map(|p| p.numel() * 4).sum::<usize>() + state_bytes;
     if buf.len() != want {
         return Err(corrupt(format!("blob size {} != expected {}", buf.len(), want)));
     }
@@ -210,6 +290,37 @@ pub fn load(path: impl AsRef<Path>, params: &mut [Param]) -> Result<usize, CkptE
         }
         off += n;
     }
+    // Validate (and, when asked for, decode) the state region before any
+    // parameter write, preserving the nothing-half-loaded guarantee.
+    let state = if state_bytes > 0 {
+        let region = &buf[buf.len() - state_bytes..];
+        let stored = manifest.get("state_crc32").and_then(|v| v.as_f64()).map(|v| v as u32);
+        let actual = crc32(region);
+        if stored != Some(actual) {
+            return Err(corrupt(format!(
+                "state crc mismatch: manifest {stored:?}, blob {actual:#010x}"
+            )));
+        }
+        if want_state {
+            let opt = OptimizerSnapshot::decode(region)
+                .map_err(|e| corrupt(format!("state decode: {e}")))?;
+            Some(TrainState {
+                opt,
+                sampler_draws: manifest
+                    .get("sampler_draws")
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or(0.0) as u64,
+                elapsed_secs: manifest
+                    .get("elapsed_secs")
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or(0.0),
+            })
+        } else {
+            None
+        }
+    } else {
+        None
+    };
     let mut off = 0usize;
     for p in params.iter_mut() {
         for v in p.value.data_mut() {
@@ -219,7 +330,7 @@ pub fn load(path: impl AsRef<Path>, params: &mut [Param]) -> Result<usize, CkptE
         // Invalidate any cached transposes of the overwritten weights.
         p.mark_dirty();
     }
-    Ok(step)
+    Ok((step, state))
 }
 
 /// Base path (no extension) of the checkpoint for `step` inside `dir`.
@@ -259,6 +370,25 @@ pub fn save_rotating(
 ) -> std::io::Result<PathBuf> {
     let base = rotation_path(dir, step);
     save(&base, params, step)?;
+    prune(dir, keep);
+    Ok(base)
+}
+
+/// [`save_rotating`] with full training state (format 2).
+pub fn save_rotating_full(
+    dir: &Path,
+    params: &[Param],
+    step: usize,
+    keep: usize,
+    state: &TrainState,
+) -> std::io::Result<PathBuf> {
+    let base = rotation_path(dir, step);
+    save_full(&base, params, step, state)?;
+    prune(dir, keep);
+    Ok(base)
+}
+
+fn prune(dir: &Path, keep: usize) {
     if keep > 0 {
         for (_, old) in list_checkpoints(dir).into_iter().skip(keep) {
             // Manifest first so a half-pruned checkpoint reads as Missing,
@@ -267,7 +397,6 @@ pub fn save_rotating(
             let _ = std::fs::remove_file(old.with_extension("bin"));
         }
     }
-    Ok(base)
 }
 
 /// Load the newest checkpoint in `dir` that passes every integrity check,
@@ -278,6 +407,24 @@ pub fn resume_newest(dir: &Path, params: &mut [Param]) -> Option<(usize, PathBuf
     for (step, base) in list_checkpoints(dir) {
         match load(&base, params) {
             Ok(loaded) => return Some((loaded.max(step), base)),
+            Err(CkptError::Missing(_) | CkptError::Corrupt(_)) => continue,
+            Err(CkptError::Io(_)) => continue,
+        }
+    }
+    None
+}
+
+/// [`resume_newest`], returning the format-2 training state as well (`None`
+/// state for a format-1 checkpoint). A checkpoint whose state region is
+/// corrupt is skipped entirely — params and state restore from the same
+/// (older) checkpoint or not at all, never from different steps.
+pub fn resume_newest_full(
+    dir: &Path,
+    params: &mut [Param],
+) -> Option<(usize, PathBuf, Option<TrainState>)> {
+    for (step, base) in list_checkpoints(dir) {
+        match load_full(&base, params) {
+            Ok((loaded, state)) => return Some((loaded.max(step), base, state)),
             Err(CkptError::Missing(_) | CkptError::Corrupt(_)) => continue,
             Err(CkptError::Io(_)) => continue,
         }
@@ -434,5 +581,85 @@ mod tests {
     fn crc32_known_vector() {
         // The classic IEEE test vector.
         assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    }
+
+    fn full_state_for(
+        model: &Llama,
+        steps: usize,
+    ) -> (TrainState, Box<dyn crate::optim::Optimizer>) {
+        use crate::optim::{by_name, HyperParams};
+        let hp = HyperParams { rank: 2, interval: 3, ..HyperParams::default() };
+        let mut opt = by_name("subtrack++", hp);
+        let mut params = model.params.clone();
+        let grads: Vec<_> = params
+            .iter()
+            .map(|p| crate::tensor::Matrix::full(p.value.rows(), p.value.cols(), 0.01))
+            .collect();
+        for _ in 0..steps {
+            opt.step(1e-3, &mut params, &grads);
+        }
+        (TrainState { opt: opt.snapshot(), sampler_draws: 42, elapsed_secs: 1.5 }, opt)
+    }
+
+    #[test]
+    fn full_state_roundtrip() {
+        let model = Llama::new(ModelConfig::preset("nano"), 5);
+        let (state, opt) = full_state_for(&model, 4);
+        let dir = temp_dir("full_roundtrip");
+        let path = dir.join("ckpt");
+        save_full(&path, &model.params, 11, &state).unwrap();
+        let mut fresh = Llama::new(ModelConfig::preset("nano"), 999);
+        let (step, restored) = load_full(&path, &mut fresh.params).unwrap();
+        assert_eq!(step, 11);
+        let restored = restored.expect("format 2 must carry state");
+        assert_eq!(restored.sampler_draws, 42);
+        assert_eq!(restored.elapsed_secs, 1.5);
+        for (a, b) in fresh.params.iter().zip(&model.params) {
+            assert_eq!(a.value.data(), b.value.data(), "{}", a.name);
+        }
+        // The restored snapshot must be byte-identical to the saved one.
+        assert_eq!(restored.opt.encode(), opt.snapshot().encode());
+        // Params-only load reads the same file fine (ignores the state).
+        let mut other = Llama::new(ModelConfig::preset("nano"), 998);
+        assert_eq!(load(&path, &mut other.params).unwrap(), 11);
+        assert_eq!(other.params[0].value.data(), model.params[0].value.data());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn corrupt_state_region_fails_whole_load_and_resume_falls_back() {
+        let model = Llama::new(ModelConfig::preset("nano"), 5);
+        let (state, _) = full_state_for(&model, 4);
+        let dir = temp_dir("state_corrupt");
+        save_rotating_full(&dir, &model.params, 10, 0, &state).unwrap();
+        save_rotating_full(&dir, &model.params, 20, 0, &state).unwrap();
+        // Flip a byte inside the step-20 state region (past the param bytes).
+        let bin = rotation_path(&dir, 20).with_extension("bin");
+        let mut bytes = std::fs::read(&bin).unwrap();
+        let param_bytes: usize = model.params.iter().map(|p| p.numel() * 4).sum();
+        assert!(bytes.len() > param_bytes, "format 2 must append state");
+        let idx = param_bytes + (bytes.len() - param_bytes) / 2;
+        bytes[idx] ^= 0xFF;
+        std::fs::write(&bin, &bytes).unwrap();
+        let mut fresh = Llama::new(ModelConfig::preset("nano"), 999);
+        let err = load_full(rotation_path(&dir, 20), &mut fresh.params).unwrap_err();
+        assert!(matches!(err, CkptError::Corrupt(_)), "{err:?}");
+        // Auto-resume must fall back to step 10 as a unit (params + state).
+        let (step, _, st) = resume_newest_full(&dir, &mut fresh.params).unwrap();
+        assert_eq!(step, 10);
+        assert!(st.is_some());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn format1_resume_reports_no_state() {
+        let model = Llama::new(ModelConfig::preset("nano"), 5);
+        let dir = temp_dir("v1_no_state");
+        save_rotating(&dir, &model.params, 10, 0).unwrap();
+        let mut fresh = Llama::new(ModelConfig::preset("nano"), 999);
+        let (step, _, st) = resume_newest_full(&dir, &mut fresh.params).unwrap();
+        assert_eq!(step, 10);
+        assert!(st.is_none(), "format 1 carries no state");
+        let _ = std::fs::remove_dir_all(dir);
     }
 }

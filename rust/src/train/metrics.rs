@@ -19,6 +19,10 @@ pub struct StepRecord {
 /// Streaming metrics log.
 pub struct MetricsLog {
     start: Instant,
+    /// Wall-clock seconds accumulated by earlier (pre-crash) portions of a
+    /// resumed run; [`elapsed`](MetricsLog::elapsed) adds the live timer on
+    /// top so `wall_time_secs` reports the whole run, not just the tail.
+    prior_elapsed: f64,
     pub steps: Vec<StepRecord>,
     pub evals: Vec<(usize, f32)>,
     pub peak_state_bytes: usize,
@@ -29,6 +33,7 @@ impl MetricsLog {
     pub fn new() -> MetricsLog {
         MetricsLog {
             start: Instant::now(),
+            prior_elapsed: 0.0,
             steps: Vec::new(),
             evals: Vec::new(),
             peak_state_bytes: 0,
@@ -37,7 +42,13 @@ impl MetricsLog {
     }
 
     pub fn elapsed(&self) -> f64 {
-        self.start.elapsed().as_secs_f64()
+        self.prior_elapsed + self.start.elapsed().as_secs_f64()
+    }
+
+    /// Credit wall-clock seconds spent before a resume (read from the
+    /// checkpoint) so elapsed/wall-time accounting spans the whole run.
+    pub fn set_prior_elapsed(&mut self, secs: f64) {
+        self.prior_elapsed = secs;
     }
 
     pub fn record_step(&mut self, step: usize, loss: f32, lr: f32, state_bytes: usize) {
@@ -60,7 +71,7 @@ impl MetricsLog {
         }
         let lo = n.saturating_sub(window);
         let slice = &self.steps[lo..];
-        slice.iter().map(|s| s.loss as f64).sum::<f64>() as f32 / slice.len() as f32
+        (slice.iter().map(|s| s.loss as f64).sum::<f64>() / slice.len() as f64) as f32
     }
 }
 
@@ -115,7 +126,30 @@ impl TrainReport {
         w
     }
 
-    /// Summary as JSON (EXPERIMENTS.md provenance).
+    /// Summary as JSON (EXPERIMENTS.md provenance). Field meanings:
+    ///
+    /// - `method` / `model`: optimizer row label and model preset name.
+    /// - `final_eval_loss`: loss on the deterministic eval batches after the
+    ///   last step (NaN if `eval_every = 0`).
+    /// - `wall_time_secs`: wall-clock for the *whole* run — resumed runs
+    ///   include the checkpointed pre-crash portion.
+    /// - `peak_state_bytes`: maximum analytic optimizer-state bytes observed
+    ///   (per-shard figure under ZeRO-style partitioning, plus any live
+    ///   rollback snapshot) — the paper's Table 8 axis.
+    /// - `peak_rss_bytes`: maximum measured process RSS (sampled every 32
+    ///   steps; 0 on non-Linux hosts).
+    /// - `param_count`: trainable model parameters.
+    /// - `optimizer_state_params`: optimizer state entries in the paper's
+    ///   Table 2 sense (per-shard figure under partitioning).
+    /// - `subspace_updates`: accepted projector refreshes across the run
+    ///   (summed over shards).
+    /// - `sentinel_skips` / `sentinel_rollbacks`: anomalous *optimizer*
+    ///   steps dropped / rolled back by the health sentinel.
+    /// - `refresh_rejections`: candidate bases the refresh guard discarded.
+    /// - `total_steps`: optimizer steps actually executed (resume-aware;
+    ///   accumulation micro-batches do not count).
+    /// - `n_steps`: logged curve points (`total_steps / log_every`-ish) —
+    ///   use `total_steps` for step arithmetic, never this.
     pub fn summary_json(&self) -> Json {
         Json::obj(vec![
             ("method", Json::Str(self.method.clone())),
@@ -168,6 +202,29 @@ mod tests {
         assert_eq!(m.peak_state_bytes, 900);
         let recent = m.recent_loss(2);
         assert!((recent - 1.5).abs() < 1e-5, "recent {recent}");
+    }
+
+    #[test]
+    fn prior_elapsed_offsets_the_clock() {
+        let mut m = MetricsLog::new();
+        let live = m.elapsed();
+        m.set_prior_elapsed(100.0);
+        assert!(m.elapsed() >= 100.0 + live, "prior portion not credited");
+        m.record_step(0, 1.0, 1e-3, 0);
+        assert!(m.steps[0].elapsed >= 100.0, "step timestamps must include it");
+    }
+
+    #[test]
+    fn recent_loss_is_the_f64_mean() {
+        // Mixed magnitudes: the smoothed loss must equal the f64 mean cast
+        // once at the end (summing or dividing in f32 drifts).
+        let mut m = MetricsLog::new();
+        let losses = [1.5e7f32, 0.25, 3.0e6, 0.125, 7.5e6];
+        for (i, &l) in losses.iter().enumerate() {
+            m.record_step(i, l, 1e-3, 0);
+        }
+        let want = (losses.iter().map(|&l| l as f64).sum::<f64>() / losses.len() as f64) as f32;
+        assert_eq!(m.recent_loss(losses.len()), want);
     }
 
     #[test]

@@ -21,8 +21,8 @@
 //!
 //! [`gemm::run_single_threaded`]: crate::tensor::gemm::run_single_threaded
 
-use crate::model::{Batch, Llama};
-use crate::tensor::{pool, Matrix};
+use crate::model::{Batch, Llama, StepState};
+use crate::tensor::{gemm, pool, Matrix};
 use std::sync::Mutex;
 
 /// Default data-parallel worker count: the same plumbing the GEMM row-block
@@ -34,9 +34,10 @@ pub fn auto_workers() -> usize {
 }
 
 /// Split a batch into `n` contiguous shards (last shard may be smaller;
-/// empty shards are dropped).
+/// empty shards are dropped; `n = 0` behaves like `n = 1`).
 pub fn shard_batch(batch: &Batch, n: usize) -> Vec<Batch> {
-    let per = (batch.b + n - 1) / n.max(1);
+    let n = n.max(1);
+    let per = (batch.b + n - 1) / n;
     let t = batch.t;
     let mut out = Vec::new();
     let mut start = 0usize;
@@ -53,43 +54,148 @@ pub fn shard_batch(batch: &Batch, n: usize) -> Vec<Batch> {
     out
 }
 
+/// One data-parallel worker's persistent buffers: its slice of the batch,
+/// its gradient accumulators, and its `StepState` (workspace pool + weight
+/// transpose cache + head-scratch bank).
+struct ShardSlot {
+    batch: Batch,
+    grads: Vec<Matrix>,
+    state: StepState,
+    loss: f32,
+    tokens: usize,
+}
+
+/// Persistent state for the data-parallel gradient step, owned by whoever
+/// drives repeated steps (the trainer keeps one for the whole run).
+///
+/// Every per-shard buffer — the shard's `Batch` token vectors, its gradient
+/// matrices, and its `StepState` scratch — lives here across steps, so a
+/// steady-state DP step performs no buffer allocation: shard batches refill
+/// in place, gradients are overwritten by `loss_and_grad_into`, and all
+/// temporaries come from the per-shard workspace pools. This extends the
+/// zero-allocation contract (`rust/tests/zero_alloc.rs`) to `workers > 1`,
+/// and the per-shard gradient buffers are exactly the layout a ZeRO-style
+/// reduce-scatter would consume.
+pub struct DpContext {
+    workers: usize,
+    shards: Vec<Mutex<ShardSlot>>,
+}
+
+impl DpContext {
+    pub fn new(workers: usize) -> DpContext {
+        let workers = workers.max(1);
+        let shards = (0..workers)
+            .map(|_| {
+                Mutex::new(ShardSlot {
+                    batch: Batch { inputs: Vec::new(), targets: Vec::new(), b: 0, t: 0 },
+                    grads: Vec::new(),
+                    state: StepState::new(),
+                    loss: 0.0,
+                    tokens: 0,
+                })
+            })
+            .collect();
+        DpContext { workers, shards }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Refill the persistent shard batches in place (same contiguous split
+    /// as [`shard_batch`]); returns the number of non-empty shards.
+    fn fill_shards(&mut self, batch: &Batch) -> usize {
+        let per = (batch.b + self.workers - 1) / self.workers;
+        let t = batch.t;
+        let mut n = 0usize;
+        let mut start = 0usize;
+        while start < batch.b {
+            let end = (start + per).min(batch.b);
+            let slot = self.shards[n].get_mut().unwrap_or_else(|e| e.into_inner());
+            slot.batch.inputs.clear();
+            slot.batch.inputs.extend_from_slice(&batch.inputs[start * t..end * t]);
+            slot.batch.targets.clear();
+            slot.batch.targets.extend_from_slice(&batch.targets[start * t..end * t]);
+            slot.batch.b = end - start;
+            slot.batch.t = t;
+            start = end;
+            n += 1;
+        }
+        n
+    }
+
+    /// Compute loss + gradients with this context's workers and reduce the
+    /// shard gradients into `out` (weighted by shard token counts, in fixed
+    /// shard order, so the result equals the full-batch gradient exactly
+    /// and is scheduling-independent).
+    pub fn loss_grad_into(&mut self, model: &Llama, batch: &Batch, out: &mut [Matrix]) -> f32 {
+        let n = self.fill_shards(batch);
+        for i in 0..n {
+            let slot = self.shards[i].get_mut().unwrap_or_else(|e| e.into_inner());
+            if slot.grads.len() != model.params.len() {
+                slot.grads = model.zero_grads();
+            }
+        }
+        let shards = &self.shards;
+        pool::run(self.workers, n, &|i| {
+            let mut guard = shards[i].lock().unwrap_or_else(|e| e.into_inner());
+            let slot = &mut *guard;
+            // Each shard owns one pool slot; nested GEMM fan-out inside a
+            // shard would only oversubscribe (results are identical either
+            // way).
+            slot.loss = gemm::run_single_threaded(|| {
+                model.loss_and_grad_into(&slot.batch, &mut slot.grads, &mut slot.state)
+            });
+            slot.tokens = slot.batch.tokens();
+        });
+
+        // Reduce in fixed shard order so the average is scheduling-independent.
+        let mut total_tokens = 0usize;
+        for i in 0..n {
+            total_tokens += self.shards[i].get_mut().unwrap_or_else(|e| e.into_inner()).tokens;
+        }
+        for g in out.iter_mut() {
+            g.data_mut().fill(0.0);
+        }
+        let mut loss = 0.0f64;
+        for i in 0..n {
+            let slot = self.shards[i].get_mut().unwrap_or_else(|e| e.into_inner());
+            let w = slot.tokens as f64 / total_tokens as f64;
+            loss += slot.loss as f64 * w;
+            for (acc, g) in out.iter_mut().zip(&slot.grads) {
+                acc.axpy(w as f32, g);
+            }
+        }
+        loss as f32
+    }
+
+    /// Total workspace-pool misses across the shard `StepState`s (model
+    /// scratch + head-scratch banks). Only meaningful between steps; the
+    /// `workers = 2` gate in `rust/tests/zero_alloc.rs` asserts this stays
+    /// flat after warm-up.
+    pub fn workspace_misses(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| {
+                let slot = s.lock().unwrap_or_else(|e| e.into_inner());
+                slot.state.ws.misses() + slot.state.heads.misses()
+            })
+            .sum()
+    }
+}
+
 /// Compute loss + gradients with `workers` data-parallel workers and average.
-/// The average is weighted by shard token counts so it equals the
-/// full-batch gradient exactly.
+/// One-shot convenience over [`DpContext`] (allocates fresh per-shard
+/// buffers; the trainer keeps a persistent context instead).
 pub fn data_parallel_loss_grad(
     model: &Llama,
     batch: &Batch,
     workers: usize,
 ) -> (f32, Vec<Matrix>) {
-    let shards = shard_batch(batch, workers);
-    let slots: Vec<Mutex<Option<(f32, Vec<Matrix>, usize)>>> =
-        shards.iter().map(|_| Mutex::new(None)).collect();
-    pool::run(workers, shards.len(), &|i| {
-        // Each shard owns one pool slot; nested GEMM fan-out inside a shard
-        // would only oversubscribe (results are identical either way).
-        let out = crate::tensor::gemm::run_single_threaded(|| {
-            let (loss, grads) = model.loss_and_grad(&shards[i]);
-            (loss, grads, shards[i].tokens())
-        });
-        *slots[i].lock().expect("shard slot poisoned") = Some(out);
-    });
-
-    // Reduce in fixed shard order so the average is scheduling-independent.
-    let results: Vec<(f32, Vec<Matrix>, usize)> = slots
-        .into_iter()
-        .map(|s| s.into_inner().expect("shard slot poisoned").expect("shard did not run"))
-        .collect();
-    let total_tokens: usize = results.iter().map(|r| r.2).sum();
-    let mut loss = 0.0f64;
-    let mut grads: Vec<Matrix> = model.zero_grads();
-    for (shard_loss, shard_grads, tokens) in results {
-        let w = tokens as f64 / total_tokens as f64;
-        loss += shard_loss as f64 * w;
-        for (acc, g) in grads.iter_mut().zip(&shard_grads) {
-            acc.axpy(w as f32, g);
-        }
-    }
-    (loss as f32, grads)
+    let mut ctx = DpContext::new(workers);
+    let mut grads = model.zero_grads();
+    let loss = ctx.loss_grad_into(model, batch, &mut grads);
+    (loss, grads)
 }
 
 #[cfg(test)]
@@ -118,6 +224,18 @@ mod tests {
             let cat: Vec<u32> = shards.iter().flat_map(|s| s.inputs.clone()).collect();
             assert_eq!(cat, batch.inputs);
         }
+    }
+
+    #[test]
+    fn shard_batch_zero_workers_behaves_like_one() {
+        // Regression: n = 0 used to hit a divide-by-zero computing the
+        // per-shard size; it must degrade to the single-worker split.
+        let (_, batch) = setup();
+        let shards = shard_batch(&batch, 0);
+        assert_eq!(shards.len(), 1);
+        assert_eq!(shards[0].b, batch.b);
+        assert_eq!(shards[0].inputs, batch.inputs);
+        assert_eq!(shards[0].targets, batch.targets);
     }
 
     #[test]

@@ -37,6 +37,11 @@ pub struct TrainConfig {
     pub hp: HyperParams,
     pub steps: usize,
     pub batch_size: usize,
+    /// Gradient-accumulation micro-batches per optimizer step (1 = off).
+    /// Each micro-batch samples `batch_size` fresh sequences, so the
+    /// effective batch is `batch_size * accum_steps`; `steps`, the sentinel,
+    /// fault injection and the LR schedule all count *optimizer* steps.
+    pub accum_steps: usize,
     pub lr: f32,
     pub warmup_steps: usize,
     pub grad_clip: f32,
@@ -82,6 +87,7 @@ impl TrainConfig {
             hp,
             steps,
             batch_size: 8,
+            accum_steps: 1,
             lr: 1e-3,
             warmup_steps: steps / 10,
             grad_clip: 1.0,
@@ -111,6 +117,7 @@ impl TrainConfig {
         tc.model.vocab = cfg.int("model.vocab", tc.model.vocab as i64) as usize;
         tc.model.seq_len = cfg.int("model.seq_len", tc.model.seq_len as i64) as usize;
         tc.batch_size = cfg.int("train.batch_size", tc.batch_size as i64) as usize;
+        tc.accum_steps = (cfg.int("train.accum_steps", tc.accum_steps as i64) as usize).max(1);
         tc.lr = cfg.float("train.lr", tc.lr as f64) as f32;
         tc.warmup_steps = cfg.int("train.warmup_steps", tc.warmup_steps as i64) as usize;
         tc.grad_clip = cfg.float("train.grad_clip", tc.grad_clip as f64) as f32;
@@ -176,6 +183,14 @@ pub struct Trainer {
     pub state: StepState,
     /// Numerical-health monitor (no-op when `cfg.sentinel.policy` is off).
     pub sentinel: Sentinel,
+    /// `cfg.workers` with 0 resolved to the auto worker count, fixed at
+    /// construction: the same count shards both the batch (data parallelism)
+    /// and the optimizer state (ZeRO-style partitioning).
+    workers: usize,
+    /// Persistent data-parallel buffers (`None` when `workers == 1`): shard
+    /// batches, shard gradients and shard `StepState`s all live here, so the
+    /// DP path keeps the zero-allocation steady state.
+    dp: Option<parallel::DpContext>,
 }
 
 impl Trainer {
@@ -183,10 +198,17 @@ impl Trainer {
         let model = Llama::new(cfg.model.clone(), cfg.seed);
         let mut hp = cfg.hp;
         hp.seed = cfg.seed;
-        let opt = optim::by_name(&cfg.method, hp);
+        // workers == 0 means "auto": reuse the GEMM worker-count plumbing.
+        let workers = if cfg.workers == 0 { parallel::auto_workers() } else { cfg.workers.max(1) };
+        // Each DP worker owns one contiguous partition of the optimizer
+        // state (ZeRO-1): state memory per shard shrinks ~1/workers while
+        // the update trajectory stays bit-identical for partitionable
+        // methods (`rust/src/optim/sharded.rs`).
+        let opt = optim::sharded_by_name(&cfg.method, hp, workers);
         let corpus =
             Corpus::generate(cfg.corpus_kind, cfg.model.vocab, cfg.corpus_len, cfg.seed ^ 0xd474);
         let sentinel = Sentinel::new(cfg.sentinel);
+        let dp = (workers > 1).then(|| parallel::DpContext::new(workers));
         Trainer {
             cfg,
             model,
@@ -196,7 +218,14 @@ impl Trainer {
             metrics: MetricsLog::new(),
             state: StepState::new(),
             sentinel,
+            workers,
+            dp,
         }
+    }
+
+    /// The resolved data-parallel worker / optimizer-shard count.
+    pub fn workers(&self) -> usize {
+        self.workers
     }
 
     /// Switch to the PJRT engine (artifacts must exist — see `make artifacts`).
@@ -205,24 +234,19 @@ impl Trainer {
         self
     }
 
-    /// Loss + gradients for one batch. On the native single-worker path the
-    /// gradients are written into the caller's persistent buffers
-    /// (allocation-free steady state); the DP and PJRT paths replace them.
+    /// Loss + gradients for one batch. Both native paths write into the
+    /// caller's persistent buffers (allocation-free steady state): the
+    /// single-worker path directly, the DP path by reducing its persistent
+    /// per-shard gradients into them. The PJRT path replaces them.
     fn compute_loss_grad(
         &mut self,
         batch: &Batch,
         grads: &mut Vec<crate::tensor::Matrix>,
     ) -> anyhow::Result<f32> {
-        // workers == 0 means "auto": reuse the GEMM worker-count plumbing.
-        let workers =
-            if self.cfg.workers == 0 { parallel::auto_workers() } else { self.cfg.workers };
         match &mut self.engine {
             EngineSel::Native => {
-                if workers > 1 {
-                    let (loss, g) =
-                        parallel::data_parallel_loss_grad(&self.model, batch, workers);
-                    *grads = g;
-                    Ok(loss)
+                if let Some(dp) = &mut self.dp {
+                    Ok(dp.loss_grad_into(&self.model, batch, grads))
                 } else {
                     Ok(self.model.loss_and_grad_into(batch, grads, &mut self.state))
                 }
@@ -256,8 +280,12 @@ impl Trainer {
     ///
     /// Fault-tolerance wiring (all inert at the preset defaults):
     /// - If `checkpoint_dir` is set, training first auto-resumes from the
-    ///   newest checkpoint there that passes integrity checks, then saves a
-    ///   rotating crash-safe checkpoint every `checkpoint_every` steps.
+    ///   newest checkpoint there that passes integrity checks — parameters
+    ///   *and* (for format-2 checkpoints) the full optimizer state, corpus
+    ///   sampler position and accumulated wall-clock, so a killed-and-
+    ///   resumed run replays the uninterrupted trajectory bit-for-bit —
+    ///   then saves a rotating crash-safe checkpoint every
+    ///   `checkpoint_every` steps.
     /// - Each step the sentinel inspects the loss and pre-clip gradient
     ///   norm *before* the optimizer applies the update, so an anomalous
     ///   step can be dropped (`skip`), rewound to the last in-memory
@@ -273,16 +301,38 @@ impl Trainer {
     pub fn run(&mut self) -> anyhow::Result<TrainReport> {
         let schedule = LrSchedule::new(self.cfg.lr, self.cfg.warmup_steps, self.cfg.steps);
         let (b, t) = (self.cfg.batch_size, self.cfg.model.seq_len);
-        // Gradient buffers persist across steps (zero-allocation hot path).
+        let accum = self.cfg.accum_steps.max(1);
+        // Gradient buffers persist across steps (zero-allocation hot path);
+        // under accumulation a second persistent buffer holds each
+        // micro-batch's gradients before they fold into the running sum.
         let mut grads = self.model.zero_grads();
+        let mut micro_grads = if accum > 1 { self.model.zero_grads() } else { Vec::new() };
         let policy = self.cfg.sentinel.policy;
         let ckpt_dir = (!self.cfg.checkpoint_dir.is_empty())
             .then(|| PathBuf::from(&self.cfg.checkpoint_dir));
         let mut start_step = 0usize;
         if let Some(dir) = &ckpt_dir {
-            if let Some((step, base)) = checkpoint::resume_newest(dir, &mut self.model.params) {
+            if let Some((step, base, state)) =
+                checkpoint::resume_newest_full(dir, &mut self.model.params)
+            {
                 start_step = step;
-                eprintln!("trainer: resumed step {} from {}", step, base.display());
+                let full = state.is_some();
+                if let Some(st) = state {
+                    self.opt.restore(&st.opt);
+                    // Land the sampler on the checkpointed stream position
+                    // so post-resume batches match the uninterrupted run's
+                    // (guarded: a reused trainer may already be past it).
+                    if st.sampler_draws >= self.corpus.sampler_draws() {
+                        self.corpus.fast_forward(st.sampler_draws);
+                    }
+                    self.metrics.set_prior_elapsed(st.elapsed_secs);
+                }
+                eprintln!(
+                    "trainer: resumed step {} from {} ({})",
+                    step,
+                    base.display(),
+                    if full { "full state" } else { "params only" }
+                );
             }
         }
         // Last-good (params, optimizer state) pair for rollback, refreshed
@@ -306,8 +356,30 @@ impl Trainer {
                     }));
                 }
             }
-            let batch = self.corpus.sample_batch(b, t);
-            let loss = self.compute_loss_grad(&batch, &mut grads)?;
+            // Gradient accumulation: `accum` micro-batches per optimizer
+            // step, averaged with equal weights (each micro-batch carries
+            // the same token count). `accum == 1` is byte-identical to the
+            // unaccumulated loop. Everything below this block — faults,
+            // sentinel, clipping, LR, checkpoints — sees one *optimizer*
+            // step regardless of accum.
+            let mut loss_sum = 0.0f64;
+            for micro in 0..accum {
+                let batch = self.corpus.sample_batch(b, t);
+                let target = if micro == 0 { &mut grads } else { &mut micro_grads };
+                loss_sum += self.compute_loss_grad(&batch, target)? as f64;
+                if micro > 0 {
+                    for (acc, g) in grads.iter_mut().zip(&micro_grads) {
+                        acc.axpy(1.0, g);
+                    }
+                }
+            }
+            if accum > 1 {
+                let inv = 1.0 / accum as f32;
+                for g in grads.iter_mut() {
+                    g.scale_mut(inv);
+                }
+            }
+            let loss = (loss_sum / accum as f64) as f32;
             if let Some(f) = self.cfg.fault {
                 if f.fires_at(step) {
                     match f.kind {
@@ -380,11 +452,17 @@ impl Trainer {
             }
             if let Some(dir) = &ckpt_dir {
                 if self.cfg.checkpoint_every > 0 && (step + 1) % self.cfg.checkpoint_every == 0 {
-                    let base = checkpoint::save_rotating(
+                    let train_state = checkpoint::TrainState {
+                        opt: self.opt.snapshot(),
+                        sampler_draws: self.corpus.sampler_draws(),
+                        elapsed_secs: self.metrics.elapsed(),
+                    };
+                    let base = checkpoint::save_rotating_full(
                         dir,
                         &self.model.params,
                         step + 1,
                         self.cfg.checkpoint_keep,
+                        &train_state,
                     )?;
                     if ckpt_fault_pending {
                         let f = self.cfg.fault.expect("pending implies configured");
@@ -435,13 +513,17 @@ impl Trainer {
 /// different windows).
 fn shifted_eval_batch(corpus: &Corpus, b: usize, t: usize, index: usize) -> Batch {
     let base = corpus.eval_batch(b * (index + 1), t);
-    // Keep only the last b sequences of the widened batch.
-    let keep = b * t;
+    // Keep only the last b sequences of the widened batch. `eval_batch`
+    // clamps its width on corpora too small for the request, so never keep
+    // more than it actually returned (the old unguarded subtraction
+    // underflowed and panicked on tiny corpora).
+    let keep_b = b.min(base.b);
+    let keep = keep_b * t;
     let start = base.inputs.len() - keep;
     Batch {
         inputs: base.inputs[start..].to_vec(),
         targets: base.targets[start..].to_vec(),
-        b,
+        b: keep_b,
         t,
     }
 }
@@ -608,6 +690,107 @@ keep = 2
         let losses1: Vec<f32> = r1.steps.iter().map(|s| s.loss).collect();
         let losses2: Vec<f32> = r2.steps.iter().map(|s| s.loss).collect();
         assert_eq!(losses1, losses2);
+    }
+
+    #[test]
+    fn config_file_roundtrips_accum_steps() {
+        let text = "[model]\npreset = \"nano\"\n\n[train]\nsteps = 8\naccum_steps = 2\n";
+        let tc = TrainConfig::from_config(&Config::parse(text).unwrap());
+        assert_eq!(tc.accum_steps, 2);
+        // Absent key keeps the inert default; 0 clamps to 1 (it divides the
+        // per-step loss and drives a loop bound).
+        let plain = Config::parse("[model]\npreset = \"nano\"\n").unwrap();
+        assert_eq!(TrainConfig::from_config(&plain).accum_steps, 1);
+        let zero = Config::parse("[train]\naccum_steps = 0\n").unwrap();
+        assert_eq!(TrainConfig::from_config(&zero).accum_steps, 1);
+    }
+
+    #[test]
+    fn grad_accumulation_matches_large_batch() {
+        // Two b=4 micro-batches consume the same sampler draws as one b=8
+        // batch, so both runs see the same sequences; equal-weight averaging
+        // then reproduces the full-batch gradient up to fp reassociation.
+        let mut big = quick_cfg("full-rank");
+        big.steps = 8;
+        big.batch_size = 8;
+        let mut acc = big.clone();
+        acc.batch_size = 4;
+        acc.accum_steps = 2;
+        let mut t_big = Trainer::new(big);
+        let r_big = t_big.run().unwrap();
+        let mut t_acc = Trainer::new(acc);
+        let r_acc = t_acc.run().unwrap();
+        // Metrics count optimizer steps, not micro-batches.
+        assert_eq!(r_acc.total_steps, 8);
+        assert_eq!(r_acc.steps.len(), r_big.steps.len());
+        for (x, y) in r_big.steps.iter().zip(&r_acc.steps) {
+            assert!(
+                (x.loss - y.loss).abs() < 1e-4 * x.loss.abs().max(1.0),
+                "step {} loss diverged: {} vs {}",
+                x.step,
+                x.loss,
+                y.loss
+            );
+        }
+        for (p, q) in t_big.model.params.iter().zip(&t_acc.model.params) {
+            crate::util::proptest::close(p.value.data(), q.value.data(), 1e-5, 1e-4).unwrap();
+        }
+    }
+
+    #[test]
+    fn resume_replays_the_uninterrupted_run_bit_for_bit() {
+        // The regression this PR fixes: resume used to reload parameters but
+        // drop optimizer state and sampler position, so a resumed run
+        // diverged from the uninterrupted one. Kill-and-resume must now be
+        // invisible in the loss stream.
+        for method in ["full-rank", "subtrack++"] {
+            let dir = std::env::temp_dir()
+                .join(format!("subtrack_resume_{method}_{}", std::process::id()));
+            let _ = std::fs::remove_dir_all(&dir);
+            let mut cfg = quick_cfg(method);
+            cfg.steps = 20;
+            cfg.hp.interval = 4; // subspace refreshes on both sides of the cut
+            cfg.checkpoint_dir = dir.to_string_lossy().into_owned();
+            cfg.checkpoint_every = 5;
+            cfg.checkpoint_keep = 0; // keep all
+            // Uninterrupted run; leaves checkpoints at steps 5/10/15/20
+            // (saving is read-only with respect to the trajectory).
+            let clean = Trainer::new(cfg.clone()).run().unwrap();
+            // Simulate a crash after step 10: delete the later checkpoints,
+            // then re-run the same config — it must resume from step 10.
+            for late in [15, 20] {
+                let base = checkpoint::rotation_path(&dir, late);
+                std::fs::remove_file(base.with_extension("json")).unwrap();
+                std::fs::remove_file(base.with_extension("bin")).unwrap();
+            }
+            let resumed = Trainer::new(cfg).run().unwrap();
+            let tail: Vec<(usize, f32)> =
+                clean.steps.iter().skip(10).map(|s| (s.step, s.loss)).collect();
+            let replay: Vec<(usize, f32)> =
+                resumed.steps.iter().map(|s| (s.step, s.loss)).collect();
+            assert_eq!(replay, tail, "{method}: resumed tail diverged");
+            assert_eq!(
+                resumed.final_eval_loss, clean.final_eval_loss,
+                "{method}: final eval diverged"
+            );
+            assert!(
+                resumed.wall_time_secs >= clean.wall_time_secs * 0.5,
+                "{method}: resumed wall-time must include the pre-crash portion"
+            );
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+
+    #[test]
+    fn eval_survives_tiny_corpus() {
+        // shifted_eval_batch used to underflow (and panic) when the corpus
+        // could not supply the widened deterministic eval batch.
+        let mut cfg = quick_cfg("full-rank");
+        cfg.corpus_len = 60;
+        cfg.eval_batches = 3;
+        let mut tr = Trainer::new(cfg);
+        let loss = tr.eval_loss().unwrap();
+        assert!(loss.is_finite());
     }
 
     #[test]

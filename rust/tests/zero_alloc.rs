@@ -247,6 +247,34 @@ fn warm_pool_run_submissions_do_not_allocate_job_state() {
 }
 
 #[test]
+fn data_parallel_sharded_steps_are_allocation_free_after_warmup() {
+    // The workers = 2 extension of the contract: the DP path's per-shard
+    // batches, gradients and scratch all live in a persistent `DpContext`,
+    // and the ZeRO-partitioned optimizer keeps per-shard state — so after
+    // each shard's warm-up step the whole DP + sharded-update loop must be
+    // served from the pools, with the summed per-shard miss counters flat.
+    use subtrack::train::parallel::DpContext;
+    let cfg = ModelConfig::preset("tiny");
+    let mut model = Llama::new(cfg.clone(), 5);
+    let batch = batch_for(&cfg, 4, 6);
+    let mut dp = DpContext::new(2);
+    let mut grads = model.zero_grads();
+    let hp = HyperParams { rank: 4, interval: 100, scale: 1.0, ..HyperParams::default() };
+    let mut opt = optim::sharded_by_name("subtrack++", hp, 2);
+    let mut per_step = Vec::new();
+    for _ in 0..4 {
+        let loss = dp.loss_grad_into(&model, &batch, &mut grads);
+        assert!(loss.is_finite());
+        opt.step(1e-3, &mut model.params, &grads);
+        per_step.push((dp.workspace_misses(), opt.workspace_misses()));
+    }
+    assert!(per_step[0].0 > 0, "warm-up must populate the shard workspaces");
+    assert_eq!(per_step[0], per_step[1], "DP step 2 allocated: {per_step:?}");
+    assert_eq!(per_step[1], per_step[2], "DP step 3 allocated: {per_step:?}");
+    assert_eq!(per_step[2], per_step[3], "DP step 4 allocated: {per_step:?}");
+}
+
+#[test]
 fn eval_after_training_reuses_the_pool() {
     // Mixing loss-only evals into the loop must also settle: the eval path
     // shares the same pool and shapes.
