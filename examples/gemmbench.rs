@@ -12,7 +12,7 @@
 use std::collections::BTreeMap;
 use subtrack::model::{Batch, Llama, ModelConfig, StepState};
 use subtrack::optim::subtrack::grassmannian_step_ws;
-use subtrack::tensor::{gemm, ops, pool, qr, svd, Matrix, Workspace};
+use subtrack::tensor::{gemm, ops, pool, qr, svd, Dtype, Matrix, MatrixB, Workspace};
 use subtrack::util::json::{merge_into_file, Json};
 use subtrack::util::rng::Rng;
 
@@ -94,6 +94,65 @@ fn main() {
             );
         }
         ws.give(c);
+    }
+
+    // ---- widening kernels: packed 16-bit operands, f32 accumulation ----
+    // The wide entry points decode the packed operand into leased scratch
+    // and reuse the f32 register-blocked kernels, so the delta vs
+    // matmul_into is pure decode traffic. Recorded per storage dtype under
+    // gemm.dtype_ms so the ledger tracks the decode overhead as the packed
+    // panels move into the SIMD microkernels (ROADMAP item).
+    println!("\nwidening GEMM (packed B, f32 accumulation):");
+    let mut dtype_ms = BTreeMap::new();
+    for n in [128usize, 256, 512] {
+        let a = Matrix::randn(n, n, 1.0, &mut rng);
+        let b = Matrix::randn(n, n, 1.0, &mut rng);
+        let mut c = ws.take(n, n);
+        let f32_secs = time_op(budget, || {
+            gemm::matmul_into(&mut c, &a, &b);
+            std::hint::black_box(&c);
+        });
+        println!("matmul_f32       {n}: {:8.2} ms", f32_secs * 1e3);
+        dtype_ms.insert(format!("matmul_f32_{n}"), Json::Num(f32_secs * 1e3));
+        for dt in [Dtype::Bf16, Dtype::F16] {
+            let packed = MatrixB::encode(&b, dt);
+            let secs = time_op(budget, || {
+                gemm::matmul_wide_into(&mut c, &a, &packed, &mut ws);
+                std::hint::black_box(&c);
+            });
+            let label = dt.as_str();
+            println!("matmul_wide_{label:<4} {n}: {:8.2} ms", secs * 1e3);
+            dtype_ms.insert(format!("matmul_wide_{label}_{n}"), Json::Num(secs * 1e3));
+        }
+        ws.give(c);
+    }
+    // Model-level per-dtype step cost: quantized activations + widened
+    // weights against the plain f32 path at one fixed tiny-family shape.
+    for dt in [Dtype::F32, Dtype::Bf16, Dtype::F16] {
+        let mut cfg = ModelConfig::preset("tiny");
+        cfg.seq_len = 64;
+        cfg.dtype = dt;
+        let t = cfg.seq_len;
+        let model = Llama::new(cfg.clone(), 5);
+        let b = 4usize;
+        let mut brng = Rng::new(6);
+        let inputs: Vec<u32> = (0..b * t).map(|_| brng.below(cfg.vocab) as u32).collect();
+        let targets: Vec<u32> = (0..b * t).map(|_| brng.below(cfg.vocab) as u32).collect();
+        let batch = Batch { inputs: inputs.clone(), targets, b, t };
+        let mut state = StepState::new();
+        let mut grads = model.zero_grads();
+        let fwd = time_op(budget, || {
+            let cache = model.forward_hidden_ws(&inputs, b, t, &mut state);
+            cache.recycle(&mut state.ws);
+        });
+        let fwdbwd = time_op(budget, || {
+            std::hint::black_box(model.loss_and_grad_into(&batch, &mut grads, &mut state));
+        });
+        let label = dt.as_str();
+        println!("model_fwd    [{label:<4}]: {:8.3} ms", fwd * 1e3);
+        println!("model_fwdbwd [{label:<4}]: {:8.3} ms", fwdbwd * 1e3);
+        dtype_ms.insert(format!("model_fwd_{label}"), Json::Num(fwd * 1e3));
+        dtype_ms.insert(format!("model_fwdbwd_{label}"), Json::Num(fwdbwd * 1e3));
     }
 
     // ---- refresh-path kernels (QR / SVD / power iteration / geodesic) ----
@@ -341,6 +400,7 @@ fn main() {
         ("threads", Json::Num(auto_threads as f64)),
         ("workspace_misses", Json::Num(ws.misses() as f64)),
         ("cases", Json::Obj(cases)),
+        ("dtype_ms", Json::Obj(dtype_ms)),
         ("refresh_ms", Json::Obj(refresh)),
         ("attn_ms", Json::Obj(attn)),
         ("sched_ms", Json::Obj(sched)),

@@ -13,7 +13,7 @@
 use std::time::Instant;
 use subtrack::model::{Batch, Llama, ModelConfig, StepState};
 use subtrack::optim::{Adam, AdamCfg, Optimizer};
-use subtrack::tensor::{gemm, ops};
+use subtrack::tensor::{dtype, gemm, ops};
 use subtrack::train::{FaultPolicy, Sentinel, SentinelConfig};
 use subtrack::util::json::{merge_section_into_file, Json};
 use subtrack::util::rng::Rng;
@@ -22,8 +22,26 @@ fn main() {
     let preset = std::env::args().nth(1).unwrap_or("small".into());
     let out_path =
         std::env::var("SUBTRACK_BENCH_OUT").unwrap_or_else(|_| "BENCH_gemm.json".to_string());
-    let cfg = ModelConfig::preset(&preset);
+    let mut cfg = ModelConfig::preset(&preset);
+    // Honor the PALLAS_DTYPE knob (the same override TrainConfig::preset
+    // applies) so the mixed-precision legs profile their true storage.
+    if let Some(dt) = dtype::env_dtype() {
+        cfg.dtype = dt;
+    }
     let mut model = Llama::new(cfg.clone(), 1);
+    // Storage footprint of the weights themselves: 4 B/param for f32, 2 for
+    // the packed 16-bit dtypes (the paper's memory axis, parameter slice).
+    let mut param_bytes = 0usize;
+    let mut param_count = 0usize;
+    for p in &model.params {
+        param_bytes += p.storage_bytes();
+        param_count += p.value.len();
+    }
+    let bytes_per_param = param_bytes as f64 / param_count as f64;
+    println!(
+        "param storage [{}]: {bytes_per_param:.1} B/param ({param_count} params)",
+        cfg.dtype.as_str()
+    );
     let mut rng = Rng::new(2);
     let (b, t) = (8, cfg.seq_len);
     let inputs: Vec<u32> = (0..b * t).map(|_| rng.below(cfg.vocab) as u32).collect();
@@ -164,6 +182,8 @@ fn main() {
             ("steady_state_ws_misses", Json::Num(state.ws.misses() as f64)),
             ("train.sentinel_ms", Json::Num(sentinel_ms)),
             ("train.snapshot_ms", Json::Num(snapshot_ms)),
+            ("train.bytes_per_param", Json::Num(bytes_per_param)),
+            ("train.storage_dtype", Json::Str(cfg.dtype.as_str().to_string())),
             ("batch", Json::Num(b as f64)),
             ("seq_len", Json::Num(t as f64)),
         ]),

@@ -6,6 +6,8 @@
 //! (DESIGN.md §Substitutions). Scaling preserves the r ≪ m ≤ n regime on
 //! every projected matrix.
 
+use crate::tensor::Dtype;
+
 /// Architecture + training-shape configuration for one model size.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ModelConfig {
@@ -19,6 +21,11 @@ pub struct ModelConfig {
     pub rope_theta: f32,
     /// Default projection rank for low-rank optimizers (paper Table 10).
     pub rank: usize,
+    /// Weight/activation storage dtype (compute is always f32). Presets are
+    /// `F32`; the training-config layer overrides it from `[model] dtype` or
+    /// the `PALLAS_DTYPE` env knob, so models built directly from a preset
+    /// (unit tests, gradchecks) stay in exact f32.
+    pub dtype: Dtype,
 }
 
 impl ModelConfig {
@@ -54,6 +61,7 @@ impl ModelConfig {
             seq_len,
             rope_theta: 10_000.0,
             rank,
+            dtype: Dtype::F32,
         }
     }
 

@@ -50,7 +50,7 @@
 use super::config::ModelConfig;
 use crate::optim::{Param, TransposeCache};
 use crate::tensor::pool::{self, SendPtr};
-use crate::tensor::{gemm, ops, Matrix, Workspace, WorkspaceBank};
+use crate::tensor::{dtype, gemm, ops, Dtype, Matrix, Workspace, WorkspaceBank};
 use crate::util::rng::Rng;
 
 /// A training batch of token ids. `inputs[b*t + i]` is position i of sequence
@@ -252,6 +252,14 @@ impl Llama {
         }
         params.push(Param::vector("final_norm", Matrix::full(1, h, 1.0)));
         params.push(Param::matrix("lm_head", Matrix::randn(v, h, std, &mut rng)));
+        // Under a 16-bit storage dtype every weight starts on the storage
+        // grid (and stays there: the optimizer write-back re-quantizes), so
+        // a fresh run and a checkpoint-reloaded one see identical bytes.
+        if cfg.dtype != Dtype::F32 {
+            for p in &mut params {
+                p.set_storage_dtype(cfg.dtype);
+            }
+        }
         Llama { cfg, params }
     }
 
@@ -322,6 +330,7 @@ impl Llama {
         let mut hidden = state.ws.take_dirty(b * t, h);
         let mut inv_rms_final = state.ws.take_vec_dirty(b * t);
         rmsnorm_forward_into(&x, gain, &mut hidden, &mut inv_rms_final);
+        quantize_act(self.cfg.dtype, &mut hidden);
         Cache { layers, x_final: x, inv_rms_final, hidden, b, t }
     }
 
@@ -340,12 +349,18 @@ impl Llama {
         let h = cfg.hidden;
         let bt = b * t;
         let slot = l * FUSED_SLOTS_PER_LAYER;
+        // Storage dtype for activations: each written-out activation buffer
+        // is rounded onto the storage grid while the accumulations inside
+        // every kernel stay f32 (no-op under f32 — the guard in
+        // `quantize_act` keeps the f32 path byte-identical).
+        let dt = cfg.dtype;
         let StepState { ws, tcache, heads } = state;
 
         // ---- attention block ----
         let mut n1 = ws.take_dirty(bt, h);
         let mut inv_rms1 = ws.take_vec_dirty(bt);
         rmsnorm_forward_into(&x_in, &self.params[idx.attn_norm()].value, &mut n1, &mut inv_rms1);
+        quantize_act(dt, &mut n1);
         // Fused QKV projection: one (B·T)×h · h×3h GEMM against the cached
         // [Wqᵀ|Wkᵀ|Wvᵀ] — large enough to clear the GEMM threading gate
         // where three separate h×h products were not.
@@ -358,6 +373,7 @@ impl Llama {
         // RoPE on the Q and K column bands of the fused buffer.
         rope_apply_ws(&mut qkv, t, n_heads, d, cfg.rope_theta, false, 0, ws);
         rope_apply_ws(&mut qkv, t, n_heads, d, cfg.rope_theta, false, h, ws);
+        quantize_act(dt, &mut qkv);
 
         // Per-(batch, head) causal attention, one pool task per pair. Each
         // task leases its scratch from the pre-sized bank, runs the fused
@@ -392,6 +408,7 @@ impl Llama {
                     let scores = unsafe { &mut *probs_base.get().add(ti) };
                     gemm::attn_scores_into(scores, &qs, &ks, 1.0, &mut tws);
                     ops::causal_softmax_rows(scores, scale);
+                    quantize_probs_prefix(dt, scores);
                     gemm::attn_apply_into(&mut out, scores, &vs); // T×D
                     // SAFETY: each (bi, hi) task owns a disjoint (row,
                     // column band) region of attn_cat.
@@ -404,16 +421,19 @@ impl Llama {
                 });
             });
         }
+        quantize_act(dt, &mut attn_cat);
         let mut attn_out = ws.take_dirty(bt, h);
         gemm::matmul_into(&mut attn_out, &attn_cat, tcache.get(idx.wo(), &self.params[idx.wo()]));
         // Residual, folded in place: x_mid = x_in + attn_out.
         attn_out.axpy(1.0, &x_in);
+        quantize_act(dt, &mut attn_out);
         let x_mid = attn_out;
 
         // ---- MLP block (SwiGLU) ----
         let mut n2 = ws.take_dirty(bt, h);
         let mut inv_rms2 = ws.take_vec_dirty(bt);
         rmsnorm_forward_into(&x_mid, &self.params[idx.mlp_norm()].value, &mut n2, &mut inv_rms2);
+        quantize_act(dt, &mut n2);
         let f = cfg.intermediate;
         // Fused gate/up projection: one (B·T)×h · h×2f GEMM.
         let mut z_gu = ws.take_dirty(bt, 2 * f);
@@ -422,6 +442,7 @@ impl Llama {
             &[&self.params[idx.w_gate()], &self.params[idx.w_up()]],
         );
         gemm::matmul_into(&mut z_gu, &n2, gu_t);
+        quantize_act(dt, &mut z_gu);
         let mut h_act = ws.take_dirty(bt, f);
         {
             // h = silu(z1) ⊙ z3, reading each fused row's gate|up halves.
@@ -435,10 +456,12 @@ impl Llama {
                 }
             }
         }
+        quantize_act(dt, &mut h_act);
         let mut mlp_out = ws.take_dirty(bt, h);
         let wd_t = tcache.get(idx.w_down(), &self.params[idx.w_down()]);
         gemm::matmul_into(&mut mlp_out, &h_act, wd_t);
         mlp_out.axpy(1.0, &x_mid);
+        quantize_act(dt, &mut mlp_out);
         let x_out = mlp_out;
 
         (
@@ -803,6 +826,33 @@ fn silu(z: f32) -> f32 {
 fn silu_grad(z: f32) -> f32 {
     let s = 1.0 / (1.0 + (-z).exp());
     s * (1.0 + z * (1.0 - s))
+}
+
+/// Round an activation buffer onto the storage-dtype grid (no-op under
+/// f32). Applied to each kernel's *written-out* activations, so the model
+/// computes with storage-precision values while every accumulation inside a
+/// kernel stays f32. Backward is untouched: gradients flow straight through
+/// the rounding (the standard straight-through treatment).
+#[inline]
+fn quantize_act(dt: Dtype, m: &mut Matrix) {
+    if dt != Dtype::F32 {
+        dtype::quantize_slice(dt, m.data_mut());
+    }
+}
+
+/// Prefix-aware variant for causal attention probabilities: only the live
+/// lower triangle is swept. The strict upper triangle holds stale workspace
+/// data that no kernel ever reads or writes — touching it would break the
+/// triangular contract (and waste half the sweep).
+#[inline]
+fn quantize_probs_prefix(dt: Dtype, p: &mut Matrix) {
+    if dt == Dtype::F32 {
+        return;
+    }
+    for i in 0..p.rows() {
+        let row = p.row_mut(i);
+        dtype::quantize_slice(dt, &mut row[..=i]);
+    }
 }
 
 /// RMSNorm forward: y = x/rms(x) ⊙ g. Returns (y, inv_rms per row).
@@ -1178,6 +1228,34 @@ mod tests {
         }
         // Loss-only path agrees too.
         assert_eq!(model.loss(&batch), model.loss_ws(&batch, &mut state));
+    }
+
+    #[test]
+    fn bf16_storage_stays_on_grid_and_close_to_f32() {
+        let cfg = ModelConfig::preset("tiny");
+        let f32_model = Llama::new(cfg.clone(), 13);
+        let batch = tiny_batch(&cfg, 14);
+        let mut bcfg = cfg;
+        bcfg.dtype = Dtype::Bf16;
+        let bf_model = Llama::new(bcfg, 13);
+        // Same seed ⇒ weights are the f32 weights rounded onto the bf16 grid.
+        for (p, q) in f32_model.params.iter().zip(&bf_model.params) {
+            assert_eq!(q.dtype(), Dtype::Bf16);
+            for (&a, &b) in p.value.data().iter().zip(q.value.data()) {
+                assert_eq!(b, Dtype::Bf16.quantize(a), "{}: off-grid weight", q.name);
+            }
+        }
+        let l32 = f32_model.loss(&batch);
+        let (lbf, grads) = bf_model.loss_and_grad(&batch);
+        assert!(lbf.is_finite(), "bf16 loss not finite");
+        // ~ln(V) at init for both; bf16 rounding perturbs it only slightly.
+        assert!(
+            (l32 - lbf).abs() < 0.1 * l32.abs().max(1.0),
+            "bf16 loss {lbf} too far from f32 loss {l32}"
+        );
+        for (g, p) in grads.iter().zip(&bf_model.params) {
+            assert!(g.data().iter().all(|v| v.is_finite()), "{}: non-finite grad", p.name);
+        }
     }
 
     #[test]

@@ -194,12 +194,14 @@ impl Optimizer for LdAdam {
     fn state_bytes(&self) -> usize {
         // Includes the full-size error-feedback buffer — this is what makes
         // LDAdam's measured memory the largest of the low-rank methods
-        // (paper Table 8 / Figure 1b).
+        // (paper Table 8 / Figure 1b). Element size derived, not hardcoded:
+        // all optimizer state (moments, projectors, error feedback) is f32
+        // regardless of the parameters' storage dtype.
         let mats: usize = self
             .mats
             .iter()
             .flatten()
-            .map(|s| s.moments.bytes() + s.proj.bytes() + s.err.len() * 4)
+            .map(|s| s.moments.bytes() + s.proj.bytes() + s.err.len() * std::mem::size_of::<f32>())
             .sum();
         let vecs: usize = self.vecs.iter().flatten().map(|s| s.bytes()).sum();
         mats + vecs

@@ -1,0 +1,317 @@
+//! f32 master weights for mixed-precision storage.
+//!
+//! [`MixedPrecision`] wraps any base optimizer and owns the f32 **master
+//! copy** of every parameter. Under a 16-bit storage dtype the visible
+//! `Param.value` holds values rounded onto the storage grid (bf16/f16 —
+//! see `tensor::dtype`), which is too coarse to integrate small updates:
+//! an update below half a storage ulp re-rounds to the old value and the
+//! parameter never moves. The classic fix, reproduced here, is:
+//!
+//! 1. the inner optimizer steps the f32 masters (full-precision math,
+//!    moments, projectors — all untouched),
+//! 2. the wrapper writes each master back through
+//!    [`Param::quantize_store_from`], so storage is re-rounded **once per
+//!    step** from the full-precision value and sub-ulp progress
+//!    accumulates in the master.
+//!
+//! Masters are lazily initialized from the parameters' current (already
+//! quantized) values on the first step, so a fresh run and a
+//! checkpoint-resumed run start their masters from byte-identical storage.
+//! Snapshots append the master matrices after the inner optimizer's
+//! streams (count last), so rollback and format-3 checkpoints replay
+//! bit-identically; the inner restore reads its own prefix and never sees
+//! the tail.
+//!
+//! Under [`Dtype::F32`] the factory (`optim::mixed_by_name`) skips this
+//! wrapper entirely — the f32 path stays byte-identical to earlier
+//! revisions.
+
+use super::{Optimizer, OptimizerSnapshot, Param, ParamKind};
+use crate::tensor::{Dtype, Matrix};
+
+/// Mixed-precision wrapper: inner optimizer over f32 masters, quantized
+/// write-back into the visible storage-dtype parameters (module docs).
+pub struct MixedPrecision {
+    inner: Box<dyn Optimizer>,
+    dtype: Dtype,
+    /// f32 master copies, parallel to the trainer's parameter list. Empty
+    /// until the first step (the wrapper has not seen the params yet).
+    masters: Vec<Param>,
+    /// Master values restored before the first step (checkpoint resume);
+    /// applied once `masters` is built.
+    pending: Option<Vec<Matrix>>,
+}
+
+impl MixedPrecision {
+    pub fn new(inner: Box<dyn Optimizer>, dtype: Dtype) -> MixedPrecision {
+        MixedPrecision { inner, dtype, masters: Vec::new(), pending: None }
+    }
+
+    /// The storage dtype write-backs round onto.
+    pub fn dtype(&self) -> Dtype {
+        self.dtype
+    }
+
+    fn ensure_masters(&mut self, params: &[Param]) {
+        if self.masters.len() != params.len() {
+            // Initialized from the *quantized* storage values, not some
+            // pre-rounding original: a resumed run rebuilding masters from
+            // a checkpoint must land on the same starting point.
+            self.masters = params
+                .iter()
+                .map(|p| match p.kind {
+                    ParamKind::Matrix2D => Param::matrix(&p.name, p.value.clone()),
+                    ParamKind::Vector => Param::vector(&p.name, p.value.clone()),
+                })
+                .collect();
+        }
+        if let Some(pend) = self.pending.take() {
+            assert_eq!(pend.len(), self.masters.len(), "mixed snapshot: master count mismatch");
+            for (m, src) in self.masters.iter_mut().zip(&pend) {
+                if m.value.shape() == src.shape() {
+                    m.value.copy_from(src);
+                } else {
+                    m.value = src.clone();
+                }
+                m.mark_dirty();
+            }
+        }
+    }
+}
+
+impl Optimizer for MixedPrecision {
+    fn step(&mut self, lr: f32, params: &mut [Param], grads: &[Matrix]) {
+        assert_eq!(params.len(), grads.len());
+        self.ensure_masters(params);
+        self.inner.step(lr, &mut self.masters, grads);
+        for (p, m) in params.iter_mut().zip(&self.masters) {
+            p.quantize_store_from(&m.value);
+        }
+    }
+
+    /// The wrapper holds the (global, unsharded) master copies itself;
+    /// partitioning happens *inside* it, in the sharded inner optimizer.
+    fn partitionable(&self) -> bool {
+        false
+    }
+
+    /// Inner state plus the f32 masters (4 bytes per element — masters are
+    /// always full precision regardless of the storage dtype).
+    fn state_bytes(&self) -> usize {
+        let master_bytes: usize =
+            self.masters.iter().map(|m| m.numel() * std::mem::size_of::<f32>()).sum();
+        self.inner.state_bytes() + master_bytes
+    }
+
+    /// Table-2 accounting stays the inner method's: masters are storage
+    /// plumbing, not optimizer state parameters in the paper's sense (they
+    /// show up in [`state_bytes`](Optimizer::state_bytes) instead).
+    fn state_params(&self) -> usize {
+        self.inner.state_params()
+    }
+
+    fn subspace_updates(&self) -> usize {
+        self.inner.subspace_updates()
+    }
+
+    fn workspace_misses(&self) -> usize {
+        self.inner.workspace_misses()
+    }
+
+    fn projector_defect(&self) -> Option<f32> {
+        self.inner.projector_defect()
+    }
+
+    fn poison_next_refresh(&mut self) {
+        self.inner.poison_next_refresh();
+    }
+
+    fn refresh_rejections(&self) -> usize {
+        self.inner.refresh_rejections()
+    }
+
+    // Pack order: the inner snapshot's streams verbatim, then the master
+    // matrices, then their count as the *last* int. The inner restore
+    // consumes exactly its own prefix through the reader cursor, so the
+    // appended tail is invisible to it; the wrapper peels the tail off by
+    // reading the final count.
+    fn snapshot(&self) -> OptimizerSnapshot {
+        let mut snap = self.inner.snapshot();
+        for m in &self.masters {
+            snap.push_mat(&m.value);
+        }
+        snap.push_int(self.masters.len() as u64);
+        snap
+    }
+
+    fn restore(&mut self, snap: &OptimizerSnapshot) {
+        self.inner.restore(snap);
+        let k = *snap.ints.last().expect("mixed snapshot: missing master count") as usize;
+        assert!(k <= snap.mats.len(), "mixed snapshot: master tail larger than matrix stream");
+        let tail = &snap.mats[snap.mats.len() - k..];
+        if self.masters.len() == k {
+            for (m, src) in self.masters.iter_mut().zip(tail) {
+                if m.value.shape() == src.shape() {
+                    m.value.copy_from(src);
+                } else {
+                    m.value = src.clone();
+                }
+                m.mark_dirty();
+            }
+            self.pending = None;
+        } else {
+            // Restore before the first step (resume path): the parameter
+            // list has not been seen yet, so stash the masters until
+            // `ensure_masters` builds the table.
+            self.pending = Some(tail.to_vec());
+        }
+    }
+
+    fn name(&self) -> String {
+        self.inner.name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{by_name, mixed_by_name, HyperParams};
+    use super::*;
+    use crate::tensor::dtype;
+
+    fn test_hp() -> HyperParams {
+        HyperParams { rank: 3, interval: 4, scale: 1.0, seed: 7, ..HyperParams::default() }
+    }
+
+    fn bf16_params() -> Vec<Param> {
+        let mut w = Param::matrix("w", Matrix::full(4, 4, 1.0));
+        let mut b = Param::vector("b", Matrix::full(1, 4, 1.0));
+        w.set_storage_dtype(Dtype::Bf16);
+        b.set_storage_dtype(Dtype::Bf16);
+        vec![w, b]
+    }
+
+    fn tiny_grads() -> Vec<Matrix> {
+        vec![Matrix::full(4, 4, 1e-3), Matrix::full(1, 4, 1e-3)]
+    }
+
+    #[test]
+    fn f32_dtype_is_a_passthrough() {
+        // No wrapper under f32: same object as sharded_by_name, and one
+        // step matches the plain optimizer bit for bit.
+        let mut a = mixed_by_name("adam", test_hp(), 1, Dtype::F32);
+        let mut b = by_name("adam", test_hp());
+        let mut pa = vec![Param::matrix("w", Matrix::full(3, 3, 0.5))];
+        let mut pb = vec![Param::matrix("w", Matrix::full(3, 3, 0.5))];
+        let g = vec![Matrix::full(3, 3, 0.1)];
+        a.step(0.01, &mut pa, &g);
+        b.step(0.01, &mut pb, &g);
+        assert_eq!(pa[0].value.data(), pb[0].value.data());
+        assert_eq!(pa[0].dtype(), Dtype::F32);
+    }
+
+    #[test]
+    fn masters_accumulate_sub_ulp_updates() {
+        // Adam's normalized update at lr 1e-5 is far below the bf16 ulp at
+        // 1.0 (2^-8): quantizing each step's result directly would never
+        // move the weight. The master copy integrates the updates and the
+        // storage eventually steps down to the next grid point.
+        let mut opt = mixed_by_name("adam", test_hp(), 1, Dtype::Bf16);
+        let mut params = bf16_params();
+        let grads = tiny_grads();
+        let naive = {
+            // What storage-only integration would do: one step's update,
+            // re-rounded — back on the starting grid point.
+            let delta = 1e-5f32;
+            dtype::bf16_to_f32(dtype::f32_to_bf16(1.0 - delta))
+        };
+        assert_eq!(naive, 1.0, "premise: one update is sub-ulp");
+        for _ in 0..500 {
+            opt.step(1e-5, &mut params, &grads);
+        }
+        assert!(
+            params[0].value.get(0, 0) < 1.0,
+            "storage never moved: {}",
+            params[0].value.get(0, 0)
+        );
+        // Storage stays on the bf16 grid (quantize is idempotent).
+        for p in &params {
+            for &v in p.value.data() {
+                assert_eq!(v, Dtype::Bf16.quantize(v), "off-grid storage value {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn state_accounts_masters_in_bytes_not_params() {
+        let mut opt = mixed_by_name("adam", test_hp(), 1, Dtype::Bf16);
+        let mut inner = by_name("adam", test_hp());
+        let mut params = bf16_params();
+        let mut iparams = bf16_params();
+        let grads = tiny_grads();
+        opt.step(0.01, &mut params, &grads);
+        inner.step(0.01, &mut iparams, &grads);
+        let master_bytes: usize = params.iter().map(|p| p.numel() * 4).sum();
+        assert_eq!(opt.state_bytes(), inner.state_bytes() + master_bytes);
+        assert_eq!(opt.state_params(), inner.state_params());
+    }
+
+    #[test]
+    fn snapshot_restore_replays_bitexact() {
+        let mut opt = mixed_by_name("subtrack++", test_hp(), 1, Dtype::Bf16);
+        let mut params = bf16_params();
+        let step = |opt: &mut Box<dyn Optimizer>, params: &mut Vec<Param>, s: usize| {
+            let g = 1e-3 + s as f32 * 1e-4;
+            let grads = vec![Matrix::full(4, 4, g), Matrix::full(1, 4, g)];
+            opt.step(0.05, params, &grads);
+        };
+        for s in 0..6 {
+            step(&mut opt, &mut params, s);
+        }
+        let snap = opt.snapshot();
+        let saved: Vec<Matrix> = params.iter().map(|p| p.value.clone()).collect();
+        let mut trace = Vec::new();
+        for s in 6..10 {
+            step(&mut opt, &mut params, s);
+            trace.push(params.iter().map(|p| p.value.clone()).collect::<Vec<_>>());
+        }
+        opt.restore(&snap);
+        for (p, v) in params.iter_mut().zip(&saved) {
+            p.value.copy_from(v);
+            p.mark_dirty();
+        }
+        for (i, want) in trace.iter().enumerate() {
+            step(&mut opt, &mut params, 6 + i);
+            for (p, w) in params.iter().zip(want) {
+                assert_eq!(p.value.data(), w.data(), "replay diverged at {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn restore_into_fresh_wrapper_resumes_identically() {
+        // The checkpoint-resume path: restore lands before the wrapper has
+        // ever seen the parameter list, so masters arrive via `pending`.
+        let mut opt = mixed_by_name("adam", test_hp(), 1, Dtype::Bf16);
+        let mut params = bf16_params();
+        let grads = tiny_grads();
+        for _ in 0..300 {
+            opt.step(1e-5, &mut params, &grads);
+        }
+        let snap = opt.snapshot();
+        let saved = params.clone();
+        // Continue the original.
+        for _ in 0..300 {
+            opt.step(1e-5, &mut params, &grads);
+        }
+        // Fresh wrapper + restored snapshot + saved (quantized) params.
+        let mut opt2 = mixed_by_name("adam", test_hp(), 1, Dtype::Bf16);
+        opt2.restore(&snap);
+        let mut params2 = saved;
+        for _ in 0..300 {
+            opt2.step(1e-5, &mut params2, &grads);
+        }
+        for (a, b) in params.iter().zip(&params2) {
+            assert_eq!(a.value.data(), b.value.data(), "resume diverged for {}", a.name);
+        }
+    }
+}

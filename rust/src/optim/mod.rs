@@ -24,6 +24,7 @@ pub mod fira;
 pub mod galore;
 pub mod golore;
 pub mod ldadam;
+pub mod master;
 pub mod osd;
 pub mod projector;
 pub mod sharded;
@@ -36,11 +37,13 @@ pub use fira::Fira;
 pub use galore::GaLore;
 pub use golore::GoLore;
 pub use ldadam::LdAdam;
+pub use master::MixedPrecision;
 pub use osd::OnlineSubspaceDescent;
 pub use sharded::ShardedOptimizer;
 pub use subtrack::{Components, SubTrack};
 
-use crate::tensor::Matrix;
+use crate::tensor::dtype::quantize_slice;
+use crate::tensor::{Dtype, Matrix};
 use crate::util::rng::Rng;
 
 /// A deterministic RNG stream keyed on a parameter's *name* (FNV-1a hash)
@@ -88,19 +91,67 @@ pub struct Param {
     pub value: Matrix,
     pub kind: ParamKind,
     version: u64,
+    /// Storage dtype `value` is held in. `value` stays an f32 [`Matrix`]
+    /// (compute reads it directly), but under a 16-bit dtype every element
+    /// is kept *on the storage grid* — quantized through
+    /// [`Param::quantize_store_from`] after each optimizer write-back — so
+    /// the numerics are exactly those of packed storage while checkpoints
+    /// and byte accounting use the true 2-byte element size.
+    dtype: Dtype,
 }
 
 impl Param {
     pub fn matrix(name: &str, value: Matrix) -> Param {
-        Param { name: name.to_string(), value, kind: ParamKind::Matrix2D, version: 0 }
+        Param {
+            name: name.to_string(),
+            value,
+            kind: ParamKind::Matrix2D,
+            version: 0,
+            dtype: Dtype::F32,
+        }
     }
 
     pub fn vector(name: &str, value: Matrix) -> Param {
-        Param { name: name.to_string(), value, kind: ParamKind::Vector, version: 0 }
+        Param {
+            name: name.to_string(),
+            value,
+            kind: ParamKind::Vector,
+            version: 0,
+            dtype: Dtype::F32,
+        }
     }
 
     pub fn numel(&self) -> usize {
         self.value.len()
+    }
+
+    /// The storage dtype (see the field docs).
+    #[inline]
+    pub fn dtype(&self) -> Dtype {
+        self.dtype
+    }
+
+    /// Switch the parameter onto `dt` storage, rounding the current value
+    /// onto the storage grid. Bumps the version (cached transposes of the
+    /// unrounded value are stale).
+    pub fn set_storage_dtype(&mut self, dt: Dtype) {
+        self.dtype = dt;
+        quantize_slice(dt, self.value.data_mut());
+        self.version += 1;
+    }
+
+    /// Overwrite `value` with `master` rounded onto the storage grid — the
+    /// master-weight write-back step. Bumps the version.
+    pub fn quantize_store_from(&mut self, master: &Matrix) {
+        self.value.copy_from(master);
+        quantize_slice(self.dtype, self.value.data_mut());
+        self.version += 1;
+    }
+
+    /// Bytes this parameter occupies in storage form (element-size-aware:
+    /// 2 per element under bf16/f16, 4 under f32).
+    pub fn storage_bytes(&self) -> usize {
+        self.numel() * self.dtype.size_bytes()
     }
 
     /// Monotone write counter (see [`TransposeCache`]).
@@ -156,17 +207,24 @@ impl Param {
 /// [`get_fused_stack`]: TransposeCache::get_fused_stack
 #[derive(Default)]
 pub struct TransposeCache {
-    entries: Vec<Option<(u64, Matrix)>>,
+    /// Per-param entries keyed on (version, storage dtype): a dtype switch
+    /// re-rounds the value without changing its identity, so the dtype is
+    /// part of the freshness key even though [`Param::set_storage_dtype`]
+    /// also bumps the version (belt-and-suspenders for any future path that
+    /// swaps dtype on a restored parameter).
+    entries: Vec<Option<(u64, Dtype, Matrix)>>,
     /// Fused multi-param entries, indexed by caller-owned slot ids.
     fused: Vec<Option<FusedEntry>>,
     /// Number of transpose recomputations performed (diagnostics/tests).
     recomputes: usize,
 }
 
-/// One fused entry: the concatenated operand plus the source versions it
-/// was built from (parallel to the caller's param list for its slot).
+/// One fused entry: the concatenated operand plus the source versions and
+/// storage dtypes it was built from (both parallel to the caller's param
+/// list for its slot).
 struct FusedEntry {
     versions: Vec<u64>,
+    dtypes: Vec<Dtype>,
     mat: Matrix,
 }
 
@@ -205,19 +263,20 @@ impl TransposeCache {
         let want_shape = (param.value.cols(), param.value.rows());
         let fresh = matches!(
             &self.entries[idx],
-            Some((ver, t)) if *ver == param.version() && t.shape() == want_shape
+            Some((ver, dt, t))
+                if *ver == param.version() && *dt == param.dtype() && t.shape() == want_shape
         );
         if !fresh {
             self.recomputes += 1;
             let mut buf = match self.entries[idx].take() {
-                Some((_, old)) if old.shape() == want_shape => old,
+                Some((_, _, old)) if old.shape() == want_shape => old,
                 _ => Matrix::zeros(want_shape.0, want_shape.1),
             };
             param.value.transpose_into(&mut buf);
-            self.entries[idx] = Some((param.version(), buf));
+            self.entries[idx] = Some((param.version(), param.dtype(), buf));
         }
         match &self.entries[idx] {
-            Some((_, t)) => t,
+            Some((_, _, t)) => t,
             None => unreachable!("entry populated above"),
         }
     }
@@ -233,16 +292,18 @@ impl TransposeCache {
         let want = (c, total);
         if !self.fused_fresh(slot, params, want) {
             self.recomputes += 1;
-            let (mut buf, mut versions) = self.take_fused_slot(slot, want);
+            let (mut buf, mut versions, mut dtypes) = self.take_fused_slot(slot, want);
             versions.clear();
             versions.extend(params.iter().map(|p| p.version()));
+            dtypes.clear();
+            dtypes.extend(params.iter().map(|p| p.dtype()));
             let mut off = 0usize;
             for p in params {
                 debug_assert_eq!(p.value.cols(), c, "fused transpose: mismatched input dims");
                 transpose_into_cols(&p.value, &mut buf, off);
                 off += p.value.rows();
             }
-            self.fused[slot] = Some(FusedEntry { versions, mat: buf });
+            self.fused[slot] = Some(FusedEntry { versions, dtypes, mat: buf });
         }
         match &self.fused[slot] {
             Some(e) => &e.mat,
@@ -263,9 +324,11 @@ impl TransposeCache {
         let want = (total, c);
         if !self.fused_fresh(slot, params, want) {
             self.recomputes += 1;
-            let (mut buf, mut versions) = self.take_fused_slot(slot, want);
+            let (mut buf, mut versions, mut dtypes) = self.take_fused_slot(slot, want);
             versions.clear();
             versions.extend(params.iter().map(|p| p.version()));
+            dtypes.clear();
+            dtypes.extend(params.iter().map(|p| p.dtype()));
             let mut off = 0usize;
             for p in params {
                 debug_assert_eq!(p.value.cols(), c, "fused stack: mismatched widths");
@@ -273,7 +336,7 @@ impl TransposeCache {
                 buf.data_mut()[off..off + n].copy_from_slice(p.value.data());
                 off += n;
             }
-            self.fused[slot] = Some(FusedEntry { versions, mat: buf });
+            self.fused[slot] = Some(FusedEntry { versions, dtypes, mat: buf });
         }
         match &self.fused[slot] {
             Some(e) => &e.mat,
@@ -282,13 +345,15 @@ impl TransposeCache {
     }
 
     /// Whether a fused slot can be served as-is: right shape, same source
-    /// count, no source version moved.
+    /// count, no source version or storage dtype moved.
     fn fused_fresh(&self, slot: usize, params: &[&Param], want: (usize, usize)) -> bool {
         match self.fused.get(slot).and_then(|e| e.as_ref()) {
             Some(e) => {
                 e.mat.shape() == want
                     && e.versions.len() == params.len()
                     && e.versions.iter().zip(params).all(|(&v, p)| v == p.version())
+                    && e.dtypes.len() == params.len()
+                    && e.dtypes.iter().zip(params).all(|(&d, p)| d == p.dtype())
             }
             None => false,
         }
@@ -296,14 +361,18 @@ impl TransposeCache {
 
     /// Take the slot's buffer for an in-place rebuild (reused when the
     /// shape matches, so steady-state weight updates never allocate here).
-    fn take_fused_slot(&mut self, slot: usize, want: (usize, usize)) -> (Matrix, Vec<u64>) {
+    fn take_fused_slot(
+        &mut self,
+        slot: usize,
+        want: (usize, usize),
+    ) -> (Matrix, Vec<u64>, Vec<Dtype>) {
         if self.fused.len() <= slot {
             self.fused.resize_with(slot + 1, || None);
         }
         match self.fused[slot].take() {
-            Some(e) if e.mat.shape() == want => (e.mat, e.versions),
-            Some(e) => (Matrix::zeros(want.0, want.1), e.versions),
-            None => (Matrix::zeros(want.0, want.1), Vec::new()),
+            Some(e) if e.mat.shape() == want => (e.mat, e.versions, e.dtypes),
+            Some(e) => (Matrix::zeros(want.0, want.1), e.versions, e.dtypes),
+            None => (Matrix::zeros(want.0, want.1), Vec::new(), Vec::new()),
         }
     }
 
@@ -732,6 +801,25 @@ pub fn sharded_by_name(name: &str, hp: HyperParams, shards: usize) -> Box<dyn Op
         return by_name(name, hp);
     }
     Box::new(ShardedOptimizer::new(name, hp, shards))
+}
+
+/// [`sharded_by_name`] wrapped for mixed-precision storage: under a 16-bit
+/// `dtype` the inner optimizer is driven over f32 master weights and every
+/// update is written back through [`Param::quantize_store_from`]; under
+/// `Dtype::F32` this is exactly `sharded_by_name` (no wrapper, byte-identical
+/// trajectories).
+pub fn mixed_by_name(
+    name: &str,
+    hp: HyperParams,
+    shards: usize,
+    dtype: Dtype,
+) -> Box<dyn Optimizer> {
+    let inner = sharded_by_name(name, hp, shards);
+    if dtype == Dtype::F32 {
+        inner
+    } else {
+        Box::new(MixedPrecision::new(inner, dtype))
+    }
 }
 
 /// The method names exercised across the paper's pre-training tables.

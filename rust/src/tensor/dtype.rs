@@ -1,0 +1,586 @@
+//! Storage dtypes: bf16/f16 ⇄ f32 software conversion and packed buffers.
+//!
+//! The training stack accumulates in f32 everywhere — storage dtype is a
+//! *memory* decision, not a compute one. This module owns that decision:
+//!
+//! * [`Dtype`] names the three storage formats and their numeric envelopes
+//!   (element size, machine epsilon, largest finite value). Every layer that
+//!   sizes or rounds memory — `Param`, checkpoint blobs, `state_bytes()`
+//!   accounting, test tolerances — derives from it instead of hardcoding
+//!   `4` or f32 thresholds.
+//! * Scalar conversion kernels implement IEEE round-to-nearest-even in
+//!   plain integer arithmetic: no `half`/nightly dependency, no fp
+//!   environment assumptions, bit-for-bit reproducible on every target.
+//!   NaN stays NaN (quieted, sign + payload top bits kept), ±Inf maps to
+//!   ±Inf, subnormals round correctly at both boundaries, and values past
+//!   the target's finite range round to Inf exactly where IEEE says so
+//!   (f32::MAX is above the bf16 rounding midpoint, 65520 is the f16 tie).
+//! * [`MatrixB`] is the packed u16 companion of [`Matrix`]: same row-major
+//!   layout at half the bytes. The widening GEMM entry points in
+//!   [`super::gemm`] read it directly; checkpoints store its bytes raw.
+//! * The `PALLAS_DTYPE` env knob mirrors the `GEMM_THREADS`
+//!   sentinel-re-resolve idiom so CI can run the whole suite under bf16
+//!   storage without touching any config file.
+//!
+//! Quantizing through a round trip (`quantize`) is idempotent: every value
+//! it returns is exactly representable in the storage dtype, so encoding
+//! an already-quantized matrix is lossless — the checkpoint format-3
+//! resume path relies on this for bit-exact replay.
+
+use super::matrix::Matrix;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// A parameter/activation storage format. Compute is always f32.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Dtype {
+    /// IEEE single precision — the identity storage format.
+    #[default]
+    F32,
+    /// bfloat16: f32's exponent range with an 8-bit significand.
+    Bf16,
+    /// IEEE half precision: 11-bit significand, max finite value 65504.
+    F16,
+}
+
+impl Dtype {
+    /// Parse a config/env spelling (`"f32"`, `"bf16"`, `"f16"`).
+    pub fn parse(s: &str) -> Option<Dtype> {
+        match s.trim() {
+            "f32" | "float32" => Some(Dtype::F32),
+            "bf16" | "bfloat16" => Some(Dtype::Bf16),
+            "f16" | "float16" => Some(Dtype::F16),
+            _ => None,
+        }
+    }
+
+    /// The canonical config spelling.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::Bf16 => "bf16",
+            Dtype::F16 => "f16",
+        }
+    }
+
+    /// Bytes one stored element occupies.
+    pub fn size_bytes(self) -> usize {
+        match self {
+            Dtype::F32 => 4,
+            Dtype::Bf16 | Dtype::F16 => 2,
+        }
+    }
+
+    /// Machine epsilon of the storage format — the noise floor
+    /// precision-aware test tolerances scale with.
+    pub fn epsilon(self) -> f32 {
+        match self {
+            Dtype::F32 => f32::EPSILON,
+            Dtype::Bf16 => 0.00390625,  // 2^-8
+            Dtype::F16 => 0.0009765625, // 2^-10
+        }
+    }
+
+    /// Largest finite representable value (the loss-scaler's overflow bound).
+    pub fn max_finite(self) -> f32 {
+        match self {
+            Dtype::F32 => f32::MAX,
+            Dtype::Bf16 => f32::from_bits(0x7F7F_0000), // (2 - 2^-7) · 2^127
+            Dtype::F16 => 65504.0,
+        }
+    }
+
+    /// Encode one f32 into the packed u16 representation.
+    ///
+    /// Only meaningful for the 16-bit formats; [`MatrixB`] (the sole packed
+    /// container) rejects `F32` at construction, and the `F32` arm here
+    /// exists only so the match is total.
+    pub fn encode(self, x: f32) -> u16 {
+        match self {
+            Dtype::F32 => unreachable!("f32 is never packed into u16 storage"),
+            Dtype::Bf16 => f32_to_bf16(x),
+            Dtype::F16 => f32_to_f16(x),
+        }
+    }
+
+    /// Decode one packed u16 back to f32 (exact — widening never rounds).
+    pub fn decode(self, u: u16) -> f32 {
+        match self {
+            Dtype::F32 => unreachable!("f32 is never packed into u16 storage"),
+            Dtype::Bf16 => bf16_to_f32(u),
+            Dtype::F16 => f16_to_f32(u),
+        }
+    }
+
+    /// Round `x` through the storage format and back — the value the
+    /// format would actually hold. Identity for `F32`.
+    pub fn quantize(self, x: f32) -> f32 {
+        match self {
+            Dtype::F32 => x,
+            Dtype::Bf16 => bf16_to_f32(f32_to_bf16(x)),
+            Dtype::F16 => f16_to_f32(f32_to_f16(x)),
+        }
+    }
+}
+
+/// f32 → bf16 with round-to-nearest-even. NaN is quieted (keeps sign and
+/// top payload bits); overflow past the bf16 range rounds to ±Inf exactly
+/// as RNE on the shared exponent grid dictates.
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // Truncation could zero the payload and turn NaN into Inf; force a
+        // quiet bit so NaN survives the narrowing.
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    // RNE on the raw bits: add half an ulp of the kept field plus the tie
+    // breaker from the kept lsb. Works uniformly across normals, subnormals
+    // and the overflow-to-Inf boundary because the IEEE bit pattern is
+    // monotone in magnitude.
+    let rounded = bits.wrapping_add(0x7FFF + ((bits >> 16) & 1));
+    (rounded >> 16) as u16
+}
+
+/// bf16 → f32 (exact: bf16 is f32's top 16 bits).
+pub fn bf16_to_f32(u: u16) -> f32 {
+    f32::from_bits((u as u32) << 16)
+}
+
+/// f32 → IEEE f16 with round-to-nearest-even, gradual underflow into f16
+/// subnormals, flush-to-signed-zero below them, overflow to ±Inf above
+/// 65504 (65520, the tie, rounds to Inf — its even neighbor), and quieted
+/// NaN with the payload's top bits kept.
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let abs = bits & 0x7FFF_FFFF;
+    if abs >= 0x7F80_0000 {
+        // Inf / NaN. The quiet bit keeps a NaN whose payload truncates to
+        // zero from collapsing into Inf.
+        return if abs > 0x7F80_0000 {
+            sign | 0x7E00 | ((abs >> 13) as u16 & 0x03FF)
+        } else {
+            sign | 0x7C00
+        };
+    }
+    let exp = (abs >> 23) as i32 - 127 + 15;
+    if exp >= 0x1F {
+        // Magnitude at least 2^16: past every rounding boundary.
+        return sign | 0x7C00;
+    }
+    if exp <= 0 {
+        if exp < -10 {
+            // Below half the smallest subnormal: round to signed zero.
+            return sign;
+        }
+        // Gradual underflow: restore the implicit bit, then shift the
+        // significand into subnormal position with RNE. A round-up carry
+        // out of the subnormal field lands on the smallest normal, which
+        // is exactly the right encoding (exponent field becomes 1).
+        let man = (abs & 0x007F_FFFF) | 0x0080_0000;
+        let shift = (14 - exp) as u32; // 14..=24
+        let halfway = 1u32 << (shift - 1);
+        let rest = man & ((1u32 << shift) - 1);
+        let mut h = (man >> shift) as u16;
+        if rest > halfway || (rest == halfway && h & 1 == 1) {
+            h += 1;
+        }
+        return sign | h;
+    }
+    // Normal range: drop 13 significand bits with RNE. A mantissa carry
+    // propagates into the exponent (and to Inf at the very top) by plain
+    // integer addition — again the right encoding by construction.
+    let man = abs & 0x007F_FFFF;
+    let rest = man & 0x1FFF;
+    let mut h = ((exp as u16) << 10) | ((man >> 13) as u16);
+    if rest > 0x1000 || (rest == 0x1000 && h & 1 == 1) {
+        h += 1;
+    }
+    sign | h
+}
+
+/// IEEE f16 → f32 (exact: every f16 value is representable in f32).
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let man = (h & 0x03FF) as u32;
+    if exp == 0x1F {
+        // Inf / NaN, payload widened into the f32 significand top bits.
+        return f32::from_bits(sign | 0x7F80_0000 | (man << 13));
+    }
+    if exp == 0 {
+        if man == 0 {
+            return f32::from_bits(sign); // ±0
+        }
+        // Subnormal: value is man · 2^-24; the product is exact because
+        // man < 2^10 and the scale is a power of two.
+        let v = man as f32 * f32::from_bits(0x3380_0000); // 2^-24
+        return if sign != 0 { -v } else { v };
+    }
+    f32::from_bits(sign | ((exp + 127 - 15) << 23) | (man << 13))
+}
+
+/// Round every element of `xs` through `dtype` in place.
+pub fn quantize_slice(dtype: Dtype, xs: &mut [f32]) {
+    match dtype {
+        Dtype::F32 => {}
+        Dtype::Bf16 => {
+            for x in xs.iter_mut() {
+                *x = bf16_to_f32(f32_to_bf16(*x));
+            }
+        }
+        Dtype::F16 => {
+            for x in xs.iter_mut() {
+                *x = f16_to_f32(f32_to_f16(*x));
+            }
+        }
+    }
+}
+
+/// Encode `src` into `dst` as packed u16s (`dst.len() == src.len()`).
+pub fn encode_slice(dtype: Dtype, src: &[f32], dst: &mut [u16]) {
+    assert_eq!(src.len(), dst.len(), "encode_slice length");
+    match dtype {
+        Dtype::F32 => unreachable!("f32 is never packed into u16 storage"),
+        Dtype::Bf16 => {
+            for (d, &s) in dst.iter_mut().zip(src) {
+                *d = f32_to_bf16(s);
+            }
+        }
+        Dtype::F16 => {
+            for (d, &s) in dst.iter_mut().zip(src) {
+                *d = f32_to_f16(s);
+            }
+        }
+    }
+}
+
+/// Decode packed u16s into f32 (`dst.len() == src.len()`).
+pub fn decode_slice(dtype: Dtype, src: &[u16], dst: &mut [f32]) {
+    assert_eq!(src.len(), dst.len(), "decode_slice length");
+    match dtype {
+        Dtype::F32 => unreachable!("f32 is never packed into u16 storage"),
+        Dtype::Bf16 => {
+            for (d, &s) in dst.iter_mut().zip(src) {
+                *d = bf16_to_f32(s);
+            }
+        }
+        Dtype::F16 => {
+            for (d, &s) in dst.iter_mut().zip(src) {
+                *d = f16_to_f32(s);
+            }
+        }
+    }
+}
+
+/// A row-major matrix packed in a 16-bit storage format — the half-width
+/// companion of [`Matrix`]. Checkpoint format 3 stores its bytes verbatim;
+/// the widening GEMM entry points read it with f32 accumulation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MatrixB {
+    rows: usize,
+    cols: usize,
+    dtype: Dtype,
+    data: Vec<u16>,
+}
+
+impl MatrixB {
+    /// Pack `src` into `dtype` storage (rounds each element once, RNE).
+    pub fn encode(src: &Matrix, dtype: Dtype) -> MatrixB {
+        assert_ne!(dtype, Dtype::F32, "MatrixB holds 16-bit formats only");
+        let mut data = vec![0u16; src.len()];
+        encode_slice(dtype, src.data(), &mut data);
+        MatrixB { rows: src.rows(), cols: src.cols(), dtype, data }
+    }
+
+    /// Re-encode `src` into this buffer (shapes must match; no allocation).
+    pub fn encode_from(&mut self, src: &Matrix) {
+        assert_eq!((self.rows, self.cols), src.shape(), "encode_from shape");
+        encode_slice(self.dtype, src.data(), &mut self.data);
+    }
+
+    /// Widen every element into `out` (shape-checked, exact).
+    pub fn decode_into(&self, out: &mut Matrix) {
+        assert_eq!(out.shape(), (self.rows, self.cols), "decode_into shape");
+        decode_slice(self.dtype, &self.data, out.data_mut());
+    }
+
+    /// Element (i, j), widened.
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.dtype.decode(self.data[i * self.cols + j])
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        self.dtype
+    }
+
+    /// The packed element array (row-major).
+    pub fn data(&self) -> &[u16] {
+        &self.data
+    }
+
+    /// Bytes of storage the packed form occupies.
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 2
+    }
+}
+
+/// `PALLAS_DTYPE` env knob, mirroring the `GEMM_THREADS` sentinel idiom:
+/// `usize::MAX` means "unset — resolve from the environment on first read";
+/// [`set_env_dtype`]`(None)` restores the sentinel so tests that clear an
+/// override do not erase a CI-wide `PALLAS_DTYPE=bf16`.
+/// Encoding: 0 = env absent/unparsable, 1..=3 = F32/Bf16/F16.
+static ENV_DTYPE: AtomicUsize = AtomicUsize::new(usize::MAX);
+
+fn knob_to_dtype(v: usize) -> Option<Dtype> {
+    match v {
+        1 => Some(Dtype::F32),
+        2 => Some(Dtype::Bf16),
+        3 => Some(Dtype::F16),
+        _ => None,
+    }
+}
+
+/// The `PALLAS_DTYPE` override, if any. Consulted by the *training-config*
+/// layer only (`TrainConfig::preset`/`from_config`), never by
+/// `ModelConfig::preset` — unit tests that build models directly stay f32
+/// unless they opt in, while end-to-end runs pick up the CI leg's dtype.
+pub fn env_dtype() -> Option<Dtype> {
+    let cur = ENV_DTYPE.load(Ordering::Relaxed);
+    if cur != usize::MAX {
+        return knob_to_dtype(cur);
+    }
+    let from_env = std::env::var("PALLAS_DTYPE")
+        .ok()
+        .and_then(|v| Dtype::parse(&v))
+        .map(|d| d as usize + 1)
+        .unwrap_or(0);
+    // Only replace the sentinel so a concurrent setter wins.
+    let _ = ENV_DTYPE.compare_exchange(usize::MAX, from_env, Ordering::Relaxed, Ordering::Relaxed);
+    knob_to_dtype(ENV_DTYPE.load(Ordering::Relaxed))
+}
+
+/// Force (or with `None` un-force) the dtype override; `None` restores the
+/// sentinel so the next [`env_dtype`] re-resolves `PALLAS_DTYPE`.
+pub fn set_env_dtype(d: Option<Dtype>) {
+    ENV_DTYPE.store(d.map(|d| d as usize + 1).unwrap_or(usize::MAX), Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bf16_known_bit_patterns() {
+        assert_eq!(f32_to_bf16(0.0), 0x0000);
+        assert_eq!(f32_to_bf16(-0.0), 0x8000);
+        assert_eq!(f32_to_bf16(1.0), 0x3F80);
+        assert_eq!(f32_to_bf16(-2.0), 0xC000);
+        assert_eq!(f32_to_bf16(f32::INFINITY), 0x7F80);
+        assert_eq!(f32_to_bf16(f32::NEG_INFINITY), 0xFF80);
+        assert_eq!(bf16_to_f32(0x3F80), 1.0);
+        assert_eq!(bf16_to_f32(0x7F80), f32::INFINITY);
+    }
+
+    #[test]
+    fn bf16_ties_to_even() {
+        // 1 + 2^-9 sits exactly between 1.0 (even) and 1 + 2^-8: down.
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3F80_8000)), 0x3F80);
+        // (1 + 2^-8) + 2^-9 sits between 0x3F81 (odd) and 0x3F82: up.
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3F81_8000)), 0x3F82);
+        // Just below / above the tie round toward the nearer neighbor.
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3F80_7FFF)), 0x3F80);
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3F80_8001)), 0x3F81);
+    }
+
+    #[test]
+    fn bf16_overflow_and_nan() {
+        // f32::MAX lies above the midpoint between bf16's max finite value
+        // and 2^128, so RNE sends it to Inf.
+        assert_eq!(f32_to_bf16(f32::MAX), 0x7F80);
+        assert_eq!(f32_to_bf16(-f32::MAX), 0xFF80);
+        // bf16's own max finite value narrows exactly.
+        let bmax = Dtype::Bf16.max_finite();
+        assert_eq!(f32_to_bf16(bmax), 0x7F7F);
+        assert!((f32_to_bf16(f32::NAN) & 0x7FFF) > 0x7F80, "NaN must stay NaN");
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+        assert!(bf16_to_f32(f32_to_bf16(-f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn bf16_subnormals_round_trip() {
+        // An f32 subnormal whose top 16 bits are nonzero survives as a bf16
+        // subnormal; the round trip is exact on already-narrowed values.
+        let sub = f32::from_bits(0x0001_0000); // subnormal, bf16-exact
+        assert!(sub != 0.0 && sub < f32::MIN_POSITIVE);
+        assert_eq!(bf16_to_f32(f32_to_bf16(sub)), sub);
+        // A subnormal entirely below the kept bits rounds to zero.
+        assert_eq!(f32_to_bf16(f32::from_bits(0x0000_0001)), 0x0000);
+    }
+
+    #[test]
+    fn bf16_round_trip_all_bit_patterns() {
+        // Every finite bf16 value must survive widen → narrow unchanged.
+        for u in 0..=u16::MAX {
+            let x = bf16_to_f32(u);
+            if x.is_nan() {
+                assert!(bf16_to_f32(f32_to_bf16(x)).is_nan(), "{u:#06x}");
+            } else {
+                assert_eq!(f32_to_bf16(x), u, "{u:#06x}");
+            }
+        }
+    }
+
+    #[test]
+    fn f16_known_bit_patterns() {
+        assert_eq!(f32_to_f16(0.0), 0x0000);
+        assert_eq!(f32_to_f16(-0.0), 0x8000);
+        assert_eq!(f32_to_f16(1.0), 0x3C00);
+        assert_eq!(f32_to_f16(0.5), 0x3800);
+        assert_eq!(f32_to_f16(-2.0), 0xC000);
+        assert_eq!(f32_to_f16(65504.0), 0x7BFF);
+        assert_eq!(f32_to_f16(f32::INFINITY), 0x7C00);
+        assert_eq!(f32_to_f16(f32::NEG_INFINITY), 0xFC00);
+        assert_eq!(f16_to_f32(0x3C00), 1.0);
+        assert_eq!(f16_to_f32(0x7BFF), 65504.0);
+        assert_eq!(f16_to_f32(0x0400), 2.0f32.powi(-14)); // smallest normal
+        assert_eq!(f16_to_f32(0x0001), 2.0f32.powi(-24)); // smallest subnormal
+    }
+
+    #[test]
+    fn f16_ties_to_even() {
+        // 1 + 2^-11 is the tie between 1.0 (even) and 1 + 2^-10: down.
+        assert_eq!(f32_to_f16(1.0 + 2.0f32.powi(-11)), 0x3C00);
+        // 1 + 3·2^-11 ties between 0x3C01 (odd) and 0x3C02: up.
+        assert_eq!(f32_to_f16(1.0 + 3.0 * 2.0f32.powi(-11)), 0x3C02);
+        // Off-tie values go to the nearer neighbor.
+        assert_eq!(f32_to_f16(1.0 + 2.0f32.powi(-11) + 2.0f32.powi(-20)), 0x3C01);
+    }
+
+    #[test]
+    fn f16_overflow_to_inf() {
+        // 65520 ties between 65504 (odd significand) and the next step,
+        // which is out of range — RNE overflows to Inf.
+        assert_eq!(f32_to_f16(65520.0), 0x7C00);
+        assert_eq!(f32_to_f16(-65520.0), 0xFC00);
+        // Just below the tie still narrows to the max finite value.
+        assert_eq!(f32_to_f16(65519.0), 0x7BFF);
+        assert_eq!(f32_to_f16(1e9), 0x7C00);
+        assert_eq!(f32_to_f16(f32::MAX), 0x7C00);
+    }
+
+    #[test]
+    fn f16_subnormal_boundaries() {
+        let min_sub = 2.0f32.powi(-24);
+        // Half the smallest subnormal ties with zero (even): flush.
+        assert_eq!(f32_to_f16(min_sub / 2.0), 0x0000);
+        assert_eq!(f32_to_f16(-min_sub / 2.0), 0x8000);
+        // Anything above the tie rounds up to the smallest subnormal.
+        assert_eq!(f32_to_f16(min_sub * 0.75), 0x0001);
+        assert_eq!(f32_to_f16(min_sub), 0x0001);
+        // 1.5 subnormals tie between 0x0001 (odd) and 0x0002: up.
+        assert_eq!(f32_to_f16(min_sub * 1.5), 0x0002);
+        // The top of the subnormal range rounds up into the smallest normal.
+        let below_normal = 2.0f32.powi(-14) - 2.0f32.powi(-26);
+        assert_eq!(f32_to_f16(below_normal), 0x0400);
+    }
+
+    #[test]
+    fn f16_nan_preserved() {
+        let q = f32_to_f16(f32::NAN);
+        assert_eq!(q & 0x7C00, 0x7C00);
+        assert_ne!(q & 0x03FF, 0, "NaN payload must not collapse to Inf");
+        assert!(f16_to_f32(q).is_nan());
+        // A NaN whose payload truncates away still stays NaN.
+        let thin = f32::from_bits(0x7F80_0001);
+        assert!(thin.is_nan());
+        assert!(f16_to_f32(f32_to_f16(thin)).is_nan());
+    }
+
+    #[test]
+    fn f16_round_trip_all_bit_patterns() {
+        for u in 0..=u16::MAX {
+            let x = f16_to_f32(u);
+            if x.is_nan() {
+                assert!(f16_to_f32(f32_to_f16(x)).is_nan(), "{u:#06x}");
+            } else {
+                assert_eq!(f32_to_f16(x), u, "{u:#06x}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_is_idempotent_and_bounded_by_epsilon() {
+        let mut rng = Rng::new(7);
+        for dt in [Dtype::Bf16, Dtype::F16] {
+            for _ in 0..2000 {
+                let x = (rng.below(1_000_000) as f32 / 1_000_000.0 - 0.5) * 8.0;
+                let q = dt.quantize(x);
+                assert_eq!(dt.quantize(q), q, "idempotence at {x}");
+                // RNE error is at most half an ulp: eps·|x|/2 in the normal
+                // range, 2^-25 absolute inside f16's subnormal range.
+                let bound = (dt.epsilon() * x.abs() * 0.5).max(2.0f32.powi(-25));
+                assert!((q - x).abs() <= bound, "{dt:?}: {x} → {q}");
+            }
+        }
+        assert_eq!(Dtype::F32.quantize(0.1234567), 0.1234567);
+    }
+
+    #[test]
+    fn matrixb_roundtrip_and_accounting() {
+        let mut rng = Rng::new(11);
+        let m = Matrix::randn(7, 5, 1.0, &mut rng);
+        for dt in [Dtype::Bf16, Dtype::F16] {
+            let packed = MatrixB::encode(&m, dt);
+            assert_eq!(packed.shape(), (7, 5));
+            assert_eq!(packed.bytes(), 7 * 5 * 2);
+            let mut wide = Matrix::zeros(7, 5);
+            packed.decode_into(&mut wide);
+            for i in 0..7 {
+                for j in 0..5 {
+                    assert_eq!(wide.get(i, j), dt.quantize(m.get(i, j)));
+                    assert_eq!(packed.get(i, j), wide.get(i, j));
+                }
+            }
+            // Encoding the already-quantized widened matrix is lossless.
+            let repacked = MatrixB::encode(&wide, dt);
+            assert_eq!(repacked.data(), packed.data());
+        }
+    }
+
+    #[test]
+    fn dtype_parse_and_sizes() {
+        assert_eq!(Dtype::parse("bf16"), Some(Dtype::Bf16));
+        assert_eq!(Dtype::parse(" f16 "), Some(Dtype::F16));
+        assert_eq!(Dtype::parse("f32"), Some(Dtype::F32));
+        assert_eq!(Dtype::parse("fp8"), None);
+        for dt in [Dtype::F32, Dtype::Bf16, Dtype::F16] {
+            assert_eq!(Dtype::parse(dt.as_str()), Some(dt));
+        }
+        assert_eq!(Dtype::F32.size_bytes(), 4);
+        assert_eq!(Dtype::Bf16.size_bytes(), 2);
+        assert_eq!(Dtype::F16.size_bytes(), 2);
+        assert_eq!(Dtype::F16.max_finite(), 65504.0);
+        assert!(Dtype::Bf16.epsilon() > Dtype::F16.epsilon());
+    }
+}

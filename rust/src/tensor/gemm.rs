@@ -33,6 +33,7 @@
 //!   gates the threaded QR/SVD/matvec kernels, so one knob budgets every
 //!   level of parallelism.
 
+use super::dtype::MatrixB;
 use super::matrix::Matrix;
 use super::pool::{self, SendPtr};
 use super::workspace::Workspace;
@@ -737,6 +738,60 @@ fn matvec_t_cols(y_chunk: &mut [f32], ad: &[f32], x: &[f32], k: usize, col0: usi
             idx += k;
         }
         *yv = acc;
+    }
+}
+
+// ----------------------------------------------------------------------
+// widening kernels: reduced-precision operands, f32 accumulation
+// ----------------------------------------------------------------------
+//
+// Mixed-precision storage keeps compute in f32: a packed [`MatrixB`]
+// operand is widened once into workspace scratch and the existing
+// register-blocked kernels run on the f32 image. Decode-once-then-GEMM is
+// the right trade while the inner kernels are scalar; fusing per-panel
+// decode into packed microkernels belongs to the SIMD packed-panel item
+// (see ROADMAP). The widen scratch is leased from the caller's
+// [`Workspace`], so steady-state calls allocate nothing (misses are gated
+// to warm-up like every other lease).
+
+/// C = A·B with a packed reduced-precision B, f32 accumulation. The
+/// widened B image is leased from `ws`.
+pub fn matmul_wide_into(c: &mut Matrix, a: &Matrix, b: &MatrixB, ws: &mut Workspace) {
+    // Dirty lease: decode_into writes every element.
+    let mut bw = ws.take_dirty(b.rows(), b.cols());
+    b.decode_into(&mut bw);
+    matmul_into(c, a, &bw);
+    ws.give(bw);
+}
+
+/// y = A·x with a packed reduced-precision A, f32 accumulation. The
+/// widened A image is leased from `ws`.
+pub fn matvec_wide_into(y: &mut [f32], a: &MatrixB, x: &[f32], ws: &mut Workspace) {
+    // Dirty lease: decode_into writes every element.
+    let mut aw = ws.take_dirty(a.rows(), a.cols());
+    a.decode_into(&mut aw);
+    matvec_into(y, &aw, x);
+    ws.give(aw);
+}
+
+/// out = srcᵀ, widening a packed reduced-precision src: fused decode +
+/// 32-blocked transpose (the [`Matrix::transpose_into`] tiling), so no
+/// scratch is needed at all.
+pub fn transpose_wide_into(src: &MatrixB, out: &mut Matrix) {
+    let (r, c) = src.shape();
+    assert_eq!(out.shape(), (c, r), "transpose_wide output shape");
+    let od = out.data_mut();
+    const B: usize = 32;
+    for i0 in (0..r).step_by(B) {
+        let i1 = (i0 + B).min(r);
+        for j0 in (0..c).step_by(B) {
+            let j1 = (j0 + B).min(c);
+            for i in i0..i1 {
+                for j in j0..j1 {
+                    od[j * r + i] = src.get(i, j);
+                }
+            }
+        }
     }
 }
 

@@ -72,6 +72,14 @@
 //!   regardless) — so DP workers and kernels can never oversubscribe the
 //!   machine.
 //!
+//! * **Storage dtypes.** [`dtype::Dtype`] names the reduced-precision
+//!   storage formats (bf16/f16) and owns the software conversion kernels;
+//!   [`dtype::MatrixB`] is the packed u16 companion of [`Matrix`]. Compute
+//!   stays f32 — the widening GEMM entry points ([`gemm::matmul_wide_into`],
+//!   [`gemm::matvec_wide_into`], [`gemm::transpose_wide_into`]) read packed
+//!   operands and accumulate in f32, leasing their widen scratch from the
+//!   caller's workspace so the zero-alloc contract holds.
+//!
 //! * **Allocation-free refresh paths.** The every-k-steps subspace
 //!   machinery has `_into` workspace-backed forms mirroring the GEMM ones:
 //!   [`qr::thin_qr_into`] / [`qr::reorthonormalize_in_place`],
@@ -81,6 +89,7 @@
 //!   their own workspace, so misses occur only on the first step and the
 //!   first refresh (gated by `rust/tests/zero_alloc.rs`).
 
+pub mod dtype;
 pub mod gemm;
 pub mod matrix;
 pub mod ops;
@@ -89,6 +98,7 @@ pub mod qr;
 pub mod svd;
 pub mod workspace;
 
+pub use dtype::{Dtype, MatrixB};
 pub use matrix::Matrix;
 pub use svd::{power_iteration_top1, thin_svd, Svd};
 pub use workspace::{Workspace, WorkspaceBank};

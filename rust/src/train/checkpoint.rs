@@ -20,8 +20,24 @@
 //! and read it; the params-only [`save`]/[`load`] remain as format 1 (and
 //! `load` reads the parameter region of either format), so a format-1
 //! checkpoint resumes with `state = None` rather than failing.
+//!
+//! # Format 3: 16-bit parameter storage
+//!
+//! When any parameter has a 16-bit storage dtype, its region holds the raw
+//! storage encoding — little-endian u16 words (2 bytes/element instead of
+//! 4) — and its manifest entry gains a `dtype` key ("bf16"/"f16"; omitted
+//! for f32, so all-f32 saves stay byte-identical to format 1/2). The f32
+//! **master weights** ride inside the [`OptimizerSnapshot`] state region
+//! (the mixed-precision wrapper appends them — see `optim::master`), so a
+//! killed-and-resumed 16-bit run replays bit for bit. Loading requires the
+//! in-memory parameter's dtype to match the manifest's: a bf16 checkpoint
+//! must not silently feed an exact-f32 run or vice versa. The f16 loss
+//! scaler's per-tensor scales/counters persist as `scaler_scales`/
+//! `scaler_good` manifest arrays (present only when non-empty). All three
+//! formats load through the same [`load`]/[`load_full`] entry points.
 
 use crate::optim::{OptimizerSnapshot, Param, ParamKind};
+use crate::tensor::Dtype;
 use crate::util::json::Json;
 use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
@@ -36,6 +52,11 @@ pub struct TrainState {
     pub sampler_draws: u64,
     /// Wall-clock seconds the run had accumulated at save time.
     pub elapsed_secs: f64,
+    /// f16 dynamic loss-scaler state: per-tensor scales and consecutive
+    /// clean-step counters (parallel vectors; both empty for f32/bf16 runs,
+    /// and then absent from the manifest).
+    pub scaler_scales: Vec<f32>,
+    pub scaler_good: Vec<u64>,
 }
 
 /// Why a checkpoint could not be loaded.
@@ -138,14 +159,24 @@ fn save_impl(
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
-    let mut blob = Vec::with_capacity(params.iter().map(|p| p.numel() * 4).sum());
+    let mixed = params.iter().any(|p| p.dtype() != Dtype::F32);
+    let mut blob = Vec::with_capacity(params.iter().map(|p| p.storage_bytes()).sum());
     let mut manifest_params = Vec::new();
     for p in params {
         let start = blob.len();
-        for &v in p.value.data() {
-            blob.extend_from_slice(&v.to_le_bytes());
+        // 16-bit params store their raw storage encoding (the in-memory
+        // values sit on the dtype grid, so encode→decode is lossless and
+        // resume is bit-exact); f32 params store f32 words as before.
+        if p.dtype() == Dtype::F32 {
+            for &v in p.value.data() {
+                blob.extend_from_slice(&v.to_le_bytes());
+            }
+        } else {
+            for &v in p.value.data() {
+                blob.extend_from_slice(&p.dtype().encode(v).to_le_bytes());
+            }
         }
-        manifest_params.push(Json::obj(vec![
+        let mut entry = vec![
             ("name", Json::Str(p.name.clone())),
             ("rows", Json::Num(p.value.rows() as f64)),
             ("cols", Json::Num(p.value.cols() as f64)),
@@ -160,26 +191,44 @@ fn save_impl(
                 ),
             ),
             ("crc32", Json::Num(crc32(&blob[start..]) as f64)),
-        ]));
+        ];
+        // Key omitted for f32 so all-f32 manifests stay byte-identical to
+        // earlier revisions.
+        if p.dtype() != Dtype::F32 {
+            entry.push(("dtype", Json::Str(p.dtype().as_str().into())));
+        }
+        manifest_params.push(Json::obj(entry));
     }
     let mut manifest_fields = vec![
         ("step", Json::Num(step as f64)),
         ("params", Json::Arr(manifest_params)),
     ];
+    let format = if mixed {
+        3.0
+    } else if state.is_some() {
+        2.0
+    } else {
+        1.0
+    };
+    manifest_fields.push(("format", Json::Num(format)));
     if let Some(st) = state {
         // Append the state region after the parameter region, CRC'd as a
         // unit (it has internal structure of its own; per-tensor CRCs add
         // nothing for fall-back granularity — a corrupt state region fails
         // the whole checkpoint either way).
         let state_bytes = st.opt.encode();
-        manifest_fields.push(("format", Json::Num(2.0)));
         manifest_fields.push(("state_bytes", Json::Num(state_bytes.len() as f64)));
         manifest_fields.push(("state_crc32", Json::Num(crc32(&state_bytes) as f64)));
         manifest_fields.push(("sampler_draws", Json::Num(st.sampler_draws as f64)));
         manifest_fields.push(("elapsed_secs", Json::Num(st.elapsed_secs)));
+        if !st.scaler_scales.is_empty() {
+            manifest_fields.push(("scaler_scales", Json::nums(&st.scaler_scales)));
+            manifest_fields.push((
+                "scaler_good",
+                Json::Arr(st.scaler_good.iter().map(|&g| Json::Num(g as f64)).collect()),
+            ));
+        }
         blob.extend_from_slice(&state_bytes);
-    } else {
-        manifest_fields.push(("format", Json::Num(1.0)));
     }
     manifest_fields.insert(1, ("blob_bytes", Json::Num(blob.len() as f64)));
     let manifest = Json::obj(manifest_fields);
@@ -259,6 +308,20 @@ fn load_impl(
         if (rows, cols) != p.value.shape() {
             return Err(corrupt(format!("shape mismatch for {}", p.name)));
         }
+        // Storage dtype must match the in-memory parameter (key absent =
+        // f32, formats 1/2): a 16-bit checkpoint silently loading into an
+        // exact-f32 run — or the reverse — would corrupt the byte-identity
+        // guarantees both sides rely on.
+        let dt_str = entry.get("dtype").and_then(|v| v.as_str()).unwrap_or("f32");
+        let dt = Dtype::parse(dt_str)
+            .ok_or_else(|| corrupt(format!("unknown dtype {dt_str:?} for {}", p.name)))?;
+        if dt != p.dtype() {
+            return Err(corrupt(format!(
+                "dtype mismatch for {}: checkpoint {dt_str}, model {}",
+                p.name,
+                p.dtype().as_str()
+            )));
+        }
     }
     // The manifest committed, so the blob must exist and be intact — any
     // defect from here on is corruption, not absence.
@@ -273,13 +336,13 @@ fn load_impl(
     bin.read_to_end(&mut buf)?;
     let state_bytes =
         manifest.get("state_bytes").and_then(|v| v.as_f64()).unwrap_or(0.0) as usize;
-    let want: usize = params.iter().map(|p| p.numel() * 4).sum::<usize>() + state_bytes;
+    let want: usize = params.iter().map(|p| p.storage_bytes()).sum::<usize>() + state_bytes;
     if buf.len() != want {
         return Err(corrupt(format!("blob size {} != expected {}", buf.len(), want)));
     }
     let mut off = 0usize;
     for (entry, p) in listed.iter().zip(params.iter()) {
-        let n = p.numel() * 4;
+        let n = p.storage_bytes();
         let stored = entry.get("crc32").and_then(|v| v.as_f64()).map(|v| v as u32);
         let actual = crc32(&buf[off..off + n]);
         if stored != Some(actual) {
@@ -304,6 +367,12 @@ fn load_impl(
         if want_state {
             let opt = OptimizerSnapshot::decode(region)
                 .map_err(|e| corrupt(format!("state decode: {e}")))?;
+            let num_arr = |key: &str| -> Vec<f64> {
+                match manifest.get(key) {
+                    Some(Json::Arr(xs)) => xs.iter().filter_map(|x| x.as_f64()).collect(),
+                    _ => Vec::new(),
+                }
+            };
             Some(TrainState {
                 opt,
                 sampler_draws: manifest
@@ -314,6 +383,8 @@ fn load_impl(
                     .get("elapsed_secs")
                     .and_then(|v| v.as_f64())
                     .unwrap_or(0.0),
+                scaler_scales: num_arr("scaler_scales").iter().map(|&x| x as f32).collect(),
+                scaler_good: num_arr("scaler_good").iter().map(|&x| x as u64).collect(),
             })
         } else {
             None
@@ -323,9 +394,19 @@ fn load_impl(
     };
     let mut off = 0usize;
     for p in params.iter_mut() {
-        for v in p.value.data_mut() {
-            *v = f32::from_le_bytes(buf[off..off + 4].try_into().unwrap());
-            off += 4;
+        let dt = p.dtype();
+        if dt == Dtype::F32 {
+            for v in p.value.data_mut() {
+                *v = f32::from_le_bytes(buf[off..off + 4].try_into().unwrap());
+                off += 4;
+            }
+        } else {
+            // Decoded u16 words land exactly on the dtype grid — the same
+            // values quantized write-back left in memory at save time.
+            for v in p.value.data_mut() {
+                *v = dt.decode(u16::from_le_bytes(buf[off..off + 2].try_into().unwrap()));
+                off += 2;
+            }
         }
         // Invalidate any cached transposes of the overwritten weights.
         p.mark_dirty();
@@ -598,7 +679,14 @@ mod tests {
         for _ in 0..steps {
             opt.step(1e-3, &mut params, &grads);
         }
-        (TrainState { opt: opt.snapshot(), sampler_draws: 42, elapsed_secs: 1.5 }, opt)
+        let state = TrainState {
+            opt: opt.snapshot(),
+            sampler_draws: 42,
+            elapsed_secs: 1.5,
+            scaler_scales: Vec::new(),
+            scaler_good: Vec::new(),
+        };
+        (state, opt)
     }
 
     #[test]
@@ -648,6 +736,73 @@ mod tests {
         let (step, _, st) = resume_newest_full(&dir, &mut fresh.params).unwrap();
         assert_eq!(step, 10);
         assert!(st.is_some());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn format3_bf16_roundtrip_is_bit_exact_and_half_the_bytes() {
+        let mut cfg = ModelConfig::preset("nano");
+        cfg.dtype = Dtype::Bf16;
+        let model = Llama::new(cfg.clone(), 5);
+        let dir = temp_dir("format3");
+        let path = dir.join("ckpt");
+        save(&path, &model.params, 33).unwrap();
+        // Parameter region: 2 bytes per element, not 4.
+        let param_bytes: usize = model.params.iter().map(|p| p.numel() * 2).sum();
+        let blob = std::fs::read(path.with_extension("bin")).unwrap();
+        assert_eq!(blob.len(), param_bytes);
+        let manifest = std::fs::read_to_string(path.with_extension("json")).unwrap();
+        assert!(manifest.contains("\"dtype\":\"bf16\""), "{manifest}");
+        let mut fresh = Llama::new(cfg, 999);
+        let step = load(&path, &mut fresh.params).unwrap();
+        assert_eq!(step, 33);
+        for (a, b) in fresh.params.iter().zip(&model.params) {
+            assert_eq!(a.value.data(), b.value.data(), "{}", a.name);
+        }
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn dtype_mismatch_rejected_both_ways() {
+        let mut bf_cfg = ModelConfig::preset("nano");
+        bf_cfg.dtype = Dtype::Bf16;
+        let bf_model = Llama::new(bf_cfg.clone(), 5);
+        let f32_model = Llama::new(ModelConfig::preset("nano"), 5);
+        let dir = temp_dir("dtype_mismatch");
+        let bf_path = dir.join("bf16");
+        let f32_path = dir.join("f32");
+        save(&bf_path, &bf_model.params, 1).unwrap();
+        save(&f32_path, &f32_model.params, 1).unwrap();
+        // bf16 checkpoint into an f32 model.
+        let mut f32_fresh = Llama::new(ModelConfig::preset("nano"), 999);
+        let err = load(&bf_path, &mut f32_fresh.params).unwrap_err();
+        assert!(err.to_string().contains("dtype mismatch"), "{err}");
+        // f32 checkpoint into a bf16 model.
+        let mut bf_fresh = Llama::new(bf_cfg, 999);
+        let err = load(&f32_path, &mut bf_fresh.params).unwrap_err();
+        assert!(err.to_string().contains("dtype mismatch"), "{err}");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn scaler_state_roundtrips_through_the_manifest() {
+        let model = Llama::new(ModelConfig::preset("nano"), 5);
+        let (mut state, _) = full_state_for(&model, 2);
+        state.scaler_scales = vec![4096.0, 1024.0];
+        state.scaler_good = vec![7, 0];
+        let dir = temp_dir("scaler_state");
+        let path = dir.join("ckpt");
+        save_full(&path, &model.params, 3, &state).unwrap();
+        let mut fresh = Llama::new(ModelConfig::preset("nano"), 999);
+        let (_, restored) = load_full(&path, &mut fresh.params).unwrap();
+        let restored = restored.unwrap();
+        assert_eq!(restored.scaler_scales, vec![4096.0, 1024.0]);
+        assert_eq!(restored.scaler_good, vec![7, 0]);
+        // Empty scaler state stays out of the manifest entirely.
+        let (plain, _) = full_state_for(&model, 2);
+        save_full(&path, &model.params, 4, &plain).unwrap();
+        let manifest = std::fs::read_to_string(path.with_extension("json")).unwrap();
+        assert!(!manifest.contains("scaler_scales"), "{manifest}");
         let _ = std::fs::remove_dir_all(dir);
     }
 

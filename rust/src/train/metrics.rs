@@ -108,6 +108,11 @@ pub struct TrainReport {
     /// Subspace refreshes discarded for yielding a non-finite or
     /// non-orthonormal basis (the previous projector was kept).
     pub refresh_rejections: usize,
+    /// Weight/activation storage dtype of the run ("f32", "bf16", "f16").
+    pub storage_dtype: String,
+    /// Optimizer steps dropped by the f16 dynamic loss scaler (gradient
+    /// overflow at the current scale); always 0 for f32/bf16 runs.
+    pub scaler_skips: usize,
 }
 
 impl TrainReport {
@@ -150,8 +155,11 @@ impl TrainReport {
     ///   accumulation micro-batches do not count).
     /// - `n_steps`: logged curve points (`total_steps / log_every`-ish) —
     ///   use `total_steps` for step arithmetic, never this.
+    /// - `storage_dtype` / `scaler_skips`: present only for 16-bit runs
+    ///   (f32 summaries stay byte-identical to earlier revisions): the
+    ///   storage dtype and the steps the f16 loss scaler dropped.
     pub fn summary_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("method", Json::Str(self.method.clone())),
             ("model", Json::Str(self.model.clone())),
             ("final_eval_loss", Json::Num(self.final_eval_loss as f64)),
@@ -166,7 +174,12 @@ impl TrainReport {
             ("refresh_rejections", Json::Num(self.refresh_rejections as f64)),
             ("total_steps", Json::Num(self.total_steps as f64)),
             ("n_steps", Json::Num(self.steps.len() as f64)),
-        ])
+        ];
+        if self.storage_dtype != "f32" {
+            fields.push(("storage_dtype", Json::Str(self.storage_dtype.clone())));
+            fields.push(("scaler_skips", Json::Num(self.scaler_skips as f64)));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -254,10 +267,20 @@ mod tests {
             sentinel_skips: 0,
             sentinel_rollbacks: 0,
             refresh_rejections: 0,
+            storage_dtype: "f32".into(),
+            scaler_skips: 0,
         };
         let csv = report.curve_csv().to_string();
         assert_eq!(csv.lines().count(), 3);
         let j = report.summary_json();
         assert_eq!(j.get("final_eval_loss").unwrap().as_f64().unwrap() as f32, 2.4);
+        // f32 summaries carry no dtype keys (byte-identity with earlier
+        // revisions); 16-bit summaries do.
+        assert!(j.get("storage_dtype").is_none());
+        let mut bf = report.clone();
+        bf.storage_dtype = "bf16".into();
+        let jb = bf.summary_json();
+        assert_eq!(jb.get("storage_dtype").and_then(|v| v.as_str()), Some("bf16"));
+        assert_eq!(jb.get("scaler_skips").and_then(|v| v.as_f64()), Some(0.0));
     }
 }

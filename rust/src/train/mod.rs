@@ -6,12 +6,14 @@ pub mod checkpoint;
 pub mod faults;
 pub mod metrics;
 pub mod parallel;
+pub mod scaler;
 pub mod schedule;
 pub mod sentinel;
 pub mod trainer;
 
 pub use faults::{FaultInjection, FaultKind};
 pub use metrics::{MetricsLog, TrainReport};
+pub use scaler::DynamicLossScaler;
 pub use schedule::LrSchedule;
 pub use sentinel::{FaultPolicy, Sentinel, SentinelConfig, Verdict};
 pub use trainer::{Trainer, TrainConfig};

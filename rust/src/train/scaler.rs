@@ -1,0 +1,216 @@
+//! Per-tensor dynamic loss scaling for f16 gradient storage.
+//!
+//! f16's narrow exponent range (max finite 65504, smallest subnormal
+//! ≈ 6e-8) clips large gradients to Inf and flushes small ones to zero.
+//! The standard fix is to scale the loss — equivalently, the gradients —
+//! by a factor S before rounding into f16, then unscale after: values move
+//! into f16's representable band and tiny gradients survive. S must adapt:
+//! too large and scaled gradients overflow, too small and the underflow
+//! protection is wasted. [`DynamicLossScaler`] implements the usual
+//! grow/backoff loop, **per tensor** (gradient magnitudes differ by orders
+//! of magnitude across a transformer's parameter groups, so one global
+//! scale is dominated by its worst tensor):
+//!
+//! - Any non-finite scaled-f16 value ⇒ that tensor's scale halves, its
+//!   good-step counter resets, and the *whole* optimizer step is skipped
+//!   (the trainer drops it like a sentinel `skip` — state untouched).
+//! - After [`DEFAULT_GROWTH_INTERVAL`] consecutive clean steps a tensor's
+//!   scale doubles (capped), probing back toward the overflow boundary.
+//!
+//! bf16 needs none of this — it keeps f32's exponent range — which is why
+//! the trainer only instantiates a scaler under `dtype = "f16"`. Scales
+//! and counters persist through checkpoints (format-3 manifest) so a
+//! resumed f16 run replays the uninterrupted one bit for bit.
+
+use crate::tensor::{dtype, Matrix};
+
+/// Starting scale for every tensor: 2^12, large enough to lift typical
+/// late-training gradients (~1e-6) well clear of f16's subnormal floor
+/// while leaving ~4 octaves of headroom below overflow for loss spikes.
+pub const INIT_SCALE: f32 = 4096.0;
+
+/// Consecutive clean steps before a tensor's scale doubles. Far shorter
+/// than production defaults (~2000) because testbed runs are tens to
+/// hundreds of steps; powers of two keep scaling exact in f32.
+pub const DEFAULT_GROWTH_INTERVAL: u64 = 256;
+
+const MAX_SCALE: f32 = 65536.0; // 2^16
+const MIN_SCALE: f32 = 1.0;
+
+/// Per-tensor dynamic loss scaler (module docs). Sized lazily on the
+/// first [`quantize_step`](DynamicLossScaler::quantize_step) call.
+pub struct DynamicLossScaler {
+    scales: Vec<f32>,
+    /// Consecutive overflow-free steps per tensor.
+    good: Vec<u64>,
+    growth_interval: u64,
+    skipped: usize,
+}
+
+impl DynamicLossScaler {
+    pub fn new() -> DynamicLossScaler {
+        DynamicLossScaler {
+            scales: Vec::new(),
+            good: Vec::new(),
+            growth_interval: DEFAULT_GROWTH_INTERVAL,
+            skipped: 0,
+        }
+    }
+
+    fn ensure(&mut self, n: usize) {
+        if self.scales.len() != n {
+            self.scales = vec![INIT_SCALE; n];
+            self.good = vec![0; n];
+        }
+    }
+
+    /// Emulate f16 gradient storage under the current scales: each value
+    /// rounds through `f16(v * S)` and unscales back to f32.
+    ///
+    /// Returns `false` — with `grads` **untouched** — when any tensor's
+    /// scaled gradient leaves f16's finite range (its scale is backed off
+    /// and the caller must drop the step). Returns `true` after committing
+    /// the rounded gradients and advancing the growth counters. A NaN
+    /// input gradient also reads as overflow; the step is dropped either
+    /// way, the scale backoff is a harmless false alarm.
+    pub fn quantize_step(&mut self, grads: &mut [Matrix]) -> bool {
+        self.ensure(grads.len());
+        // Detection pass first so a rejected step leaves the gradients
+        // exactly as computed (the trainer may still want their norm).
+        let mut ok = true;
+        for (i, g) in grads.iter().enumerate() {
+            let s = self.scales[i];
+            let overflow = g
+                .data()
+                .iter()
+                .any(|&v| !dtype::f16_to_f32(dtype::f32_to_f16(v * s)).is_finite());
+            if overflow {
+                self.scales[i] = (self.scales[i] * 0.5).max(MIN_SCALE);
+                self.good[i] = 0;
+                ok = false;
+            }
+        }
+        if !ok {
+            self.skipped += 1;
+            return false;
+        }
+        for (i, g) in grads.iter_mut().enumerate() {
+            let s = self.scales[i];
+            let inv = 1.0 / s;
+            for v in g.data_mut() {
+                *v = dtype::f16_to_f32(dtype::f32_to_f16(*v * s)) * inv;
+            }
+            self.good[i] += 1;
+            if self.good[i] >= self.growth_interval && self.scales[i] < MAX_SCALE {
+                self.scales[i] *= 2.0;
+                self.good[i] = 0;
+            }
+        }
+        true
+    }
+
+    /// Optimizer steps dropped for overflow so far.
+    pub fn skips(&self) -> usize {
+        self.skipped
+    }
+
+    /// Current per-tensor scales (empty before the first step).
+    pub fn scales(&self) -> &[f32] {
+        &self.scales
+    }
+
+    /// Checkpoint export: `(scales, good counters)`, parallel vectors.
+    pub fn export(&self) -> (Vec<f32>, Vec<u64>) {
+        (self.scales.clone(), self.good.clone())
+    }
+
+    /// Checkpoint import (resume). A later `quantize_step` with a
+    /// different tensor count resets to defaults rather than misaligning.
+    pub fn import(&mut self, scales: &[f32], good: &[u64]) {
+        self.scales = scales.to_vec();
+        self.good = good.to_vec();
+    }
+}
+
+impl Default for DynamicLossScaler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overflow_backs_off_skips_and_leaves_grads_untouched() {
+        let mut sc = DynamicLossScaler::new();
+        // 1e30 * 4096 = 4.1e33: finite in f32, far past f16's 65504.
+        let mut grads = vec![Matrix::full(2, 2, 1e30)];
+        assert!(!sc.quantize_step(&mut grads));
+        assert_eq!(grads[0].get(0, 0), 1e30, "rejected step must not mutate grads");
+        assert_eq!(sc.scales()[0], INIT_SCALE * 0.5);
+        assert_eq!(sc.skips(), 1);
+    }
+
+    #[test]
+    fn repeated_overflow_walks_scale_down_to_the_floor() {
+        let mut sc = DynamicLossScaler::new();
+        let mut grads = vec![Matrix::full(1, 1, f32::MAX)];
+        for _ in 0..40 {
+            assert!(!sc.quantize_step(&mut grads));
+        }
+        assert_eq!(sc.scales()[0], MIN_SCALE, "scale must clamp, not hit zero");
+    }
+
+    #[test]
+    fn scaling_preserves_grads_raw_f16_would_flush_to_zero() {
+        // 1e-9 is below f16's smallest subnormal (~6e-8): direct f16
+        // storage loses it entirely. Scaled by 4096 it lands at 4.1e-6,
+        // comfortably representable.
+        assert_eq!(dtype::f16_to_f32(dtype::f32_to_f16(1e-9)), 0.0, "premise");
+        let mut sc = DynamicLossScaler::new();
+        let mut grads = vec![Matrix::full(2, 2, 1e-9)];
+        assert!(sc.quantize_step(&mut grads));
+        let got = grads[0].get(0, 0);
+        assert!(got > 0.0, "scaled path must not flush to zero");
+        assert!((got - 1e-9).abs() / 1e-9 < 1e-2, "got {got}");
+    }
+
+    #[test]
+    fn clean_streak_doubles_the_scale() {
+        let mut sc = DynamicLossScaler::new();
+        let mut grads = vec![Matrix::full(1, 1, 1e-3)];
+        for _ in 0..DEFAULT_GROWTH_INTERVAL {
+            assert!(sc.quantize_step(&mut grads));
+        }
+        assert_eq!(sc.scales()[0], INIT_SCALE * 2.0);
+        // One overflow resets the streak and halves back.
+        let mut big = vec![Matrix::full(1, 1, 1e30)];
+        assert!(!sc.quantize_step(&mut big));
+        assert_eq!(sc.scales()[0], INIT_SCALE);
+    }
+
+    #[test]
+    fn export_import_roundtrips_state() {
+        let mut sc = DynamicLossScaler::new();
+        let mut grads = vec![Matrix::full(1, 1, 1e-3), Matrix::full(1, 2, 2e-3)];
+        for _ in 0..5 {
+            assert!(sc.quantize_step(&mut grads));
+        }
+        let (scales, good) = sc.export();
+        assert_eq!(good, vec![5, 5]);
+        let mut fresh = DynamicLossScaler::new();
+        fresh.import(&scales, &good);
+        assert_eq!(fresh.export(), (scales, good));
+    }
+
+    #[test]
+    fn per_tensor_scales_move_independently() {
+        let mut sc = DynamicLossScaler::new();
+        let mut grads = vec![Matrix::full(1, 1, 1e30), Matrix::full(1, 1, 1e-3)];
+        assert!(!sc.quantize_step(&mut grads));
+        assert_eq!(sc.scales()[0], INIT_SCALE * 0.5, "overflowing tensor backs off");
+        assert_eq!(sc.scales()[1], INIT_SCALE, "healthy tensor keeps its scale");
+    }
+}

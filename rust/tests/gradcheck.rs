@@ -3,6 +3,7 @@
 //! class, plus end-to-end gradient-flow sanity (no dead parameters).
 
 use subtrack::model::{Batch, Llama, ModelConfig};
+use subtrack::tensor::Dtype;
 use subtrack::util::rng::Rng;
 
 fn batch_for(cfg: &ModelConfig, b: usize, seed: u64) -> Batch {
@@ -13,10 +14,16 @@ fn batch_for(cfg: &ModelConfig, b: usize, seed: u64) -> Batch {
     Batch { inputs, targets, b, t }
 }
 
-#[test]
-fn tiny_model_gradcheck_spot_entries() {
+/// Spot-check analytic vs central-difference gradients for one storage
+/// dtype. The noise floor is precision-aware: under 16-bit storage the
+/// forward pass quantizes activations (straight-through backward), so the
+/// finite-difference quotient carries ~dtype-ε·|loss|/(2·eps) of rounding
+/// noise instead of f32-ε's — the bf16 run verifies the straight-through
+/// gradients stay the right order and sign rather than digit-exact.
+fn spot_check_entries(dtype: Dtype, rel_tol: f32) {
     let mut cfg = ModelConfig::preset("tiny");
     cfg.seq_len = 12; // keep finite differencing affordable on 1 core
+    cfg.dtype = dtype;
     let mut model = Llama::new(cfg.clone(), 21);
     let batch = batch_for(&cfg, 2, 22);
     let (_, grads) = model.loss_and_grad(&batch);
@@ -46,15 +53,27 @@ fn tiny_model_gradcheck_spot_entries() {
         // the quotient carries ~ε·|loss|/(2·eps) of float noise, and libm
         // exp/ln rounding differs across platforms. Fold that floor into the
         // tolerance explicitly so the check is environment-robust instead of
-        // relying on a magic constant.
-        let noise = 8.0 * f32::EPSILON * lp.abs().max(lm.abs()) / (2.0 * eps);
-        let tol = (2e-2f32 + noise).max(0.1 * numeric.abs().max(analytic.abs()));
+        // relying on a magic constant; ε is the *storage* epsilon, so the
+        // same formula covers the quantized-forward runs.
+        let ulp = (8.0 * f32::EPSILON).max(dtype.epsilon());
+        let noise = ulp * lp.abs().max(lm.abs()) / (2.0 * eps);
+        let tol = (2e-2f32 + noise).max(rel_tol * numeric.abs().max(analytic.abs()));
         assert!(
             (numeric - analytic).abs() < tol,
-            "param {} entry {flat}: numeric {numeric} vs analytic {analytic} (tol {tol})",
+            "param {} entry {flat} ({dtype:?}): numeric {numeric} vs analytic {analytic} (tol {tol})",
             model.params[pi].name
         );
     }
+}
+
+#[test]
+fn tiny_model_gradcheck_spot_entries() {
+    spot_check_entries(Dtype::F32, 0.1);
+}
+
+#[test]
+fn tiny_model_gradcheck_spot_entries_bf16_straight_through() {
+    spot_check_entries(Dtype::Bf16, 0.5);
 }
 
 #[test]

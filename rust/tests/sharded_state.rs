@@ -10,6 +10,7 @@
 //!   test (defaults to `nan_grad@5` when unset).
 
 use subtrack::optim;
+use subtrack::tensor::Dtype;
 use subtrack::train::{FaultInjection, FaultKind, FaultPolicy, TrainConfig, Trainer};
 
 fn env_usize(key: &str, default: usize) -> usize {
@@ -50,6 +51,11 @@ fn every_method_matches_single_worker_end_to_end() {
     for method in optim::PRETRAIN_METHODS {
         let mut cfg = quick_cfg(method, 6);
         cfg.accum_steps = accum;
+        // Precision-aware noise floor: under a 16-bit storage dtype (the CI
+        // PALLAS_DTYPE leg) the reduction-order fp noise this test bounds is
+        // amplified whenever a master write-back lands near a rounding
+        // boundary, so the tolerance scales with the storage epsilon.
+        let tol = 1e-3f32.max(4.0 * cfg.model.dtype.epsilon());
         let single = Trainer::new(cfg.clone()).run().unwrap();
         let mut multi_cfg = cfg.clone();
         multi_cfg.workers = workers;
@@ -59,7 +65,7 @@ fn every_method_matches_single_worker_end_to_end() {
         let rel = (single.final_eval_loss - multi.final_eval_loss).abs()
             / single.final_eval_loss.max(1e-6);
         assert!(
-            rel < 1e-3,
+            rel < tol,
             "{method}: workers={workers} diverged: {} vs {} (rel {rel:.2e})",
             single.final_eval_loss,
             multi.final_eval_loss
@@ -77,10 +83,14 @@ fn optimizer_state_partitions_across_workers() {
     let single = Trainer::new(quick_cfg("full-rank", 4)).run().unwrap();
     let mut cfg = quick_cfg("full-rank", 4);
     cfg.workers = workers;
+    // f32 master weights (16-bit storage dtypes only) live in the wrapper
+    // *outside* the shards by design, so they add an unsharded constant to
+    // both figures; loosen the ~1/workers bound accordingly on that leg.
+    let slack = if cfg.model.dtype == Dtype::F32 { 3.0 / 2.0 } else { 2.0 };
     let multi = Trainer::new(cfg).run().unwrap();
     assert!(multi.peak_state_bytes > 0);
     assert!(
-        multi.peak_state_bytes * workers <= single.peak_state_bytes * 3 / 2,
+        (multi.peak_state_bytes * workers) as f64 <= single.peak_state_bytes as f64 * slack,
         "per-shard {per} bytes is not ~1/{workers} of the replicated {full}",
         per = multi.peak_state_bytes,
         full = single.peak_state_bytes
