@@ -12,7 +12,7 @@
 use std::collections::BTreeMap;
 use subtrack::model::{Batch, Llama, ModelConfig, StepState};
 use subtrack::optim::subtrack::grassmannian_step_ws;
-use subtrack::tensor::{gemm, ops, pool, qr, svd, Dtype, Matrix, MatrixB, Workspace};
+use subtrack::tensor::{gemm, microkernel, ops, pool, qr, svd, Dtype, Matrix, MatrixB, Workspace};
 use subtrack::util::json::{merge_into_file, Json};
 use subtrack::util::rng::Rng;
 
@@ -93,15 +93,35 @@ fn main() {
                 ]),
             );
         }
+        // Packed-vs-legacy route sweep at the auto plan: the two routes are
+        // bit-identical by contract, so the delta is pure kernel speed
+        // (panel packing + register tiling + the active micro-kernel vs the
+        // streaming row kernel).
+        for (label, mode) in [("matmul_legacy", 1usize), ("matmul_packed", 2usize)] {
+            gemm::set_gemm_pack(mode);
+            let secs = time_op(budget, || {
+                gemm::matmul_into(&mut c, &a, &b);
+                std::hint::black_box(&c);
+            });
+            gemm::set_gemm_pack(0);
+            let gflops = flops / secs / 1e9;
+            println!("{label:<16} {n}: {:8.2} ms  {gflops:7.2} GFLOPS", secs * 1e3);
+            cases.insert(
+                format!("{label}_{n}"),
+                Json::obj(vec![
+                    ("ms", Json::Num(secs * 1e3)),
+                    ("gflops", Json::Num(gflops)),
+                ]),
+            );
+        }
         ws.give(c);
     }
 
     // ---- widening kernels: packed 16-bit operands, f32 accumulation ----
-    // The wide entry points decode the packed operand into leased scratch
-    // and reuse the f32 register-blocked kernels, so the delta vs
-    // matmul_into is pure decode traffic. Recorded per storage dtype under
-    // gemm.dtype_ms so the ledger tracks the decode overhead as the packed
-    // panels move into the SIMD microkernels (ROADMAP item).
+    // The default route fuses decode into B-panel packing (no full-matrix
+    // f32 image of B); the `_legacy` rows pin `GEMM_PACK=1`, which decodes
+    // into leased scratch and runs the streaming row kernel — so the ledger
+    // tracks both the decode-fusion win and the historical baseline.
     println!("\nwidening GEMM (packed B, f32 accumulation):");
     let mut dtype_ms = BTreeMap::new();
     for n in [128usize, 256, 512] {
@@ -123,6 +143,17 @@ fn main() {
             let label = dt.as_str();
             println!("matmul_wide_{label:<4} {n}: {:8.2} ms", secs * 1e3);
             dtype_ms.insert(format!("matmul_wide_{label}_{n}"), Json::Num(secs * 1e3));
+            gemm::set_gemm_pack(1);
+            let legacy_secs = time_op(budget, || {
+                gemm::matmul_wide_into(&mut c, &a, &packed, &mut ws);
+                std::hint::black_box(&c);
+            });
+            gemm::set_gemm_pack(0);
+            println!("matmul_wide_{label}_legacy {n}: {:8.2} ms", legacy_secs * 1e3);
+            dtype_ms.insert(
+                format!("matmul_wide_{label}_legacy_{n}"),
+                Json::Num(legacy_secs * 1e3),
+            );
         }
         ws.give(c);
     }
@@ -398,6 +429,7 @@ fn main() {
 
     let record = Json::obj(vec![
         ("threads", Json::Num(auto_threads as f64)),
+        ("microkernel", Json::Str(microkernel::active_name().to_string())),
         ("workspace_misses", Json::Num(ws.misses() as f64)),
         ("cases", Json::Obj(cases)),
         ("dtype_ms", Json::Obj(dtype_ms)),

@@ -272,6 +272,19 @@ pub fn decode_slice(dtype: Dtype, src: &[u16], dst: &mut [f32]) {
     }
 }
 
+/// The per-word widening function for a 16-bit storage format — resolved
+/// once so the packed-panel GEMM can fuse decode into B-panel packing
+/// ([`crate::tensor::pack`]) without a per-element dtype dispatch. Decode is
+/// exact, so a decode-fused panel is bit-identical to packing a pre-widened
+/// f32 image.
+pub fn decode_fn(dtype: Dtype) -> fn(u16) -> f32 {
+    match dtype {
+        Dtype::F32 => unreachable!("f32 is never packed into u16 storage"),
+        Dtype::Bf16 => bf16_to_f32,
+        Dtype::F16 => f16_to_f32,
+    }
+}
+
 /// A row-major matrix packed in a 16-bit storage format — the half-width
 /// companion of [`Matrix`]. Checkpoint format 3 stores its bytes verbatim;
 /// the widening GEMM entry points read it with f32 accumulation.

@@ -32,17 +32,52 @@
 //!   worker plumbing in `train::parallel`, CI, and tests). The same plan
 //!   gates the threaded QR/SVD/matvec kernels, so one knob budgets every
 //!   level of parallelism.
+//! * **Packed-panel path with register-tiled micro-kernels.** Products above
+//!   [`PACK_MIN_FLOPS`] (auto mode) copy their operands into contiguous
+//!   micro-panels ([`super::pack`]: A in [`MR`]-row panels with `alpha`
+//!   folded in, B in [`NR`]-column panels, 16-bit `MatrixB` operands decoded
+//!   during the copy) and run the register-tiled kernels in
+//!   [`super::microkernel`] — scalar by default, AVX2/NEON when the `simd`
+//!   cargo feature is on and the CPU supports it. Loop structure: [`KC`]-deep
+//!   k-blocks advance **sequentially and outermost**; within a block, one
+//!   pool dispatch covers a (row block × column group) task grid, each task
+//!   packing its own [`MC`]×KC A panel and calling the micro-kernel per
+//!   tile. Each C element's contributions within a k-block live in exactly
+//!   one task and blocks are ordered, so the per-element accumulation order
+//!   is *independent of the task grid* — and every micro-kernel reproduces
+//!   the legacy kernel's canonical order (k-steps in 4-groups, each group
+//!   summed left-associatively and folded into C with one add, then
+//!   singles; SIMD uses separate mul/add, never FMA). The packed path is
+//!   therefore **bit-identical** to the legacy kernels for every shape,
+//!   worker count and build flavor — routing is behaviorally invisible and
+//!   only affects speed (`rust/tests/gemm_packed.rs` gates this against the
+//!   legacy oracle). `GEMM_PACK` / [`set_gemm_pack`] force the route: 0 =
+//!   size-gated auto, 1 = legacy kernels only, 2 = packed whenever the
+//!   shape permits. Panel scratch leases from a process-wide bank
+//!   ([`super::pack::pack_misses`] gates the warm-up-only allocations), and
+//!   the column-group dimension gives wide-short products (m ≪ n) real
+//!   fan-out, which the row-only legacy split could never reach.
 
 use super::dtype::MatrixB;
 use super::matrix::Matrix;
+use super::microkernel::{self, MR, NR};
+use super::pack::{self, KBlock, SrcA, SrcB};
 use super::pool::{self, SendPtr};
 use super::workspace::Workspace;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-/// Tile edge for the k-dimension blocking.
-const KC: usize = 256;
-/// Tile edge for the m-dimension blocking.
-const MC: usize = 64;
+/// Tile edge for the k-dimension blocking — also the k-depth of one packed
+/// panel set (the packed driver's sequential outer blocks).
+pub const KC: usize = 256;
+/// Tile edge for the m-dimension blocking — also the row-block height of one
+/// packed-driver task (a multiple of [`MR`], so full tiles dominate).
+pub const MC: usize = 64;
+
+/// FLOP count (2·m·k·n) above which auto mode routes a product through the
+/// packed-panel path. Below it the panel copies cost more than they save;
+/// the gate also requires at least one full [`MR`]×[`NR`] tile. Routing is
+/// bit-transparent either way, so the threshold affects speed only.
+pub const PACK_MIN_FLOPS: usize = 1 << 17;
 
 /// FLOP count (2·m·k·n) below which auto mode stays single-threaded: forking
 /// scoped threads costs tens of microseconds, which only pays off once the
@@ -77,6 +112,13 @@ static GEMM_THREADS: AtomicUsize = AtomicUsize::new(usize::MAX);
 /// from the `GEMM_CHUNK` environment variable (the CI matrix runs a
 /// `GEMM_CHUNK=4` leg so small, ragged chunks exercise the steal path).
 static GEMM_CHUNK: AtomicUsize = AtomicUsize::new(usize::MAX);
+
+/// Packed-path routing: 0 = auto ([`PACK_MIN_FLOPS`]-gated), 1 = legacy
+/// kernels only (the packed path's bit-identity oracle), 2 = packed
+/// whenever the shape permits. `usize::MAX` is the "unset" sentinel: the
+/// first read seeds the value from the `GEMM_PACK` environment variable.
+/// Routing is bit-transparent, so this knob can never change results.
+static GEMM_PACK: AtomicUsize = AtomicUsize::new(usize::MAX);
 
 /// Shared resolution for the `usize::MAX`-sentinel env knobs
 /// (`GEMM_THREADS`, `GEMM_CHUNK`, `GEMM_QR_BLOCK`): an explicit setter
@@ -157,21 +199,54 @@ pub fn set_gemm_chunk(n: usize) {
     GEMM_CHUNK.store(if n == 0 { usize::MAX } else { n }, Ordering::Relaxed);
 }
 
+/// The packed-path routing mode: explicit [`set_gemm_pack`] value, else the
+/// `GEMM_PACK` env var (parsed once), else 0 (auto).
+fn pack_mode() -> usize {
+    let n = env_knob(&GEMM_PACK, "GEMM_PACK");
+    if n == usize::MAX {
+        0
+    } else {
+        n
+    }
+}
+
+/// Force the packed-panel routing mode: 1 = legacy kernels only, 2 = packed
+/// path whenever the shape permits, 0 restores the `GEMM_PACK` env default
+/// (or the [`PACK_MIN_FLOPS`]-gated auto mode when the variable is unset).
+/// Both routes are bit-identical by contract, so this only affects speed —
+/// tests and the bench harness use it to pit the two against each other.
+pub fn set_gemm_pack(n: usize) {
+    // Storing the sentinel makes the next read re-resolve the env var, so a
+    // test that restores "auto" does not erase a CI-wide GEMM_PACK=N.
+    GEMM_PACK.store(if n == 0 { usize::MAX } else { n }, Ordering::Relaxed);
+}
+
+/// Upper bound on auto-mode chunks per worker. When one unit outweighs
+/// [`CHUNK_TARGET_BYTES`] the L2 target alone would degenerate to one-unit
+/// chunks — for large totals that floods the steal deques with thousands of
+/// tiny tasks whose dispatch overhead swamps the work. The auto chunk is
+/// floored so no worker's share splits into more than this many tasks
+/// (enough slack for the stealer to rebalance, bounded dispatch cost).
+/// Forced chunks are exempt: CI's `GEMM_CHUNK=4` leg deliberately
+/// stress-tests tiny ragged chunks.
+pub const MAX_CHUNKS_PER_WORKER: usize = 8;
+
 /// Chunk size (in unit tasks) for a kernel that will dispatch
 /// `total` units across `threads` workers, where one unit streams
 /// `bytes_per_unit` bytes: the forced `GEMM_CHUNK` if set, else
-/// [`CHUNK_TARGET_BYTES`]` / bytes_per_unit`, capped so every worker still
-/// receives at least one chunk (and floored at one unit). Chunking is a
-/// partitioning decision only — every unit runs the identical sequential
-/// kernel whichever chunk carries it.
-pub(crate) fn chunk_units(total: usize, bytes_per_unit: usize, threads: usize) -> usize {
+/// [`CHUNK_TARGET_BYTES`]` / bytes_per_unit`, floored so one worker's share
+/// never splits into more than [`MAX_CHUNKS_PER_WORKER`] tasks, and capped
+/// so every worker still receives at least one chunk (and at one unit).
+/// Chunking is a partitioning decision only — every unit runs the identical
+/// sequential kernel whichever chunk carries it.
+pub fn chunk_units(total: usize, bytes_per_unit: usize, threads: usize) -> usize {
     let forced = forced_chunk();
     if forced > 0 {
         return forced.clamp(1, total.max(1));
     }
     let per_worker = total.div_ceil(threads.max(1)).max(1);
     let target = (CHUNK_TARGET_BYTES / bytes_per_unit.max(1)).max(1);
-    target.min(per_worker)
+    target.max(per_worker.div_ceil(MAX_CHUNKS_PER_WORKER)).min(per_worker)
 }
 
 /// Run `f` with GEMM threading disabled on *this* thread (results are
@@ -184,55 +259,90 @@ pub fn run_single_threaded<R>(f: impl FnOnce() -> R) -> R {
     r
 }
 
+/// `available_parallelism`, resolved once per process through the same
+/// `usize::MAX` sentinel as the env knobs — it is a syscall, and the three
+/// worker planners used to re-issue it on every kernel dispatch.
+fn hw_threads() -> usize {
+    static HW_THREADS: AtomicUsize = AtomicUsize::new(usize::MAX);
+    let cur = HW_THREADS.load(Ordering::Relaxed);
+    if cur != usize::MAX {
+        return cur;
+    }
+    let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let _ = HW_THREADS.compare_exchange(usize::MAX, n, Ordering::Relaxed, Ordering::Relaxed);
+    n
+}
+
+/// The shared auto-gate body behind every worker plan ([`gemm_threads`]
+/// skips the gate, [`plan_rows`] and [`plan_kernel_threads`] cap the result
+/// by task count): 1 inside [`run_single_threaded`] or on a pool worker
+/// (nested fan-out would oversubscribe), the forced `GEMM_THREADS` count if
+/// set, 1 when auto-mode work is below `threshold`, else the cached
+/// hardware parallelism. Previously each planner carried its own copy of
+/// this body — drift between them is what this helper removes.
+fn auto_gate(flops: usize, threshold: usize) -> usize {
+    if FORCE_SINGLE.with(|c| c.get()) || pool::on_worker() {
+        return 1;
+    }
+    let forced = forced_threads();
+    if forced > 0 {
+        return forced;
+    }
+    if flops < threshold {
+        return 1;
+    }
+    hw_threads()
+}
+
+/// 2·m·k·n, saturating — the flop estimate every GEMM plan gates on.
+fn gemm_flops(m: usize, k: usize, n: usize) -> usize {
+    2usize.saturating_mul(m).saturating_mul(k).saturating_mul(n)
+}
+
 /// The worker count GEMM (and the data-parallel trainer plumbing) will use:
-/// the forced count if set, else `available_parallelism`.
+/// the forced count if set, else the cached `available_parallelism`.
 pub fn gemm_threads() -> usize {
     let forced = forced_threads();
     if forced > 0 {
         forced
     } else {
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        hw_threads()
     }
 }
 
-/// Workers for one m×k×n product: 1 inside [`run_single_threaded`] or when
-/// forced to 1, when auto-mode work is below [`PAR_FLOPS`], or when only one
-/// core is available; never more than m.
-fn plan_threads(m: usize, k: usize, n: usize) -> usize {
-    if FORCE_SINGLE.with(|c| c.get()) || pool::on_worker() {
-        return 1;
+/// The legacy row-split plan for one m×k×n product: `(workers, rows per
+/// chunk)`. Workers are capped by the planned row-*chunk* count, not raw
+/// rows — the old `min(m)` cap admitted up to m workers even when chunking
+/// left far fewer tasks than that, waking workers that could never receive
+/// one (wide-short products were the worst case: m chunks of several rows
+/// each, m workers woken).
+fn plan_rows(m: usize, k: usize, n: usize) -> (usize, usize) {
+    let cap = auto_gate(gemm_flops(m, k, n), PAR_FLOPS);
+    if cap <= 1 || m <= 1 {
+        return (1, m.max(1));
     }
-    let forced = forced_threads();
-    let cap = if forced > 0 {
-        forced
-    } else {
-        let flops = 2usize.saturating_mul(m).saturating_mul(k).saturating_mul(n);
-        if flops < PAR_FLOPS {
-            return 1;
-        }
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-    };
-    cap.min(m).max(1)
+    let rows_per = chunk_units(m, 4 * (k + n), cap);
+    (cap.min(m.div_ceil(rows_per)).max(1), rows_per)
 }
 
 /// The worker plan for non-GEMM kernels (QR reflector columns, Jacobi
-/// rotation pairs, matvec blocks): same opt-outs and forced count as
-/// [`plan_threads`], with the caller supplying its own flop estimate for the
-/// auto gate. `tasks` bounds the useful fan-out.
+/// rotation pairs, matvec blocks): the shared [`auto_gate`] opt-outs and
+/// forced count, with the caller supplying its own flop estimate. `tasks`
+/// bounds the useful fan-out.
 pub(crate) fn plan_kernel_threads(flops: usize, tasks: usize) -> usize {
-    if FORCE_SINGLE.with(|c| c.get()) || pool::on_worker() {
-        return 1;
+    auto_gate(flops, PAR_KERNEL_FLOPS).min(tasks).max(1)
+}
+
+/// Should this product take the packed-panel path? Mode 1 never, mode 2
+/// whenever both output dimensions are live, auto above [`PACK_MIN_FLOPS`]
+/// with at least one full [`MR`]×[`NR`] tile. Both answers produce bitwise
+/// identical results — this is purely a speed heuristic.
+fn use_packed(m: usize, k: usize, n: usize) -> bool {
+    match pack_mode() {
+        1 => false,
+        2 => true,
+        _ => gemm_flops(m, k, n) >= PACK_MIN_FLOPS && m >= MR && n >= NR,
     }
-    let forced = forced_threads();
-    let cap = if forced > 0 {
-        forced
-    } else {
-        if flops < PAR_KERNEL_FLOPS {
-            return 1;
-        }
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-    };
-    cap.min(tasks).max(1)
 }
 
 /// C = A·B. Shapes: (m×k)·(k×n) → m×n.
@@ -254,7 +364,8 @@ pub fn matmul_into(c: &mut Matrix, a: &Matrix, b: &Matrix) {
     matmul_acc(c, a, b, 1.0);
 }
 
-/// C += alpha · A·B, in place. Parallel across row blocks of C.
+/// C += alpha · A·B, in place. Parallel across row blocks of C (and column
+/// groups on the packed path).
 pub fn matmul_acc(c: &mut Matrix, a: &Matrix, b: &Matrix, alpha: f32) {
     let (m, k) = a.shape();
     let (k2, n) = b.shape();
@@ -263,14 +374,19 @@ pub fn matmul_acc(c: &mut Matrix, a: &Matrix, b: &Matrix, alpha: f32) {
     let ad = a.data();
     let bd = b.data();
     let cd = c.data_mut();
-    let threads = plan_threads(m, k, n);
+    if use_packed(m, k, n) {
+        let threads = auto_gate(gemm_flops(m, k, n), PAR_FLOPS);
+        let (sa, sb) = (SrcA::Rows { a: ad, ld: k }, SrcB::Rows { b: bd, ld: n });
+        matmul_acc_packed(cd, (m, k, n), alpha, &sa, &sb, threads);
+        return;
+    }
+    let (threads, rows_per) = plan_rows(m, k, n);
     if threads <= 1 {
         matmul_acc_rows(cd, ad, bd, m, k, n, alpha);
         return;
     }
     // One row of the chunk streams a k-float A row and an n-float C row
     // (B is shared and stays hot across rows).
-    let rows_per = chunk_units(m, 4 * (k + n), threads);
     let n_chunks = m.div_ceil(rows_per);
     // Disjoint row-block writes into C, one chunk per pool task. Every row
     // is computed by the identical scalar kernel whatever the chunking, so
@@ -283,6 +399,106 @@ pub fn matmul_acc(c: &mut Matrix, a: &Matrix, b: &Matrix, alpha: f32) {
             unsafe { std::slice::from_raw_parts_mut(c_base.get().add(row0 * n), rows * n) };
         let a_chunk = &ad[row0 * k..(row0 + rows) * k];
         matmul_acc_rows(c_chunk, a_chunk, bd, rows, k, n, alpha);
+    });
+}
+
+/// The packed-panel driver: C += packed(A)·packed(B), `alpha` folded into
+/// the A panels. [`KC`]-deep k-blocks advance sequentially and outermost;
+/// within one block, B is packed once (fanned out over the pool) and a
+/// (row block × column group) task grid runs the micro-kernels, each task
+/// packing its own A rows into a bank-leased [`MC`]×[`KC`] buffer. Every C
+/// element's contributions within a k-block live in exactly one task, so
+/// the per-element accumulation order — and therefore every bit of the
+/// result — is independent of the grid, the worker count and the chunking.
+fn matmul_acc_packed(
+    cd: &mut [f32],
+    dims: (usize, usize, usize),
+    alpha: f32,
+    a: &SrcA,
+    b: &SrcB,
+    threads: usize,
+) {
+    let (m, k, n) = dims;
+    if m == 0 || n == 0 {
+        return;
+    }
+    let kern = microkernel::active();
+    let col_panels = n.div_ceil(NR);
+    let row_blocks = m.div_ceil(MC);
+    // Wide-short products (row_blocks < threads) split columns too — the
+    // fan-out the legacy row-only split could never reach.
+    let col_groups = if threads > row_blocks {
+        threads.div_ceil(row_blocks).min(col_panels).max(1)
+    } else {
+        1
+    };
+    let panels_per_group = col_panels.div_ceil(col_groups);
+    let col_groups = col_panels.div_ceil(panels_per_group);
+    let n_tasks = row_blocks * col_groups;
+    let mut bws = pack::bank().lease();
+    let mut bpack = bws.take_vec_dirty(col_panels * NR * KC);
+    let c_base = SendPtr::new(cd.as_mut_ptr());
+    for p0 in (0..k).step_by(KC) {
+        let kb = KBlock { p0, kc: KC.min(k - p0) };
+        pack_b_block(&mut bpack, b, kb, n, threads);
+        let bpanels = &bpack[..];
+        pool::run(threads.min(n_tasks), n_tasks, &|t| {
+            let kc = kb.kc;
+            let i0 = (t / col_groups) * MC;
+            let rows = MC.min(m - i0);
+            let s0 = (t % col_groups) * panels_per_group;
+            let s1 = (s0 + panels_per_group).min(col_panels);
+            let mut ws = pack::bank().lease();
+            let mut apack = ws.take_vec_dirty(MC * KC);
+            pack::pack_a(&mut apack, a, kb, i0, rows, alpha);
+            for q in 0..rows.div_ceil(MR) {
+                let i = i0 + q * MR;
+                let mr = MR.min(m - i);
+                let ap = apack[q * MR * kc..].as_ptr();
+                for s in s0..s1 {
+                    let j = s * NR;
+                    let nr = NR.min(n - j);
+                    let bp = bpanels[s * NR * kc..].as_ptr();
+                    let ctile = unsafe { c_base.get().add(i * n + j) };
+                    // Full tiles take the dispatched kernel; edge tiles
+                    // always take the scalar edge kernel (both build
+                    // flavors), writing only the live region of C.
+                    if mr == MR && nr == NR {
+                        unsafe { kern(kc, ap, bp, ctile, n) };
+                    } else {
+                        unsafe { microkernel::mk_edge(kc, ap, bp, ctile, n, mr, nr) };
+                    }
+                }
+            }
+            ws.give_vec(apack);
+            pack::bank().release(ws);
+        });
+    }
+    bws.give_vec(bpack);
+    pack::bank().release(bws);
+}
+
+/// Pack the full B panel set for one k-block, fanning the panel copies out
+/// over the pool when the product is threaded. Partitioning only — every
+/// panel's bytes are identical whichever worker copies them.
+fn pack_b_block(dst: &mut [f32], b: &SrcB, kb: KBlock, n: usize, threads: usize) {
+    let col_panels = n.div_ceil(NR);
+    if threads <= 1 || col_panels <= 1 {
+        pack::pack_b(dst, b, kb, n, 0, col_panels);
+        return;
+    }
+    // One panel reads and writes kc·NR floats.
+    let per = chunk_units(col_panels, 8 * NR * kb.kc, threads);
+    let n_chunks = col_panels.div_ceil(per);
+    let panel_len = NR * kb.kc;
+    let d_base = SendPtr::new(dst.as_mut_ptr());
+    pool::run(threads.min(n_chunks), n_chunks, &|t| {
+        let s0 = t * per;
+        let panels = per.min(col_panels - s0);
+        let seg = unsafe {
+            std::slice::from_raw_parts_mut(d_base.get().add(s0 * panel_len), panels * panel_len)
+        };
+        pack::pack_b(seg, b, kb, n, s0, panels);
     });
 }
 
@@ -422,6 +638,16 @@ pub fn matmul_tn_acc(c: &mut Matrix, a: &Matrix, b: &Matrix, alpha: f32, ws: &mu
     assert_eq!(k, k2, "matmul_tn inner dims: {k} vs {k2}");
     assert_eq!(c.shape(), (m, n), "matmul_tn output shape");
     if m * n >= 32 * 32 {
+        if use_packed(m, k, n) {
+            // A panels pack straight out of the k×m storage — no Aᵀ scratch.
+            let threads = auto_gate(gemm_flops(m, k, n), PAR_FLOPS);
+            let (sa, sb) = (
+                SrcA::Cols { a: a.data(), ld: m },
+                SrcB::Rows { b: b.data(), ld: n },
+            );
+            matmul_acc_packed(c.data_mut(), (m, k, n), alpha, &sa, &sb, threads);
+            return;
+        }
         // Dirty lease: transpose_into writes every element.
         let mut at = ws.take_dirty(m, k);
         a.transpose_into(&mut at);
@@ -472,6 +698,17 @@ pub fn matmul_nt_into(c: &mut Matrix, a: &Matrix, b: &Matrix, ws: &mut Workspace
     assert_eq!(k, k2, "matmul_nt inner dims: {k} vs {k2}");
     assert_eq!(c.shape(), (m, n), "matmul_nt output shape");
     if m * n >= 32 * 32 {
+        if use_packed(m, k, n) {
+            // B panels pack straight out of the n×k storage — no Bᵀ scratch.
+            c.data_mut().fill(0.0);
+            let threads = auto_gate(gemm_flops(m, k, n), PAR_FLOPS);
+            let (sa, sb) = (
+                SrcA::Rows { a: a.data(), ld: k },
+                SrcB::Cols { b: b.data(), ld: k },
+            );
+            matmul_acc_packed(c.data_mut(), (m, k, n), 1.0, &sa, &sb, threads);
+            return;
+        }
         // Dirty lease: transpose_into writes every element.
         let mut bt = ws.take_dirty(k, n);
         b.transpose_into(&mut bt);
@@ -745,18 +982,30 @@ fn matvec_t_cols(y_chunk: &mut [f32], ad: &[f32], x: &[f32], k: usize, col0: usi
 // widening kernels: reduced-precision operands, f32 accumulation
 // ----------------------------------------------------------------------
 //
-// Mixed-precision storage keeps compute in f32: a packed [`MatrixB`]
-// operand is widened once into workspace scratch and the existing
-// register-blocked kernels run on the f32 image. Decode-once-then-GEMM is
-// the right trade while the inner kernels are scalar; fusing per-panel
-// decode into packed microkernels belongs to the SIMD packed-panel item
-// (see ROADMAP). The widen scratch is leased from the caller's
-// [`Workspace`], so steady-state calls allocate nothing (misses are gated
-// to warm-up like every other lease).
+// Mixed-precision storage keeps compute in f32. The GEMM routes through
+// the packed driver with decode fused into B-panel packing
+// ([`pack::SrcB::Wide`]): each KC×NR panel is decoded straight out of the
+// 16-bit words as it is copied, so no full-matrix f32 image of B ever
+// exists. The matvec fuses decode into its row-dot kernel the same way.
+// Decode is a pure per-word function, so the fused paths are bit-identical
+// to decode-then-compute — the legacy decode-into-scratch GEMM body is kept
+// behind `GEMM_PACK=1` as the oracle.
 
-/// C = A·B with a packed reduced-precision B, f32 accumulation. The
-/// widened B image is leased from `ws`.
+/// C = A·B with a packed reduced-precision B, f32 accumulation. Decode is
+/// fused into B-panel packing; `ws` is only used by the legacy oracle path
+/// (`GEMM_PACK=1`), which widens B into leased scratch first.
 pub fn matmul_wide_into(c: &mut Matrix, a: &Matrix, b: &MatrixB, ws: &mut Workspace) {
+    let (m, k) = a.shape();
+    let (k2, n) = b.shape();
+    assert_eq!(k, k2, "matmul_wide inner dims: {k} vs {k2}");
+    assert_eq!(c.shape(), (m, n), "matmul_wide output shape");
+    if pack_mode() != 1 {
+        c.data_mut().fill(0.0);
+        let threads = auto_gate(gemm_flops(m, k, n), PAR_FLOPS);
+        let (sa, sb) = (SrcA::Rows { a: a.data(), ld: k }, SrcB::Wide(b));
+        matmul_acc_packed(c.data_mut(), (m, k, n), 1.0, &sa, &sb, threads);
+        return;
+    }
     // Dirty lease: decode_into writes every element.
     let mut bw = ws.take_dirty(b.rows(), b.cols());
     b.decode_into(&mut bw);
@@ -764,14 +1013,58 @@ pub fn matmul_wide_into(c: &mut Matrix, a: &Matrix, b: &MatrixB, ws: &mut Worksp
     ws.give(bw);
 }
 
-/// y = A·x with a packed reduced-precision A, f32 accumulation. The
-/// widened A image is leased from `ws`.
+/// y = A·x with a packed reduced-precision A, f32 accumulation. Decode is
+/// fused into the row-dot kernel (each weight widens in-register as the dot
+/// streams), so no f32 image of A is materialized; `ws` only feeds the
+/// legacy oracle path (`GEMM_PACK=1`). Threaded over output row blocks like
+/// [`matvec_into`] — each `y[i]` is one sequential dot whichever worker
+/// computes it, so results are bit-identical for any worker count.
 pub fn matvec_wide_into(y: &mut [f32], a: &MatrixB, x: &[f32], ws: &mut Workspace) {
-    // Dirty lease: decode_into writes every element.
-    let mut aw = ws.take_dirty(a.rows(), a.cols());
-    a.decode_into(&mut aw);
-    matvec_into(y, &aw, x);
-    ws.give(aw);
+    let (m, k) = a.shape();
+    assert_eq!(k, x.len(), "matvec_wide dims");
+    assert_eq!(m, y.len(), "matvec_wide output len");
+    if pack_mode() == 1 {
+        // Dirty lease: decode_into writes every element.
+        let mut aw = ws.take_dirty(a.rows(), a.cols());
+        a.decode_into(&mut aw);
+        matvec_into(y, &aw, x);
+        ws.give(aw);
+        return;
+    }
+    let decode = super::dtype::decode_fn(a.dtype());
+    let ad = a.data();
+    let threads = plan_kernel_threads(2usize.saturating_mul(m).saturating_mul(k), m);
+    if threads <= 1 {
+        matvec_wide_rows(y, ad, decode, x, k, 0);
+        return;
+    }
+    // One output row streams a k-word A row plus the f32 x.
+    let rows_per = chunk_units(m, 2 * k + 4 * k, threads);
+    let n_chunks = m.div_ceil(rows_per);
+    let y_base = SendPtr::new(y.as_mut_ptr());
+    pool::run(threads, n_chunks, &|t| {
+        let row0 = t * rows_per;
+        let rows = rows_per.min(m - row0);
+        let y_chunk = unsafe { std::slice::from_raw_parts_mut(y_base.get().add(row0), rows) };
+        matvec_wide_rows(y_chunk, ad, decode, x, k, row0);
+    });
+}
+
+/// Row-block widening matvec kernel: `y_chunk[i] = decode(A[row0+i, :]) · x`,
+/// the [`matvec_rows`] dot with decode fused in — identical fold order, so
+/// it is bit-identical to decode-then-`matvec_rows`.
+fn matvec_wide_rows(
+    y_chunk: &mut [f32],
+    ad: &[u16],
+    decode: fn(u16) -> f32,
+    x: &[f32],
+    k: usize,
+    row0: usize,
+) {
+    for (i, yv) in y_chunk.iter_mut().enumerate() {
+        let row = &ad[(row0 + i) * k..(row0 + i + 1) * k];
+        *yv = row.iter().zip(x).map(|(&w, &b)| decode(w) * b).sum();
+    }
 }
 
 /// out = srcᵀ, widening a packed reduced-precision src: fused decode +
@@ -952,6 +1245,18 @@ mod tests {
             // Skinny rows: capped at one chunk per worker, never more.
             let skinny = chunk_units(64, 4 * 8, 4);
             assert_eq!(skinny, 16, "skinny rows should give one chunk per worker");
+            // Units fatter than the whole L2 target: the old auto sizing
+            // degenerated to 1-unit chunks (4096 tasks here); the
+            // MAX_CHUNKS_PER_WORKER floor bounds the flood.
+            let floored = chunk_units(4096, 1 << 20, 8);
+            assert!(
+                floored >= 512usize.div_ceil(MAX_CHUNKS_PER_WORKER),
+                "fat-unit chunk {floored} below the per-worker floor"
+            );
+            assert!(
+                4096usize.div_ceil(floored) <= 8 * MAX_CHUNKS_PER_WORKER,
+                "fat-unit chunking floods the deques"
+            );
         }
         // Forced override wins (over auto and env alike) and is clamped to
         // the task count.
@@ -1140,7 +1445,11 @@ mod tests {
     #[test]
     fn workspace_scratch_reuse_in_transpose_variants() {
         // The Aᵀ/Bᵀ scratch leased inside matmul_tn_into / matmul_nt_into
-        // must come back to the pool: repeated calls add no misses.
+        // must come back to the pool: repeated calls add no misses. Pinned
+        // to the legacy route — the packed path packs straight out of the
+        // transposed storage and never leases from `ws` at all.
+        let _knob = TEST_KNOB_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_gemm_pack(1);
         let mut rng = Rng::new(9);
         let a = Matrix::randn(40, 48, 1.0, &mut rng);
         let b = Matrix::randn(40, 36, 1.0, &mut rng);
@@ -1153,5 +1462,49 @@ mod tests {
         }
         assert_eq!(ws.misses(), misses, "steady-state tn_into allocated");
         ws.give(c);
+        set_gemm_pack(0);
+    }
+
+    #[test]
+    fn packed_route_is_bit_identical_to_legacy_kernels() {
+        // The packed driver reproduces the legacy kernels' per-element
+        // accumulation order exactly (KC blocks in order, 4-group folds,
+        // no FMA), so forcing either route must agree to the bit — for
+        // every transpose variant, the decode-fused widening path, and any
+        // worker count. This is the routing contract that lets `use_packed`
+        // stay a pure speed heuristic.
+        let _knob = TEST_KNOB_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let mut rng = Rng::new(501);
+        let mut ws = Workspace::new();
+        let (m, k, n) = (45usize, 70usize, 39usize);
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        let bw = MatrixB::encode(&b, crate::tensor::dtype::Dtype::Bf16);
+        set_gemm_threads(0);
+        set_gemm_pack(1);
+        let mm = matmul(&a, &b);
+        let mut acc_legacy = Matrix::full(m, n, 0.5);
+        matmul_acc(&mut acc_legacy, &a, &b, 1.5);
+        let tn = matmul_tn(&a.t(), &b);
+        let nt = matmul_nt(&a, &b.t());
+        let mut wide = ws.take_dirty(m, n);
+        matmul_wide_into(&mut wide, &a, &bw, &mut ws);
+        for threads in [1usize, 2, 8] {
+            set_gemm_threads(threads);
+            set_gemm_pack(2);
+            assert_eq!(mm.data(), matmul(&a, &b).data(), "matmul t={threads}");
+            let mut acc = Matrix::full(m, n, 0.5);
+            matmul_acc(&mut acc, &a, &b, 1.5);
+            assert_eq!(acc_legacy.data(), acc.data(), "matmul_acc t={threads}");
+            assert_eq!(tn.data(), matmul_tn(&a.t(), &b).data(), "tn t={threads}");
+            assert_eq!(nt.data(), matmul_nt(&a, &b.t()).data(), "nt t={threads}");
+            let mut wide_p = ws.take_dirty(m, n);
+            matmul_wide_into(&mut wide_p, &a, &bw, &mut ws);
+            assert_eq!(wide.data(), wide_p.data(), "wide t={threads}");
+            ws.give(wide_p);
+        }
+        ws.give(wide);
+        set_gemm_threads(0);
+        set_gemm_pack(0);
     }
 }

@@ -1,0 +1,348 @@
+//! Register-tiled GEMM micro-kernels over packed panels.
+//!
+//! A micro-kernel multiplies one packed `MR`×kc A micro-panel by one packed
+//! kc×`NR` B micro-panel, accumulating into an `MR`×`NR` tile of C (row-major,
+//! leading dimension `ldc`). Panel layout is produced by [`super::pack`]: at
+//! k-step `p` the A panel holds the tile's `MR` column entries contiguously at
+//! `ap[p*MR..]` and the B panel holds the `NR` row entries at `bp[p*NR..]`, so
+//! the kernel streams both panels linearly.
+//!
+//! # Bit-identity contract
+//!
+//! Every kernel — scalar, AVX2, NEON — reproduces the exact per-element
+//! accumulation order of the legacy row kernel in [`super::gemm`]: k-steps in
+//! groups of four, each group summed left-associatively
+//! (`((a0·b0 + a1·b1) + a2·b2) + a3·b3`) and folded into C with a single add,
+//! then the `kc % 4` remainder one step at a time. The SIMD kernels use
+//! separate multiply and add intrinsics — **never FMA**, which would change
+//! the rounding — and vectorize across the `NR` columns, so every lane is an
+//! independent C element computing the identical scalar sequence. Holding the
+//! C tile in registers for the duration of one call is associativity-neutral
+//! (the adds happen in the same order, only the store is deferred), so all
+//! kernels agree with the legacy path **bitwise**, and `simd` builds agree
+//! with scalar builds bitwise. `rust/tests/gemm_packed.rs` and the tests
+//! below gate this.
+//!
+//! Partial edge tiles (`mr < MR` or `nr < NR`) always go through the scalar
+//! [`mk_edge`] in both build flavors, writing only the live region directly
+//! in C — the full-tile kernels are reached only for complete tiles.
+//!
+//! Kernel selection happens once per process ([`active`]): AVX2 requires the
+//! `simd` cargo feature *and* a runtime `is_x86_feature_detected!` probe,
+//! NEON requires the feature on aarch64; everything else falls back to the
+//! scalar kernel, which is also the oracle the SIMD paths are tested against.
+
+use std::sync::OnceLock;
+
+/// Micro-tile rows (A panel height).
+pub const MR: usize = 8;
+/// Micro-tile columns (B panel width — one AVX2 vector, two NEON vectors).
+pub const NR: usize = 8;
+
+/// A full-tile micro-kernel: `(kc, ap, bp, c, ldc)` accumulates the packed
+/// `MR`×kc · kc×`NR` product into the `MR`×`NR` tile at `c`.
+pub type MicroFn = unsafe fn(usize, *const f32, *const f32, *mut f32, usize);
+
+/// Scalar micro-kernel over the live `mr`×`nr` corner of a tile. This is the
+/// only kernel edge tiles ever use (in both scalar and `simd` builds), so
+/// ragged shapes cannot diverge between build flavors.
+///
+/// # Safety
+///
+/// `ap` must be valid for `kc * MR` reads, `bp` for `kc * NR` reads, and `c`
+/// must point to a row-major block with leading dimension `ldc` where rows
+/// `0..mr` each have `nr` writable elements. Requires `mr <= MR`, `nr <= NR`
+/// and `nr <= ldc` (for `mr > 0`).
+pub unsafe fn mk_edge(
+    kc: usize,
+    ap: *const f32,
+    bp: *const f32,
+    c: *mut f32,
+    ldc: usize,
+    mr: usize,
+    nr: usize,
+) {
+    let mut p = 0usize;
+    while p + 4 <= kc {
+        let a0 = ap.add(p * MR);
+        let a1 = ap.add((p + 1) * MR);
+        let a2 = ap.add((p + 2) * MR);
+        let a3 = ap.add((p + 3) * MR);
+        let b0 = bp.add(p * NR);
+        let b1 = bp.add((p + 1) * NR);
+        let b2 = bp.add((p + 2) * NR);
+        let b3 = bp.add((p + 3) * NR);
+        for i in 0..mr {
+            let x0 = *a0.add(i);
+            let x1 = *a1.add(i);
+            let x2 = *a2.add(i);
+            let x3 = *a3.add(i);
+            let crow = c.add(i * ldc);
+            for j in 0..nr {
+                *crow.add(j) +=
+                    x0 * *b0.add(j) + x1 * *b1.add(j) + x2 * *b2.add(j) + x3 * *b3.add(j);
+            }
+        }
+        p += 4;
+    }
+    while p < kc {
+        let a0 = ap.add(p * MR);
+        let b0 = bp.add(p * NR);
+        for i in 0..mr {
+            let x = *a0.add(i);
+            let crow = c.add(i * ldc);
+            for j in 0..nr {
+                *crow.add(j) += x * *b0.add(j);
+            }
+        }
+        p += 1;
+    }
+}
+
+/// Scalar full-tile kernel (the portable fallback and bit-identity oracle).
+///
+/// # Safety
+///
+/// Same as [`mk_edge`] with `mr = MR`, `nr = NR`: the full `MR`×`NR` tile at
+/// `c` must be writable.
+pub unsafe fn mk_scalar(kc: usize, ap: *const f32, bp: *const f32, c: *mut f32, ldc: usize) {
+    mk_edge(kc, ap, bp, c, ldc, MR, NR);
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod x86 {
+    use super::{MR, NR};
+    use std::arch::x86_64::*;
+
+    /// AVX2 full-tile kernel: one 8-lane vector per C row, broadcast A,
+    /// separate mul/add (no FMA) in the canonical 4-group order.
+    ///
+    /// # Safety
+    ///
+    /// Same contract as [`super::mk_scalar`]; additionally the CPU must
+    /// support AVX2 (guarded by the runtime probe in [`super::active`]).
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::needless_range_loop, clippy::missing_safety_doc)]
+    pub unsafe fn mk_avx2(kc: usize, ap: *const f32, bp: *const f32, c: *mut f32, ldc: usize) {
+        let mut acc = [_mm256_setzero_ps(); MR];
+        for i in 0..MR {
+            acc[i] = _mm256_loadu_ps(c.add(i * ldc));
+        }
+        let mut p = 0usize;
+        while p + 4 <= kc {
+            let b0 = _mm256_loadu_ps(bp.add(p * NR));
+            let b1 = _mm256_loadu_ps(bp.add((p + 1) * NR));
+            let b2 = _mm256_loadu_ps(bp.add((p + 2) * NR));
+            let b3 = _mm256_loadu_ps(bp.add((p + 3) * NR));
+            for i in 0..MR {
+                let a0 = _mm256_set1_ps(*ap.add(p * MR + i));
+                let a1 = _mm256_set1_ps(*ap.add((p + 1) * MR + i));
+                let a2 = _mm256_set1_ps(*ap.add((p + 2) * MR + i));
+                let a3 = _mm256_set1_ps(*ap.add((p + 3) * MR + i));
+                let mut t = _mm256_mul_ps(a0, b0);
+                t = _mm256_add_ps(t, _mm256_mul_ps(a1, b1));
+                t = _mm256_add_ps(t, _mm256_mul_ps(a2, b2));
+                t = _mm256_add_ps(t, _mm256_mul_ps(a3, b3));
+                acc[i] = _mm256_add_ps(acc[i], t);
+            }
+            p += 4;
+        }
+        while p < kc {
+            let b0 = _mm256_loadu_ps(bp.add(p * NR));
+            for i in 0..MR {
+                let a0 = _mm256_set1_ps(*ap.add(p * MR + i));
+                acc[i] = _mm256_add_ps(acc[i], _mm256_mul_ps(a0, b0));
+            }
+            p += 1;
+        }
+        for i in 0..MR {
+            _mm256_storeu_ps(c.add(i * ldc), acc[i]);
+        }
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+mod arm {
+    use super::{MR, NR};
+    use std::arch::aarch64::*;
+
+    /// NEON full-tile kernel: two 4-lane vectors per C row, broadcast A,
+    /// separate mul/add (no FMA) in the canonical 4-group order.
+    ///
+    /// # Safety
+    ///
+    /// Same contract as [`super::mk_scalar`]; additionally the CPU must
+    /// support NEON (guarded by the runtime probe in [`super::active`]).
+    #[target_feature(enable = "neon")]
+    #[allow(clippy::needless_range_loop, clippy::missing_safety_doc)]
+    pub unsafe fn mk_neon(kc: usize, ap: *const f32, bp: *const f32, c: *mut f32, ldc: usize) {
+        let mut lo = [vdupq_n_f32(0.0); MR];
+        let mut hi = [vdupq_n_f32(0.0); MR];
+        for i in 0..MR {
+            lo[i] = vld1q_f32(c.add(i * ldc));
+            hi[i] = vld1q_f32(c.add(i * ldc + 4));
+        }
+        let mut p = 0usize;
+        while p + 4 <= kc {
+            let b0l = vld1q_f32(bp.add(p * NR));
+            let b0h = vld1q_f32(bp.add(p * NR + 4));
+            let b1l = vld1q_f32(bp.add((p + 1) * NR));
+            let b1h = vld1q_f32(bp.add((p + 1) * NR + 4));
+            let b2l = vld1q_f32(bp.add((p + 2) * NR));
+            let b2h = vld1q_f32(bp.add((p + 2) * NR + 4));
+            let b3l = vld1q_f32(bp.add((p + 3) * NR));
+            let b3h = vld1q_f32(bp.add((p + 3) * NR + 4));
+            for i in 0..MR {
+                let a0 = vdupq_n_f32(*ap.add(p * MR + i));
+                let a1 = vdupq_n_f32(*ap.add((p + 1) * MR + i));
+                let a2 = vdupq_n_f32(*ap.add((p + 2) * MR + i));
+                let a3 = vdupq_n_f32(*ap.add((p + 3) * MR + i));
+                let mut tl = vmulq_f32(a0, b0l);
+                tl = vaddq_f32(tl, vmulq_f32(a1, b1l));
+                tl = vaddq_f32(tl, vmulq_f32(a2, b2l));
+                tl = vaddq_f32(tl, vmulq_f32(a3, b3l));
+                lo[i] = vaddq_f32(lo[i], tl);
+                let mut th = vmulq_f32(a0, b0h);
+                th = vaddq_f32(th, vmulq_f32(a1, b1h));
+                th = vaddq_f32(th, vmulq_f32(a2, b2h));
+                th = vaddq_f32(th, vmulq_f32(a3, b3h));
+                hi[i] = vaddq_f32(hi[i], th);
+            }
+            p += 4;
+        }
+        while p < kc {
+            let b0l = vld1q_f32(bp.add(p * NR));
+            let b0h = vld1q_f32(bp.add(p * NR + 4));
+            for i in 0..MR {
+                let a0 = vdupq_n_f32(*ap.add(p * MR + i));
+                lo[i] = vaddq_f32(lo[i], vmulq_f32(a0, b0l));
+                hi[i] = vaddq_f32(hi[i], vmulq_f32(a0, b0h));
+            }
+            p += 1;
+        }
+        for i in 0..MR {
+            vst1q_f32(c.add(i * ldc), lo[i]);
+            vst1q_f32(c.add(i * ldc + 4), hi[i]);
+        }
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+fn simd_kernel() -> Option<(MicroFn, &'static str)> {
+    if std::is_x86_feature_detected!("avx2") {
+        Some((x86::mk_avx2 as MicroFn, "avx2"))
+    } else {
+        None
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+fn simd_kernel() -> Option<(MicroFn, &'static str)> {
+    if std::arch::is_aarch64_feature_detected!("neon") {
+        Some((arm::mk_neon as MicroFn, "neon"))
+    } else {
+        None
+    }
+}
+
+#[cfg(not(all(feature = "simd", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+fn simd_kernel() -> Option<(MicroFn, &'static str)> {
+    None
+}
+
+static ACTIVE: OnceLock<(MicroFn, &'static str)> = OnceLock::new();
+
+fn resolve() -> (MicroFn, &'static str) {
+    simd_kernel().unwrap_or((mk_scalar as MicroFn, "scalar"))
+}
+
+/// The full-tile kernel selected for this process: the SIMD kernel when the
+/// `simd` feature is on and the CPU supports it, else [`mk_scalar`]. All
+/// candidates are bitwise-equal, so the choice affects speed only.
+pub fn active() -> MicroFn {
+    ACTIVE.get_or_init(resolve).0
+}
+
+/// The name of the selected kernel (`"avx2"`, `"neon"` or `"scalar"`) — for
+/// bench ledgers and tests.
+pub fn active_name() -> &'static str {
+    ACTIVE.get_or_init(resolve).1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn panels(kc: usize, rng: &mut Rng) -> (Vec<f32>, Vec<f32>) {
+        let ap: Vec<f32> = (0..kc * MR).map(|_| rng.normal() as f32).collect();
+        let bp: Vec<f32> = (0..kc * NR).map(|_| rng.normal() as f32).collect();
+        (ap, bp)
+    }
+
+    #[test]
+    fn active_kernel_matches_scalar_bitwise() {
+        // The dispatch target (AVX2/NEON when the `simd` feature found
+        // hardware, scalar otherwise) must agree with the scalar oracle
+        // bit-for-bit on full tiles — including kc % 4 remainders.
+        let mut rng = Rng::new(91);
+        let kern = active();
+        for kc in [0usize, 1, 3, 4, 7, 16, 257] {
+            let (ap, bp) = panels(kc, &mut rng);
+            let init: Vec<f32> = (0..MR * NR).map(|_| rng.normal() as f32).collect();
+            let mut want = init.clone();
+            let mut got = init;
+            unsafe {
+                mk_scalar(kc, ap.as_ptr(), bp.as_ptr(), want.as_mut_ptr(), NR);
+                kern(kc, ap.as_ptr(), bp.as_ptr(), got.as_mut_ptr(), NR);
+            }
+            assert_eq!(want, got, "active kernel diverged from scalar at kc={kc}");
+        }
+        if !cfg!(feature = "simd") {
+            assert_eq!(active_name(), "scalar");
+        }
+    }
+
+    #[test]
+    fn edge_kernel_touches_only_the_live_region() {
+        // mk_edge on a partial tile must leave every element outside the
+        // mr×nr corner untouched (the packed driver points it straight into
+        // C, where the neighbors are other tasks' live data).
+        let mut rng = Rng::new(92);
+        let kc = 9;
+        let (ap, bp) = panels(kc, &mut rng);
+        for (mr, nr) in [(1usize, 1usize), (3, 5), (7, 8), (8, 7), (5, 2)] {
+            let mut c = vec![777.0f32; MR * NR];
+            unsafe { mk_edge(kc, ap.as_ptr(), bp.as_ptr(), c.as_mut_ptr(), NR, mr, nr) };
+            for i in 0..MR {
+                for j in 0..NR {
+                    if i < mr && j < nr {
+                        continue;
+                    }
+                    let v = c[i * NR + j];
+                    assert_eq!(v, 777.0, "edge kernel wrote outside ({mr}x{nr}) at ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn full_tile_matches_reference_dot_products() {
+        // Sanity against an f64 reference: the packed-panel kernel computes
+        // the same product the panel layout encodes.
+        let mut rng = Rng::new(93);
+        let kc = 33;
+        let (ap, bp) = panels(kc, &mut rng);
+        let mut c = vec![0.0f32; MR * NR];
+        unsafe { mk_scalar(kc, ap.as_ptr(), bp.as_ptr(), c.as_mut_ptr(), NR) };
+        for i in 0..MR {
+            for j in 0..NR {
+                let want: f64 = (0..kc)
+                    .map(|p| ap[p * MR + i] as f64 * bp[p * NR + j] as f64)
+                    .sum();
+                let got = c[i * NR + j] as f64;
+                assert!((got - want).abs() < 1e-3, "tile[{i},{j}] {got} vs {want}");
+            }
+        }
+    }
+}

@@ -72,13 +72,26 @@
 //!   regardless) — so DP workers and kernels can never oversubscribe the
 //!   machine.
 //!
+//! * **Packed-panel GEMM with register-tiled micro-kernels.** Large
+//!   products copy their operands into contiguous micro-panels ([`pack`])
+//!   and run the 8×8 register-tiled kernels in [`microkernel`] — scalar by
+//!   default, AVX2/NEON when the crate is built with the `simd` feature and
+//!   the CPU supports it (runtime-detected). Every kernel reproduces the
+//!   legacy kernels' per-element accumulation order, so the packed route is
+//!   bit-identical to the scalar one for any shape, worker count and build
+//!   flavor (`GEMM_PACK` / [`gemm::set_gemm_pack`] force either route;
+//!   `rust/tests/gemm_packed.rs` gates the identity). Panel scratch leases
+//!   from a process-wide bank, keeping the zero-alloc contract
+//!   ([`pack::pack_misses`]).
+//!
 //! * **Storage dtypes.** [`dtype::Dtype`] names the reduced-precision
 //!   storage formats (bf16/f16) and owns the software conversion kernels;
 //!   [`dtype::MatrixB`] is the packed u16 companion of [`Matrix`]. Compute
 //!   stays f32 — the widening GEMM entry points ([`gemm::matmul_wide_into`],
 //!   [`gemm::matvec_wide_into`], [`gemm::transpose_wide_into`]) read packed
-//!   operands and accumulate in f32, leasing their widen scratch from the
-//!   caller's workspace so the zero-alloc contract holds.
+//!   operands and accumulate in f32 with decode fused into panel packing /
+//!   the matvec row dots, so no full-matrix f32 image of the packed operand
+//!   is ever materialized.
 //!
 //! * **Allocation-free refresh paths.** The every-k-steps subspace
 //!   machinery has `_into` workspace-backed forms mirroring the GEMM ones:
@@ -92,7 +105,9 @@
 pub mod dtype;
 pub mod gemm;
 pub mod matrix;
+pub mod microkernel;
 pub mod ops;
+pub mod pack;
 pub mod pool;
 pub mod qr;
 pub mod svd;

@@ -1,0 +1,254 @@
+//! Panel packing for the cache-blocked GEMM driver.
+//!
+//! The packed path in [`super::gemm`] copies the operands of one KC-deep
+//! k-block into contiguous micro-panels before running the register-tiled
+//! kernels in [`super::microkernel`]:
+//!
+//! * **A panels** hold [`MR`](super::microkernel::MR) rows apiece. Micro-panel
+//!   `q` of a row block occupies `q*MR*kc..(q+1)*MR*kc` in the destination,
+//!   with the `MR` entries of k-step `p` contiguous at offset `p*MR` — the
+//!   exact order the micro-kernel broadcasts them. `alpha` is folded into the
+//!   packed values (the legacy kernel multiplies `alpha · a[i][p]` at the same
+//!   point, so the fold is bit-transparent).
+//! * **B panels** hold [`NR`](super::microkernel::NR) columns apiece, k-step
+//!   `p` contiguous at offset `p*NR`, which is the vector the SIMD kernels
+//!   load.
+//!
+//! Sources come in the storage layouts the GEMM entry points already have —
+//! row-major, transposed ([`SrcA::Cols`] / [`SrcB::Cols`] pack straight out of
+//! the `Aᵀ`/`Bᵀ` storage, replacing the old transpose-into-scratch step), and
+//! packed 16-bit ([`SrcB::Wide`] decodes `MatrixB` words during the copy, so
+//! the widening GEMM no longer materializes a full-matrix f32 image).
+//!
+//! Tail micro-panels (row/column counts not divisible by `MR`/`NR`) are
+//! zero-padded so panel buffers never expose stale lease contents; the padded
+//! lanes are only ever read by full-tile kernels that cannot be reached for
+//! edge tiles, so padding never participates in arithmetic.
+//!
+//! Panel buffers are leased from a process-wide [`WorkspaceBank`]
+//! ([`bank`]) rather than a caller workspace — `matmul_acc` has no workspace
+//! parameter, and the concurrent driver tasks each need their own A-panel
+//! buffer anyway. The bank is self-warming: the first products of each shape
+//! miss (fresh allocations), steady-state re-runs lease warm buffers, and
+//! [`pack_misses`] exposes the at-rest counter so the zero-alloc gate in
+//! `rust/tests/zero_alloc.rs` can hold the packed path to the same contract
+//! as every other lease.
+
+use super::dtype::{decode_fn, MatrixB};
+use super::microkernel::{MR, NR};
+use super::workspace::WorkspaceBank;
+use std::sync::OnceLock;
+
+/// One KC-deep k-block: the packed panels cover columns (A) / rows (B)
+/// `p0..p0 + kc` of the full operand.
+#[derive(Clone, Copy)]
+pub(crate) struct KBlock {
+    pub p0: usize,
+    pub kc: usize,
+}
+
+/// The A operand in its storage layout: `Rows` is row-major m×k (leading
+/// dimension `ld = k`); `Cols` is the transposed storage k×m (`ld = m`), i.e.
+/// the logical A is `stored[p][i]` — the `matmul_tn` case.
+pub(crate) enum SrcA<'a> {
+    Rows { a: &'a [f32], ld: usize },
+    Cols { a: &'a [f32], ld: usize },
+}
+
+/// The B operand in its storage layout: `Rows` is row-major k×n (`ld = n`);
+/// `Cols` is transposed storage n×k (`ld = k`, the `matmul_nt` case); `Wide`
+/// is a packed 16-bit row-major k×n matrix decoded during packing.
+pub(crate) enum SrcB<'a> {
+    Rows { b: &'a [f32], ld: usize },
+    Cols { b: &'a [f32], ld: usize },
+    Wide(&'a MatrixB),
+}
+
+/// Pack `rows` A rows starting at `row0` for k-block `kb` into `dst`, folding
+/// `alpha` into every value. `dst` must hold `rows.div_ceil(MR) * MR * kb.kc`
+/// floats; tail rows of the last micro-panel are zero-padded.
+pub(crate) fn pack_a(dst: &mut [f32], a: &SrcA, kb: KBlock, row0: usize, rows: usize, alpha: f32) {
+    let KBlock { p0, kc } = kb;
+    let panels = rows.div_ceil(MR);
+    for q in 0..panels {
+        let base = q * MR * kc;
+        let r0 = row0 + q * MR;
+        let live = MR.min(row0 + rows - r0);
+        match *a {
+            SrcA::Rows { a, ld } => {
+                for r in 0..live {
+                    let src = &a[(r0 + r) * ld + p0..(r0 + r) * ld + p0 + kc];
+                    for (p, &v) in src.iter().enumerate() {
+                        dst[base + p * MR + r] = alpha * v;
+                    }
+                }
+            }
+            SrcA::Cols { a, ld } => {
+                for p in 0..kc {
+                    let src = &a[(p0 + p) * ld + r0..(p0 + p) * ld + r0 + live];
+                    let out = &mut dst[base + p * MR..base + p * MR + MR];
+                    for (o, &v) in out.iter_mut().zip(src) {
+                        *o = alpha * v;
+                    }
+                }
+            }
+        }
+        if live < MR {
+            for p in 0..kc {
+                dst[base + p * MR + live..base + (p + 1) * MR].fill(0.0);
+            }
+        }
+    }
+}
+
+/// Pack `panels` B micro-panels starting at panel index `s0` for k-block
+/// `kb` into `dst` (`dst[0]` is panel `s0`'s first element). `n` is the full
+/// column count; tail columns of the last panel are zero-padded. For
+/// [`SrcB::Wide`] the 16-bit words are decoded here — the only place the
+/// widening GEMM touches f32 images of B.
+pub(crate) fn pack_b(dst: &mut [f32], b: &SrcB, kb: KBlock, n: usize, s0: usize, panels: usize) {
+    let KBlock { p0, kc } = kb;
+    for q in 0..panels {
+        let base = q * NR * kc;
+        let c0 = (s0 + q) * NR;
+        let live = NR.min(n - c0);
+        match *b {
+            SrcB::Rows { b, ld } => {
+                for p in 0..kc {
+                    let src = &b[(p0 + p) * ld + c0..(p0 + p) * ld + c0 + live];
+                    let out = &mut dst[base + p * NR..base + p * NR + NR];
+                    out[..live].copy_from_slice(src);
+                    out[live..].fill(0.0);
+                }
+            }
+            SrcB::Cols { b, ld } => {
+                for j in 0..live {
+                    let src = &b[(c0 + j) * ld + p0..(c0 + j) * ld + p0 + kc];
+                    for (p, &v) in src.iter().enumerate() {
+                        dst[base + p * NR + j] = v;
+                    }
+                }
+                if live < NR {
+                    for p in 0..kc {
+                        dst[base + p * NR + live..base + (p + 1) * NR].fill(0.0);
+                    }
+                }
+            }
+            SrcB::Wide(mb) => {
+                let decode = decode_fn(mb.dtype());
+                let data = mb.data();
+                let ld = mb.cols();
+                for p in 0..kc {
+                    let src = &data[(p0 + p) * ld + c0..(p0 + p) * ld + c0 + live];
+                    let out = &mut dst[base + p * NR..base + p * NR + NR];
+                    for (o, &w) in out.iter_mut().zip(src) {
+                        *o = decode(w);
+                    }
+                    out[live..].fill(0.0);
+                }
+            }
+        }
+    }
+}
+
+/// The process-wide bank panel buffers are leased from. Self-warming: leases
+/// that outrun the free list fall back to fresh workspaces (misses), which
+/// the bank then absorbs on release, so steady-state products of a recurring
+/// shape allocate nothing.
+static PACK_BANK: OnceLock<WorkspaceBank> = OnceLock::new();
+
+pub(crate) fn bank() -> &'static WorkspaceBank {
+    PACK_BANK.get_or_init(WorkspaceBank::new)
+}
+
+/// Total allocation misses in the panel-buffer bank, meaningful at rest
+/// (no product in flight). Steady-state training steps must not move it —
+/// the packed path's leg of the zero-alloc contract.
+pub fn pack_misses() -> usize {
+    bank().misses()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::dtype::Dtype;
+    use crate::tensor::Matrix;
+
+    #[test]
+    fn a_panel_layout_folds_alpha_and_pads() {
+        // 3×4 A, MR=8: one micro-panel, rows 3..8 zero-padded, alpha folded.
+        let a: Vec<f32> = (0..12).map(|v| v as f32).collect();
+        let kb = KBlock { p0: 1, kc: 3 };
+        let mut dst = vec![55.0f32; MR * kb.kc];
+        pack_a(&mut dst, &SrcA::Rows { a: &a, ld: 4 }, kb, 0, 3, 2.0);
+        for p in 0..kb.kc {
+            for r in 0..MR {
+                let want = if r < 3 { 2.0 * a[r * 4 + kb.p0 + p] } else { 0.0 };
+                assert_eq!(dst[p * MR + r], want, "A panel at p={p} r={r}");
+            }
+        }
+        // Cols source (k×m storage) packs the identical panel.
+        let mut at = vec![0.0f32; 12];
+        for i in 0..3 {
+            for p in 0..4 {
+                at[p * 3 + i] = a[i * 4 + p];
+            }
+        }
+        let mut dst_t = vec![66.0f32; MR * kb.kc];
+        pack_a(&mut dst_t, &SrcA::Cols { a: &at, ld: 3 }, kb, 0, 3, 2.0);
+        assert_eq!(dst, dst_t, "Rows and Cols sources must pack identically");
+    }
+
+    #[test]
+    fn b_panel_layout_matches_across_sources() {
+        // 3×10 B → two micro-panels; the second has 2 live columns.
+        let b: Vec<f32> = (0..30).map(|v| v as f32 * 0.5 - 4.0).collect();
+        let (k, n) = (3usize, 10usize);
+        let kb = KBlock { p0: 0, kc: k };
+        let panels = n.div_ceil(NR);
+        let mut rows = vec![9.0f32; panels * NR * k];
+        pack_b(&mut rows, &SrcB::Rows { b: &b, ld: n }, kb, n, 0, panels);
+        for s in 0..panels {
+            for p in 0..k {
+                for j in 0..NR {
+                    let col = s * NR + j;
+                    let want = if col < n { b[p * n + col] } else { 0.0 };
+                    assert_eq!(rows[s * NR * k + p * NR + j], want, "B panel s={s} p={p} j={j}");
+                }
+            }
+        }
+        // Transposed storage (n×k) packs the identical panels.
+        let mut bt = vec![0.0f32; 30];
+        for p in 0..k {
+            for j in 0..n {
+                bt[j * k + p] = b[p * n + j];
+            }
+        }
+        let mut cols = vec![8.0f32; panels * NR * k];
+        pack_b(&mut cols, &SrcB::Cols { b: &bt, ld: k }, kb, n, 0, panels);
+        assert_eq!(rows, cols, "Rows and Cols sources must pack identically");
+    }
+
+    #[test]
+    fn wide_panels_decode_exactly_like_decode_into() {
+        // Decode-fused packing must produce the same f32 values as widening
+        // the whole matrix first — decode is a pure per-word function.
+        let (k, n) = (5usize, 9usize);
+        let mut src = Matrix::zeros(k, n);
+        for i in 0..k {
+            for j in 0..n {
+                src.set(i, j, (i * n + j) as f32 * 0.3 - 2.0);
+            }
+        }
+        let mb = MatrixB::encode(&src, Dtype::Bf16);
+        let mut wide = Matrix::zeros(k, n);
+        mb.decode_into(&mut wide);
+        let kb = KBlock { p0: 2, kc: 3 };
+        let panels = n.div_ceil(NR);
+        let mut fused = vec![1.0f32; panels * NR * kb.kc];
+        pack_b(&mut fused, &SrcB::Wide(&mb), kb, n, 0, panels);
+        let mut reference = vec![2.0f32; panels * NR * kb.kc];
+        pack_b(&mut reference, &SrcB::Rows { b: wide.data(), ld: n }, kb, n, 0, panels);
+        assert_eq!(fused, reference, "fused decode diverged from decode_into");
+    }
+}

@@ -45,6 +45,13 @@
 //! sums them and is only meaningful *at rest* (between steps, when every
 //! lease has been released) — the gate in `rust/tests/zero_alloc.rs` reads
 //! it there.
+//!
+//! Besides the attention fan-out's pre-sized bank, the packed-panel GEMM
+//! leases its A/B panel buffers from a process-wide *self-warming* bank
+//! (`tensor::pack::bank`): leases that outrun the free list fall back to a
+//! fresh `Workspace` (a miss) which the bank absorbs on release, so no
+//! `ensure` call is needed and steady-state products of recurring shapes
+//! allocate nothing (`tensor::pack::pack_misses` gates this).
 
 use super::matrix::Matrix;
 use std::collections::HashMap;

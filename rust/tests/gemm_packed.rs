@@ -1,0 +1,240 @@
+//! Packed-vs-legacy bit-identity acceptance gate for the GEMM routes.
+//!
+//! The packed-panel driver (`tensor/gemm.rs` + `tensor/pack.rs` +
+//! `tensor/microkernel.rs`) promises to reproduce the legacy kernels'
+//! per-element accumulation order exactly — for every transpose variant,
+//! ragged shape, decode-fused 16-bit operand, worker count, chunk setting
+//! and build flavor (`simd` on or off). That contract is what lets the
+//! routing heuristic, the thread planner and the SIMD dispatch all stay
+//! behaviorally invisible. Every comparison in here is `assert_eq!` on raw
+//! f32 bits — no tolerances.
+//!
+//! `GEMM_PACK` semantics (forced via `set_gemm_pack`): 1 = legacy kernels
+//! only (the oracle), 2 = packed whenever the shape permits, 0 = restore
+//! the env default (size-gated auto).
+
+use subtrack::tensor::{gemm, microkernel, Dtype, Matrix, MatrixB, Workspace};
+use subtrack::util::rng::Rng;
+
+/// Serializes every test that mutates the process-global routing / worker /
+/// chunk knobs: the harness runs this binary's tests concurrently, and while
+/// the knobs are result-transparent, a test asserting "legacy vs packed"
+/// must know which route its base computation actually took.
+static THREAD_KNOB: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+/// All-variant product capture at the current knob settings. `c0` seeds the
+/// accumulator variants so `alpha`-folding and `+=` semantics are covered.
+#[allow(clippy::type_complexity)]
+fn all_variants(
+    a: &Matrix,
+    b: &Matrix,
+    alpha: f32,
+    ws: &mut Workspace,
+) -> (Matrix, Matrix, Matrix, Matrix) {
+    let (m, _) = a.shape();
+    let (_, n) = b.shape();
+    let mm = gemm::matmul(a, b);
+    let mut acc = Matrix::full(m, n, 0.25);
+    gemm::matmul_acc(&mut acc, a, b, alpha);
+    let mut tn = Matrix::full(m, n, -0.5);
+    gemm::matmul_tn_acc(&mut tn, &a.t(), b, alpha, ws);
+    let mut nt = Matrix::zeros(m, n);
+    gemm::matmul_nt_into(&mut nt, a, &b.t(), ws);
+    (mm, acc, tn, nt)
+}
+
+#[test]
+fn packed_matches_legacy_on_ragged_shapes_all_variants() {
+    // Ragged in every dimension: partial MR/NR edge tiles, kc % 4
+    // remainders, multiple KC blocks (k = 300 > 256), and alpha ≠ 1. The
+    // transpose variants' packed routing only engages on their large branch
+    // (m·n ≥ 32²), so every shape here clears it.
+    let _guard = THREAD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    let mut rng = Rng::new(7001);
+    let mut ws = Workspace::new();
+    for (m, k, n) in [
+        (33usize, 48usize, 40usize),
+        (40, 300, 64),
+        (65, 37, 41),
+        (64, 256, 64),
+        (97, 13, 129),
+    ] {
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        gemm::set_gemm_pack(1);
+        let legacy = all_variants(&a, &b, 1.5, &mut ws);
+        gemm::set_gemm_pack(2);
+        let packed = all_variants(&a, &b, 1.5, &mut ws);
+        gemm::set_gemm_pack(0);
+        assert_eq!(legacy.0.data(), packed.0.data(), "matmul {m}x{k}x{n}");
+        assert_eq!(legacy.1.data(), packed.1.data(), "matmul_acc {m}x{k}x{n}");
+        assert_eq!(legacy.2.data(), packed.2.data(), "matmul_tn_acc {m}x{k}x{n}");
+        assert_eq!(legacy.3.data(), packed.3.data(), "matmul_nt_into {m}x{k}x{n}");
+    }
+}
+
+#[test]
+fn decode_fused_wide_paths_match_legacy_decode_then_compute() {
+    // The packed widening GEMM decodes B inside panel packing and the fused
+    // matvec decodes in-register; the legacy route (mode 1) widens into
+    // workspace scratch first. Decode is a pure per-word function and the
+    // kernels share one accumulation order, so the routes are bitwise equal
+    // for both storage dtypes.
+    let _guard = THREAD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    let mut rng = Rng::new(7002);
+    let mut ws = Workspace::new();
+    for dtype in [Dtype::Bf16, Dtype::F16] {
+        for (m, k, n) in [(9usize, 33usize, 17usize), (48, 70, 56), (21, 260, 88)] {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            let bw = MatrixB::encode(&b, dtype);
+            let x: Vec<f32> = (0..n).map(|i| i as f32 * 0.125 - 2.0).collect();
+            gemm::set_gemm_pack(1);
+            let mut c_legacy = ws.take_dirty(m, n);
+            gemm::matmul_wide_into(&mut c_legacy, &a, &bw, &mut ws);
+            let mut y_legacy = vec![0.0f32; k];
+            gemm::matvec_wide_into(&mut y_legacy, &bw, &x, &mut ws);
+            gemm::set_gemm_pack(2);
+            let mut c_packed = ws.take_dirty(m, n);
+            gemm::matmul_wide_into(&mut c_packed, &a, &bw, &mut ws);
+            let mut y_packed = vec![0.0f32; k];
+            gemm::matvec_wide_into(&mut y_packed, &bw, &x, &mut ws);
+            gemm::set_gemm_pack(0);
+            assert_eq!(
+                c_legacy.data(),
+                c_packed.data(),
+                "matmul_wide {dtype:?} {m}x{k}x{n}"
+            );
+            assert_eq!(y_legacy, y_packed, "matvec_wide {dtype:?} {k}x{n}");
+            ws.give(c_legacy);
+            ws.give(c_packed);
+        }
+    }
+}
+
+#[test]
+fn packed_route_bit_identical_across_threads_and_chunks() {
+    // The packed driver's k-blocks are sequential and each C element's
+    // within-block work lives in exactly one task, so the accumulation
+    // order is independent of the task grid: any worker count × any chunk
+    // setting must agree to the bit. The wide-short shape (m ≪ n) exercises
+    // the column-group fan-out (the S1 regression: the legacy planner used
+    // to cap workers at raw rows); the tall shape exercises multiple row
+    // blocks per worker.
+    let _guard = THREAD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    let mut rng = Rng::new(7003);
+    for (m, k, n) in [(8usize, 64usize, 512usize), (512, 64, 8), (101, 96, 83)] {
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        gemm::set_gemm_pack(2);
+        gemm::set_gemm_chunk(1);
+        gemm::set_gemm_threads(1);
+        let base = gemm::matmul(&a, &b);
+        for threads in [1usize, 2, 8] {
+            gemm::set_gemm_threads(threads);
+            for chunk in [0usize, 1, 4] {
+                gemm::set_gemm_chunk(chunk);
+                let got = gemm::matmul(&a, &b);
+                assert_eq!(
+                    base.data(),
+                    got.data(),
+                    "{m}x{k}x{n} diverged at threads={threads} chunk={chunk}"
+                );
+            }
+        }
+        gemm::set_gemm_threads(0);
+        gemm::set_gemm_chunk(0);
+        gemm::set_gemm_pack(0);
+    }
+}
+
+#[test]
+fn legacy_row_split_bit_identical_across_worker_counts() {
+    // The S1 planner fix (cap workers by chunk count, not raw rows) is a
+    // partitioning change on the legacy route — results must stay
+    // bit-identical at 1/2/8 workers for short-wide and tall shapes alike.
+    let _guard = THREAD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    let mut rng = Rng::new(7004);
+    for (m, k, n) in [(8usize, 64usize, 512usize), (512, 64, 8), (96, 80, 72)] {
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        gemm::set_gemm_pack(1);
+        gemm::set_gemm_threads(1);
+        let base = gemm::matmul(&a, &b);
+        for threads in [2usize, 8] {
+            gemm::set_gemm_threads(threads);
+            let got = gemm::matmul(&a, &b);
+            assert_eq!(base.data(), got.data(), "{m}x{k}x{n} legacy threads={threads}");
+        }
+        gemm::set_gemm_threads(0);
+        gemm::set_gemm_pack(0);
+    }
+}
+
+#[test]
+fn auto_routing_is_invisible_and_single_thread_opt_out_agrees() {
+    // Auto mode may pick either route by size — both must equal the forced
+    // routes, and `run_single_threaded` (the DP-worker opt-out) must change
+    // nothing but the fan-out.
+    let _guard = THREAD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    let mut rng = Rng::new(7005);
+    let a = Matrix::randn(72, 90, 1.0, &mut rng);
+    let b = Matrix::randn(90, 66, 1.0, &mut rng);
+    gemm::set_gemm_pack(0);
+    let auto = gemm::matmul(&a, &b);
+    gemm::set_gemm_pack(1);
+    let legacy = gemm::matmul(&a, &b);
+    gemm::set_gemm_pack(2);
+    let packed = gemm::matmul(&a, &b);
+    let single = gemm::run_single_threaded(|| gemm::matmul(&a, &b));
+    gemm::set_gemm_pack(0);
+    assert_eq!(auto.data(), legacy.data(), "auto route diverged from legacy");
+    assert_eq!(auto.data(), packed.data(), "auto route diverged from packed");
+    assert_eq!(auto.data(), single.data(), "single-thread opt-out diverged");
+}
+
+#[test]
+fn forced_packed_handles_degenerate_and_sub_tile_shapes() {
+    // Mode 2 routes everything packable through the driver — shapes smaller
+    // than one MR×NR tile, k below one 4-group, k = 0 and empty outputs
+    // must all take the edge kernels and still match the legacy kernels.
+    let _guard = THREAD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    let mut rng = Rng::new(7006);
+    for (m, k, n) in [
+        (1usize, 1usize, 1usize),
+        (3, 2, 5),
+        (7, 3, 9),
+        (5, 1, 12),
+        (2, 0, 4),
+        (0, 8, 8),
+        (16, 2, 3),
+    ] {
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        gemm::set_gemm_pack(1);
+        let mut legacy = Matrix::full(m, n, 1.0);
+        gemm::matmul_acc(&mut legacy, &a, &b, 2.0);
+        gemm::set_gemm_pack(2);
+        let mut packed = Matrix::full(m, n, 1.0);
+        gemm::matmul_acc(&mut packed, &a, &b, 2.0);
+        gemm::set_gemm_pack(0);
+        assert_eq!(legacy.data(), packed.data(), "sub-tile shape {m}x{k}x{n}");
+    }
+}
+
+#[test]
+fn dispatch_reports_a_kernel_consistent_with_the_build() {
+    // Scalar builds must report the scalar kernel; `simd` builds report
+    // whatever the runtime probe found (scalar remains a legal answer on
+    // hardware without AVX2/NEON). Either way the name is one of the known
+    // kernels — the bench ledger records it.
+    let name = microkernel::active_name();
+    if cfg!(feature = "simd") {
+        assert!(
+            ["avx2", "neon", "scalar"].contains(&name),
+            "unknown kernel name {name}"
+        );
+    } else {
+        assert_eq!(name, "scalar", "scalar build dispatched a SIMD kernel");
+    }
+}

@@ -10,6 +10,7 @@
 
 use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
 use std::time::{Duration, Instant};
+use subtrack::tensor::gemm;
 use subtrack::tensor::pool::{self, Sched};
 
 /// Busy-wait (not sleep) so the cost is attributable to the executing
@@ -168,6 +169,38 @@ fn short_jobs_never_wait_behind_an_unrelated_long_job() {
         );
         long.join().expect("long-job caller panicked");
     });
+}
+
+#[test]
+fn fat_units_never_flood_the_deques_with_one_unit_chunks() {
+    // Regression: when one unit streams more bytes than the whole L2 chunk
+    // target, auto sizing used to degenerate to 1-unit chunks — a 4096-unit
+    // kernel became 4096 steal-deque tasks whose dispatch overhead swamped
+    // the work. The floor bounds every worker's share to
+    // MAX_CHUNKS_PER_WORKER tasks. Auto-mode assertions only hold when CI
+    // is not forcing a chunk size through the environment.
+    let env_forced = std::env::var("GEMM_CHUNK")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .unwrap_or(0);
+    if env_forced != 0 {
+        return;
+    }
+    for (total, bytes, threads) in [(4096usize, 1usize << 20, 8usize), (1 << 16, 1 << 18, 4)] {
+        let chunk = gemm::chunk_units(total, bytes, threads);
+        let per_worker = total.div_ceil(threads);
+        assert!(
+            chunk >= per_worker.div_ceil(gemm::MAX_CHUNKS_PER_WORKER),
+            "chunk {chunk} below the per-worker floor (total={total} threads={threads})"
+        );
+        assert!(
+            total.div_ceil(chunk) <= threads * gemm::MAX_CHUNKS_PER_WORKER,
+            "chunk {chunk} floods the deques (total={total} threads={threads})"
+        );
+    }
+    // Skinny units keep the old behavior: one chunk per worker, no floor
+    // effect (the floor only binds when the L2 target degenerates).
+    assert_eq!(gemm::chunk_units(64, 4 * 8, 4), 16);
 }
 
 #[test]
