@@ -243,6 +243,22 @@ impl Optimizer for Adam {
         }
     }
 
+    fn restore_ranges(&mut self, parts: &[(&OptimizerSnapshot, usize, usize)]) -> bool {
+        self.states.clear();
+        for &(snap, lo, hi) in parts {
+            let mut r = snap.reader();
+            let n = r.int() as usize;
+            assert!(hi <= n, "adam restore_ranges: slot range {lo}..{hi} out of {n}");
+            for i in 0..hi {
+                let st = Moments::unpack(&mut r);
+                if i >= lo {
+                    self.states.push(st);
+                }
+            }
+        }
+        true
+    }
+
     fn name(&self) -> String {
         if self.cfg.weight_decay > 0.0 {
             "AdamW".into()

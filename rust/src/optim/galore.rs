@@ -230,6 +230,37 @@ impl Optimizer for GaLore {
         super::unpack_moment_slots(&mut r, &mut self.vecs);
     }
 
+    fn restore_ranges(&mut self, parts: &[(&OptimizerSnapshot, usize, usize)]) -> bool {
+        self.mats.clear();
+        self.vecs.clear();
+        self.step_no = 0;
+        self.n_subspace_updates = 0;
+        self.n_refresh_rejections = 0;
+        for &(snap, lo, hi) in parts {
+            let mut r = snap.reader();
+            self.step_no = self.step_no.max(r.int() as usize);
+            self.n_subspace_updates = self.n_subspace_updates.max(r.int() as usize);
+            self.n_refresh_rejections = self.n_refresh_rejections.max(r.int() as usize);
+            let n_mats = r.int() as usize;
+            assert!(hi <= n_mats, "galore restore_ranges: slot range {lo}..{hi} out of {n_mats}");
+            for i in 0..n_mats {
+                if r.int() == 1 {
+                    let st = MatState {
+                        proj: Projector::unpack(&mut r),
+                        moments: Moments::unpack(&mut r),
+                    };
+                    if i >= lo && i < hi {
+                        self.mats.push(Some(st));
+                    }
+                } else if i >= lo && i < hi {
+                    self.mats.push(None);
+                }
+            }
+            super::keep_moment_slot_range(&mut r, &mut self.vecs, lo, hi);
+        }
+        true
+    }
+
     fn name(&self) -> String {
         "GaLore".into()
     }

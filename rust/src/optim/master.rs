@@ -145,10 +145,21 @@ impl Optimizer for MixedPrecision {
     }
 
     fn restore(&mut self, snap: &OptimizerSnapshot) {
-        self.inner.restore(snap);
         let k = *snap.ints.last().expect("mixed snapshot: missing master count") as usize;
         assert!(k <= snap.mats.len(), "mixed snapshot: master tail larger than matrix stream");
         let tail = &snap.mats[snap.mats.len() - k..];
+        // Hand the inner optimizer a snapshot holding exactly its own
+        // streams, with the master tail peeled off: the sharded restore
+        // classifies legacy layouts by checking that declared stream
+        // lengths tile the snapshot exactly, so trailing master data must
+        // not be visible to it.
+        let inner_snap = OptimizerSnapshot {
+            mats: snap.mats[..snap.mats.len() - k].to_vec(),
+            ints: snap.ints[..snap.ints.len() - 1].to_vec(),
+            floats: snap.floats.clone(),
+            rngs: snap.rngs.clone(),
+        };
+        self.inner.restore(&inner_snap);
         if self.masters.len() == k {
             for (m, src) in self.masters.iter_mut().zip(tail) {
                 if m.value.shape() == src.shape() {

@@ -668,6 +668,30 @@ pub(crate) fn unpack_moment_slots(
     }
 }
 
+/// Range variant of [`unpack_moment_slots`] for elastic resharding
+/// ([`Optimizer::restore_ranges`]): parse a packed slot table and append
+/// only slots `lo..hi` to `out`. Slots outside the range must still be
+/// decoded — payload lengths are data-dependent — and are dropped.
+pub(crate) fn keep_moment_slot_range(
+    r: &mut SnapshotReader,
+    out: &mut Vec<Option<adam::Moments>>,
+    lo: usize,
+    hi: usize,
+) {
+    let n = r.int() as usize;
+    assert!(hi <= n, "moment slot range {lo}..{hi} out of table of {n}");
+    for i in 0..n {
+        if r.int() == 1 {
+            let m = adam::Moments::unpack(r);
+            if i >= lo && i < hi {
+                out.push(Some(m));
+            }
+        } else if i >= lo && i < hi {
+            out.push(None);
+        }
+    }
+}
+
 /// A full-parameter optimizer over a set of named parameters.
 ///
 /// `lr` is supplied per step so the trainer owns the schedule. `grads` is
@@ -751,6 +775,27 @@ pub trait Optimizer: Send {
     /// [`snapshot`]: Optimizer::snapshot
     fn restore(&mut self, snap: &OptimizerSnapshot);
 
+    /// Elastic-reshard support: rebuild this instance's state from
+    /// contiguous *slot sub-ranges* of same-method snapshots. Each part
+    /// `(snap, lo, hi)` contributes slots `lo..hi` of `snap`'s local slot
+    /// table, and the concatenation of all parts must be exactly this
+    /// instance's parameter list, in order. [`ShardedOptimizer`] uses this
+    /// to resume a checkpoint under a different shard count: every
+    /// per-parameter state (moments, projector, per-slot RNG stream) moves
+    /// wholesale, so the resumed trajectory is bit-identical to the
+    /// uninterrupted one. Instance-wide diagnostic counters
+    /// (`n_subspace_updates`-style tallies) are taken as the max over the
+    /// contributing parts and may over-attribute after a reshard; nothing
+    /// in any update path reads them.
+    ///
+    /// Returns `false` (the default) when the method's state cannot be
+    /// re-split at parameter granularity — the sharded wrapper then refuses
+    /// to resume at a different shard count.
+    fn restore_ranges(&mut self, parts: &[(&OptimizerSnapshot, usize, usize)]) -> bool {
+        let _ = parts;
+        false
+    }
+
     /// Fault injection: make the next subspace refresh produce a
     /// deliberately non-finite basis so the refresh guard's rejection path
     /// can be exercised end to end. No-op for methods without a guarded
@@ -794,12 +839,15 @@ pub fn by_name(name: &str, hp: HyperParams) -> Box<dyn Optimizer> {
 }
 
 /// Construct an optimizer whose state is partitioned across `shards`
-/// ZeRO-1 shards (falls back to the plain optimizer when `shards <= 1` or
-/// the method is not [`partitionable`](Optimizer::partitionable)).
+/// ZeRO-1 shards. Methods that are not
+/// [`partitionable`](Optimizer::partitionable), and `shards <= 1`,
+/// collapse to a single inner instance — the single-shard wrapper
+/// delegates [`step`](Optimizer::step) directly, so trajectories are
+/// bit-identical to the plain optimizer. Always returning the wrapper
+/// (rather than the bare method at `shards <= 1`) keeps every checkpoint's
+/// optimizer blob in the elastic sharded layout, so a run can be resumed
+/// under any `train.workers` regardless of the count that wrote it.
 pub fn sharded_by_name(name: &str, hp: HyperParams, shards: usize) -> Box<dyn Optimizer> {
-    if shards <= 1 {
-        return by_name(name, hp);
-    }
     Box::new(ShardedOptimizer::new(name, hp, shards))
 }
 

@@ -36,6 +36,12 @@ struct ShardTask<'a> {
     grads: &'a [Matrix],
 }
 
+/// First integer of the elastic (reshardable) sharded snapshot layout.
+/// Chosen so it can never collide with a legacy layout, whose first integer
+/// is the shard count, or with any plain method's leading slot count.
+const ELASTIC_MAGIC: u64 = u64::MAX;
+const ELASTIC_VERSION: u64 = 1;
+
 /// An optimizer whose state is partitioned across `k` contiguous
 /// parameter-index ranges (ZeRO-1 semantics, one inner instance per shard).
 pub struct ShardedOptimizer {
@@ -43,6 +49,10 @@ pub struct ShardedOptimizer {
     /// Half-open param-index ranges, parallel to `inner`. Computed (and
     /// frozen) on the first step, when the parameter list is first seen.
     bounds: Vec<(usize, usize)>,
+    /// Element count per parameter, captured alongside `bounds`. Persisted
+    /// in the snapshot so a resume under a *different* shard count can
+    /// recompute both the writing layout and its own from the same data.
+    numels: Vec<u64>,
 }
 
 impl ShardedOptimizer {
@@ -56,7 +66,7 @@ impl ShardedOptimizer {
         while inner.len() < k {
             inner.push(by_name(name, hp));
         }
-        ShardedOptimizer { inner, bounds: Vec::new() }
+        ShardedOptimizer { inner, bounds: Vec::new(), numels: Vec::new() }
     }
 
     /// Number of state shards (1 when the method fell back to replication).
@@ -69,18 +79,26 @@ impl ShardedOptimizer {
     /// `total·(s+1)/k`. Deterministic in the parameter list alone, so every
     /// step (and every resume) recomputes identical bounds.
     fn compute_bounds(params: &[Param], k: usize) -> Vec<(usize, usize)> {
-        let total: u128 = params.iter().map(|p| p.numel() as u128).sum();
+        let numels: Vec<u64> = params.iter().map(|p| p.numel() as u64).collect();
+        Self::bounds_from_numels(&numels, k)
+    }
+
+    /// [`compute_bounds`](Self::compute_bounds) over a bare numel table —
+    /// the form used at restore time, when the snapshot (not the live
+    /// parameter list) supplies the element counts.
+    fn bounds_from_numels(numels: &[u64], k: usize) -> Vec<(usize, usize)> {
+        let total: u128 = numels.iter().map(|&n| n as u128).sum();
         let mut bounds = Vec::with_capacity(k);
         let mut start = 0usize;
         let mut acc: u128 = 0;
         for s in 0..k {
             let mut end = start;
             if s == k - 1 {
-                end = params.len();
+                end = numels.len();
             } else {
                 let target = total * (s as u128 + 1) / k as u128;
-                while end < params.len() && acc < target {
-                    acc += params[end].numel() as u128;
+                while end < numels.len() && acc < target {
+                    acc += numels[end] as u128;
                     end += 1;
                 }
             }
@@ -96,18 +114,73 @@ impl ShardedOptimizer {
             None => true,
         };
         if stale {
-            self.bounds = Self::compute_bounds(params, self.inner.len());
+            self.numels = params.iter().map(|p| p.numel() as u64).collect();
+            self.bounds = Self::bounds_from_numels(&self.numels, self.inner.len());
         }
     }
+
+    /// Splice one shard's sub-snapshot back out of the wrapper's streams
+    /// (the inverse of the per-shard extend in [`snapshot`](Self::snapshot)).
+    fn read_sub(r: &mut super::SnapshotReader) -> OptimizerSnapshot {
+        let n_mats = r.int() as usize;
+        let n_ints = r.int() as usize;
+        let n_floats = r.int() as usize;
+        let n_rngs = r.int() as usize;
+        let mut sub = OptimizerSnapshot::new();
+        for _ in 0..n_mats {
+            sub.mats.push(r.mat());
+        }
+        for _ in 0..n_ints {
+            sub.ints.push(r.int());
+        }
+        for _ in 0..n_floats {
+            sub.floats.push(r.float());
+        }
+        for _ in 0..n_rngs {
+            sub.rngs.push(r.rng());
+        }
+        sub
+    }
+}
+
+/// Whether `snap`'s streams are structurally consistent with the legacy
+/// wrapped layout `[k, (mats, ints, floats, rngs)×k, spliced streams…]`:
+/// the declared per-shard lengths must tile the streams exactly. Used to
+/// tell a legacy wrapped single-shard snapshot apart from a *plain*
+/// (unwrapped) optimizer snapshot from an old `workers = 1` run, which the
+/// single-shard wrapper also accepts.
+fn legacy_wrapped_layout_matches(snap: &OptimizerSnapshot) -> bool {
+    let ints = &snap.ints;
+    let Some(&k) = ints.first() else { return false };
+    if k == 0 || k > 4096 {
+        return false;
+    }
+    let mut off = 1usize;
+    let (mut mats, mut sub_ints, mut floats, mut rngs) = (0u128, 0u128, 0u128, 0u128);
+    for _ in 0..k {
+        let Some(lens) = ints.get(off..off + 4) else { return false };
+        mats += lens[0] as u128;
+        sub_ints += lens[1] as u128;
+        floats += lens[2] as u128;
+        rngs += lens[3] as u128;
+        off += 4;
+    }
+    mats == snap.mats.len() as u128
+        && sub_ints == (ints.len() - off) as u128
+        && floats == snap.floats.len() as u128
+        && rngs == snap.rngs.len() as u128
 }
 
 impl Optimizer for ShardedOptimizer {
     fn step(&mut self, lr: f32, params: &mut [Param], grads: &[Matrix]) {
         assert_eq!(params.len(), grads.len());
+        // Bounds (and the numel table they carry into snapshots) are kept
+        // fresh even on the single-shard path, so every checkpoint blob is
+        // elastic regardless of shard count.
+        self.ensure_bounds(params);
         if self.inner.len() == 1 {
             return self.inner[0].step(lr, params, grads);
         }
-        self.ensure_bounds(params);
         // Carve disjoint &mut sub-slices (params) and shared sub-slices
         // (grads) per shard, pairing each with its inner instance. The
         // Mutex<Option<..>> wrapper is only move-out-of-shared-closure
@@ -173,14 +246,22 @@ impl Optimizer for ShardedOptimizer {
         self.inner.iter().map(|o| o.refresh_rejections()).sum()
     }
 
-    // Pack order: shard count, then per shard its four stream lengths
-    // (mats, ints, floats, rngs) followed by the shard's streams spliced
-    // into this snapshot's streams. Restore slices them back apart, so the
-    // wrapper round-trips through the same flat format (and the same
-    // encode/decode byte layer) as any plain optimizer.
+    // Elastic pack order: magic sentinel, layout version, shard count,
+    // parameter count and per-parameter numels, then per shard its four
+    // stream lengths (mats, ints, floats, rngs) followed by the shard's
+    // streams spliced into this snapshot's streams. The numel table is what
+    // makes the blob *reshardable*: restore recomputes both the writing
+    // layout's bounds and its own from it, then moves per-parameter state
+    // between shard instances via [`Optimizer::restore_ranges`].
     fn snapshot(&self) -> OptimizerSnapshot {
         let mut snap = OptimizerSnapshot::new();
+        snap.push_int(ELASTIC_MAGIC);
+        snap.push_int(ELASTIC_VERSION);
         snap.push_int(self.inner.len() as u64);
+        snap.push_int(self.numels.len() as u64);
+        for &n in &self.numels {
+            snap.push_int(n);
+        }
         for o in &self.inner {
             let sub = o.snapshot();
             snap.push_int(sub.mats.len() as u64);
@@ -197,27 +278,65 @@ impl Optimizer for ShardedOptimizer {
 
     fn restore(&mut self, snap: &OptimizerSnapshot) {
         let mut r = snap.reader();
-        let k = r.int() as usize;
-        assert_eq!(k, self.inner.len(), "sharded snapshot: shard count mismatch");
-        for o in &mut self.inner {
-            let n_mats = r.int() as usize;
-            let n_ints = r.int() as usize;
-            let n_floats = r.int() as usize;
-            let n_rngs = r.int() as usize;
-            let mut sub = OptimizerSnapshot::new();
-            for _ in 0..n_mats {
-                sub.mats.push(r.mat());
+        let first = r.int();
+        if first != ELASTIC_MAGIC {
+            // Legacy layouts, restorable only at the writing shard count:
+            // either the pre-elastic wrapped format (shard count leads), or
+            // a plain unwrapped snapshot from an old `workers = 1` run
+            // handed to a single-shard wrapper.
+            if self.inner.len() == 1 && !legacy_wrapped_layout_matches(snap) {
+                return self.inner[0].restore(snap);
             }
-            for _ in 0..n_ints {
-                sub.ints.push(r.int());
+            let k = first as usize;
+            assert_eq!(k, self.inner.len(), "sharded snapshot: shard count mismatch");
+            for o in &mut self.inner {
+                let sub = Self::read_sub(&mut r);
+                o.restore(&sub);
             }
-            for _ in 0..n_floats {
-                sub.floats.push(r.float());
+            return;
+        }
+        let version = r.int();
+        assert_eq!(version, ELASTIC_VERSION, "sharded snapshot: unknown layout version");
+        let k_old = r.int() as usize;
+        let n_params = r.int() as usize;
+        let mut numels = Vec::with_capacity(n_params);
+        for _ in 0..n_params {
+            numels.push(r.int());
+        }
+        let subs: Vec<OptimizerSnapshot> = (0..k_old).map(|_| Self::read_sub(&mut r)).collect();
+        if k_old == self.inner.len() {
+            // Same layout: hand each shard its own sub-snapshot verbatim —
+            // bit-identical to the pre-elastic restore path.
+            for (o, sub) in self.inner.iter_mut().zip(&subs) {
+                o.restore(sub);
             }
-            for _ in 0..n_rngs {
-                sub.rngs.push(r.rng());
+        } else {
+            assert!(
+                n_params > 0,
+                "sharded snapshot: cannot reshard a pre-step snapshot (no parameter table)"
+            );
+            let old_bounds = Self::bounds_from_numels(&numels, k_old);
+            let new_bounds = Self::bounds_from_numels(&numels, self.inner.len());
+            for (o, &(nlo, nhi)) in self.inner.iter_mut().zip(&new_bounds) {
+                let mut parts: Vec<(&OptimizerSnapshot, usize, usize)> = Vec::new();
+                for (sub, &(olo, ohi)) in subs.iter().zip(&old_bounds) {
+                    let lo = nlo.max(olo);
+                    let hi = nhi.min(ohi);
+                    if lo < hi {
+                        parts.push((sub, lo - olo, hi - olo));
+                    }
+                }
+                assert!(
+                    o.restore_ranges(&parts),
+                    "optimizer '{}' does not support elastic resharding; resume with \
+                     train.workers matching the checkpoint ({k_old} shards)",
+                    o.name()
+                );
             }
-            o.restore(&sub);
+            self.bounds = new_bounds;
+        }
+        if !numels.is_empty() {
+            self.numels = numels;
         }
     }
 
@@ -383,6 +502,93 @@ mod tests {
                 for (p, w) in params.iter().zip(want) {
                     assert_eq!(p.value.data(), w.data(), "{name}: replay diverged at {i}");
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn elastic_reshard_replays_bitexact_for_all_methods() {
+        // Snapshot at 2 shards, resume at 1/3/4 shards: per-parameter
+        // state (moments, projectors, per-slot RNG streams) moves
+        // wholesale across the new layout, so the resumed trajectory must
+        // match the uninterrupted 2-shard run bit for bit.
+        let mut methods: Vec<&str> = PRETRAIN_METHODS.to_vec();
+        methods.extend(["apollo", "golore", "subtrack-pure"]);
+        for name in methods {
+            if name == "badam" {
+                continue; // not partitionable: always one shard, never resharded
+            }
+            let prob = LstsqProblem::new(16, 12, 16, 321);
+            let mut params = make_params("m");
+            let mut opt = ShardedOptimizer::new(name, test_hp(), 2);
+            for s in 0..5 {
+                let grads = grads_for(&prob, &params, s);
+                opt.step(0.05, &mut params, &grads);
+            }
+            let snap = opt.snapshot();
+            let saved: Vec<Matrix> = params.iter().map(|p| p.value.clone()).collect();
+            let mut trace = Vec::new();
+            for s in 5..9 {
+                let grads = grads_for(&prob, &params, s);
+                opt.step(0.05, &mut params, &grads);
+                trace.push(params.iter().map(|p| p.value.clone()).collect::<Vec<_>>());
+            }
+            for k_new in [1usize, 3, 4] {
+                let mut opt2 = ShardedOptimizer::new(name, test_hp(), k_new);
+                opt2.restore(&snap);
+                let mut params2 = make_params("m");
+                for (p, v) in params2.iter_mut().zip(&saved) {
+                    p.value.copy_from(v);
+                    p.mark_dirty();
+                }
+                for (i, want) in trace.iter().enumerate() {
+                    let grads = grads_for(&prob, &params2, 5 + i);
+                    opt2.step(0.05, &mut params2, &grads);
+                    for (p, w) in params2.iter().zip(want) {
+                        assert_eq!(
+                            p.value.data(),
+                            w.data(),
+                            "{name}: reshard 2->{k_new} diverged at replay step {i} ({})",
+                            p.name
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_shard_wrapper_accepts_plain_legacy_snapshot() {
+        // Old workers=1 checkpoints hold the bare method's snapshot (no
+        // sharded header); the always-wrapped optimizer must keep
+        // restoring them and replay identically.
+        let prob = LstsqProblem::new(16, 12, 16, 321);
+        let mut params = make_params("m");
+        let mut plain = by_name("subtrack++", test_hp());
+        for s in 0..5 {
+            let grads = grads_for(&prob, &params, s);
+            plain.step(0.05, &mut params, &grads);
+        }
+        let snap = plain.snapshot();
+        let saved: Vec<Matrix> = params.iter().map(|p| p.value.clone()).collect();
+        let mut trace = Vec::new();
+        for s in 5..8 {
+            let grads = grads_for(&prob, &params, s);
+            plain.step(0.05, &mut params, &grads);
+            trace.push(params.iter().map(|p| p.value.clone()).collect::<Vec<_>>());
+        }
+        let mut wrapped = ShardedOptimizer::new("subtrack++", test_hp(), 1);
+        wrapped.restore(&snap);
+        let mut params2 = make_params("m");
+        for (p, v) in params2.iter_mut().zip(&saved) {
+            p.value.copy_from(v);
+            p.mark_dirty();
+        }
+        for (i, want) in trace.iter().enumerate() {
+            let grads = grads_for(&prob, &params2, 5 + i);
+            wrapped.step(0.05, &mut params2, &grads);
+            for (p, w) in params2.iter().zip(want) {
+                assert_eq!(p.value.data(), w.data(), "legacy plain restore diverged at {i}");
             }
         }
     }

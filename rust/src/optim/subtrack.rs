@@ -609,6 +609,51 @@ impl Optimizer for SubTrack {
         }
     }
 
+    fn restore_ranges(&mut self, parts: &[(&OptimizerSnapshot, usize, usize)]) -> bool {
+        self.mats.clear();
+        self.vecs.clear();
+        self.step_no = 0;
+        self.n_subspace_updates = 0;
+        self.n_refresh_rejections = 0;
+        for &(snap, lo, hi) in parts {
+            let mut r = snap.reader();
+            self.step_no = self.step_no.max(r.int() as usize);
+            self.n_subspace_updates = self.n_subspace_updates.max(r.int() as usize);
+            self.n_refresh_rejections = self.n_refresh_rejections.max(r.int() as usize);
+            let n_mats = r.int() as usize;
+            assert!(hi <= n_mats, "subtrack restore_ranges: slot range {lo}..{hi} out of {n_mats}");
+            for i in 0..n_mats {
+                if r.int() == 1 {
+                    let st = MatState {
+                        proj: Projector::unpack(&mut r),
+                        moments: Moments::unpack(&mut r),
+                        prev_lambda_norm: r.float() as f32,
+                        updates: r.int() as usize,
+                        rng: r.rng(),
+                    };
+                    if i >= lo && i < hi {
+                        self.mats.push(Some(st));
+                    }
+                } else if i >= lo && i < hi {
+                    self.mats.push(None);
+                }
+            }
+            let n_vecs = r.int() as usize;
+            assert!(hi <= n_vecs, "subtrack restore_ranges: vec range {lo}..{hi} out of {n_vecs}");
+            for i in 0..n_vecs {
+                if r.int() == 1 {
+                    let st = VecState { moments: Moments::unpack(&mut r) };
+                    if i >= lo && i < hi {
+                        self.vecs.push(Some(st));
+                    }
+                } else if i >= lo && i < hi {
+                    self.vecs.push(None);
+                }
+            }
+        }
+        true
+    }
+
     fn name(&self) -> String {
         self.comps.label().to_string()
     }

@@ -83,9 +83,42 @@
 //! as the contention baseline for `examples/gemmbench.rs` (`gemm.sched_ms`
 //! counter-vs-deque sweep) and as a cross-check oracle in the stress suite —
 //! both modes execute every task exactly once with identical results.
+//!
+//! # Watchdog (default off)
+//!
+//! A hung or dead participant would otherwise block [`run`] forever: the
+//! caller waits for every seat winner's exit, and a worker stuck inside a
+//! task never exits. With a deadline armed (`GEMM_DEADLINE_MS` env /
+//! [`set_pool_deadline_ms`], same sentinel-re-resolve idiom as the other
+//! `GEMM_*` knobs; `0` = off, the default), the caller's wait turns into a
+//! progress watchdog over the per-job heartbeat (a counter bumped on every
+//! task completion):
+//!
+//! * **Dead worker** ([`PoolError::WorkerLost`]): a worker thread that dies
+//!   holding a seat reports its participant index and in-flight task on the
+//!   way down (a drop guard on the worker's stack). The caller re-runs the
+//!   in-flight task, drains the dead participant's remaining range, credits
+//!   its exit, and spawns a replacement worker — every task still runs, and
+//!   [`try_run`] reports the event. Recovery may re-execute the one task
+//!   the worker died inside, so tasks must be idempotent (every kernel in
+//!   this crate writes a pure function of the task index to a disjoint
+//!   region, so re-execution writes the same bytes). This path also works
+//!   with the watchdog off: the dying thread's notification wakes the
+//!   caller directly.
+//! * **Hung worker** ([`PoolError::Hung`]): when no task completes for a
+//!   full deadline window, the caller sets the job's cancellation flag
+//!   ([`job_cancelled`], which long-running tasks should poll) and waits a
+//!   few grace windows for the stuck task to cooperate. All *other* tasks
+//!   still ran exactly once; only work that observed the flag and returned
+//!   early is suspect, so callers must treat the job's output as invalid.
+//!   A task that ignores the flag past the grace windows leaves the
+//!   borrowed closure pinned forever — the process aborts loudly (the
+//!   documented behavior of watchdogs over non-cooperative code; cf.
+//!   collective-ops watchdogs in distributed trainers).
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Duration;
 
 /// A raw mutable pointer that may be shared across pool tasks.
 ///
@@ -110,6 +143,121 @@ impl<T> SendPtr<T> {
     pub fn get(self) -> *mut T {
         self.0
     }
+}
+
+/// Typed failure from [`try_run`] / [`try_run_mode`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PoolError {
+    /// No task completed for a full watchdog window; the job was
+    /// cooperatively cancelled. Tasks polling [`job_cancelled`] may have
+    /// returned early, so the job's **output must be treated as invalid**
+    /// (recompute, roll back, or abort at the caller's level).
+    Hung,
+    /// A worker thread died holding a seat. The caller re-ran its in-flight
+    /// task and drained its remaining range, so every task still executed
+    /// exactly once — the error is telemetry, the **output is valid**.
+    WorkerLost,
+}
+
+impl std::fmt::Display for PoolError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PoolError::Hung => write!(f, "pool job hung (no task progress within the deadline)"),
+            PoolError::WorkerLost => write!(f, "pool worker died mid-job (tasks recovered)"),
+        }
+    }
+}
+
+impl std::error::Error for PoolError {}
+
+/// Watchdog deadline in ms; `usize::MAX` = unresolved (read the env var on
+/// first use), `0` = watchdog off.
+static DEADLINE_MS: AtomicUsize = AtomicUsize::new(usize::MAX);
+
+/// The armed watchdog deadline in milliseconds: explicit
+/// [`set_pool_deadline_ms`] value, else the `GEMM_DEADLINE_MS` env var
+/// (parsed once), else 0 (off). Resolved once per job at publish time.
+pub fn pool_deadline_ms() -> usize {
+    let n = super::gemm::env_knob(&DEADLINE_MS, "GEMM_DEADLINE_MS");
+    if n == usize::MAX {
+        0
+    } else {
+        n
+    }
+}
+
+/// Arm the pool watchdog: declare a job hung when no task completes for
+/// `ms` milliseconds (0 restores the `GEMM_DEADLINE_MS` env default, or off
+/// when the variable is unset). The deadline bounds *progress*, not total
+/// runtime — a slow job whose tasks keep completing is never killed.
+pub fn set_pool_deadline_ms(ms: usize) {
+    // Storing the sentinel makes the next read re-resolve the env var, so a
+    // caller that restores "off" does not erase a CI-wide setting.
+    DEADLINE_MS.store(if ms == 0 { usize::MAX } else { ms }, Ordering::Relaxed);
+}
+
+thread_local! {
+    /// The currently executing job's cancellation flag (null outside a pool
+    /// task). Installed scoped by [`participate`], so the pointer never
+    /// outlives the job state it points into.
+    static CANCEL: std::cell::Cell<*const AtomicBool> =
+        const { std::cell::Cell::new(std::ptr::null()) };
+}
+
+/// Whether the watchdog cancelled the job the current thread is executing a
+/// task for. Long-running tasks (seconds, not microseconds) should poll
+/// this and return early when set; everything this crate's kernels do per
+/// task is far below any sane deadline, so only deliberately-blocking tasks
+/// (fault injection, external waits) need to. Always false outside a pool
+/// task and in jobs that were never cancelled.
+pub fn job_cancelled() -> bool {
+    CANCEL.with(|c| {
+        let p = c.get();
+        // SAFETY: non-null only while `CancelScope` in `participate` is
+        // live, and the flag it points to is owned by the job state the
+        // participant borrows for at least as long.
+        !p.is_null() && unsafe { (*p).load(Ordering::Acquire) }
+    })
+}
+
+/// Scoped installer for the [`CANCEL`] pointer; restores the previous value
+/// on drop (unwind-safe, and correct under nested inline runs).
+struct CancelScope {
+    prev: *const AtomicBool,
+}
+
+impl CancelScope {
+    fn install(flag: &AtomicBool) -> CancelScope {
+        CancelScope { prev: CANCEL.with(|c| c.replace(flag as *const AtomicBool)) }
+    }
+}
+
+impl Drop for CancelScope {
+    fn drop(&mut self) {
+        CANCEL.with(|c| c.set(self.prev));
+    }
+}
+
+/// Publisher thread armed to lose one worker on its next job (test hook for
+/// the lost-worker recovery path). Keyed on the thread id so concurrently
+/// running tests cannot kill each other's workers.
+static SIM_LOSE: Mutex<Option<std::thread::ThreadId>> = Mutex::new(None);
+
+/// Test hook: the next pool job *published by the calling thread* has one
+/// seat-claiming worker exit its thread without running a task or doing the
+/// exit protocol — exactly what a worker death looks like to the caller.
+/// The caller recovers (see [`PoolError::WorkerLost`]) and a replacement
+/// worker is spawned, so the pool is left at full strength.
+#[doc(hidden)]
+pub fn simulate_worker_loss() {
+    *relock(&SIM_LOSE) = Some(std::thread::current().id());
+}
+
+/// Disarm a pending [`simulate_worker_loss`] (the hook only fires if a
+/// worker claims a seat; tests disarm on paths where none did).
+#[doc(hidden)]
+pub fn cancel_simulated_worker_loss() {
+    *relock(&SIM_LOSE) = None;
 }
 
 /// Task-dispatch strategy for [`run_mode`].
@@ -140,6 +288,9 @@ struct Header {
     mode: Sched,
     n_participants: usize,
     n_tasks: usize,
+    /// Thread that published the job (watchdog telemetry + the simulated
+    /// worker-loss hook, which must only hit the arming thread's own job).
+    publisher: Option<std::thread::ThreadId>,
 }
 
 /// Reusable per-job scheduler state, leased from the pool's free list.
@@ -165,6 +316,20 @@ struct JobState {
     exited: AtomicUsize,
     /// Set when a participant's task panicked; re-raised on the caller.
     panicked: AtomicBool,
+    /// Per-job heartbeat: bumped on every task completion. The watchdog
+    /// only declares a job hung when this stops advancing for a whole
+    /// deadline window, so slow-but-alive jobs are never killed.
+    progress: AtomicUsize,
+    /// Cooperative cancellation flag, set by the watchdog and readable from
+    /// inside tasks via [`job_cancelled`].
+    cancelled: AtomicBool,
+    /// `in_flight[pid]` is 1 + the task index participant `pid` is
+    /// currently executing (0 = none). Read by lost-worker recovery to
+    /// re-run the task a dead worker was inside.
+    in_flight: Vec<AtomicUsize>,
+    /// Participants whose worker thread died mid-job: `(pid, in-flight
+    /// task)` pushed by the worker's drop guard, drained by the caller.
+    lost: Mutex<Vec<(usize, Option<usize>)>>,
     done_lock: Mutex<()>,
     done_cv: Condvar,
 }
@@ -176,12 +341,17 @@ fn new_state(max_p: usize) -> Arc<JobState> {
             mode: Sched::Steal,
             n_participants: 0,
             n_tasks: 0,
+            publisher: None,
         }),
         ranges: (0..max_p).map(|_| Mutex::new((0usize, 0usize))).collect(),
         counter: AtomicUsize::new(0),
         seats: AtomicUsize::new(0),
         exited: AtomicUsize::new(0),
         panicked: AtomicBool::new(false),
+        progress: AtomicUsize::new(0),
+        cancelled: AtomicBool::new(false),
+        in_flight: (0..max_p).map(|_| AtomicUsize::new(0)).collect(),
+        lost: Mutex::new(Vec::new()),
         done_lock: Mutex::new(()),
         done_cv: Condvar::new(),
     })
@@ -288,11 +458,37 @@ impl Pool {
                     continue; // all seats gone; look at other jobs
                 }
                 pool.claimable.fetch_sub(1, Ordering::AcqRel);
-                let (f, mode, p, n_tasks) = {
+                let (f, mode, p, n_tasks, publisher) = {
                     let h = relock(&state.header);
                     let f = h.f.expect("announced job without a task fn");
-                    (f, h.mode, h.n_participants, h.n_tasks)
+                    (f, h.mode, h.n_participants, h.n_tasks, h.publisher)
                 };
+                // From here until the exit protocol this worker holds a
+                // claimed seat the caller waits on; if the thread dies in
+                // between, the guard reports the loss so the caller can
+                // recover instead of waiting forever.
+                let mut watch = DeathWatch { state: Arc::clone(&state), pid, armed: true };
+                let die = {
+                    let mut g = relock(&SIM_LOSE);
+                    if g.is_some() && *g == publisher {
+                        *g = None;
+                        true
+                    } else {
+                        false
+                    }
+                };
+                if die {
+                    // Simulated worker death: claim one task (left
+                    // unfinished, as if the thread died mid-execution) and
+                    // exit the thread without running it or doing the exit
+                    // protocol — the `watch` drop reports the loss.
+                    if mode == Sched::Steal {
+                        if let Some(i) = claim_front(&state.ranges[pid]) {
+                            state.in_flight[pid].store(i + 1, Ordering::Release);
+                        }
+                    }
+                    return;
+                }
                 // A panicking task must not kill the worker or strand the
                 // caller: record it, do the exit protocol, re-raise
                 // caller-side.
@@ -306,6 +502,7 @@ impl Pool {
                 if res.is_err() {
                     state.panicked.store(true, Ordering::Release);
                 }
+                watch.disarm();
                 {
                     let _g = relock(&state.done_lock);
                     state.exited.fetch_add(1, Ordering::AcqRel);
@@ -322,6 +519,37 @@ impl Pool {
                 g = pool.cv.wait(g).unwrap_or_else(|e| e.into_inner());
             }
         }
+    }
+}
+
+/// Records a worker thread's death while it held a claimed seat. Armed
+/// between the seat claim and the exit protocol; if the thread unwinds or
+/// exits in that window without disarming, the drop handler publishes the
+/// loss (participant index + in-flight task) and wakes the caller.
+struct DeathWatch {
+    state: Arc<JobState>,
+    pid: usize,
+    armed: bool,
+}
+
+impl DeathWatch {
+    fn disarm(&mut self) {
+        self.armed = false;
+    }
+}
+
+impl Drop for DeathWatch {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        let task = match self.state.in_flight[self.pid].swap(0, Ordering::AcqRel) {
+            0 => None,
+            v => Some(v - 1),
+        };
+        relock(&self.state.lost).push((self.pid, task));
+        let _g = relock(&self.state.done_lock);
+        self.state.done_cv.notify_all();
     }
 }
 
@@ -356,14 +584,19 @@ fn pool() -> &'static Arc<Pool> {
             n_workers,
         });
         for _ in 0..n_workers {
-            let p = Arc::clone(&pool);
-            std::thread::Builder::new()
-                .name("subtrack-pool".into())
-                .spawn(move || Pool::worker_main(p))
-                .expect("spawn pool worker");
+            spawn_worker(Arc::clone(&pool));
         }
         pool
     })
+}
+
+/// Spawn one pool worker thread (used at init and to replace lost workers,
+/// keeping the pool at `n_workers` strength across recoveries).
+fn spawn_worker(pool: Arc<Pool>) {
+    std::thread::Builder::new()
+        .name("subtrack-pool".into())
+        .spawn(move || Pool::worker_main(pool))
+        .expect("spawn pool worker");
 }
 
 /// Whether the current thread is a pool worker (used by kernels to skip
@@ -412,17 +645,18 @@ fn participate(
     p: usize,
     n_tasks: usize,
 ) {
+    let _cancel = CancelScope::install(&state.cancelled);
     match mode {
         Sched::Counter => loop {
             let i = state.counter.fetch_add(1, Ordering::Relaxed);
             if i >= n_tasks {
                 return;
             }
-            f(i);
+            run_task(state, pid, f, i);
         },
         Sched::Steal => loop {
             while let Some(i) = claim_front(&state.ranges[pid]) {
-                f(i);
+                run_task(state, pid, f, i);
             }
             let mut stolen = None;
             for off in 1..p {
@@ -448,16 +682,33 @@ fn participate(
     }
 }
 
+/// Execute one task with the in-flight marker and the progress heartbeat
+/// around it (both feed the caller's watchdog / lost-worker recovery).
+#[inline]
+fn run_task(state: &JobState, pid: usize, f: &(dyn Fn(usize) + Sync), i: usize) {
+    state.in_flight[pid].store(i + 1, Ordering::Release);
+    f(i);
+    state.in_flight[pid].store(0, Ordering::Release);
+    state.progress.fetch_add(1, Ordering::Relaxed);
+}
+
 /// Close-and-wait guard for the caller: stops new seat claims, retires the
 /// announce slot (O(1) — no queue scan), and blocks until every seat winner
 /// exited. Runs on unwind too, so the lifetime-erased closure borrow can
-/// never dangle even when the caller's own task panics.
+/// never dangle even when the caller's own task panics. The wait doubles as
+/// the watchdog (progress deadline) and the lost-worker recovery site.
 struct Finish<'a> {
     pool: &'a Pool,
     state: &'a JobState,
     slot_idx: usize,
     extra: usize,
     done: bool,
+    /// Copy of the job's task fn, used to re-run a dead worker's tasks.
+    f: TaskFn,
+    mode: Sched,
+    /// Watchdog deadline resolved at publish time (0 = off).
+    deadline_ms: usize,
+    error: Option<PoolError>,
 }
 
 impl Finish<'_> {
@@ -477,11 +728,92 @@ impl Finish<'_> {
         let slot = &self.pool.slots[self.slot_idx];
         *relock(&slot.job) = None;
         slot.occupied.store(false, Ordering::Release);
-        // Wait for every participant that did win a seat.
+        // Wait for every participant that did win a seat. With a deadline
+        // armed the wait watches the progress heartbeat; either way, a
+        // worker-death notification drops us into `recover_lost`.
         let claimed = self.extra - unclaimed;
-        let mut g = relock(&self.state.done_lock);
-        while self.state.exited.load(Ordering::Acquire) < claimed {
-            g = self.state.done_cv.wait(g).unwrap_or_else(|e| e.into_inner());
+        let mut last_progress = self.state.progress.load(Ordering::Relaxed);
+        let mut stalled_windows = 0u32;
+        loop {
+            self.recover_lost();
+            let g = relock(&self.state.done_lock);
+            if self.state.exited.load(Ordering::Acquire) >= claimed {
+                break;
+            }
+            if self.deadline_ms == 0 {
+                let _g = self.state.done_cv.wait(g).unwrap_or_else(|e| e.into_inner());
+                continue;
+            }
+            let (_g, timeout) = self
+                .state
+                .done_cv
+                .wait_timeout(g, Duration::from_millis(self.deadline_ms as u64))
+                .unwrap_or_else(|e| e.into_inner());
+            if !timeout.timed_out() {
+                continue;
+            }
+            let now = self.state.progress.load(Ordering::Relaxed);
+            if now != last_progress {
+                last_progress = now;
+                stalled_windows = 0;
+                continue;
+            }
+            stalled_windows += 1;
+            if stalled_windows == 1 {
+                // First full window without a single task completion:
+                // cancel the job cooperatively and grant grace windows for
+                // the stuck task to observe the flag and return.
+                self.state.cancelled.store(true, Ordering::Release);
+                self.error.get_or_insert(PoolError::Hung);
+            } else if stalled_windows >= 4 {
+                // The stuck task ignored cancellation for a whole further
+                // window. It still borrows the caller's stack-lifetime
+                // closure, so neither unwinding past it nor leaking the
+                // wait is sound — fail loudly instead of hanging forever
+                // (the standard watchdog contract over non-cooperative
+                // code; distributed trainers' collective watchdogs do the
+                // same).
+                eprintln!(
+                    "fatal: pool job made no progress for {} ms after cancellation \
+                     (deadline {} ms); aborting",
+                    self.deadline_ms * 3,
+                    self.deadline_ms
+                );
+                std::process::abort();
+            }
+        }
+    }
+
+    /// Drain worker-death reports: re-run each dead participant's in-flight
+    /// task, drain what is left of its range, credit its exit, and spawn a
+    /// replacement worker. After this, every task has run and the wait
+    /// accounting balances again.
+    fn recover_lost(&mut self) {
+        loop {
+            let entry = relock(&self.state.lost).pop();
+            let Some((pid, task)) = entry else { return };
+            self.error.get_or_insert(PoolError::WorkerLost);
+            // SAFETY: same borrow argument as the worker's call — the
+            // closure outlives the job, and the owning thread is dead so
+            // nothing else touches this participant's slots.
+            let f = unsafe { &*self.f.0 };
+            if let Some(i) = task {
+                f(i);
+                self.state.progress.fetch_add(1, Ordering::Relaxed);
+            }
+            if self.mode == Sched::Steal {
+                // Counter-mode ranges are set-but-unused; draining them
+                // would re-run tasks the shared counter already handed out.
+                while let Some(i) = claim_front(&self.state.ranges[pid]) {
+                    f(i);
+                    self.state.progress.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            {
+                let _g = relock(&self.state.done_lock);
+                self.state.exited.fetch_add(1, Ordering::AcqRel);
+            }
+            spawn_worker(Arc::clone(pool()));
         }
     }
 }
@@ -497,6 +829,11 @@ impl Drop for Finish<'_> {
 /// sequential loop when the fan-out cannot help (one task, one worker,
 /// already on a pool worker, or no pool workers exist). Blocks until every
 /// task completed.
+///
+/// Failure behavior: a recovered worker loss is *transparent* here (every
+/// task still ran — a note goes to stderr); a watchdog cancellation panics,
+/// because the output is invalid and this signature has no error channel.
+/// Callers that want the typed event use [`try_run`].
 pub fn run(workers: usize, n_tasks: usize, f: &(dyn Fn(usize) + Sync)) {
     run_mode(workers, n_tasks, Sched::Steal, f);
 }
@@ -505,15 +842,41 @@ pub fn run(workers: usize, n_tasks: usize, f: &(dyn Fn(usize) + Sync)) {
 /// two modes are behaviorally identical, differing only in claim
 /// contention).
 pub fn run_mode(workers: usize, n_tasks: usize, mode: Sched, f: &(dyn Fn(usize) + Sync)) {
+    match try_run_mode(workers, n_tasks, mode, f) {
+        Ok(()) | Err(PoolError::WorkerLost) => {}
+        Err(e @ PoolError::Hung) => panic!("pool job failed: {e}"),
+    }
+}
+
+/// [`run`] returning the watchdog/recovery outcome instead of panicking:
+/// `Err(Hung)` means the job was cancelled and its output is invalid;
+/// `Err(WorkerLost)` means a worker died but every task was recovered (the
+/// output is valid — the error is telemetry for the caller's fault
+/// accounting). See the module docs' watchdog section.
+pub fn try_run(
+    workers: usize,
+    n_tasks: usize,
+    f: &(dyn Fn(usize) + Sync),
+) -> Result<(), PoolError> {
+    try_run_mode(workers, n_tasks, Sched::Steal, f)
+}
+
+/// [`try_run`] with an explicit [`Sched`] mode.
+pub fn try_run_mode(
+    workers: usize,
+    n_tasks: usize,
+    mode: Sched,
+    f: &(dyn Fn(usize) + Sync),
+) -> Result<(), PoolError> {
     if n_tasks == 0 {
-        return;
+        return Ok(());
     }
     let workers = workers.min(n_tasks);
     if workers <= 1 || on_worker() {
         for i in 0..n_tasks {
             f(i);
         }
-        return;
+        return Ok(());
     }
     let pool = pool();
     let extra = (workers - 1).min(pool.n_workers);
@@ -521,7 +884,7 @@ pub fn run_mode(workers: usize, n_tasks: usize, mode: Sched, f: &(dyn Fn(usize) 
         for i in 0..n_tasks {
             f(i);
         }
-        return;
+        return Ok(());
     }
     let p = extra + 1;
     let state = pool.lease_state();
@@ -531,18 +894,26 @@ pub fn run_mode(workers: usize, n_tasks: usize, mode: Sched, f: &(dyn Fn(usize) 
     state.panicked.store(false, Ordering::Relaxed);
     state.exited.store(0, Ordering::Relaxed);
     state.counter.store(0, Ordering::Relaxed);
+    state.progress.store(0, Ordering::Relaxed);
+    state.cancelled.store(false, Ordering::Relaxed);
+    for slot in state.in_flight.iter().take(p) {
+        slot.store(0, Ordering::Relaxed);
+    }
+    relock(&state.lost).clear();
     let per = n_tasks.div_ceil(p);
     for pid in 0..p {
         let lo = (pid * per).min(n_tasks);
         let hi = (lo + per).min(n_tasks);
         *relock(&state.ranges[pid]) = (lo, hi);
     }
+    let task_fn = TaskFn(f as *const (dyn Fn(usize) + Sync));
     {
         let mut h = relock(&state.header);
-        h.f = Some(TaskFn(f as *const (dyn Fn(usize) + Sync)));
+        h.f = Some(task_fn);
         h.mode = mode;
         h.n_participants = p;
         h.n_tasks = n_tasks;
+        h.publisher = Some(std::thread::current().id());
     }
     let Some(slot_idx) = pool.publish(&state) else {
         // Announce board full (pathological concurrent-caller count):
@@ -552,7 +923,7 @@ pub fn run_mode(workers: usize, n_tasks: usize, mode: Sched, f: &(dyn Fn(usize) 
         for i in 0..n_tasks {
             f(i);
         }
-        return;
+        return Ok(());
     };
     // Open the seats LAST, after the claimable budget is funded: a worker
     // can reach this state through a stale Arc from an earlier run (not
@@ -570,15 +941,33 @@ pub fn run_mode(workers: usize, n_tasks: usize, mode: Sched, f: &(dyn Fn(usize) 
     } else {
         pool.cv.notify_all();
     }
-    let mut fin = Finish { pool: &**pool, state: &*state, slot_idx, extra, done: false };
+    let mut fin = Finish {
+        pool: &**pool,
+        state: &*state,
+        slot_idx,
+        extra,
+        done: false,
+        f: task_fn,
+        mode,
+        deadline_ms: pool_deadline_ms(),
+        error: None,
+    };
     // The caller participates too — it is one of the `workers` budget.
     participate(&state, 0, f, mode, p, n_tasks);
     fin.finish();
+    let error = fin.error;
     let panicked = state.panicked.load(Ordering::Acquire);
     drop(fin);
     pool.release_state(state);
     if panicked {
         panic!("worker-pool task panicked (see stderr for the original panic)");
+    }
+    if error == Some(PoolError::WorkerLost) {
+        eprintln!("warn: pool worker died mid-job; tasks recovered, replacement spawned");
+    }
+    match error {
+        Some(e) => Err(e),
+        None => Ok(()),
     }
 }
 
@@ -702,5 +1091,56 @@ mod tests {
             prev = now;
         }
         assert!(stable, "warm runs kept allocating job state");
+    }
+
+    #[test]
+    fn watchdog_cancels_hung_task() {
+        // One task hangs until cancelled — but only when a pool worker
+        // claimed it. If the caller happens to run it (steal race, or a
+        // 1-core machine with no workers), nothing hangs and the job is
+        // clean; the assertion is conditioned on who ran the task.
+        let _knob = crate::tensor::gemm::TEST_KNOB_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        set_pool_deadline_ms(200);
+        let hung_on_worker = AtomicBool::new(false);
+        let res = try_run(2, 2, &|i| {
+            if i == 1 && on_worker() {
+                hung_on_worker.store(true, Ordering::SeqCst);
+                while !job_cancelled() {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            } else {
+                // Keep the caller busy so the worker usually claims task 1.
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        });
+        set_pool_deadline_ms(0);
+        if hung_on_worker.load(Ordering::SeqCst) {
+            assert_eq!(res, Err(PoolError::Hung));
+        } else {
+            assert_eq!(res, Ok(()));
+        }
+    }
+
+    #[test]
+    fn lost_worker_is_recovered_and_job_completes() {
+        // Arm the simulated death (keyed to this thread's next job), then
+        // verify exactly-once execution survives it: the dead worker's
+        // claimed-but-unrun task and leftover range are re-run by the
+        // caller, and the job reports the loss instead of hanging.
+        let n = 64usize;
+        let counts: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+        simulate_worker_loss();
+        let res = try_run(2, n, &|i| {
+            counts[i].fetch_add(1, Ordering::Relaxed);
+        });
+        cancel_simulated_worker_loss();
+        for (i, c) in counts.iter().enumerate() {
+            assert_eq!(c.load(Ordering::Relaxed), 1, "task {i} ran wrong count");
+        }
+        // The hook only fires if a worker claimed a seat before the job
+        // closed (guaranteed on multi-core, but not on a 1-core runner).
+        assert!(res == Ok(()) || res == Err(PoolError::WorkerLost), "unexpected: {res:?}");
     }
 }

@@ -2,10 +2,12 @@
 //!
 //! A fault is a `(kind, step)` pair parsed from the `PALLAS_FAULT` environment
 //! variable (or the `train.fault.inject` config key) as `kind@step`, e.g.
-//! `nan_grad@7`. Injection keys on the trainer's step counter *after* gradient
-//! reduction, so a fault fires identically for any worker count or DP shard
-//! layout. When no fault is configured the trainer carries a `None` and pays a
-//! single branch per step.
+//! `nan_grad@7`. A **schedule** is a comma-separated list of such pairs
+//! (`nan_grad@3,worker_hang@5,ckpt_bitflip@8`), so one run can compound
+//! faults across layers. Injection keys on the trainer's step counter *after*
+//! gradient reduction, so a fault fires identically for any worker count or
+//! DP shard layout. When no fault is configured the trainer carries a `None`
+//! and pays a single branch per step.
 
 use std::fs::OpenOptions;
 use std::io::{Read, Seek, SeekFrom, Write};
@@ -25,6 +27,14 @@ pub enum FaultKind {
     CkptBitflip,
     /// Panic one pool worker mid-job at the given step.
     WorkerPanic,
+    /// Hang one pool task at the given step until the pool watchdog
+    /// (`GEMM_DEADLINE_MS` / `[train.watchdog]`) cancels the job; the hang
+    /// is bounded so a run without the watchdog armed still terminates.
+    WorkerHang,
+    /// Make one pool task slow-but-alive at the given step — the progress-
+    /// based watchdog must let it finish (regression guard against a
+    /// total-runtime watchdog killing healthy slow jobs).
+    SlowWorker,
 }
 
 impl FaultKind {
@@ -35,6 +45,8 @@ impl FaultKind {
             FaultKind::CkptTruncate => "ckpt_truncate",
             FaultKind::CkptBitflip => "ckpt_bitflip",
             FaultKind::WorkerPanic => "worker_panic",
+            FaultKind::WorkerHang => "worker_hang",
+            FaultKind::SlowWorker => "slow_worker",
         }
     }
 }
@@ -58,26 +70,72 @@ impl FaultInjection {
             "ckpt_truncate" => FaultKind::CkptTruncate,
             "ckpt_bitflip" => FaultKind::CkptBitflip,
             "worker_panic" => FaultKind::WorkerPanic,
+            "worker_hang" => FaultKind::WorkerHang,
+            "slow_worker" => FaultKind::SlowWorker,
             _ => return None,
         };
         Some(FaultInjection { kind, step: step.parse().ok()? })
     }
 
+    pub fn fires_at(&self, step: usize) -> bool {
+        self.step == step
+    }
+}
+
+/// A comma-separated list of scheduled faults (`nan_grad@3,worker_hang@5`).
+/// The single-fault spec is the one-element schedule, so every existing
+/// `PALLAS_FAULT` / `train.fault.inject` value parses unchanged.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultSchedule {
+    pub faults: Vec<FaultInjection>,
+}
+
+impl FaultSchedule {
+    /// Parse a schedule, reporting *which* element is malformed. The typed
+    /// error lets config loading fail with a real message instead of a
+    /// pattern-match panic deep in the trainer.
+    pub fn parse(spec: &str) -> Result<FaultSchedule, String> {
+        let mut faults = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            match FaultInjection::parse(part) {
+                Some(f) => faults.push(f),
+                None => {
+                    return Err(format!(
+                        "bad fault spec {part:?} in {spec:?} \
+                         (want kind@step[,kind@step...], e.g. nan_grad@7)"
+                    ))
+                }
+            }
+        }
+        if faults.is_empty() {
+            return Err(format!("empty fault schedule {spec:?}"));
+        }
+        Ok(FaultSchedule { faults })
+    }
+
     /// Read the `PALLAS_FAULT` env knob. Panics on a malformed spec —
-    /// misconfigured CI legs should fail, not pass vacuously.
-    pub fn from_env() -> Option<FaultInjection> {
+    /// misconfigured CI legs should fail, not pass vacuously. (The config
+    /// path goes through [`FaultSchedule::parse`] and a typed error.)
+    pub fn from_env() -> Option<FaultSchedule> {
         let spec = std::env::var("PALLAS_FAULT").ok()?;
         if spec.is_empty() {
             return None;
         }
         match Self::parse(&spec) {
-            Some(f) => Some(f),
-            None => panic!("PALLAS_FAULT: bad spec {spec:?} (want kind@step, e.g. nan_grad@7)"),
+            Ok(s) => Some(s),
+            Err(e) => panic!("PALLAS_FAULT: {e}"),
         }
     }
 
-    pub fn fires_at(&self, step: usize) -> bool {
-        self.step == step
+    /// Kinds scheduled to fire at `step`, in spec order.
+    pub fn at(&self, step: usize) -> impl Iterator<Item = FaultKind> + '_ {
+        self.faults.iter().filter(move |f| f.fires_at(step)).map(|f| f.kind)
+    }
+
+    /// All scheduled `(kind, step)` pairs of the given kinds, in spec order.
+    pub fn of_kinds(&self, kinds: &[FaultKind]) -> Vec<FaultInjection> {
+        self.faults.iter().filter(|f| kinds.contains(&f.kind)).copied().collect()
     }
 }
 
@@ -116,6 +174,8 @@ mod tests {
             ("ckpt_truncate@3", FaultKind::CkptTruncate, 3),
             ("ckpt_bitflip@0", FaultKind::CkptBitflip, 0),
             ("worker_panic@12", FaultKind::WorkerPanic, 12),
+            ("worker_hang@5", FaultKind::WorkerHang, 5),
+            ("slow_worker@4", FaultKind::SlowWorker, 4),
         ] {
             let f = FaultInjection::parse(spec).expect(spec);
             assert_eq!(f, FaultInjection { kind, step });
@@ -130,6 +190,28 @@ mod tests {
         for spec in ["", "nan_grad", "nan_grad@", "nan_grad@x", "@7", "frobnicate@7"] {
             assert!(FaultInjection::parse(spec).is_none(), "{spec:?} should not parse");
         }
+    }
+
+    #[test]
+    fn schedule_parses_multiple_faults_in_order() {
+        let s = FaultSchedule::parse("nan_grad@3, worker_hang@5 ,ckpt_bitflip@3").unwrap();
+        assert_eq!(s.faults.len(), 3);
+        assert_eq!(
+            s.at(3).collect::<Vec<_>>(),
+            vec![FaultKind::NanGrad, FaultKind::CkptBitflip]
+        );
+        assert_eq!(s.at(5).collect::<Vec<_>>(), vec![FaultKind::WorkerHang]);
+        assert_eq!(s.at(4).count(), 0);
+        let ckpt = s.of_kinds(&[FaultKind::CkptTruncate, FaultKind::CkptBitflip]);
+        assert_eq!(ckpt, vec![FaultInjection { kind: FaultKind::CkptBitflip, step: 3 }]);
+    }
+
+    #[test]
+    fn schedule_errors_name_the_bad_element() {
+        let e = FaultSchedule::parse("nan_grad@3,frobnicate@7").unwrap_err();
+        assert!(e.contains("frobnicate@7"), "{e}");
+        assert!(FaultSchedule::parse("").is_err());
+        assert!(FaultSchedule::parse("nan_grad@3,").is_err());
     }
 
     #[test]

@@ -113,6 +113,9 @@ pub struct TrainReport {
     /// Optimizer steps dropped by the f16 dynamic loss scaler (gradient
     /// overflow at the current scale); always 0 for f32/bf16 runs.
     pub scaler_skips: usize,
+    /// Steps on which a DP shard failed mid-step and the survivors absorbed
+    /// its micro-batch (degraded mode); 0 for clean or single-worker runs.
+    pub degraded_steps: usize,
 }
 
 impl TrainReport {
@@ -158,6 +161,8 @@ impl TrainReport {
     /// - `storage_dtype` / `scaler_skips`: present only for 16-bit runs
     ///   (f32 summaries stay byte-identical to earlier revisions): the
     ///   storage dtype and the steps the f16 loss scaler dropped.
+    /// - `degraded_steps`: present only when > 0 (same byte-identity rule):
+    ///   steps where a DP shard failure was absorbed by the survivors.
     pub fn summary_json(&self) -> Json {
         let mut fields = vec![
             ("method", Json::Str(self.method.clone())),
@@ -178,6 +183,9 @@ impl TrainReport {
         if self.storage_dtype != "f32" {
             fields.push(("storage_dtype", Json::Str(self.storage_dtype.clone())));
             fields.push(("scaler_skips", Json::Num(self.scaler_skips as f64)));
+        }
+        if self.degraded_steps > 0 {
+            fields.push(("degraded_steps", Json::Num(self.degraded_steps as f64)));
         }
         Json::obj(fields)
     }
@@ -269,6 +277,7 @@ mod tests {
             refresh_rejections: 0,
             storage_dtype: "f32".into(),
             scaler_skips: 0,
+            degraded_steps: 0,
         };
         let csv = report.curve_csv().to_string();
         assert_eq!(csv.lines().count(), 3);
@@ -277,10 +286,14 @@ mod tests {
         // f32 summaries carry no dtype keys (byte-identity with earlier
         // revisions); 16-bit summaries do.
         assert!(j.get("storage_dtype").is_none());
+        // Same rule for degraded mode: clean runs emit no key at all.
+        assert!(j.get("degraded_steps").is_none());
         let mut bf = report.clone();
         bf.storage_dtype = "bf16".into();
+        bf.degraded_steps = 2;
         let jb = bf.summary_json();
         assert_eq!(jb.get("storage_dtype").and_then(|v| v.as_str()), Some("bf16"));
         assert_eq!(jb.get("scaler_skips").and_then(|v| v.as_f64()), Some(0.0));
+        assert_eq!(jb.get("degraded_steps").and_then(|v| v.as_f64()), Some(2.0));
     }
 }

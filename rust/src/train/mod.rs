@@ -11,7 +11,7 @@ pub mod schedule;
 pub mod sentinel;
 pub mod trainer;
 
-pub use faults::{FaultInjection, FaultKind};
+pub use faults::{FaultInjection, FaultKind, FaultSchedule};
 pub use metrics::{MetricsLog, TrainReport};
 pub use scaler::DynamicLossScaler;
 pub use schedule::LrSchedule;

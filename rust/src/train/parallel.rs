@@ -23,6 +23,8 @@
 
 use crate::model::{Batch, Llama, StepState};
 use crate::tensor::{gemm, pool, Matrix};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 /// Default data-parallel worker count: the same plumbing the GEMM row-block
@@ -63,6 +65,9 @@ struct ShardSlot {
     state: StepState,
     loss: f32,
     tokens: usize,
+    /// False while this shard's result is missing (its task panicked this
+    /// step); a degraded-mode recompute or the next step's refill heals it.
+    ok: bool,
 }
 
 /// Persistent state for the data-parallel gradient step, owned by whoever
@@ -79,6 +84,11 @@ struct ShardSlot {
 pub struct DpContext {
     workers: usize,
     shards: Vec<Mutex<ShardSlot>>,
+    /// Steps on which at least one shard failed and the survivors picked up
+    /// its micro-batch (see [`DpContext::loss_grad_into`] degraded mode).
+    degraded: usize,
+    /// Test hook: shard index whose next task panics (`usize::MAX` = none).
+    sabotage: AtomicUsize,
 }
 
 impl DpContext {
@@ -92,14 +102,28 @@ impl DpContext {
                     state: StepState::new(),
                     loss: 0.0,
                     tokens: 0,
+                    ok: true,
                 })
             })
             .collect();
-        DpContext { workers, shards }
+        DpContext { workers, shards, degraded: 0, sabotage: AtomicUsize::new(usize::MAX) }
     }
 
     pub fn workers(&self) -> usize {
         self.workers
+    }
+
+    /// Steps on which degraded mode fired (a shard failure was absorbed).
+    pub fn degraded_steps(&self) -> usize {
+        self.degraded
+    }
+
+    /// Make shard `i`'s next task panic once — deterministic stand-in for a
+    /// shard dying mid-step, used by the degraded-mode tests and the
+    /// trainer's fault injector.
+    #[doc(hidden)]
+    pub fn fail_next_shard(&self, i: usize) {
+        self.sabotage.store(i, Ordering::Release);
     }
 
     /// Refill the persistent shard batches in place (same contiguous split
@@ -118,6 +142,7 @@ impl DpContext {
             slot.batch.targets.extend_from_slice(&batch.targets[start * t..end * t]);
             slot.batch.b = end - start;
             slot.batch.t = t;
+            slot.ok = true;
             start = end;
             n += 1;
         }
@@ -128,6 +153,16 @@ impl DpContext {
     /// shard gradients into `out` (weighted by shard token counts, in fixed
     /// shard order, so the result equals the full-batch gradient exactly
     /// and is scheduling-independent).
+    ///
+    /// **Degraded mode**: a shard whose task panics mid-step does not sink
+    /// the step — its slot is marked failed, and after the main fan-out the
+    /// surviving workers recompute the failed micro-batches in a second pool
+    /// job. Shard results are thread-independent, so the recomputed slots are
+    /// bit-identical to what the dead shard would have produced and the
+    /// fixed-order reduction below is unchanged — a degraded step reduces to
+    /// exactly the clean step's gradient. The shard is healed (fresh `ok`)
+    /// on the next refill; a shard that fails its recompute too is a
+    /// deterministic compute failure and propagates as a panic.
     pub fn loss_grad_into(&mut self, model: &Llama, batch: &Batch, out: &mut [Matrix]) -> f32 {
         let n = self.fill_shards(batch);
         for i in 0..n {
@@ -137,17 +172,50 @@ impl DpContext {
             }
         }
         let shards = &self.shards;
+        let sabotage = &self.sabotage;
         pool::run(self.workers, n, &|i| {
             let mut guard = shards[i].lock().unwrap_or_else(|e| e.into_inner());
             let slot = &mut *guard;
             // Each shard owns one pool slot; nested GEMM fan-out inside a
             // shard would only oversubscribe (results are identical either
             // way).
-            slot.loss = gemm::run_single_threaded(|| {
-                model.loss_and_grad_into(&slot.batch, &mut slot.grads, &mut slot.state)
-            });
-            slot.tokens = slot.batch.tokens();
+            let res = catch_unwind(AssertUnwindSafe(|| {
+                if sabotage
+                    .compare_exchange(i, usize::MAX, Ordering::AcqRel, Ordering::Relaxed)
+                    .is_ok()
+                {
+                    panic!("injected DP shard {i} failure");
+                }
+                slot.loss = gemm::run_single_threaded(|| {
+                    model.loss_and_grad_into(&slot.batch, &mut slot.grads, &mut slot.state)
+                });
+                slot.tokens = slot.batch.tokens();
+            }));
+            slot.ok = res.is_ok();
         });
+        self.sabotage.store(usize::MAX, Ordering::Relaxed);
+
+        let failed: Vec<usize> = (0..n)
+            .filter(|&i| !self.shards[i].get_mut().unwrap_or_else(|e| e.into_inner()).ok)
+            .collect();
+        if !failed.is_empty() {
+            self.degraded += 1;
+            eprintln!(
+                "warn: {} DP shard(s) failed mid-step; survivors recomputing their micro-batches",
+                failed.len()
+            );
+            let shards = &self.shards;
+            pool::run(self.workers, failed.len(), &|j| {
+                let i = failed[j];
+                let mut guard = shards[i].lock().unwrap_or_else(|e| e.into_inner());
+                let slot = &mut *guard;
+                slot.loss = gemm::run_single_threaded(|| {
+                    model.loss_and_grad_into(&slot.batch, &mut slot.grads, &mut slot.state)
+                });
+                slot.tokens = slot.batch.tokens();
+                slot.ok = true;
+            });
+        }
 
         // Reduce in fixed shard order so the average is scheduling-independent.
         let mut total_tokens = 0usize;
@@ -255,6 +323,32 @@ mod tests {
         let (loss, grads) = data_parallel_loss_grad(&model, &batch, 16);
         assert!(loss.is_finite());
         assert_eq!(grads.len(), model.params.len());
+    }
+
+    #[test]
+    fn degraded_step_matches_clean_run_bit_for_bit() {
+        let (model, batch) = setup();
+        let mut clean = DpContext::new(2);
+        let mut faulty = DpContext::new(2);
+        let mut g_clean = model.zero_grads();
+        let mut g_faulty = model.zero_grads();
+        let loss_clean = clean.loss_grad_into(&model, &batch, &mut g_clean);
+
+        faulty.fail_next_shard(1);
+        let loss_faulty = faulty.loss_grad_into(&model, &batch, &mut g_faulty);
+        assert_eq!(faulty.degraded_steps(), 1);
+        assert_eq!(clean.degraded_steps(), 0);
+        // Survivors recomputed shard 1's micro-batch: the degraded step's
+        // reduction is bit-identical to the clean one.
+        assert_eq!(loss_clean, loss_faulty);
+        for (a, b) in g_clean.iter().zip(&g_faulty) {
+            assert_eq!(a.data(), b.data(), "degraded gradient diverged");
+        }
+
+        // The shard heals on the next step: no new degraded count.
+        let loss_next = faulty.loss_grad_into(&model, &batch, &mut g_faulty);
+        assert_eq!(faulty.degraded_steps(), 1);
+        assert_eq!(loss_next, loss_clean);
     }
 
     #[test]

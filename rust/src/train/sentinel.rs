@@ -11,6 +11,17 @@
 //! - `rollback`: restore parameters + full optimizer state from the last
 //!   in-memory snapshot (taken every `snapshot_every` steps).
 //! - `abort`: stop training with a diagnostic dump.
+//! - `escalate`: climb a ladder instead of repeating one response — the
+//!   first `escalate_after` consecutive anomalies are skipped; further
+//!   anomalies roll back; once the *same* snapshot has been restored
+//!   `loop_restores` times without a new last-good landing in between (a
+//!   rollback loop), the next rollback also re-warms the learning rate from
+//!   near zero over `rewarm_steps` steps; another `loop_restores` restores
+//!   with still no progress aborts.
+//!
+//! Every input to the ladder (loss, grad norm, consecutive-anomaly count,
+//! restores-since-last-good) is bit-identical across worker counts and DP
+//! shard layouts, so the event log is too.
 //!
 //! With `policy = "off"` (the default) `check` is a single branch — no window
 //! bookkeeping, no event log.
@@ -24,6 +35,8 @@ pub enum FaultPolicy {
     Skip,
     Rollback,
     Abort,
+    /// Skip → rollback → rollback-with-LR-rewarm → abort ladder.
+    Escalate,
 }
 
 impl FaultPolicy {
@@ -33,6 +46,7 @@ impl FaultPolicy {
             "skip" => Some(FaultPolicy::Skip),
             "rollback" => Some(FaultPolicy::Rollback),
             "abort" => Some(FaultPolicy::Abort),
+            "escalate" => Some(FaultPolicy::Escalate),
             _ => None,
         }
     }
@@ -43,7 +57,13 @@ impl FaultPolicy {
             FaultPolicy::Skip => "skip",
             FaultPolicy::Rollback => "rollback",
             FaultPolicy::Abort => "abort",
+            FaultPolicy::Escalate => "escalate",
         }
+    }
+
+    /// Policies whose responses need in-memory last-good snapshots.
+    pub fn needs_snapshots(self) -> bool {
+        matches!(self, FaultPolicy::Rollback | FaultPolicy::Escalate)
     }
 }
 
@@ -58,6 +78,16 @@ pub struct SentinelConfig {
     /// Loss > factor × rolling mean ⇒ spike. Non-positive disables the
     /// spike detector (finiteness checks still apply).
     pub spike_factor: f32,
+    /// `escalate` only: consecutive anomalies tolerated as skips before the
+    /// ladder climbs to rollback.
+    pub escalate_after: usize,
+    /// `escalate` only: restores of the same snapshot (no new last-good in
+    /// between) before the ladder climbs a rung — rollback → rewarm, and
+    /// rewarm → abort.
+    pub loop_restores: usize,
+    /// `escalate` only: steps over which the LR ramps back to full after a
+    /// rollback-with-rewarm.
+    pub rewarm_steps: usize,
 }
 
 impl Default for SentinelConfig {
@@ -67,6 +97,9 @@ impl Default for SentinelConfig {
             snapshot_every: 25,
             spike_window: 16,
             spike_factor: 10.0,
+            escalate_after: 2,
+            loop_restores: 3,
+            rewarm_steps: 10,
         }
     }
 }
@@ -77,6 +110,9 @@ pub enum Verdict {
     Healthy,
     Skip,
     Rollback,
+    /// Rollback, then ramp the learning rate back up over
+    /// [`SentinelConfig::rewarm_steps`] steps (escalate ladder rung 3).
+    RollbackRewarm,
     Abort,
 }
 
@@ -96,11 +132,33 @@ pub struct Sentinel {
     events: Vec<SentinelEvent>,
     n_skips: usize,
     n_rollbacks: usize,
+    n_rewarms: usize,
+    /// Consecutive anomalous steps (escalate ladder rung selector).
+    consec: usize,
+    /// Restores issued since the last *new* snapshot landed. A fresh
+    /// snapshot means the run made real progress past the previous restore
+    /// point, so the ladder resets; restores without one are a loop.
+    restores_since_good: usize,
 }
 
 impl Sentinel {
     pub fn new(cfg: SentinelConfig) -> Sentinel {
-        Sentinel { cfg, window: VecDeque::new(), events: Vec::new(), n_skips: 0, n_rollbacks: 0 }
+        Sentinel {
+            cfg,
+            window: VecDeque::new(),
+            events: Vec::new(),
+            n_skips: 0,
+            n_rollbacks: 0,
+            n_rewarms: 0,
+            consec: 0,
+            restores_since_good: 0,
+        }
+    }
+
+    /// Tell the sentinel a new last-good snapshot was taken. Progress past
+    /// the previous restore point resets the rollback-loop detector.
+    pub fn note_snapshot(&mut self) {
+        self.restores_since_good = 0;
     }
 
     fn anomalous(&self, loss: f32, grad_norm: f32) -> bool {
@@ -131,18 +189,35 @@ impl Sentinel {
                 self.window.pop_front();
             }
             self.window.push_back(loss);
+            self.consec = 0;
             return Verdict::Healthy;
         }
+        self.consec += 1;
         let verdict = match self.cfg.policy {
             FaultPolicy::Off => unreachable!("handled above"),
             FaultPolicy::Skip => Verdict::Skip,
             FaultPolicy::Rollback => Verdict::Rollback,
             FaultPolicy::Abort => Verdict::Abort,
+            FaultPolicy::Escalate => {
+                if self.consec <= self.cfg.escalate_after {
+                    Verdict::Skip
+                } else if self.restores_since_good < self.cfg.loop_restores {
+                    Verdict::Rollback
+                } else if self.restores_since_good < 2 * self.cfg.loop_restores {
+                    Verdict::RollbackRewarm
+                } else {
+                    Verdict::Abort
+                }
+            }
         };
         match verdict {
             Verdict::Skip => self.n_skips += 1,
-            Verdict::Rollback => {
+            Verdict::Rollback | Verdict::RollbackRewarm => {
                 self.n_rollbacks += 1;
+                if verdict == Verdict::RollbackRewarm {
+                    self.n_rewarms += 1;
+                }
+                self.restores_since_good += 1;
                 self.window.clear();
             }
             _ => {}
@@ -163,6 +238,10 @@ impl Sentinel {
         self.n_rollbacks
     }
 
+    pub fn rewarms(&self) -> usize {
+        self.n_rewarms
+    }
+
     pub fn events(&self) -> &[SentinelEvent] {
         &self.events
     }
@@ -171,10 +250,13 @@ impl Sentinel {
     pub fn dump(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "sentinel: policy={} skips={} rollbacks={} events={}\n",
+            "sentinel: policy={} skips={} rollbacks={} rewarms={} \
+             restores_since_good={} events={}\n",
             self.cfg.policy.as_str(),
             self.n_skips,
             self.n_rollbacks,
+            self.n_rewarms,
+            self.restores_since_good,
             self.events.len()
         ));
         for e in &self.events {
@@ -192,7 +274,15 @@ mod tests {
     use super::*;
 
     fn cfg(policy: FaultPolicy) -> SentinelConfig {
-        SentinelConfig { policy, snapshot_every: 5, spike_window: 4, spike_factor: 10.0 }
+        SentinelConfig {
+            policy,
+            snapshot_every: 5,
+            spike_window: 4,
+            spike_factor: 10.0,
+            escalate_after: 2,
+            loop_restores: 2,
+            rewarm_steps: 4,
+        }
     }
 
     #[test]
@@ -250,11 +340,63 @@ mod tests {
 
     #[test]
     fn policy_parse_roundtrip() {
-        for p in
-            [FaultPolicy::Off, FaultPolicy::Skip, FaultPolicy::Rollback, FaultPolicy::Abort]
-        {
+        for p in [
+            FaultPolicy::Off,
+            FaultPolicy::Skip,
+            FaultPolicy::Rollback,
+            FaultPolicy::Abort,
+            FaultPolicy::Escalate,
+        ] {
             assert_eq!(FaultPolicy::parse(p.as_str()), Some(p));
         }
         assert_eq!(FaultPolicy::parse("retry"), None);
+    }
+
+    #[test]
+    fn escalate_ladder_skips_then_rolls_back() {
+        let mut s = Sentinel::new(cfg(FaultPolicy::Escalate));
+        // First `escalate_after` consecutive anomalies are tolerated as skips.
+        assert_eq!(s.check(0, f32::NAN, 1.0), Verdict::Skip);
+        assert_eq!(s.check(1, f32::NAN, 1.0), Verdict::Skip);
+        // The third climbs to rollback.
+        assert_eq!(s.check(2, f32::NAN, 1.0), Verdict::Rollback);
+        assert_eq!(s.skips(), 2);
+        assert_eq!(s.rollbacks(), 1);
+        // A healthy step resets the consecutive counter...
+        assert_eq!(s.check(3, 1.0, 1.0), Verdict::Healthy);
+        // ...so the ladder restarts at skip.
+        assert_eq!(s.check(4, f32::NAN, 1.0), Verdict::Skip);
+    }
+
+    #[test]
+    fn rollback_loop_escalates_to_rewarm_then_abort() {
+        let mut s = Sentinel::new(cfg(FaultPolicy::Escalate));
+        // Burn through the skip budget.
+        assert_eq!(s.check(0, f32::NAN, 1.0), Verdict::Skip);
+        assert_eq!(s.check(1, f32::NAN, 1.0), Verdict::Skip);
+        // loop_restores = 2 plain rollbacks of the same snapshot...
+        assert_eq!(s.check(2, f32::NAN, 1.0), Verdict::Rollback);
+        assert_eq!(s.check(3, f32::NAN, 1.0), Verdict::Rollback);
+        // ...then the ladder climbs to rollback-with-rewarm...
+        assert_eq!(s.check(4, f32::NAN, 1.0), Verdict::RollbackRewarm);
+        assert_eq!(s.check(5, f32::NAN, 1.0), Verdict::RollbackRewarm);
+        assert_eq!(s.rewarms(), 2);
+        // ...and with still no progress, aborts.
+        assert_eq!(s.check(6, f32::NAN, 1.0), Verdict::Abort);
+        assert_eq!(s.rollbacks(), 4);
+    }
+
+    #[test]
+    fn new_snapshot_resets_the_rollback_loop_detector() {
+        let mut s = Sentinel::new(cfg(FaultPolicy::Escalate));
+        for step in 0..2 {
+            assert_eq!(s.check(step, f32::NAN, 1.0), Verdict::Skip);
+        }
+        assert_eq!(s.check(2, f32::NAN, 1.0), Verdict::Rollback);
+        assert_eq!(s.check(3, f32::NAN, 1.0), Verdict::Rollback);
+        // Run made it to a fresh snapshot: the loop detector resets and the
+        // next escalation starts back at plain rollback, not rewarm.
+        s.note_snapshot();
+        assert_eq!(s.check(4, f32::NAN, 1.0), Verdict::Rollback);
     }
 }

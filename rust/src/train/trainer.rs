@@ -14,7 +14,7 @@ use crate::model::{Batch, Llama, ModelConfig, StepState};
 use crate::optim::{self, HyperParams, Optimizer, OptimizerSnapshot};
 use crate::tensor::{dtype, ops, pool, Dtype, Matrix};
 use crate::train::checkpoint;
-use crate::train::faults::{FaultInjection, FaultKind};
+use crate::train::faults::{FaultInjection, FaultKind, FaultSchedule};
 use crate::train::metrics::{MetricsLog, TrainReport};
 use crate::train::parallel;
 use crate::train::scaler::DynamicLossScaler;
@@ -57,8 +57,13 @@ pub struct TrainConfig {
     pub log_every: usize,
     /// Numerical-health sentinel policy + knobs (`[train.fault]`).
     pub sentinel: SentinelConfig,
-    /// Scheduled fault injection (`PALLAS_FAULT` env / `train.fault.inject`).
-    pub fault: Option<FaultInjection>,
+    /// Scheduled fault injection (`PALLAS_FAULT` env / `train.fault.inject`);
+    /// comma-separated `kind@step` specs compound faults in one run.
+    pub fault: Option<FaultSchedule>,
+    /// Pool-watchdog deadline in ms (`[train.watchdog] deadline_ms`): armed
+    /// for the duration of `run` when > 0 and `GEMM_DEADLINE_MS` is unset
+    /// (the env knob wins). 0 = watchdog off (the preset default).
+    pub watchdog_deadline_ms: usize,
     /// Crash-safe checkpoint directory ("" = checkpointing disabled).
     pub checkpoint_dir: String,
     /// Save a rotating checkpoint every N steps (0 = disabled).
@@ -105,6 +110,7 @@ impl TrainConfig {
             log_every: 1,
             sentinel: SentinelConfig::default(),
             fault: None,
+            watchdog_deadline_ms: 0,
             checkpoint_dir: String::new(),
             checkpoint_every: 0,
             checkpoint_keep: 3,
@@ -165,16 +171,29 @@ impl TrainConfig {
             cfg.int("train.fault.spike_window", tc.sentinel.spike_window as i64) as usize;
         tc.sentinel.spike_factor =
             cfg.float("train.fault.spike_factor", tc.sentinel.spike_factor as f64) as f32;
+        tc.sentinel.escalate_after =
+            cfg.int("train.fault.escalate_after", tc.sentinel.escalate_after as i64) as usize;
+        tc.sentinel.loop_restores =
+            (cfg.int("train.fault.loop_restores", tc.sentinel.loop_restores as i64) as usize)
+                .max(1);
+        tc.sentinel.rewarm_steps =
+            (cfg.int("train.fault.rewarm_steps", tc.sentinel.rewarm_steps as i64) as usize)
+                .max(1);
         let inject = cfg.str("train.fault.inject", "");
         if !inject.is_empty() {
-            tc.fault = Some(FaultInjection::parse(&inject).unwrap_or_else(|| {
-                panic!("train.fault.inject: bad spec {inject:?} (want kind@step)")
+            // Validated at config-load time: the typed parse error names the
+            // offending element instead of a pattern-match panic mid-run.
+            tc.fault = Some(FaultSchedule::parse(&inject).unwrap_or_else(|e| {
+                panic!("train.fault.inject: {e}")
             }));
         }
         // The env knob wins over the config file (CI fault legs).
-        if let Some(f) = FaultInjection::from_env() {
+        if let Some(f) = FaultSchedule::from_env() {
             tc.fault = Some(f);
         }
+        // [train.watchdog]: pool-level hang detection (default off).
+        tc.watchdog_deadline_ms =
+            cfg.int("train.watchdog.deadline_ms", tc.watchdog_deadline_ms as i64) as usize;
         // [train.checkpoint]: crash-safe rotating checkpoints + auto-resume.
         tc.checkpoint_dir = cfg.str("train.checkpoint.dir", &tc.checkpoint_dir);
         tc.checkpoint_every =
@@ -182,6 +201,34 @@ impl TrainConfig {
         tc.checkpoint_keep =
             cfg.int("train.checkpoint.keep", tc.checkpoint_keep as i64) as usize;
         tc
+    }
+}
+
+/// Arms the pool watchdog for the duration of one `run` and restores the
+/// previous deadline on drop (so tests and repeated in-process runs don't
+/// leak a global deadline). The `GEMM_DEADLINE_MS` env knob wins: when set,
+/// the config key is ignored entirely.
+struct WatchdogArm {
+    prev: Option<usize>,
+}
+
+impl WatchdogArm {
+    fn new(deadline_ms: usize) -> WatchdogArm {
+        if deadline_ms > 0 && std::env::var("GEMM_DEADLINE_MS").is_err() {
+            let prev = pool::pool_deadline_ms();
+            pool::set_pool_deadline_ms(deadline_ms);
+            WatchdogArm { prev: Some(prev) }
+        } else {
+            WatchdogArm { prev: None }
+        }
+    }
+}
+
+impl Drop for WatchdogArm {
+    fn drop(&mut self) {
+        if let Some(prev) = self.prev {
+            pool::set_pool_deadline_ms(prev);
+        }
     }
 }
 
@@ -314,14 +361,15 @@ impl Trainer {
     ///   step can be dropped (`skip`), rewound to the last in-memory
     ///   snapshot (`rollback`), or turned into an error (`abort`) without
     ///   ever corrupting optimizer state.
-    /// - A configured [`FaultInjection`] fires deterministically by step
+    /// - A configured [`FaultSchedule`] fires deterministically by step
     ///   number after gradient reduction, so faulted runs are reproducible
-    ///   for any worker count.
+    ///   for any worker count (and faults may compound within one run).
     ///
     /// Rollback rewinds parameters and the full optimizer state but *not*
     /// the corpus sampler: replayed steps see fresh batches, which is the
     /// behavior a real run recovering from a bad region wants.
     pub fn run(&mut self) -> anyhow::Result<TrainReport> {
+        let _watchdog = WatchdogArm::new(self.cfg.watchdog_deadline_ms);
         let schedule = LrSchedule::new(self.cfg.lr, self.cfg.warmup_steps, self.cfg.steps);
         let (b, t) = (self.cfg.batch_size, self.cfg.model.seq_len);
         let accum = self.cfg.accum_steps.max(1);
@@ -366,22 +414,77 @@ impl Trainer {
         // Last-good (params, optimizer state) pair for rollback, refreshed
         // every `snapshot_every` healthy steps.
         let mut snapshot: Option<(Vec<Matrix>, OptimizerSnapshot)> = None;
-        let mut ckpt_fault_pending = matches!(
-            self.cfg.fault,
-            Some(FaultInjection { kind: FaultKind::CkptTruncate | FaultKind::CkptBitflip, .. })
-        );
+        // LR re-warm countdown set by an escalated rollback (RollbackRewarm).
+        let mut rewarm_left = 0usize;
+        let mut ckpt_faults_pending: Vec<FaultInjection> = self
+            .cfg
+            .fault
+            .as_ref()
+            .map_or(Vec::new(), |s| {
+                s.of_kinds(&[FaultKind::CkptTruncate, FaultKind::CkptBitflip])
+            });
         for step in start_step..self.cfg.steps {
-            if let Some(f) = self.cfg.fault {
-                if f.kind == FaultKind::WorkerPanic && f.fires_at(step) {
-                    // One pool task panics mid-job; the pool must re-raise
-                    // here and keep serving — training continues below.
-                    let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                        pool::run(2, 4, &|i| {
-                            if i == 3 {
-                                panic!("injected worker panic (step {step})");
+            if let Some(sched) = &self.cfg.fault {
+                for kind in sched.at(step) {
+                    match kind {
+                        FaultKind::WorkerPanic => {
+                            // One pool task panics mid-job; the pool must
+                            // re-raise here and keep serving — training
+                            // continues below. Under DP the same fault also
+                            // kills one shard mid-step, which degraded mode
+                            // must absorb without touching the trajectory.
+                            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                                pool::run(2, 4, &|i| {
+                                    if i == 3 {
+                                        panic!("injected worker panic (step {step})");
+                                    }
+                                });
+                            }));
+                            if let Some(dp) = &self.dp {
+                                dp.fail_next_shard(0);
                             }
-                        });
-                    }));
+                        }
+                        FaultKind::WorkerHang => {
+                            // A sacrificial job hangs one *worker-side* task
+                            // until the watchdog cancels it. The wall-clock
+                            // cap keeps unarmed runs terminating; the task
+                            // never runs on the publisher (the watchdog
+                            // lives in the publisher's wait loop).
+                            let res = pool::try_run(2, 2, &|i| {
+                                if i == 1 && pool::on_worker() {
+                                    let cap = std::time::Instant::now();
+                                    while !pool::job_cancelled()
+                                        && cap.elapsed()
+                                            < std::time::Duration::from_secs(2)
+                                    {
+                                        std::thread::sleep(
+                                            std::time::Duration::from_millis(1),
+                                        );
+                                    }
+                                }
+                            });
+                            eprintln!(
+                                "trainer: injected worker hang at step {step} -> {res:?}"
+                            );
+                        }
+                        FaultKind::SlowWorker => {
+                            // Slow-but-alive: the task finishes on its own,
+                            // and a healthy progress-based watchdog must let
+                            // it (a total-runtime watchdog would not).
+                            let res = pool::try_run(2, 4, &|i| {
+                                if i == 3 {
+                                    std::thread::sleep(
+                                        std::time::Duration::from_millis(30),
+                                    );
+                                }
+                            });
+                            assert!(
+                                res.is_ok(),
+                                "watchdog killed a slow-but-alive job at step {step}: {res:?}"
+                            );
+                        }
+                        _ => {}
+                    }
                 }
             }
             // Gradient accumulation: `accum` micro-batches per optimizer
@@ -426,9 +529,9 @@ impl Trainer {
                     grads_ok = sc.quantize_step(&mut grads);
                 }
             }
-            if let Some(f) = self.cfg.fault {
-                if f.fires_at(step) {
-                    match f.kind {
+            if let Some(sched) = &self.cfg.fault {
+                for kind in sched.at(step) {
+                    match kind {
                         FaultKind::NanGrad => {
                             for g in grads.iter_mut() {
                                 g.data_mut().fill(f32::NAN);
@@ -461,12 +564,19 @@ impl Trainer {
             };
             match verdict {
                 Verdict::Healthy => {
-                    let lr = schedule.at(step);
+                    let mut lr = schedule.at(step);
+                    // LR re-warm after an escalated rollback: ramp linearly
+                    // from 1/rewarm_steps of the scheduled LR back to full.
+                    if rewarm_left > 0 {
+                        let total = self.cfg.sentinel.rewarm_steps.max(1);
+                        lr *= (total - rewarm_left + 1) as f32 / total as f32;
+                        rewarm_left -= 1;
+                    }
                     self.opt.step(lr, &mut self.model.params, &grads);
                     if step % self.cfg.log_every == 0 {
                         self.metrics.record_step(step, loss, lr, self.opt.state_bytes());
                     }
-                    if policy == FaultPolicy::Rollback
+                    if policy.needs_snapshots()
                         && step % self.cfg.sentinel.snapshot_every == 0
                     {
                         match &mut snapshot {
@@ -486,10 +596,13 @@ impl Trainer {
                                 snapshot = Some((params, self.opt.snapshot()));
                             }
                         }
+                        // A fresh last-good landed: reset the rollback-loop
+                        // detector (escalate ladder).
+                        self.sentinel.note_snapshot();
                     }
                 }
                 Verdict::Skip => {} // drop the step; state untouched
-                Verdict::Rollback => {
+                v @ (Verdict::Rollback | Verdict::RollbackRewarm) => {
                     if let Some((params, snap)) = &snapshot {
                         for (p, saved) in self.model.params.iter_mut().zip(params) {
                             p.value.copy_from(saved);
@@ -498,6 +611,9 @@ impl Trainer {
                         self.opt.restore(snap);
                     }
                     // No snapshot yet: the drop alone is the recovery.
+                    if v == Verdict::RollbackRewarm {
+                        rewarm_left = self.cfg.sentinel.rewarm_steps.max(1);
+                    }
                 }
                 Verdict::Abort => {
                     eprint!("{}", self.sentinel.dump());
@@ -526,9 +642,12 @@ impl Trainer {
                         self.cfg.checkpoint_keep,
                         &train_state,
                     )?;
-                    if ckpt_fault_pending {
-                        let f = self.cfg.fault.expect("pending implies configured");
-                        if step + 1 >= f.step {
+                    // Each pending checkpoint fault fires once, on the first
+                    // save at or after its scheduled step.
+                    let mut j = 0;
+                    while j < ckpt_faults_pending.len() {
+                        if step + 1 >= ckpt_faults_pending[j].step {
+                            let f = ckpt_faults_pending.remove(j);
                             match f.kind {
                                 FaultKind::CkptTruncate => {
                                     crate::train::faults::truncate_file(
@@ -538,9 +657,10 @@ impl Trainer {
                                 FaultKind::CkptBitflip => {
                                     crate::train::faults::flip_bit(&base.with_extension("bin"))?;
                                 }
-                                _ => unreachable!("pending is set only for ckpt faults"),
+                                _ => unreachable!("pending holds only ckpt faults"),
                             }
-                            ckpt_fault_pending = false;
+                        } else {
+                            j += 1;
                         }
                     }
                 }
@@ -569,6 +689,7 @@ impl Trainer {
             refresh_rejections: self.opt.refresh_rejections(),
             storage_dtype: self.cfg.model.dtype.as_str().to_string(),
             scaler_skips: self.scaler.as_ref().map_or(0, |s| s.skips()),
+            degraded_steps: self.dp.as_ref().map_or(0, |d| d.degraded_steps()),
         })
     }
 }
@@ -720,7 +841,12 @@ keep = 2
         // The env knob outranks the config key; only assert the config
         // value when no CI fault leg is active.
         if std::env::var("PALLAS_FAULT").is_err() {
-            assert_eq!(tc.fault, Some(FaultInjection { kind: FaultKind::NanGrad, step: 3 }));
+            assert_eq!(
+                tc.fault,
+                Some(FaultSchedule {
+                    faults: vec![FaultInjection { kind: FaultKind::NanGrad, step: 3 }]
+                })
+            );
         }
         assert_eq!(tc.checkpoint_dir, "/tmp/subtrack_cfg_ckpt");
         assert_eq!(tc.checkpoint_every, 4);
@@ -732,6 +858,86 @@ keep = 2
         assert_eq!(td.sentinel.policy, FaultPolicy::Off);
         assert!(td.checkpoint_dir.is_empty());
         assert_eq!(td.checkpoint_every, 0);
+    }
+
+    #[test]
+    fn config_file_roundtrips_escalation_and_watchdog_keys() {
+        let text = r#"
+[model]
+preset = "nano"
+
+[train]
+steps = 8
+
+[train.fault]
+policy = "escalate"
+escalate_after = 1
+loop_restores = 2
+rewarm_steps = 6
+inject = "nan_grad@3,worker_hang@5"
+
+[train.watchdog]
+deadline_ms = 250
+"#;
+        let cfg = Config::parse(text).unwrap();
+        let tc = TrainConfig::from_config(&cfg);
+        assert_eq!(tc.sentinel.policy, FaultPolicy::Escalate);
+        assert_eq!(tc.sentinel.escalate_after, 1);
+        assert_eq!(tc.sentinel.loop_restores, 2);
+        assert_eq!(tc.sentinel.rewarm_steps, 6);
+        assert_eq!(tc.watchdog_deadline_ms, 250);
+        if std::env::var("PALLAS_FAULT").is_err() {
+            let s = tc.fault.expect("schedule parsed");
+            assert_eq!(s.faults.len(), 2);
+            assert_eq!(s.faults[1], FaultInjection { kind: FaultKind::WorkerHang, step: 5 });
+        }
+        // Absent keys keep the inert defaults (watchdog off).
+        let plain = Config::parse("[model]\npreset = \"nano\"\n").unwrap();
+        let td = TrainConfig::from_config(&plain);
+        assert_eq!(td.watchdog_deadline_ms, 0);
+        assert_eq!(td.sentinel.escalate_after, SentinelConfig::default().escalate_after);
+    }
+
+    #[test]
+    fn escalating_sentinel_skips_then_rolls_back_under_repeated_faults() {
+        let mut cfg = quick_cfg("full-rank");
+        cfg.steps = 16;
+        cfg.sentinel.policy = FaultPolicy::Escalate;
+        cfg.sentinel.escalate_after = 2;
+        cfg.sentinel.snapshot_every = 2;
+        cfg.fault = Some(FaultSchedule::parse("nan_grad@5,nan_grad@6,nan_grad@7").unwrap());
+        let report = Trainer::new(cfg).run().unwrap();
+        // Three consecutive anomalies: two tolerated as skips, the third
+        // escalates to a rollback; training then completes healthily.
+        assert_eq!(report.sentinel_skips, 2);
+        assert_eq!(report.sentinel_rollbacks, 1);
+        assert_eq!(report.total_steps, 16);
+        assert!(report.final_eval_loss.is_finite());
+    }
+
+    #[test]
+    fn dp_degraded_step_leaves_the_trajectory_unchanged() {
+        let mut cfg = quick_cfg("full-rank");
+        cfg.steps = 8;
+        cfg.workers = 2;
+        cfg.model.dtype = Dtype::F32;
+        let clean = Trainer::new(cfg.clone()).run().unwrap();
+        // worker_panic under DP also kills shard 0 mid-step; degraded mode
+        // must absorb it bit-for-bit.
+        cfg.fault = Some(FaultSchedule::parse("worker_panic@3").unwrap());
+        let degraded = Trainer::new(cfg).run().unwrap();
+        assert_eq!(degraded.degraded_steps, 1);
+        assert_eq!(clean.degraded_steps, 0);
+        let l_clean: Vec<f32> = clean.steps.iter().map(|s| s.loss).collect();
+        let l_deg: Vec<f32> = degraded.steps.iter().map(|s| s.loss).collect();
+        assert_eq!(l_clean, l_deg, "degraded step changed the loss stream");
+        assert_eq!(clean.final_eval_loss, degraded.final_eval_loss);
+        // Clean summaries omit the key; degraded ones carry the count.
+        assert!(clean.summary_json().get("degraded_steps").is_none());
+        assert_eq!(
+            degraded.summary_json().get("degraded_steps").and_then(|v| v.as_f64()),
+            Some(1.0)
+        );
     }
 
     #[test]

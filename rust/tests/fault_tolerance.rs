@@ -9,13 +9,21 @@
 use std::path::PathBuf;
 use std::sync::Mutex;
 use subtrack::model::{Llama, ModelConfig};
-use subtrack::tensor::gemm;
+use subtrack::tensor::{gemm, Dtype};
 use subtrack::train::checkpoint::{self, CkptError};
 use subtrack::train::faults;
-use subtrack::train::{FaultInjection, FaultKind, FaultPolicy, TrainConfig, Trainer, Verdict};
+use subtrack::train::{
+    FaultKind, FaultPolicy, FaultSchedule, TrainConfig, Trainer, Verdict,
+};
 
-/// Serializes tests that mutate the process-global GEMM worker-count knob.
+/// Serializes tests that mutate a process-global knob (GEMM worker count,
+/// pool watchdog deadline).
 static THREAD_KNOB: Mutex<()> = Mutex::new(());
+
+/// One-fault schedule shorthand.
+fn sched(spec: &str) -> Option<FaultSchedule> {
+    Some(FaultSchedule::parse(spec).unwrap())
+}
 
 fn quick_cfg(method: &str, steps: usize) -> TrainConfig {
     let mut cfg = TrainConfig::preset("nano", method, steps);
@@ -41,7 +49,7 @@ fn nan_grad_without_sentinel_destroys_the_run() {
     // short-circuit leaves the NaN gradients in place and the optimizer
     // applies them).
     let mut cfg = quick_cfg("full-rank", 15);
-    cfg.fault = Some(FaultInjection { kind: FaultKind::NanGrad, step: 7 });
+    cfg.fault = sched("nan_grad@7");
     let report = Trainer::new(cfg).run().unwrap();
     assert!(
         !report.final_eval_loss.is_finite(),
@@ -54,7 +62,7 @@ fn nan_grad_without_sentinel_destroys_the_run() {
 fn skip_policy_drops_the_poisoned_step() {
     let mut cfg = quick_cfg("full-rank", 20);
     cfg.sentinel.policy = FaultPolicy::Skip;
-    cfg.fault = Some(FaultInjection { kind: FaultKind::NanGrad, step: 3 });
+    cfg.fault = sched("nan_grad@3");
     let report = Trainer::new(cfg).run().unwrap();
     assert!(report.final_eval_loss.is_finite(), "eval {}", report.final_eval_loss);
     assert_eq!(report.sentinel_skips, 1);
@@ -71,7 +79,7 @@ fn nan_grad_rollback_recovers_to_clean_ballpark() {
     let mut cfg = quick_cfg("subtrack++", 60);
     cfg.sentinel.policy = FaultPolicy::Rollback;
     cfg.sentinel.snapshot_every = 5;
-    cfg.fault = Some(FaultInjection { kind: FaultKind::NanGrad, step: 7 });
+    cfg.fault = sched("nan_grad@7");
     let mut tr = Trainer::new(cfg);
     let before = tr.eval_loss().unwrap();
     let faulted = tr.run().unwrap();
@@ -100,7 +108,7 @@ fn refresh_poison_is_rejected_and_training_continues() {
     let clean = Trainer::new(quick_cfg("subtrack++", 40)).run().unwrap();
     let mut cfg = quick_cfg("subtrack++", 40);
     cfg.sentinel.policy = FaultPolicy::Rollback;
-    cfg.fault = Some(FaultInjection { kind: FaultKind::RefreshPoison, step: 8 });
+    cfg.fault = sched("refresh_poison@8");
     let faulted = Trainer::new(cfg).run().unwrap();
     assert!(faulted.final_eval_loss.is_finite());
     assert!(faulted.refresh_rejections >= 1, "poisoned refresh not counted");
@@ -124,7 +132,7 @@ fn refresh_poison_is_rejected_and_training_continues() {
 fn worker_panic_fault_does_not_kill_training() {
     let mut cfg = quick_cfg("full-rank", 12);
     cfg.sentinel.policy = FaultPolicy::Rollback;
-    cfg.fault = Some(FaultInjection { kind: FaultKind::WorkerPanic, step: 4 });
+    cfg.fault = sched("worker_panic@4");
     let report = Trainer::new(cfg).run().unwrap();
     assert!(report.final_eval_loss.is_finite());
     assert_eq!(report.total_steps, 12, "pool must keep serving after the panic");
@@ -137,7 +145,7 @@ fn sentinel_decisions_bit_identical_across_worker_counts() {
         gemm::set_gemm_threads(gemm_threads);
         let mut cfg = quick_cfg("full-rank", 16);
         cfg.sentinel.policy = FaultPolicy::Skip;
-        cfg.fault = Some(FaultInjection { kind: FaultKind::NanGrad, step: 5 });
+        cfg.fault = sched("nan_grad@5");
         let mut tr = Trainer::new(cfg);
         let report = tr.run().unwrap();
         let events: Vec<(usize, Verdict, u32, u32)> = tr
@@ -163,7 +171,7 @@ fn sentinel_decisions_bit_identical_across_worker_counts() {
     // verdict) must agree with the single-worker run.
     let mut cfg = quick_cfg("full-rank", 16);
     cfg.sentinel.policy = FaultPolicy::Skip;
-    cfg.fault = Some(FaultInjection { kind: FaultKind::NanGrad, step: 5 });
+    cfg.fault = sched("nan_grad@5");
     cfg.workers = 2;
     let mut tr = Trainer::new(cfg);
     tr.run().unwrap();
@@ -184,7 +192,7 @@ fn kill9_checkpoint_corruption_auto_resumes_from_previous() {
     cfg.checkpoint_keep = 3;
     // The trainer itself truncates the step-20 checkpoint right after the
     // atomic commit — the on-disk state a kill -9 mid-append would leave.
-    cfg.fault = Some(FaultInjection { kind: FaultKind::CkptTruncate, step: 20 });
+    cfg.fault = sched("ckpt_truncate@20");
     let r1 = Trainer::new(cfg.clone()).run().unwrap();
     assert_eq!(r1.total_steps, 20);
     let steps: Vec<usize> = checkpoint::list_checkpoints(&dir).iter().map(|(s, _)| *s).collect();
@@ -239,15 +247,20 @@ fn corruption_fixtures_rejected_and_resume_falls_back() {
 #[test]
 fn env_fault_leg_completes_under_rollback() {
     // CI leg entry point: with PALLAS_FAULT set (nan_grad@7,
-    // refresh_poison@8, ...) this runs the recovery scenario for that fault;
-    // without it, it defaults to the NaN-gradient leg.
-    let fault = FaultInjection::from_env()
-        .unwrap_or(FaultInjection { kind: FaultKind::NanGrad, step: 7 });
+    // refresh_poison@8, a comma-separated schedule, ...) this runs the
+    // recovery scenario for that schedule; without it, it defaults to the
+    // NaN-gradient leg. The watchdog is armed so the worker_hang leg
+    // actually recovers instead of riding out its wall-clock cap.
+    let _guard = THREAD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    let schedule = FaultSchedule::from_env()
+        .unwrap_or_else(|| FaultSchedule::parse("nan_grad@7").unwrap());
     let mut cfg = quick_cfg("subtrack++", 30);
     cfg.sentinel.policy = FaultPolicy::Rollback;
     cfg.sentinel.snapshot_every = 5;
-    cfg.fault = Some(fault);
-    if matches!(fault.kind, FaultKind::CkptTruncate | FaultKind::CkptBitflip) {
+    cfg.watchdog_deadline_ms = 300;
+    cfg.fault = Some(schedule.clone());
+    let kinds: Vec<FaultKind> = schedule.faults.iter().map(|f| f.kind).collect();
+    if kinds.iter().any(|k| matches!(k, FaultKind::CkptTruncate | FaultKind::CkptBitflip)) {
         let dir = temp_dir("env_leg");
         let _ = std::fs::remove_dir_all(&dir);
         cfg.checkpoint_dir = dir.to_string_lossy().into_owned();
@@ -256,18 +269,193 @@ fn env_fault_leg_completes_under_rollback() {
     let report = Trainer::new(cfg.clone()).run().unwrap();
     assert!(
         report.final_eval_loss.is_finite(),
-        "{}@{} leg diverged: eval {}",
-        fault.kind.as_str(),
-        fault.step,
+        "{kinds:?} leg diverged: eval {}",
         report.final_eval_loss
     );
     assert_eq!(report.total_steps, 30);
-    match fault.kind {
-        FaultKind::NanGrad => assert!(report.sentinel_rollbacks >= 1, "{report:?}"),
-        FaultKind::RefreshPoison => assert!(report.refresh_rejections >= 1, "{report:?}"),
-        _ => {}
+    for kind in &kinds {
+        match kind {
+            FaultKind::NanGrad => assert!(report.sentinel_rollbacks >= 1, "{report:?}"),
+            FaultKind::RefreshPoison => assert!(report.refresh_rejections >= 1, "{report:?}"),
+            _ => {}
+        }
     }
     if !cfg.checkpoint_dir.is_empty() {
         let _ = std::fs::remove_dir_all(&cfg.checkpoint_dir);
+    }
+}
+
+#[test]
+fn worker_hang_under_watchdog_completes_with_identical_events_across_workers() {
+    // The hang acceptance gate: with the watchdog armed, a hung pool task at
+    // step 5 is cancelled and every step still executes — and because the
+    // sacrificial job never touches the gradient stream, the sentinel event
+    // log is bit-identical across 1/2/8 DP workers.
+    let _guard = THREAD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    let events_at = |workers: usize| {
+        let mut cfg = quick_cfg("full-rank", 10);
+        cfg.sentinel.policy = FaultPolicy::Skip;
+        cfg.fault = sched("worker_hang@5");
+        cfg.watchdog_deadline_ms = 300;
+        cfg.workers = workers;
+        let mut tr = Trainer::new(cfg);
+        let report = tr.run().unwrap();
+        assert_eq!(report.total_steps, 10, "workers={workers}: steps lost to the hang");
+        assert!(report.final_eval_loss.is_finite(), "workers={workers}");
+        tr.sentinel
+            .events()
+            .iter()
+            .map(|e| (e.step, e.verdict, e.loss.to_bits(), e.grad_norm.to_bits()))
+            .collect::<Vec<_>>()
+    };
+    let base = events_at(1);
+    for workers in [2usize, 8] {
+        assert_eq!(base, events_at(workers), "event log diverged at {workers} workers");
+    }
+}
+
+#[test]
+fn slow_worker_is_not_killed_by_the_watchdog() {
+    // Progress-based deadline: a slow-but-alive task must finish normally
+    // even with an armed watchdog (the injection block asserts the job
+    // succeeded; a total-runtime watchdog would trip it).
+    let _guard = THREAD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    let mut cfg = quick_cfg("full-rank", 8);
+    cfg.fault = sched("slow_worker@4");
+    cfg.watchdog_deadline_ms = 300;
+    let report = Trainer::new(cfg).run().unwrap();
+    assert_eq!(report.total_steps, 8);
+    assert!(report.final_eval_loss.is_finite());
+}
+
+#[test]
+fn elastic_resume_replays_bit_for_bit_across_worker_counts() {
+    // Reshard-on-resume acceptance gate: a workers = 2 run's format-2
+    // checkpoints resumed under workers = 4 and workers = 1 must replay the
+    // original tail bit-for-bit. batch_size = 1 keeps the gradient a single
+    // DP shard at every worker count (the reduction is exact identity), so
+    // the only moving part is the elastic optimizer-state re-split — which
+    // must be exact.
+    let base_dir = temp_dir("elastic");
+    let _ = std::fs::remove_dir_all(&base_dir);
+    let mut cfg = quick_cfg("full-rank", 20);
+    cfg.batch_size = 1;
+    cfg.model.dtype = Dtype::F32;
+    cfg.workers = 2;
+    cfg.checkpoint_dir = base_dir.to_string_lossy().into_owned();
+    cfg.checkpoint_every = 5;
+    cfg.checkpoint_keep = 0; // keep all
+    let clean = Trainer::new(cfg.clone()).run().unwrap();
+    assert_eq!(clean.total_steps, 20);
+    for new_workers in [4usize, 1] {
+        // Copy the checkpoints up to the "crash" at step 10 into a fresh dir
+        // (the resumed run writes its own rotation as it goes).
+        let dir = temp_dir(&format!("elastic_w{new_workers}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        for (step, base) in checkpoint::list_checkpoints(&base_dir) {
+            if step <= 10 {
+                for ext in ["json", "bin"] {
+                    std::fs::copy(
+                        base.with_extension(ext),
+                        checkpoint::rotation_path(&dir, step).with_extension(ext),
+                    )
+                    .unwrap();
+                }
+            }
+        }
+        let mut cfg2 = cfg.clone();
+        cfg2.checkpoint_dir = dir.to_string_lossy().into_owned();
+        cfg2.workers = new_workers;
+        let resumed = Trainer::new(cfg2).run().unwrap();
+        let tail: Vec<(usize, u32)> =
+            clean.steps.iter().skip(10).map(|s| (s.step, s.loss.to_bits())).collect();
+        let replay: Vec<(usize, u32)> =
+            resumed.steps.iter().map(|s| (s.step, s.loss.to_bits())).collect();
+        assert_eq!(replay, tail, "workers 2 -> {new_workers}: resumed tail diverged");
+        assert_eq!(
+            resumed.final_eval_loss.to_bits(),
+            clean.final_eval_loss.to_bits(),
+            "workers 2 -> {new_workers}: final eval diverged"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    let _ = std::fs::remove_dir_all(&base_dir);
+}
+
+#[test]
+fn composed_bf16_sharded_rollback_survives_kill_and_resume_bit_for_bit() {
+    // Every robustness layer at once: bf16 storage × 2 ZeRO shards × a NaN
+    // gradient handled by rollback × kill-and-resume — and the resumed run
+    // must still replay the faulted tail bit-for-bit (same snapshot cadence
+    // ⇒ same last-good state on both sides of the cut).
+    let dir = temp_dir("composed");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut cfg = quick_cfg("subtrack++", 20);
+    cfg.model.dtype = Dtype::Bf16;
+    cfg.workers = 2;
+    cfg.sentinel.policy = FaultPolicy::Rollback;
+    cfg.sentinel.snapshot_every = 4;
+    cfg.fault = sched("nan_grad@13");
+    cfg.checkpoint_dir = dir.to_string_lossy().into_owned();
+    cfg.checkpoint_every = 5;
+    cfg.checkpoint_keep = 0; // keep all
+    let clean = Trainer::new(cfg.clone()).run().unwrap();
+    assert_eq!(clean.storage_dtype, "bf16");
+    assert_eq!(clean.sentinel_rollbacks, 1);
+    assert_eq!(clean.total_steps, 20);
+    // Simulate a kill after step 10, then re-run the same config: it must
+    // resume from step 10 and re-handle the step-13 fault identically.
+    for late in [15, 20] {
+        let base = checkpoint::rotation_path(&dir, late);
+        std::fs::remove_file(base.with_extension("json")).unwrap();
+        std::fs::remove_file(base.with_extension("bin")).unwrap();
+    }
+    let resumed = Trainer::new(cfg).run().unwrap();
+    assert_eq!(resumed.sentinel_rollbacks, 1, "fault must replay after resume");
+    let tail: Vec<(usize, u32)> = clean
+        .steps
+        .iter()
+        .filter(|s| s.step >= 10)
+        .map(|s| (s.step, s.loss.to_bits()))
+        .collect();
+    let replay: Vec<(usize, u32)> =
+        resumed.steps.iter().map(|s| (s.step, s.loss.to_bits())).collect();
+    assert_eq!(replay, tail, "resumed faulted tail diverged");
+    assert_eq!(resumed.final_eval_loss.to_bits(), clean.final_eval_loss.to_bits());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn randomized_fault_soak_completes_under_escalation() {
+    // Seeded random schedules compound faults across runtime layers; under
+    // the escalating sentinel every run must execute all steps and end with
+    // finite state. CI's release-mode `soak` job widens the seed set via
+    // PALLAS_SOAK_SEEDS (comma-separated u64s).
+    let seeds: Vec<u64> = match std::env::var("PALLAS_SOAK_SEEDS") {
+        Ok(s) => s
+            .split(',')
+            .map(|x| x.trim().parse().expect("PALLAS_SOAK_SEEDS: bad seed"))
+            .collect(),
+        Err(_) => vec![11, 23, 47],
+    };
+    let kinds = ["nan_grad", "refresh_poison", "worker_panic", "slow_worker"];
+    for seed in seeds {
+        let mut rng = subtrack::util::rng::Rng::new(seed);
+        let spec = (0..3)
+            .map(|_| format!("{}@{}", kinds[rng.below(kinds.len())], 3 + rng.below(12)))
+            .collect::<Vec<_>>()
+            .join(",");
+        let mut cfg = quick_cfg("subtrack++", 18);
+        cfg.sentinel.policy = FaultPolicy::Escalate;
+        cfg.sentinel.snapshot_every = 4;
+        cfg.fault = sched(&spec);
+        let report = Trainer::new(cfg).run().unwrap();
+        assert_eq!(report.total_steps, 18, "seed {seed} ({spec}) lost steps");
+        assert!(
+            report.final_eval_loss.is_finite(),
+            "seed {seed} ({spec}) diverged: eval {}",
+            report.final_eval_loss
+        );
     }
 }

@@ -11,7 +11,7 @@
 
 use subtrack::optim;
 use subtrack::tensor::Dtype;
-use subtrack::train::{FaultInjection, FaultKind, FaultPolicy, TrainConfig, Trainer};
+use subtrack::train::{FaultPolicy, FaultSchedule, TrainConfig, Trainer};
 
 fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).filter(|&v| v > 0).unwrap_or(default)
@@ -124,15 +124,15 @@ fn fault_and_sentinel_decisions_key_on_optimizer_steps() {
     // Whatever fault CI injects (`PALLAS_FAULT` leg) — or `nan_grad@5` by
     // default — fires on the same *optimizer* step for every worker count
     // and accumulation depth, so sentinel decisions line up exactly.
-    let fault = FaultInjection::from_env()
-        .unwrap_or(FaultInjection { kind: FaultKind::NanGrad, step: 5 });
+    let sched = FaultSchedule::from_env()
+        .unwrap_or_else(|| FaultSchedule::parse("nan_grad@5").unwrap());
     let mut reports = Vec::new();
     for (workers, accum) in [(1, 1), (1, accum_steps()), (dp_workers(), accum_steps())] {
         let mut cfg = quick_cfg("subtrack++", 12);
         cfg.workers = workers;
         cfg.accum_steps = accum;
         cfg.sentinel.policy = FaultPolicy::Skip;
-        cfg.fault = Some(fault);
+        cfg.fault = Some(sched.clone());
         let r = Trainer::new(cfg).run().unwrap();
         assert_eq!(r.total_steps, 12, "workers={workers} accum={accum}");
         reports.push((workers, accum, r.sentinel_skips, r.sentinel_rollbacks));
